@@ -1,0 +1,73 @@
+//! §IV-B ablation: the paper compresses Q and K but *not* V, arguing the
+//! value projector "stores the specific features of the model and has a
+//! higher requirement for accuracy". This example tests that claim
+//! directly: compress each projector alone at the same 2-bit budget and
+//! compare perplexity damage. Requires `make artifacts` (tiny preset; uses
+//! a short training run so the weights carry real signal).
+
+use std::path::Path;
+use swsc::compress::{CompressionPlan, ProjectorSet};
+use swsc::coordinator::compress_model;
+use swsc::eval::Evaluator;
+use swsc::model::{init_params, ModelConfig};
+use swsc::runtime::{ArtifactManifest, Engine};
+use swsc::text::{BpeTokenizer, CorpusConfig, Dataset, SyntheticCorpus};
+use swsc::train::{LrSchedule, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(dir.join("manifest.txt").exists(), "run `make artifacts` first");
+    let cfg = ModelConfig::tiny();
+    let man = ArtifactManifest::load(dir, "tiny")?;
+    let engine = Engine::new(man)?;
+
+    let corpus = SyntheticCorpus::generate(&CorpusConfig { seed: 5, ..Default::default() });
+    let tok = BpeTokenizer::train(&corpus.train_text, cfg.vocab);
+    let train_data = Dataset::from_text(&corpus.train_text, &tok, cfg.batch, cfg.seq);
+    let eval_data = Dataset::from_text(&corpus.eval_text, &tok, cfg.batch, cfg.seq);
+
+    let steps = 150;
+    println!("training tiny model {steps} steps for the ablation...");
+    let mut trainer = Trainer::new(engine.clone(), cfg.clone(), &init_params(&cfg, 5))?;
+    let sched = LrSchedule::new(3e-3, 10, steps);
+    for step in 0..steps {
+        trainer.step(&train_data.batch(step), sched.at(step))?;
+    }
+    let ck = trainer.to_checkpoint()?;
+
+    let evaluator = Evaluator::new(engine, cfg.clone())?;
+    let fp32 = evaluator.perplexity_of(&ck, &eval_data)?.perplexity;
+    println!("fp32 baseline ppl: {fp32:.3}\n");
+
+    println!("| projector | ppl @2bits | damage (x fp32) |");
+    println!("|-----------|------------|-----------------|");
+    let mut damages = Vec::new();
+    for proj in [ProjectorSet::Q, ProjectorSet::K, ProjectorSet::V] {
+        let plan = CompressionPlan::for_target_bits(&ck.shapes(), proj, 2.0, 0.5, 5);
+        let out = compress_model(&ck, &plan, 4, None)?;
+        let mut sck = ck.clone();
+        for (name, t) in out.file.restore_all() {
+            sck.insert(&name, t);
+        }
+        let ppl = evaluator.perplexity_of(&sck, &eval_data)?.perplexity;
+        let damage = ppl / fp32;
+        println!("| {:<9} | {ppl:<10.3} | {damage:<15.3} |", proj.label());
+        damages.push((proj.label(), damage));
+    }
+
+    let v_damage = damages.iter().find(|(l, _)| *l == "V").unwrap().1;
+    let qk_max =
+        damages.iter().filter(|(l, _)| *l != "V").map(|(_, d)| *d).fold(0.0f64, f64::max);
+    println!();
+    if v_damage > qk_max {
+        println!(
+            "paper's §IV-B claim holds here: V compression hurts {v_damage:.2}x vs worst of Q/K {qk_max:.2}x"
+        );
+    } else {
+        println!(
+            "note: at this scale V damage ({v_damage:.2}x) did not exceed Q/K ({qk_max:.2}x) — \
+             the paper's claim is about 7B-scale models; see EXPERIMENTS.md discussion"
+        );
+    }
+    Ok(())
+}

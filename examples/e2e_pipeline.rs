@@ -1,0 +1,104 @@
+//! End-to-end validation driver (DESIGN.md §6, paper Fig. 1):
+//!
+//!   train a transformer LM from scratch through the AOT train step →
+//!   log the loss curve → SWSC-compress Q&K at 3 and 2 avg-bits →
+//!   RTN-quantize at the same budgets → evaluate perplexity for every
+//!   variant → print the Table-I-shaped report.
+//!
+//! Uses the `small` preset (≈4.8 M params). Control the training length
+//! with SWSC_E2E_STEPS (default 200; the recorded EXPERIMENTS.md run used
+//! the 400-step checkpoint from `swsc train`). Requires `make artifacts`.
+
+use std::path::Path;
+use swsc::compress::{CompressionPlan, ProjectorSet};
+use swsc::coordinator::compress_model;
+use swsc::eval::Evaluator;
+use swsc::model::{init_params, ModelConfig};
+use swsc::quant::{rtn_quantize, RtnConfig};
+use swsc::report::{render_table1, Table1Row};
+use swsc::runtime::{ArtifactManifest, Engine};
+use swsc::text::{BpeTokenizer, CorpusConfig, Dataset, SyntheticCorpus};
+use swsc::train::{LrSchedule, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(dir.join("manifest.txt").exists(), "run `make artifacts` first");
+    let steps: usize =
+        std::env::var("SWSC_E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(200);
+
+    let cfg = ModelConfig::small();
+    let man = ArtifactManifest::load(dir, "small")?;
+    let engine = Engine::new(man)?;
+    println!("== SWSC end-to-end pipeline ==");
+    println!("model: {} ({} params)", cfg.fingerprint(), cfg.param_count());
+
+    // --- data -----------------------------------------------------------
+    let corpus = SyntheticCorpus::generate(&CorpusConfig { seed: 42, ..Default::default() });
+    let tok = BpeTokenizer::train(&corpus.train_text, cfg.vocab);
+    let train_data = Dataset::from_text(&corpus.train_text, &tok, cfg.batch, cfg.seq);
+    let eval_data = Dataset::from_text(&corpus.eval_text, &tok, cfg.batch, cfg.seq);
+    println!("corpus: {} train / {} eval tokens", train_data.tokens(), eval_data.tokens());
+
+    // --- train (or reuse the CLI run's checkpoint) -----------------------
+    let ck = if Path::new("runs/default/model.swck").exists() {
+        println!("\n[1/3] reusing trained checkpoint runs/default/model.swck");
+        swsc::io::Checkpoint::load(Path::new("runs/default/model.swck"))?
+    } else {
+        println!("\n[1/3] training {steps} steps (set SWSC_E2E_STEPS to change)");
+        let mut trainer = Trainer::new(engine.clone(), cfg.clone(), &init_params(&cfg, 42))?;
+        let sched = LrSchedule::new(3e-4, steps / 20 + 1, steps);
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let loss = trainer.step(&train_data.batch(step), sched.at(step))?;
+            if step % 25 == 0 || step + 1 == steps {
+                println!("  step {step:>4}  loss {loss:.4}  ({:.1}s)", t0.elapsed().as_secs_f64());
+            }
+        }
+        trainer.to_checkpoint()?
+    };
+
+    // --- evaluate variants ------------------------------------------------
+    println!("\n[2/3] compressing and evaluating variants");
+    let evaluator = Evaluator::new(engine, cfg.clone())?;
+    let fp32 = evaluator.perplexity_of(&ck, &eval_data)?.perplexity;
+    println!("  fp32 baseline ppl: {fp32:.3}");
+
+    let mut rows = Vec::new();
+    for proj in [ProjectorSet::Q, ProjectorSet::K, ProjectorSet::QAndK] {
+        for bits in [3.0f64, 2.0] {
+            let mut qck = ck.clone();
+            let rtn_cfg = RtnConfig { bits: bits as u32, ..Default::default() };
+            for (name, _) in ck.shapes() {
+                if proj.matches(&name) {
+                    let q = rtn_quantize(qck.get(&name).unwrap(), &rtn_cfg);
+                    qck.insert(&name, q);
+                }
+            }
+            let rtn_ppl = evaluator.perplexity_of(&qck, &eval_data)?.perplexity;
+
+            let plan = CompressionPlan::for_target_bits(&ck.shapes(), proj, bits, 0.5, 42);
+            let out = compress_model(&ck, &plan, 8, None)?;
+            let mut sck = ck.clone();
+            for (name, t) in out.file.restore_all() {
+                sck.insert(&name, t);
+            }
+            let swsc_ppl = evaluator.perplexity_of(&sck, &eval_data)?.perplexity;
+            println!(
+                "  {:<5} @ {bits} bits:  RTN {rtn_ppl:>12.3}   SWSC {swsc_ppl:>10.3}   (compressed {} matrices in {:.2}s)",
+                proj.label(), plan.len(), out.wall_seconds
+            );
+            for (method, ppl) in [("RTN", rtn_ppl), ("SWSC", swsc_ppl)] {
+                rows.push(Table1Row {
+                    projector: proj.label().into(),
+                    method: method.into(),
+                    avg_bits: bits,
+                    perplexity: ppl,
+                });
+            }
+        }
+    }
+
+    println!("\n[3/3] report\n");
+    println!("{}", render_table1("e2e pipeline (synthetic tiny-wiki)", fp32, &rows));
+    Ok(())
+}

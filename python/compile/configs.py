@@ -1,0 +1,68 @@
+"""Model presets — must mirror rust/src/model/config.rs exactly.
+
+The fingerprint string is the cross-layer contract: rust refuses to load
+artifacts whose fingerprint does not match its own ModelConfig.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def fingerprint(self) -> str:
+        return (
+            f"v{self.vocab}_d{self.d_model}_l{self.n_layers}_h{self.n_heads}"
+            f"_f{self.d_ff}_s{self.seq}_b{self.batch}"
+        )
+
+
+PRESETS = {
+    "tiny": ModelConfig(vocab=256, d_model=64, n_layers=2, n_heads=2, d_ff=128, seq=32, batch=4),
+    "small": ModelConfig(vocab=512, d_model=256, n_layers=4, n_heads=4, d_ff=1024, seq=128, batch=8),
+    "big": ModelConfig(vocab=8192, d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq=256, batch=8),
+}
+
+
+def swsc_params_for_bits(m: int, target_bits: float, rank_share: float = 0.5):
+    """(k, r) for a target avg-bits budget — mirrors quant::bits in rust."""
+    share = min(max(rank_share, 0.0), 1.0)
+    k = max(1, round(target_bits * (1.0 - share) * m / 16.0))
+    r = max(0, round(target_bits * share * m / 32.0))
+    return k, r
+
+
+def param_specs(cfg: ModelConfig):
+    """Canonical (name, shape) list — must match rust model::params order."""
+    d = cfg.d_model
+    specs = [("embed.tok", (cfg.vocab, d)), ("embed.pos", (cfg.seq, d))]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        specs += [
+            (f"{p}.ln1.g", (d,)),
+            (f"{p}.ln1.b", (d,)),
+            (f"{p}.attn.wq", (d, d)),
+            (f"{p}.attn.wk", (d, d)),
+            (f"{p}.attn.wv", (d, d)),
+            (f"{p}.attn.wo", (d, d)),
+            (f"{p}.ln2.g", (d,)),
+            (f"{p}.ln2.b", (d,)),
+            (f"{p}.mlp.w1", (d, cfg.d_ff)),
+            (f"{p}.mlp.b1", (cfg.d_ff,)),
+            (f"{p}.mlp.w2", (cfg.d_ff, d)),
+            (f"{p}.mlp.b2", (d,)),
+        ]
+    specs += [("final_ln.g", (d,)), ("final_ln.b", (d,))]
+    return specs

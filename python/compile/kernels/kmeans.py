@@ -1,0 +1,123 @@
+"""Pallas kernels for the K-Means hot path (assignment + centroid update).
+
+TPU-first design (DESIGN.md §Hardware-Adaptation): the distance computation
+is phrased as a matmul ``points @ centroids.T`` so it lands on the MXU
+(128x128 systolic array), with the norm terms as cheap VPU adds. Channels
+are tiled along the grid so each block's VMEM footprint is bounded:
+
+  VMEM per step  =  bn*m (points) + k*m (centroids) + bn*k (cross) floats
+  default small preset (bn=128, m=256, k<=24):  ~161 KiB — fits easily.
+
+Kernels MUST run with interpret=True on CPU PJRT: real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, want: int = 128) -> int:
+    """Largest divisor of n that is <= want (grid must tile n exactly)."""
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _assign_kernel(pts_ref, cen_ref, lab_ref, d2_ref):
+    pts = pts_ref[...]  # [bn, m]
+    cen = cen_ref[...]  # [k, m]
+    # ||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; cross term on the MXU.
+    cross = jnp.dot(pts, cen.T, preferred_element_type=jnp.float32)  # [bn, k]
+    pnorm = jnp.sum(pts * pts, axis=1, keepdims=True)  # [bn, 1]
+    cnorm = jnp.sum(cen * cen, axis=1)[None, :]  # [1, k]
+    d2 = pnorm - 2.0 * cross + cnorm
+    lab_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    d2_ref[...] = jnp.min(d2, axis=1)
+
+
+def kmeans_assign(points, centroids, block_n: int | None = None):
+    """points [n, m], centroids [k, m] -> (labels [n] i32, min_d2 [n] f32)."""
+    n, m = points.shape
+    k, m2 = centroids.shape
+    assert m == m2, (m, m2)
+    bn = block_n or _pick_block(n)
+    assert n % bn == 0, f"n={n} not tileable by {bn}"
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centroids)
+
+
+def _update_kernel(k, pts_ref, lab_ref, sum_ref, cnt_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    pts = pts_ref[...]  # [bn, m]
+    lab = lab_ref[...]  # [bn]
+    # One-hot segment-sum as a matmul: onehot.T @ points on the MXU.
+    onehot = (lab[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)).astype(
+        pts.dtype
+    )  # [bn, k]
+    sum_ref[...] += jnp.dot(onehot.T, pts, preferred_element_type=jnp.float32)
+    cnt_ref[...] += jnp.sum(onehot, axis=0)
+
+
+def centroid_update(points, labels, k: int, block_n: int | None = None):
+    """points [n, m], labels [n] -> (sums [k, m], counts [k]).
+
+    Grid accumulates over channel tiles into the same output block
+    (revisiting pattern); the mean division happens in the caller so empty
+    clusters stay detectable.
+    """
+    n, m = points.shape
+    bn = block_n or _pick_block(n)
+    assert n % bn == 0
+    return pl.pallas_call(
+        functools.partial(_update_kernel, k),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, m), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, labels)
+
+
+def kmeans_step(points, centroids):
+    """One full Lloyd step built from the two kernels:
+    (labels, inertia, new_centroids). Empty clusters keep their position.
+    This is the graph AOT-exported for the rust accelerated path."""
+    k = centroids.shape[0]
+    labels, d2 = kmeans_assign(points, centroids)
+    sums, counts = centroid_update(points, labels, k)
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids)
+    return labels, jnp.sum(d2), new_c

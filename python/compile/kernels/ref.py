@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+(interpret=True) matches its oracle to float tolerance, and hypothesis
+sweeps shapes/k/r. The oracles are also what the rust-side CPU
+implementations are tested against (same math, different language).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(points, centroids):
+    """points [n, m], centroids [k, m] -> (labels [n] i32, min_d2 [n] f32).
+
+    Distances via the expansion ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2 —
+    the same matmul-centric form the Pallas kernel uses for the MXU.
+    """
+    pnorm = jnp.sum(points * points, axis=1, keepdims=True)  # [n,1]
+    cnorm = jnp.sum(centroids * centroids, axis=1)[None, :]  # [1,k]
+    cross = points @ centroids.T  # [n,k]
+    d2 = pnorm - 2.0 * cross + cnorm
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return labels, jnp.min(d2, axis=1)
+
+
+def centroid_update_ref(points, labels, k):
+    """points [n, m], labels [n] -> (sums [k, m], counts [k])."""
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)  # [n,k]
+    sums = onehot.T @ points  # [k,m]
+    counts = jnp.sum(onehot, axis=0)  # [k]
+    return sums, counts
+
+
+def swsc_reconstruct_ref(labels, centroids, factor_a, factor_b):
+    """labels [n], centroids [m, k], A [m, r], B [r, n] -> W_new [m, n].
+
+    The paper's load-time restoration: W' (gather representative columns)
+    plus the SVD compensation A.B.
+    """
+    w_prime = centroids[:, labels]  # [m, n]
+    return w_prime + factor_a @ factor_b
+
+
+def rtn_ref(w, bits):
+    """Per-channel (column) asymmetric RTN fake-quant — mirrors quant::rtn."""
+    levels = float(2**bits)
+    lo = jnp.min(w, axis=0, keepdims=True)
+    hi = jnp.max(w, axis=0, keepdims=True)
+    flat = hi <= lo
+    scale = jnp.where(flat, 1.0, (hi - lo) / (levels - 1.0))
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(w / scale + zero), 0.0, levels - 1.0)
+    deq = (q - zero) * scale
+    return jnp.where(flat, w, deq)
+
+
+def decode_matmul_ref(x, labels, centroids, factor_a, factor_b):
+    """Fused decompressed matmul: y = x @ W_new without materializing W_new.
+
+    y = (x @ C) gathered by labels + (x @ A) @ B — FLOPs scale with k and r
+    instead of n, which is the inference-side payoff of the paper's storage
+    layout (DESIGN.md §3, hardware adaptation).
+    """
+    xc = x @ centroids  # [b, k]
+    gathered = xc[:, labels]  # [b, n]
+    return gathered + (x @ factor_a) @ factor_b
+
+
+def kmeans_lloyd_ref(points, centroids, iters):
+    """Full Lloyd loop (assign+update, no empty-cluster repair) used by the
+    accelerated-path agreement tests."""
+    k = centroids.shape[0]
+
+    def body(c, _):
+        labels, _d = kmeans_assign_ref(points, c)
+        sums, counts = centroid_update_ref(points, labels, k)
+        new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), c)
+        return new_c, None
+
+    final, _ = jax.lax.scan(body, centroids, None, length=iters)
+    return final

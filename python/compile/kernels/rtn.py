@@ -1,0 +1,42 @@
+"""Pallas kernel for the RTN baseline (per-channel asymmetric fake-quant).
+
+Pure VPU work (elementwise + column reductions); tiled over channels so a
+block is a [m, bn] panel. Matches quant::rtn::rtn_quantize (asymmetric) in
+rust and rtn_ref in ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .kmeans import _pick_block
+
+
+def _rtn_kernel(bits, w_ref, out_ref):
+    w = w_ref[...]  # [m, bn]
+    levels = float(2**bits)
+    lo = jnp.min(w, axis=0, keepdims=True)
+    hi = jnp.max(w, axis=0, keepdims=True)
+    flat = hi <= lo
+    scale = jnp.where(flat, 1.0, (hi - lo) / (levels - 1.0))
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(w / scale + zero), 0.0, levels - 1.0)
+    deq = (q - zero) * scale
+    out_ref[...] = jnp.where(flat, w, deq)
+
+
+def rtn_quantize(w, bits: int, block_n: int | None = None):
+    """w [m, n] -> fake-quantized w at `bits` per weight (per-column grid)."""
+    m, n = w.shape
+    bn = block_n or _pick_block(n)
+    assert n % bn == 0
+    return pl.pallas_call(
+        functools.partial(_rtn_kernel, bits),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((m, bn), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(w)

@@ -1,0 +1,142 @@
+"""Layer 2: the GPT-style decoder, its loss, and the Adam train step.
+
+Everything here is traced once by aot.py and lowered to HLO text; at
+runtime rust feeds parameters positionally. The parameter order is the
+canonical order from configs.param_specs (== rust model::params). The LM
+head is weight-tied to the token embedding.
+
+Design rule (DESIGN.md §9): only portable HLO ops — no custom-calls — so
+the lowered text round-trips through xla_extension 0.5.1. That means
+jnp/lax only (no jnp.linalg.*), and the SVD used by error compensation
+lives in rust.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, param_specs
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def split_params(cfg: ModelConfig, flat):
+    """Flat positional list -> name->array dict (traced-safe)."""
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {name: arr for (name, _), arr in zip(specs, flat)}
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def attention(x, wq, wk, wv, wo, n_heads):
+    """Causal multi-head self-attention. x: [b, s, d]."""
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def heads(w):
+        return (x @ w).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)  # [b,h,s,hd]
+
+    q, k, v = heads(wq), heads(wk), heads(wv)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)  # [b,h,s,hd]
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ wo
+
+
+def forward(cfg: ModelConfig, params: dict, tokens):
+    """tokens [b, s] int32 -> logits [b, s, vocab]."""
+    x = params["embed.tok"][tokens] + params["embed.pos"][None, :, :]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        h = layer_norm(x, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        x = x + attention(
+            h,
+            params[f"{p}.attn.wq"],
+            params[f"{p}.attn.wk"],
+            params[f"{p}.attn.wv"],
+            params[f"{p}.attn.wo"],
+            cfg.n_heads,
+        )
+        h = layer_norm(x, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        h = jax.nn.gelu(h @ params[f"{p}.mlp.w1"] + params[f"{p}.mlp.b1"])
+        x = x + h @ params[f"{p}.mlp.w2"] + params[f"{p}.mlp.b2"]
+    x = layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    return x @ params["embed.tok"].T  # tied head
+
+
+def nll_rows(cfg: ModelConfig, params: dict, tokens, targets):
+    """Per-row (per-batch-element) NLL sums and token counts."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt_logp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]  # [b,s]
+    nll = -jnp.sum(tgt_logp, axis=1)  # [b]
+    count = jnp.full((cfg.batch,), float(cfg.seq), dtype=jnp.float32)
+    return nll.astype(jnp.float32), count
+
+
+def make_fwd_eval(cfg: ModelConfig):
+    """(params..., tokens, targets) -> (nll_rows [b], tok_rows [b])."""
+
+    def fwd_eval(*args):
+        flat, tokens, targets = args[:-2], args[-2], args[-1]
+        params = split_params(cfg, flat)
+        return nll_rows(cfg, params, tokens, targets)
+
+    return fwd_eval
+
+
+def make_train_step(cfg: ModelConfig):
+    """(params..., m..., v..., step, lr, tokens, targets)
+    -> (params'..., m'..., v'..., loss). Plain Adam, mean-token loss."""
+    n = len(param_specs(cfg))
+
+    def loss_fn(flat, tokens, targets):
+        params = split_params(cfg, flat)
+        nll, count = nll_rows(cfg, params, tokens, targets)
+        return jnp.sum(nll) / jnp.sum(count)
+
+    def train_step(*args):
+        flat = list(args[0:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step, lr, tokens, targets = args[3 * n :]
+
+        loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, targets)
+        t = step + 1.0
+        bc1 = 1.0 - ADAM_B1**t
+        bc2 = 1.0 - ADAM_B2**t
+        new_flat, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(flat, grads, m, v):
+            mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+            vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * (g * g)
+            update = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+            new_flat.append(p - lr * update)
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_flat) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return train_step
+
+
+def example_params(cfg: ModelConfig, seed: int = 0):
+    """Random parameters with the canonical shapes (tests / AOT specs)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b", ".b1", ".b2")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return out

@@ -1,0 +1,54 @@
+"""AOT lowering tests: HLO text emission, manifest shape, budget math."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import budgets_for, lower_entry, spec, to_hlo_text
+from compile.configs import PRESETS, swsc_params_for_bits
+
+
+class TestBudgets:
+    def test_paper_scale_m4096(self):
+        assert swsc_params_for_bits(4096, 2.0) == (256, 128)
+        assert swsc_params_for_bits(4096, 1.0) == (128, 64)
+
+    def test_small_preset_scale(self):
+        d = PRESETS["small"].d_model  # 256
+        assert swsc_params_for_bits(d, 2.0) == (16, 8)
+        assert swsc_params_for_bits(d, 3.0) == (24, 12)
+
+    def test_budgets_for_dedups(self):
+        pairs = budgets_for(256)
+        assert pairs == [(24, 12), (16, 8)]
+
+
+class TestHloEmission:
+    def test_simple_fn_round_trips_text(self):
+        def fn(x, y):
+            return (x @ y + 1.0,)
+
+        lowered = jax.jit(fn).lower(spec((4, 4)), spec((4, 4)))
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "f32[4,4]" in text
+
+    def test_pallas_kernel_lowers_to_plain_hlo(self):
+        """interpret=True Pallas must not leave custom-calls that the
+        CPU PJRT in rust cannot execute."""
+        from compile.kernels.rtn import rtn_quantize
+
+        lowered = jax.jit(lambda w: (rtn_quantize(w, 3),)).lower(spec((32, 32)))
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        for bad in ("mosaic", "tpu_custom_call"):
+            assert bad not in text.lower(), f"found {bad} in lowered HLO"
+
+    def test_lower_entry_writes_file(self, tmp_path):
+        def fn(x):
+            return (x * 2.0,)
+
+        n = lower_entry(fn, [spec((8,))], str(tmp_path), "t.hlo.txt")
+        assert n > 0
+        assert os.path.getsize(tmp_path / "t.hlo.txt") == n

@@ -1,0 +1,226 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Every kernel is compared against its ref.py oracle with assert_allclose,
+plus hypothesis sweeps over shapes / cluster counts / ranks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.kmeans import centroid_update, kmeans_assign, kmeans_step
+from compile.kernels.matmul import decode_matmul
+from compile.kernels.reconstruct import swsc_reconstruct
+from compile.kernels.rtn import rtn_quantize
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- kmeans
+
+
+class TestKmeansAssign:
+    def test_matches_ref_basic(self):
+        pts, cen = rand(64, 32), rand(8, 32)
+        lab, d2 = kmeans_assign(pts, cen)
+        rlab, rd2 = ref.kmeans_assign_ref(pts, cen)
+        assert_allclose(np.asarray(lab), np.asarray(rlab))
+        assert_allclose(np.asarray(d2), np.asarray(rd2), rtol=1e-4, atol=1e-4)
+
+    def test_obvious_nearest(self):
+        pts = jnp.array([[0.0, 0.0], [10.0, 10.0]], jnp.float32)
+        cen = jnp.array([[0.1, 0.1], [9.9, 9.9]], jnp.float32)
+        lab, _ = kmeans_assign(pts, cen)
+        assert lab.tolist() == [0, 1]
+
+    def test_labels_in_range(self):
+        pts, cen = rand(128, 16), rand(5, 16)
+        lab, _ = kmeans_assign(pts, cen)
+        assert int(lab.min()) >= 0 and int(lab.max()) < 5
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.sampled_from([32, 64, 96, 128]),
+        m=st.sampled_from([8, 16, 64, 256]),
+        k=st.integers(2, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, n, m, k, seed):
+        r = np.random.default_rng(seed)
+        pts = jnp.asarray(r.normal(size=(n, m)), jnp.float32)
+        cen = jnp.asarray(r.normal(size=(k, m)), jnp.float32)
+        lab, d2 = kmeans_assign(pts, cen)
+        rlab, rd2 = ref.kmeans_assign_ref(pts, cen)
+        # Ties can resolve differently; compare via distances.
+        assert_allclose(np.asarray(d2), np.asarray(rd2), rtol=1e-3, atol=1e-3)
+        assert (np.asarray(lab) == np.asarray(rlab)).mean() > 0.99
+
+
+class TestCentroidUpdate:
+    def test_matches_ref(self):
+        pts = rand(96, 24)
+        lab = jnp.asarray(RNG.integers(0, 6, size=96), jnp.int32)
+        sums, counts = centroid_update(pts, lab, 6)
+        rsums, rcounts = ref.centroid_update_ref(pts, lab, 6)
+        assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-4, atol=1e-4)
+        assert_allclose(np.asarray(counts), np.asarray(rcounts))
+
+    def test_counts_sum_to_n(self):
+        pts = rand(64, 8)
+        lab = jnp.asarray(RNG.integers(0, 4, size=64), jnp.int32)
+        _, counts = centroid_update(pts, lab, 4)
+        assert float(counts.sum()) == 64.0
+
+    def test_empty_cluster_zero(self):
+        pts = rand(32, 4)
+        lab = jnp.zeros(32, jnp.int32)  # everything in cluster 0
+        sums, counts = centroid_update(pts, lab, 3)
+        assert float(counts[1]) == 0.0 and float(counts[2]) == 0.0
+        assert_allclose(np.asarray(sums[1]), 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.sampled_from([32, 64, 128]),
+        m=st.sampled_from([4, 16, 32]),
+        k=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, n, m, k, seed):
+        r = np.random.default_rng(seed)
+        pts = jnp.asarray(r.normal(size=(n, m)), jnp.float32)
+        lab = jnp.asarray(r.integers(0, k, size=n), jnp.int32)
+        sums, counts = centroid_update(pts, lab, k)
+        rsums, rcounts = ref.centroid_update_ref(pts, lab, k)
+        assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-3, atol=1e-3)
+        assert_allclose(np.asarray(counts), np.asarray(rcounts))
+
+
+class TestKmeansStep:
+    def test_one_step_reduces_inertia(self):
+        r = np.random.default_rng(7)
+        blobs = np.concatenate(
+            [r.normal(loc=0.0, size=(32, 16)), r.normal(loc=8.0, size=(32, 16))]
+        )
+        pts = jnp.asarray(blobs, jnp.float32)
+        cen0 = pts[:2]
+        lab, inertia0, cen1 = kmeans_step(pts, cen0)
+        _, inertia1, _ = kmeans_step(pts, cen1)
+        assert float(inertia1) <= float(inertia0) + 1e-4
+
+    def test_fixed_point_on_perfect_centroids(self):
+        pts = jnp.asarray([[0.0, 0.0], [0.0, 0.0], [4.0, 4.0], [4.0, 4.0]], jnp.float32)
+        cen = jnp.asarray([[0.0, 0.0], [4.0, 4.0]], jnp.float32)
+        lab, inertia, new_c = kmeans_step(pts, cen)
+        assert float(inertia) < 1e-9
+        assert_allclose(np.asarray(new_c), np.asarray(cen))
+
+
+# ---------------------------------------------------------- reconstruct
+
+
+class TestReconstruct:
+    def test_matches_ref(self):
+        m, n, k, r = 32, 64, 6, 4
+        lab = jnp.asarray(RNG.integers(0, k, size=n), jnp.int32)
+        cen, fa, fb = rand(m, k), rand(m, r), rand(r, n)
+        out = swsc_reconstruct(lab, cen, fa, fb)
+        want = ref.swsc_reconstruct_ref(lab, cen, fa, fb)
+        assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_pure_gather_when_factors_zero(self):
+        m, n, k, r = 16, 32, 4, 2
+        lab = jnp.asarray(RNG.integers(0, k, size=n), jnp.int32)
+        cen = rand(m, k)
+        out = swsc_reconstruct(lab, cen, jnp.zeros((m, r)), jnp.zeros((r, n)))
+        want = cen[:, lab]
+        assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([8, 32, 256]),
+        n=st.sampled_from([32, 64, 256]),
+        k=st.integers(1, 24),
+        r=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, m, n, k, r, seed):
+        rg = np.random.default_rng(seed)
+        lab = jnp.asarray(rg.integers(0, k, size=n), jnp.int32)
+        cen = jnp.asarray(rg.normal(size=(m, k)), jnp.float32)
+        fa = jnp.asarray(rg.normal(size=(m, r)), jnp.float32)
+        fb = jnp.asarray(rg.normal(size=(r, n)), jnp.float32)
+        out = swsc_reconstruct(lab, cen, fa, fb)
+        want = ref.swsc_reconstruct_ref(lab, cen, fa, fb)
+        assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------ rtn
+
+
+class TestRtn:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_matches_ref(self, bits):
+        w = rand(48, 32)
+        out = rtn_quantize(w, bits)
+        want = ref.rtn_ref(w, bits)
+        assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_levels_bounded(self):
+        w = rand(64, 16)
+        out = np.asarray(rtn_quantize(w, 2))
+        for j in range(16):
+            assert len(np.unique(np.round(out[:, j], 5))) <= 4
+
+    def test_error_shrinks_with_bits(self):
+        w = rand(128, 8)
+        errs = [float(jnp.mean((rtn_quantize(w, b) - w) ** 2)) for b in (2, 4, 8)]
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_constant_channel_exact(self):
+        w = jnp.full((16, 4), 2.5, jnp.float32)
+        assert_allclose(np.asarray(rtn_quantize(w, 2)), 2.5)
+
+
+# -------------------------------------------------------- decode matmul
+
+
+class TestDecodeMatmul:
+    def test_matches_ref_and_dense(self):
+        b, m, n, k, r = 8, 32, 64, 6, 4
+        x = rand(b, m)
+        lab = jnp.asarray(RNG.integers(0, k, size=n), jnp.int32)
+        cen, fa, fb = rand(m, k), rand(m, r), rand(r, n)
+        y = decode_matmul(x, lab, cen, fa, fb)
+        want = ref.decode_matmul_ref(x, lab, cen, fa, fb)
+        assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-4)
+        # And against the dense path through the reconstructed matrix.
+        w_new = ref.swsc_reconstruct_ref(lab, cen, fa, fb)
+        assert_allclose(np.asarray(y), np.asarray(x @ w_new), rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([1, 4, 16]),
+        m=st.sampled_from([16, 64]),
+        n=st.sampled_from([32, 128]),
+        k=st.integers(1, 12),
+        r=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_dense(self, b, m, n, k, r, seed):
+        rg = np.random.default_rng(seed)
+        x = jnp.asarray(rg.normal(size=(b, m)), jnp.float32)
+        lab = jnp.asarray(rg.integers(0, k, size=n), jnp.int32)
+        cen = jnp.asarray(rg.normal(size=(m, k)), jnp.float32)
+        fa = jnp.asarray(rg.normal(size=(m, r)), jnp.float32)
+        fb = jnp.asarray(rg.normal(size=(r, n)), jnp.float32)
+        y = decode_matmul(x, lab, cen, fa, fb)
+        w_new = ref.swsc_reconstruct_ref(lab, cen, fa, fb)
+        assert_allclose(np.asarray(y), np.asarray(x @ w_new), rtol=2e-3, atol=2e-3)

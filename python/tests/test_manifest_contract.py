@@ -1,0 +1,62 @@
+"""Cross-layer contract: the generated manifest must agree with
+configs.param_specs (which rust's model::params mirrors verbatim —
+rust asserts its own side via ArtifactManifest::verify_config)."""
+
+import os
+
+import pytest
+
+from compile.configs import PRESETS, param_specs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.txt")
+
+
+def parse_manifest(text, preset):
+    current, fingerprint, params, exes = None, None, [], {}
+    for line in text.splitlines():
+        parts = line.split()
+        if not parts or parts[0].startswith("#"):
+            continue
+        if parts[0] == "preset":
+            current = parts[1]
+        elif current == preset and parts[0] == "fingerprint":
+            fingerprint = parts[1]
+        elif current == preset and parts[0] == "param":
+            params.append((parts[1], tuple(int(x) for x in parts[2].split(","))))
+        elif current == preset and parts[0] == "executable":
+            exes[parts[1]] = (parts[2], int(parts[3]))
+    return fingerprint, params, exes
+
+
+@pytest.mark.skipif(not os.path.exists(ART), reason="run `make artifacts` first")
+@pytest.mark.parametrize("preset", ["tiny", "small"])
+class TestManifestContract:
+    def test_fingerprint_and_param_order(self, preset):
+        cfg = PRESETS[preset]
+        fingerprint, params, _ = parse_manifest(open(ART).read(), preset)
+        assert fingerprint == cfg.fingerprint()
+        assert params == [(n, tuple(s)) for n, s in param_specs(cfg)]
+
+    def test_all_executables_present_with_files(self, preset):
+        cfg = PRESETS[preset]
+        _, _, exes = parse_manifest(open(ART).read(), preset)
+        n = len(param_specs(cfg))
+        assert exes["fwd_eval"][1] == 2
+        assert exes["train_step"][1] == 3 * n + 1
+        art_dir = os.path.dirname(ART)
+        for fname, _n_out in exes.values():
+            path = os.path.join(art_dir, fname)
+            assert os.path.exists(path), fname
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, f"{fname} is not HLO text"
+
+    def test_kernel_artifacts_cover_table1_budgets(self, preset):
+        from compile.aot import budgets_for
+
+        cfg = PRESETS[preset]
+        _, _, exes = parse_manifest(open(ART).read(), preset)
+        for k, r in budgets_for(cfg.d_model):
+            assert f"kmeans_step_k{k}" in exes
+            assert f"reconstruct_k{k}_r{r}" in exes
+            assert f"decode_matmul_k{k}_r{r}" in exes

@@ -1,0 +1,83 @@
+//! Ablation over the clustering design choices DESIGN.md calls out:
+//! k-means++ vs random seeding, mean vs medoid representatives, full Lloyd
+//! vs mini-batch — measured on both quality (inertia / reconstruction MSE)
+//! and wallclock.
+
+use swsc::bench::Bench;
+use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::kmeans::{
+    cluster_channels, init_kmeans_pp, init_random, minibatch_kmeans, InitMethod, KMeansConfig,
+    Representative,
+};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+
+fn weights(m: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let groups = 24;
+    let centers: Vec<Vec<f32>> =
+        (0..groups).map(|_| (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+    let mut w = Tensor::zeros(&[m, m]);
+    for j in 0..m {
+        let c = &centers[j % groups];
+        let col: Vec<f32> = c.iter().map(|&v| v + rng.normal_f32(0.0, 0.25)).collect();
+        w.set_col(j, &col);
+    }
+    w
+}
+
+fn main() {
+    let bench = Bench::new("ablation_kmeans");
+    let m = 256;
+    let k = 16;
+    let w = weights(m, 31);
+
+    bench.section("seeding: k-means++ vs random (k=16, m=256, 10 restarts)");
+    for (label, init) in [("kmeans++", InitMethod::KMeansPlusPlus), ("random", InitMethod::Random)] {
+        let mut inertias = Vec::new();
+        for seed in 0..10u64 {
+            let res = cluster_channels(
+                &w,
+                &KMeansConfig { k, init, seed, ..Default::default() },
+            );
+            inertias.push(res.inertia);
+        }
+        let mean = inertias.iter().sum::<f64>() / inertias.len() as f64;
+        let worst = inertias.iter().cloned().fold(0.0f64, f64::max);
+        println!("  {label:<9}: mean inertia {mean:10.3}  worst {worst:10.3}");
+    }
+
+    bench.section("representative: mean vs medoid (reconstruction MSE)");
+    for (label, rep) in [("mean", Representative::Mean), ("medoid", Representative::Medoid)] {
+        let c = compress_matrix(&w, &SwscConfig::new(k, 8).with_representative(rep));
+        println!("  {label:<7}: mse {:.4e}  avg_bits {:.3}", c.reconstruct().mse(&w), c.avg_bits());
+    }
+
+    bench.section("full Lloyd vs mini-batch (quality)");
+    {
+        let channels = w.transpose();
+        let mut rng = Rng::new(7);
+        let full = cluster_channels(&w, &KMeansConfig { k, seed: 7, ..Default::default() });
+        let init = init_kmeans_pp(&channels, k, &mut rng);
+        let (_, _, mb_inertia) = minibatch_kmeans(&channels, init, 64, 100, &mut rng);
+        println!("  full lloyd inertia {:.3}  minibatch inertia {:.3}", full.inertia, mb_inertia);
+    }
+
+    bench.section("wallclock");
+    bench.case("lloyd_k16_m256", || {
+        cluster_channels(&w, &KMeansConfig { k, seed: 1, ..Default::default() })
+    });
+    bench.case("lloyd_k24_m256", || {
+        cluster_channels(&w, &KMeansConfig { k: 24, seed: 1, ..Default::default() })
+    });
+    let channels = w.transpose();
+    bench.case("minibatch_k16_b64_s100", || {
+        let mut rng = Rng::new(2);
+        let init = init_random(&channels, k, &mut rng);
+        minibatch_kmeans(&channels, init, 64, 100, &mut rng)
+    });
+    bench.case("init_kmeanspp_k16", || {
+        let mut rng = Rng::new(3);
+        init_kmeans_pp(&channels, k, &mut rng)
+    });
+}

@@ -1,0 +1,74 @@
+//! Fig. 3 ablation: how much does the SVD error compensation buy?
+//!
+//! Sweeps the retained rank r (r = 0 == no compensation, the paper's
+//! clustering-only variant) at fixed cluster count and reports matrix MSE,
+//! energy removed, and avg-bits — the storage/quality trade the paper's
+//! §III-C motivates. Also times the compensation step (SVD backends).
+
+use swsc::bench::Bench;
+use swsc::compress::{compress_matrix, matrix_stats, SwscConfig};
+use swsc::linalg::{svd_jacobi, svd_randomized, truncate};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+
+fn trained_like(m: usize, seed: u64) -> Tensor {
+    // Clustered channels + heavy-tailed outliers.
+    let mut rng = Rng::new(seed);
+    let groups = 20;
+    let centers: Vec<Vec<f32>> =
+        (0..groups).map(|_| (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+    let mut w = Tensor::zeros(&[m, m]);
+    for j in 0..m {
+        let c = &centers[j % groups];
+        let col: Vec<f32> = c.iter().map(|&v| v + rng.normal_f32(0.0, 0.2)).collect();
+        w.set_col(j, &col);
+    }
+    for _ in 0..m {
+        let i = rng.below(m * m);
+        w.data_mut()[i] += rng.normal_f32(0.0, 5.0);
+    }
+    w
+}
+
+fn main() {
+    let bench = Bench::new("ablation_rank");
+    let m = 256;
+    let k = 16;
+    let w = trained_like(m, 77);
+
+    bench.section("rank sweep at fixed k=16 (m=256)");
+    println!("| rank | avg bits | MSE        | err energy removed |");
+    println!("|------|----------|------------|--------------------|");
+    for r in [0usize, 2, 4, 8, 16, 32, 64] {
+        let c = compress_matrix(&w, &SwscConfig::new(k, r));
+        let s = matrix_stats("w", &w, &c);
+        println!(
+            "| {r:<4} | {:<8.3} | {:<10.3e} | {:<18.1}% |",
+            s.avg_bits,
+            s.mse_compensated,
+            100.0 * s.error_energy_removed
+        );
+    }
+
+    bench.section("SVD backend timing on the 256x256 error matrix (r=8)");
+    let err = {
+        let c = compress_matrix(&w, &SwscConfig::new(k, 0));
+        w.sub(&c.reconstruct_uncompensated())
+    };
+    bench.case("jacobi_full", || svd_jacobi(&err));
+    bench.case("jacobi_then_truncate_r8", || truncate(&svd_jacobi(&err), 8));
+    let mut rng = Rng::new(5);
+    bench.case("randomized_r8_q2", || svd_randomized(&err, 8, 8, 2, &mut rng));
+
+    bench.section("quality: randomized vs exact at r=8");
+    let exact = {
+        let s = truncate(&svd_jacobi(&err), 8);
+        err.sub(&s.reconstruct()).fro_norm()
+    };
+    let mut rng = Rng::new(6);
+    let approx = {
+        let s = svd_randomized(&err, 8, 8, 2, &mut rng);
+        err.sub(&s.reconstruct()).fro_norm()
+    };
+    println!("residual: exact {exact:.4}  randomized {approx:.4}  (ratio {:.4})", approx / exact);
+}

@@ -1,0 +1,76 @@
+//! Reproduction of the paper's Fig. 2 / §III-A motivation claim:
+//!
+//!   "under the condition of constant storage space, the mean square error
+//!    of vectors in the same cluster is lower than that after RTN
+//!    quantization"
+//!
+//! We sweep storage budgets on (a) channel-structured weights like trained
+//! attention projectors and (b) unstructured i.i.d. weights, and print the
+//! cluster-restore MSE vs RTN MSE at matched avg-bits. Also times the two
+//! transforms (clustering vs RTN) at the default matrix size.
+
+use swsc::bench::Bench;
+use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::quant::bits::{rtn_avg_bits, swsc_avg_bits_paper, swsc_params_for_bits};
+use swsc::quant::{rtn_quantize, RtnConfig, RtnMode};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+
+/// Channel-clustered weights + outliers (the regime trained projectors
+/// live in; see compress::swsc tests for the same generator).
+fn structured(m: usize, groups: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> =
+        (0..groups).map(|_| (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+    let mut w = Tensor::zeros(&[m, m]);
+    for j in 0..m {
+        let c = &centers[j % groups];
+        let col: Vec<f32> = c.iter().map(|&v| v + rng.normal_f32(0.0, 0.15)).collect();
+        w.set_col(j, &col);
+    }
+    for _ in 0..(m * m / 200).max(1) {
+        let i = rng.below(m * m);
+        w.data_mut()[i] += rng.normal_f32(0.0, 6.0);
+    }
+    w
+}
+
+fn run_sweep(label: &str, w: &Tensor) {
+    let m = w.rows();
+    println!("\n--- {label} (m = {m}) ---");
+    println!("| budget | SWSC (k,r)     | SWSC bits | SWSC MSE   | RTN bits | RTN MSE    | winner |");
+    println!("|--------|----------------|-----------|------------|----------|------------|--------|");
+    for bits in [1.0f64, 2.0, 3.0, 4.0] {
+        let (k, r) = swsc_params_for_bits(m, bits, 0.5);
+        let c = compress_matrix(w, &SwscConfig::new(k, r));
+        let swsc_mse = c.reconstruct().mse(w);
+        let rtn = rtn_quantize(w, &RtnConfig { bits: bits.round() as u32, mode: RtnMode::Asymmetric });
+        let rtn_mse = w.mse(&rtn);
+        println!(
+            "| {bits:<6} | k={k:<4} r={r:<4} | {:<9.3} | {swsc_mse:<10.3e} | {:<8.3} | {rtn_mse:<10.3e} | {} |",
+            swsc_avg_bits_paper(m, k, r),
+            rtn_avg_bits(m, m, bits.round() as u32),
+            if swsc_mse < rtn_mse { "SWSC" } else { "RTN" },
+        );
+    }
+}
+
+fn main() {
+    let bench = Bench::new("fig2_motivation");
+    bench.section("paper §III-A feasibility: within-cluster MSE vs RTN at equal storage");
+
+    let structured_w = structured(256, 24, 1234);
+    run_sweep("channel-structured weights (trained-projector regime)", &structured_w);
+
+    let mut rng = Rng::new(99);
+    let iid = Tensor::randn(&[256, 256], &mut rng);
+    run_sweep("unstructured i.i.d. gaussian (adversarial for SWSC)", &iid);
+
+    println!();
+    bench.case("SWSC transform 256x256 (k=16, r=8)", || {
+        compress_matrix(&structured_w, &SwscConfig::new(16, 8))
+    });
+    bench.case("RTN transform 256x256 (2-bit)", || {
+        rtn_quantize(&structured_w, &RtnConfig { bits: 2, mode: RtnMode::Asymmetric })
+    });
+}

@@ -1,0 +1,82 @@
+//! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf):
+//! the L3 CPU kernels (matmul, SVD, kmeans assign, packing) and the PJRT
+//! round trip (literal conversion + fwd_eval execution, artifact-gated).
+
+use std::path::Path;
+use swsc::bench::Bench;
+use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::io::{pack_u32, unpack_u32};
+use swsc::kmeans::assign;
+use swsc::linalg::{qr_householder, svd_jacobi, svd_randomized};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::new("hotpath");
+    let mut rng = Rng::new(404);
+
+    bench.section("L3 tensor kernels");
+    let a = Tensor::randn(&[256, 256], &mut rng);
+    let b = Tensor::randn(&[256, 256], &mut rng);
+    let m = bench.case("matmul_256", || a.matmul(&b));
+    let flops = 2.0 * 256f64.powi(3);
+    println!("  -> {:.2} GFLOP/s", flops / m / 1e9);
+    let a512 = Tensor::randn(&[512, 512], &mut rng);
+    let b512 = Tensor::randn(&[512, 512], &mut rng);
+    let m = bench.case("matmul_512", || a512.matmul(&b512));
+    println!("  -> {:.2} GFLOP/s", 2.0 * 512f64.powi(3) / m / 1e9);
+    bench.case("transpose_512", || a512.transpose());
+
+    bench.section("L3 linalg");
+    let err = Tensor::randn(&[256, 256], &mut rng);
+    bench.case("svd_jacobi_256", || svd_jacobi(&err));
+    let mut r2 = Rng::new(405);
+    bench.case("svd_randomized_256_r8", || svd_randomized(&err, 8, 8, 2, &mut r2));
+    let tall = Tensor::randn(&[256, 24], &mut rng);
+    bench.case("qr_256x24", || qr_householder(&tall));
+
+    bench.section("L3 kmeans");
+    let pts = Tensor::randn(&[256, 256], &mut rng);
+    let cen = Tensor::randn(&[16, 256], &mut rng);
+    bench.case("assign_n256_k16", || assign(&pts, &cen));
+
+    bench.section("pipeline: full matrix compression");
+    bench.case("compress_256_k16_r8", || compress_matrix(&pts, &SwscConfig::new(16, 8)));
+    bench.case("compress_256_k24_r12", || compress_matrix(&pts, &SwscConfig::new(24, 12)));
+
+    bench.section("label packing");
+    let labels: Vec<u32> = (0..4096).map(|i| (i * 7) as u32 % 16).collect();
+    bench.case("pack_4096_labels_4bit", || pack_u32(&labels, 4));
+    let packed = pack_u32(&labels, 4);
+    bench.case("unpack_4096_labels_4bit", || unpack_u32(&packed, 4096, 4));
+
+    // PJRT round trip (needs artifacts).
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        use swsc::model::{init_params, param_specs, ModelConfig};
+        use swsc::runtime::{tensor_to_literal, tokens_to_literal, ArtifactManifest, Engine};
+
+        bench.section("PJRT runtime (tiny preset)");
+        let cfg = ModelConfig::tiny();
+        let man = ArtifactManifest::load(dir, "tiny").unwrap();
+        let engine = Engine::new(man).unwrap();
+        let exe = engine.load("fwd_eval").unwrap();
+        let ck = init_params(&cfg, 1);
+        let host: Vec<Tensor> =
+            param_specs(&cfg).iter().map(|s| ck.get(&s.name).unwrap().clone()).collect();
+        let toks: Vec<i32> = (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+
+        bench.case("literal_convert_all_params", || {
+            host.iter().map(|t| tensor_to_literal(t).unwrap()).count()
+        });
+        bench.case("fwd_eval_execute", || {
+            let mut args: Vec<xla::Literal> =
+                host.iter().map(|t| tensor_to_literal(t).unwrap()).collect();
+            args.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
+            args.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
+            exe.run(&args).unwrap()
+        });
+    } else {
+        println!("(skipping PJRT section — run `make artifacts`)");
+    }
+}

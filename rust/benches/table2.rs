@@ -1,0 +1,46 @@
+//! Bench/reproduction of paper Table II: average bits as a function of the
+//! cluster count and the retained singular rank. Pure accounting — this
+//! regenerates the table verbatim at the paper's m = 4096 and at our
+//! model's m = 256, and times the (cheap) accounting path.
+
+use swsc::bench::Bench;
+use swsc::quant::bits::{swsc_avg_bits, swsc_avg_bits_paper};
+use swsc::report::render_table2;
+
+fn main() {
+    let b = Bench::new("table2");
+    b.section("paper Table II — m = 4096 (verbatim)");
+    println!("{}", render_table2(4096));
+
+    // Verify the three anchor points the paper prints.
+    assert_eq!(swsc_avg_bits_paper(4096, 128, 0), 0.5);
+    assert_eq!(swsc_avg_bits_paper(4096, 256, 0), 1.0);
+    assert_eq!(swsc_avg_bits_paper(4096, 512, 0), 2.0);
+    assert_eq!(swsc_avg_bits_paper(4096, 0, 64), 0.5);
+    assert_eq!(swsc_avg_bits_paper(4096, 0, 128), 1.0);
+    assert_eq!(swsc_avg_bits_paper(4096, 0, 256), 2.0);
+    println!("anchor points match the paper exactly.\n");
+
+    b.section("scaled to this repo's model — m = 256");
+    println!("{}", render_table2(256));
+
+    b.section("exact accounting (incl. label bits the paper drops)");
+    println!("| m    | k   | r   | paper formula | exact (w/ labels) |");
+    println!("|------|-----|-----|---------------|-------------------|");
+    for (m, k, r) in [(4096, 256, 128), (4096, 512, 256), (256, 16, 8), (256, 24, 12)] {
+        let paper = swsc_avg_bits_paper(m, k, r);
+        let exact = swsc_avg_bits(m, m, k, r).avg_bits;
+        println!("| {m:<4} | {k:<3} | {r:<3} | {paper:<13.4} | {exact:<17.4} |");
+    }
+    println!();
+
+    b.case("avg_bits accounting (4096, full grid)", || {
+        let mut acc = 0.0;
+        for k in (64..=512).step_by(64) {
+            for r in (32..=256).step_by(32) {
+                acc += swsc_avg_bits(4096, 4096, k, r).avg_bits;
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,91 @@
+//! Custom benchmark harness.
+//!
+//! The vendored crate set has no criterion, so `cargo bench` targets are
+//! declared `harness = false` and drive this module instead: warmup, timed
+//! iterations, and a stable text report (mean ± std, min, p50). Benches
+//! that reproduce a paper table print the table rows after the timings.
+
+use crate::util::timer::Stats;
+use std::time::Instant;
+
+/// One benchmark group with shared formatting.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        let iters = std::env::var("SWSC_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+        Bench { name: name.to_string(), warmup: 2, iters }
+    }
+
+    pub fn with_iters(mut self, iters: usize) -> Self {
+        self.iters = iters.max(1);
+        self
+    }
+
+    /// Run one case: calls `f` warmup+iters times, prints a line, returns
+    /// the mean seconds.
+    pub fn case<T>(&self, label: &str, mut f: impl FnMut() -> T) -> f64 {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut stats = Stats::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            stats.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = stats.mean();
+        println!(
+            "bench {:<40} {:>12} ± {:>10}  min {:>10}  p50 {:>10}  (n={})",
+            format!("{}/{}", self.name, label),
+            fmt_secs(mean),
+            fmt_secs(stats.std()),
+            fmt_secs(stats.min()),
+            fmt_secs(stats.percentile(50.0)),
+            stats.count(),
+        );
+        mean
+    }
+
+    /// Print a section header.
+    pub fn section(&self, title: &str) {
+        println!("\n=== {} — {} ===", self.name, title);
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_secs(2.5e-9), "2.5 ns");
+    }
+
+    #[test]
+    fn case_runs_and_returns_mean() {
+        let b = Bench::new("unit").with_iters(3);
+        let mean = b.case("noop", || 1 + 1);
+        assert!(mean >= 0.0);
+    }
+}

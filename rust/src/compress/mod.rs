@@ -1,0 +1,14 @@
+//! The SWSC compression pipeline — the paper's primary contribution.
+//!
+//! Per weight matrix: channel K-Means → mean representatives → error matrix
+//! → truncated SVD compensation → packed [`CompressedMatrix`]. Model-level
+//! planning (which matrices, what budgets) lives in [`plan`], quality
+//! metrics in [`stats`].
+
+pub mod plan;
+pub mod stats;
+mod swsc;
+
+pub use plan::{CompressionPlan, MatrixPlan, ProjectorSet};
+pub use stats::{matrix_stats, MatrixStats};
+pub use swsc::{compress_matrix, CompressedMatrix, SvdBackend, SwscConfig};

@@ -1,0 +1,172 @@
+//! Model-level compression planning.
+//!
+//! The paper compresses the Q and/or K projectors of every self-attention
+//! layer (and deliberately *not* V — §IV-B). A [`CompressionPlan`] maps
+//! parameter names to per-matrix [`SwscConfig`]s (or RTN budgets) so the
+//! coordinator can schedule each matrix as an independent job.
+
+use super::swsc::SwscConfig;
+use crate::quant::bits::swsc_params_for_bits;
+use crate::quant::RtnConfig;
+
+/// Which attention projectors to compress — the paper's Table I rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProjectorSet {
+    Q,
+    K,
+    QAndK,
+    /// Ablation only: the paper argues V must not be compressed.
+    V,
+}
+
+impl ProjectorSet {
+    /// Suffixes of parameter names this set selects (see `model::params`
+    /// naming convention `layers.{i}.attn.{wq,wk,wv,wo}`).
+    pub fn suffixes(&self) -> &'static [&'static str] {
+        match self {
+            ProjectorSet::Q => &["attn.wq"],
+            ProjectorSet::K => &["attn.wk"],
+            ProjectorSet::QAndK => &["attn.wq", "attn.wk"],
+            ProjectorSet::V => &["attn.wv"],
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProjectorSet::Q => "Q",
+            ProjectorSet::K => "K",
+            ProjectorSet::QAndK => "Q & K",
+            ProjectorSet::V => "V",
+        }
+    }
+
+    pub fn matches(&self, param_name: &str) -> bool {
+        self.suffixes().iter().any(|s| param_name.ends_with(s))
+    }
+}
+
+/// One matrix's job spec.
+#[derive(Debug, Clone)]
+pub struct MatrixPlan {
+    pub name: String,
+    pub config: SwscConfig,
+}
+
+/// A full-model compression plan.
+#[derive(Debug, Clone)]
+pub struct CompressionPlan {
+    pub matrices: Vec<MatrixPlan>,
+    /// The matched RTN baseline budget, if this plan was built from a
+    /// target-bits spec.
+    pub rtn_baseline: Option<RtnConfig>,
+    pub target_bits: f64,
+}
+
+impl CompressionPlan {
+    /// Build a plan for `projectors` at `target_bits` average bits, given
+    /// the model's parameter names and their shapes. `rank_share` splits
+    /// the budget between clusters and rank (0.5 = even, paper-style).
+    pub fn for_target_bits(
+        param_shapes: &[(String, Vec<usize>)],
+        projectors: ProjectorSet,
+        target_bits: f64,
+        rank_share: f64,
+        seed: u64,
+    ) -> CompressionPlan {
+        let mut matrices = Vec::new();
+        for (name, shape) in param_shapes {
+            if !projectors.matches(name) || shape.len() != 2 {
+                continue;
+            }
+            let m = shape[0];
+            let (k, r) = swsc_params_for_bits(m, target_bits, rank_share);
+            let mut cfg = SwscConfig::new(k, r);
+            // Derive a stable per-matrix seed from the name so jobs are
+            // reproducible regardless of scheduling order.
+            cfg.seed = seed ^ fnv1a(name);
+            cfg.kmeans.seed = cfg.seed;
+            matrices.push(MatrixPlan { name: name.clone(), config: cfg });
+        }
+        CompressionPlan {
+            matrices,
+            rtn_baseline: Some(RtnConfig { bits: target_bits.round() as u32, ..Default::default() }),
+            target_bits,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.matrices.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.matrices.len()
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<(String, Vec<usize>)> {
+        let mut v = Vec::new();
+        for i in 0..3 {
+            for p in ["wq", "wk", "wv", "wo"] {
+                v.push((format!("layers.{i}.attn.{p}"), vec![256, 256]));
+            }
+            v.push((format!("layers.{i}.mlp.w1"), vec![256, 1024]));
+        }
+        v.push(("embed.tok".into(), vec![512, 256]));
+        v
+    }
+
+    #[test]
+    fn q_plan_selects_only_wq() {
+        let p = CompressionPlan::for_target_bits(&shapes(), ProjectorSet::Q, 2.0, 0.5, 0);
+        assert_eq!(p.len(), 3);
+        assert!(p.matrices.iter().all(|m| m.name.ends_with("attn.wq")));
+    }
+
+    #[test]
+    fn qk_plan_selects_both() {
+        let p = CompressionPlan::for_target_bits(&shapes(), ProjectorSet::QAndK, 3.0, 0.5, 0);
+        assert_eq!(p.len(), 6);
+    }
+
+    #[test]
+    fn per_matrix_seeds_differ_but_are_stable() {
+        let a = CompressionPlan::for_target_bits(&shapes(), ProjectorSet::QAndK, 2.0, 0.5, 7);
+        let b = CompressionPlan::for_target_bits(&shapes(), ProjectorSet::QAndK, 2.0, 0.5, 7);
+        for (x, y) in a.matrices.iter().zip(&b.matrices) {
+            assert_eq!(x.config.seed, y.config.seed);
+        }
+        let seeds: std::collections::HashSet<u64> =
+            a.matrices.iter().map(|m| m.config.seed).collect();
+        assert_eq!(seeds.len(), a.len(), "seeds must be distinct per matrix");
+    }
+
+    #[test]
+    fn budget_lands_near_target() {
+        let p = CompressionPlan::for_target_bits(&shapes(), ProjectorSet::Q, 2.0, 0.5, 0);
+        for m in &p.matrices {
+            let bits =
+                crate::quant::bits::swsc_avg_bits_paper(256, m.config.clusters, m.config.rank);
+            assert!((bits - 2.0).abs() < 0.3, "{}: {bits}", m.name);
+        }
+    }
+
+    #[test]
+    fn v_ablation_selects_wv() {
+        let p = CompressionPlan::for_target_bits(&shapes(), ProjectorSet::V, 2.0, 0.5, 0);
+        assert_eq!(p.len(), 3);
+        assert!(p.matrices.iter().all(|m| m.name.ends_with("attn.wv")));
+    }
+}

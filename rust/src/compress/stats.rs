@@ -1,0 +1,81 @@
+//! Quality metrics for compressed matrices (drives Fig-2 motivation bench
+//! and the per-matrix report).
+
+use super::swsc::CompressedMatrix;
+use crate::tensor::Tensor;
+
+/// Per-matrix compression quality summary.
+#[derive(Debug, Clone)]
+pub struct MatrixStats {
+    pub name: String,
+    pub shape: (usize, usize),
+    pub clusters: usize,
+    pub rank: usize,
+    pub avg_bits: f64,
+    pub compression_ratio: f64,
+    /// MSE of the cluster-only approximation W' (paper Fig. 2).
+    pub mse_uncompensated: f64,
+    /// MSE after SVD compensation W' + A·B (paper Fig. 3).
+    pub mse_compensated: f64,
+    /// Fraction of the error energy removed by the compensation step.
+    pub error_energy_removed: f64,
+}
+
+/// Compute the quality stats of `c` against the original `w`.
+pub fn matrix_stats(name: &str, w: &Tensor, c: &CompressedMatrix) -> MatrixStats {
+    let mse_un = c.reconstruct_uncompensated().mse(w);
+    let mse_comp = c.reconstruct().mse(w);
+    let removed = if mse_un > 0.0 { 1.0 - mse_comp / mse_un } else { 0.0 };
+    MatrixStats {
+        name: name.to_string(),
+        shape: c.shape,
+        clusters: c.k(),
+        rank: c.rank(),
+        avg_bits: c.avg_bits(),
+        compression_ratio: c.compression_ratio(),
+        mse_uncompensated: mse_un,
+        mse_compensated: mse_comp,
+        error_energy_removed: removed.clamp(0.0, 1.0),
+    }
+}
+
+impl std::fmt::Display for MatrixStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<24} {:>4}x{:<4} k={:<4} r={:<3} {:>5.2} bits {:>6.2}x  mse {:.3e} -> {:.3e} ({:>4.1}% removed)",
+            self.name,
+            self.shape.0,
+            self.shape.1,
+            self.clusters,
+            self.rank,
+            self.avg_bits,
+            self.compression_ratio,
+            self.mse_uncompensated,
+            self.mse_compensated,
+            100.0 * self.error_energy_removed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stats_fields_consistent() {
+        let mut rng = Rng::new(101);
+        let w = Tensor::randn(&[32, 32], &mut rng);
+        let c = compress_matrix(&w, &SwscConfig::new(4, 4));
+        let s = matrix_stats("test.w", &w, &c);
+        assert_eq!(s.clusters, 4);
+        assert_eq!(s.rank, 4);
+        assert!(s.mse_compensated <= s.mse_uncompensated);
+        assert!(s.error_energy_removed >= 0.0 && s.error_energy_removed <= 1.0);
+        assert!(s.compression_ratio > 1.0);
+        let rendered = format!("{s}");
+        assert!(rendered.contains("test.w"));
+    }
+}

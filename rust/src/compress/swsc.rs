@@ -1,0 +1,304 @@
+//! Core SWSC transform: cluster channels, share the representative vector,
+//! compensate the residual with a truncated SVD (paper §III-B, §III-C).
+
+use crate::kmeans::{cluster_channels, KMeansConfig, Representative};
+use crate::linalg::{svd_jacobi, svd_randomized, truncate, Svd};
+use crate::quant::bits::{swsc_avg_bits, BitsBreakdown};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Which SVD implementation compensates the error matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SvdBackend {
+    /// Exact one-sided Jacobi — O(m·n²); default for n ≤ 512.
+    Jacobi,
+    /// Randomized subspace iteration — near-optimal, O(m·n·r).
+    Randomized,
+    /// Pick per matrix: randomized when the retained rank is small
+    /// relative to the matrix (`r ≤ min(m,n)/3` and `min(m,n) > 96`),
+    /// exact Jacobi otherwise. §Perf in EXPERIMENTS.md measured Jacobi at
+    /// 1.3 s vs randomized at 6.9 ms on a 256×256 error matrix with a
+    /// 0.25% residual-quality gap — randomized is the right default in
+    /// exactly the truncated regime the paper's compensation uses.
+    Auto,
+}
+
+/// SWSC hyper-parameters for one matrix.
+#[derive(Debug, Clone)]
+pub struct SwscConfig {
+    /// Number of channel clusters `k`.
+    pub clusters: usize,
+    /// Retained singular-vector rank `r` (0 = no error compensation).
+    pub rank: usize,
+    /// K-Means settings (init, iters, representative).
+    pub kmeans: KMeansConfig,
+    /// SVD backend for the error matrix.
+    pub svd: SvdBackend,
+    /// Seed for the randomized SVD sketch.
+    pub seed: u64,
+}
+
+impl Default for SwscConfig {
+    fn default() -> Self {
+        SwscConfig {
+            clusters: 16,
+            rank: 8,
+            kmeans: KMeansConfig::default(),
+            svd: SvdBackend::Auto,
+            seed: 0,
+        }
+    }
+}
+
+impl SwscConfig {
+    /// Convenience: `k` clusters, rank `r`, defaults elsewhere.
+    pub fn new(clusters: usize, rank: usize) -> Self {
+        SwscConfig { clusters, rank, ..Default::default() }
+    }
+
+    /// Mean vs medoid representative (ablation).
+    pub fn with_representative(mut self, rep: Representative) -> Self {
+        self.kmeans.representative = rep;
+        self
+    }
+}
+
+/// A weight matrix in SWSC compressed form. This is exactly the paper's
+/// storage layout: cluster label list + representative vectors + the two
+/// low-rank compensation factors `A = U_r Σ^{1/2}`, `B = Σ^{1/2} V_rᵀ`.
+#[derive(Debug, Clone)]
+pub struct CompressedMatrix {
+    /// Original shape `(m, n)`; channels are the `n` columns.
+    pub shape: (usize, usize),
+    /// Per-channel cluster id (`n` entries, each `< k`).
+    pub labels: Vec<u32>,
+    /// Representative vectors as columns (`m × k`).
+    pub centroids: Tensor,
+    /// Left compensation factor `U_r Σ^{1/2}` (`m × r`); empty when r = 0.
+    pub factor_a: Tensor,
+    /// Right compensation factor `Σ^{1/2} V_rᵀ` (`r × n`); empty when r = 0.
+    pub factor_b: Tensor,
+}
+
+impl CompressedMatrix {
+    pub fn k(&self) -> usize {
+        self.centroids.cols()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.factor_a.cols()
+    }
+
+    /// Restore the inference weight `W_new = W' + A·B` (paper Fig. 3).
+    pub fn reconstruct(&self) -> Tensor {
+        let (m, n) = self.shape;
+        let mut out = Tensor::zeros(&[m, n]);
+        // Gather representative vectors by label.
+        for (j, &lab) in self.labels.iter().enumerate() {
+            let c = lab as usize;
+            for i in 0..m {
+                *out.at_mut(i, j) = self.centroids.at(i, c);
+            }
+        }
+        if self.rank() > 0 {
+            out = out.add(&self.factor_a.matmul(&self.factor_b));
+        }
+        out
+    }
+
+    /// Restore only the cluster approximation `W'` (no compensation) — used
+    /// by the rank ablation.
+    pub fn reconstruct_uncompensated(&self) -> Tensor {
+        let (m, n) = self.shape;
+        let mut out = Tensor::zeros(&[m, n]);
+        for (j, &lab) in self.labels.iter().enumerate() {
+            let c = lab as usize;
+            for i in 0..m {
+                *out.at_mut(i, j) = self.centroids.at(i, c);
+            }
+        }
+        out
+    }
+
+    /// Exact storage accounting for this matrix.
+    pub fn bits(&self) -> BitsBreakdown {
+        let (m, n) = self.shape;
+        swsc_avg_bits(m, n, self.k(), self.rank())
+    }
+
+    /// Bits per original weight element.
+    pub fn avg_bits(&self) -> f64 {
+        self.bits().avg_bits
+    }
+
+    /// Compression ratio vs fp16 storage of the dense matrix.
+    pub fn compression_ratio(&self) -> f64 {
+        let (m, n) = self.shape;
+        let dense_bits = (m * n) as f64 * 16.0;
+        dense_bits / self.bits().total_bits as f64
+    }
+}
+
+/// Run the full SWSC transform on one matrix (paper Fig. 1):
+/// cluster → share → error SVD → pack.
+pub fn compress_matrix(w: &Tensor, cfg: &SwscConfig) -> CompressedMatrix {
+    let (m, n) = (w.rows(), w.cols());
+
+    // Step 1-2: channel clustering and representative sharing.
+    let mut km_cfg = cfg.kmeans.clone();
+    km_cfg.k = cfg.clusters;
+    km_cfg.seed = cfg.seed;
+    let km = cluster_channels(w, &km_cfg);
+    let w_prime = km.reconstruct();
+
+    // Step 3: error compensation via truncated SVD of W_err = W − W'.
+    let rank = cfg.rank.min(m.min(n));
+    let (factor_a, factor_b) = if rank == 0 {
+        (Tensor::zeros(&[m, 0]), Tensor::zeros(&[0, n]))
+    } else {
+        let err = w.sub(&w_prime);
+        let svd = run_svd(&err, rank, cfg);
+        svd.split_factors()
+    };
+
+    CompressedMatrix { shape: (m, n), labels: km.labels, centroids: km.centroids, factor_a, factor_b }
+}
+
+fn run_svd(err: &Tensor, rank: usize, cfg: &SwscConfig) -> Svd {
+    let min_dim = err.rows().min(err.cols());
+    let truncated_regime = min_dim > 96 && rank * 3 <= min_dim;
+    let use_jacobi = match cfg.svd {
+        SvdBackend::Jacobi => true,
+        SvdBackend::Randomized => false,
+        SvdBackend::Auto => !truncated_regime,
+    };
+    if use_jacobi {
+        truncate(&svd_jacobi(err), rank)
+    } else {
+        let mut rng = Rng::new(cfg.seed ^ 0x5D5C_77E1);
+        svd_randomized(err, rank, 8, 2, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{rtn_quantize, RtnConfig, RtnMode};
+    use crate::util::prop;
+
+    /// Weights with clustered channel structure + a few outliers — the
+    /// regime the paper targets.
+    fn structured_weights(m: usize, n: usize, groups: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> =
+            (0..groups).map(|_| (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+        let mut w = Tensor::zeros(&[m, n]);
+        for j in 0..n {
+            let c = &centers[j % groups];
+            let col: Vec<f32> = c.iter().map(|&v| v + rng.normal_f32(0.0, 0.1)).collect();
+            w.set_col(j, &col);
+        }
+        // Outliers: a handful of large entries.
+        for _ in 0..(m * n / 200).max(1) {
+            let i = rng.below(m * n);
+            w.data_mut()[i] += rng.normal_f32(0.0, 8.0);
+        }
+        w
+    }
+
+    #[test]
+    fn reconstruct_shapes() {
+        let w = structured_weights(32, 48, 6, 91);
+        let c = compress_matrix(&w, &SwscConfig::new(6, 4));
+        assert_eq!(c.shape, (32, 48));
+        assert_eq!(c.labels.len(), 48);
+        assert_eq!(c.centroids.shape(), &[32, 6]);
+        assert_eq!(c.factor_a.shape(), &[32, 4]);
+        assert_eq!(c.factor_b.shape(), &[4, 48]);
+        assert_eq!(c.reconstruct().shape(), w.shape());
+    }
+
+    #[test]
+    fn compensation_strictly_helps() {
+        let w = structured_weights(48, 48, 8, 92);
+        let c = compress_matrix(&w, &SwscConfig::new(8, 8));
+        let with = c.reconstruct().mse(&w);
+        let without = c.reconstruct_uncompensated().mse(&w);
+        assert!(with < without, "compensated {with} !< uncompensated {without}");
+    }
+
+    #[test]
+    fn mse_decreases_with_rank() {
+        let w = structured_weights(40, 40, 5, 93);
+        let mut last = f64::INFINITY;
+        for r in [0usize, 2, 4, 8, 16] {
+            let c = compress_matrix(&w, &SwscConfig::new(5, r));
+            let mse = c.reconstruct().mse(&w);
+            assert!(mse <= last + 1e-9, "rank {r}: {mse} > {last}");
+            last = mse;
+        }
+    }
+
+    #[test]
+    fn full_rank_full_clusters_is_lossless() {
+        let mut rng = Rng::new(94);
+        let w = Tensor::randn(&[12, 12], &mut rng);
+        let c = compress_matrix(&w, &SwscConfig::new(12, 12));
+        assert!(c.reconstruct().mse(&w) < 1e-8);
+    }
+
+    /// The paper's §III-A feasibility claim: at equal storage, SWSC beats
+    /// RTN on MSE for channel-structured weights.
+    #[test]
+    fn swsc_beats_rtn_at_equal_budget_on_structured_weights() {
+        // Channel-group count within reach of the 2-bit cluster budget
+        // (k = 8 at m = 128) — the regime the paper's motivation targets.
+        let m = 128;
+        let w = structured_weights(m, m, 6, 95);
+        // 2-bit budget: k = 2·m/16 / 2 ... use the planner split.
+        let (k, r) = crate::quant::bits::swsc_params_for_bits(m, 2.0, 0.5);
+        let c = compress_matrix(&w, &SwscConfig::new(k, r));
+        let swsc_mse = c.reconstruct().mse(&w);
+        let rtn = rtn_quantize(&w, &RtnConfig { bits: 2, mode: RtnMode::Asymmetric });
+        let rtn_mse = w.mse(&rtn);
+        assert!(
+            swsc_mse < rtn_mse,
+            "SWSC {swsc_mse} should beat RTN {rtn_mse} at 2-bit budget (avg_bits {})",
+            c.avg_bits()
+        );
+    }
+
+    #[test]
+    fn avg_bits_matches_accounting() {
+        let w = structured_weights(64, 64, 8, 96);
+        let c = compress_matrix(&w, &SwscConfig::new(8, 4));
+        let direct = crate::quant::bits::swsc_avg_bits(64, 64, 8, 4).avg_bits;
+        assert!((c.avg_bits() - direct).abs() < 1e-12);
+        assert!(c.compression_ratio() > 1.0);
+    }
+
+    #[test]
+    fn rank_zero_reconstructions_agree() {
+        let w = structured_weights(24, 24, 4, 97);
+        let c = compress_matrix(&w, &SwscConfig::new(4, 0));
+        prop::assert_close(
+            c.reconstruct().data(),
+            c.reconstruct_uncompensated().data(),
+            1e-9,
+            0.0,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn jacobi_and_randomized_backends_close() {
+        let w = structured_weights(64, 64, 8, 98);
+        let mut cj = SwscConfig::new(8, 6);
+        cj.svd = SvdBackend::Jacobi;
+        let mut cr = SwscConfig::new(8, 6);
+        cr.svd = SvdBackend::Randomized;
+        let ej = compress_matrix(&w, &cj).reconstruct().mse(&w);
+        let er = compress_matrix(&w, &cr).reconstruct().mse(&w);
+        assert!(er <= ej * 1.2 + 1e-9, "randomized {er} vs jacobi {ej}");
+    }
+}

@@ -1,0 +1,95 @@
+//! Lightweight shared metrics (counters + timing stats).
+
+use crate::util::timer::Stats;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timings: Mutex<BTreeMap<String, Stats>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn record(&self, name: &str, seconds: f64) {
+        self.timings.lock().unwrap().entry(name.to_string()).or_default().push(seconds);
+    }
+
+    pub fn timing_mean(&self, name: &str) -> f64 {
+        self.timings.lock().unwrap().get(name).map(|s| s.mean()).unwrap_or(0.0)
+    }
+
+    pub fn timing_count(&self, name: &str) -> usize {
+        self.timings.lock().unwrap().get(name).map(|s| s.count()).unwrap_or(0)
+    }
+
+    /// Render all metrics as a report block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, s) in self.timings.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "timing  {k}: n={} mean={:.6}s p50={:.6}s max={:.6}s\n",
+                s.count(),
+                s.mean(),
+                s.percentile(50.0),
+                s.max()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timings() {
+        let m = Metrics::new();
+        m.incr("jobs", 1);
+        m.incr("jobs", 2);
+        assert_eq!(m.counter("jobs"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        m.record("svd", 0.5);
+        m.record("svd", 1.5);
+        assert_eq!(m.timing_count("svd"), 2);
+        assert!((m.timing_mean("svd") - 1.0).abs() < 1e-12);
+        let r = m.render();
+        assert!(r.contains("jobs = 3"));
+        assert!(r.contains("svd"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.incr("n", 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 8000);
+    }
+}

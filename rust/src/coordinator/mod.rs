@@ -1,0 +1,23 @@
+//! The L3 coordinator — the systems contribution wrapped around the
+//! algorithm.
+//!
+//! Two services:
+//!
+//! - [`scheduler`]: fans per-matrix SWSC/RTN compression jobs across a
+//!   worker pool. Each job is independent (cluster → mean → error SVD →
+//!   pack), so the pool scales to the layer count; results are merged
+//!   deterministically regardless of completion order.
+//! - [`service`]: a batched evaluation service in the vLLM-router mould —
+//!   clients submit token windows, a batcher thread assembles fixed-shape
+//!   batches (padding partial batches), executes `fwd_eval` through PJRT,
+//!   and returns per-request NLL. Bounded queue = backpressure.
+//!
+//! [`metrics`] carries counters/timings for both.
+
+pub mod metrics;
+pub mod scheduler;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use scheduler::{compress_model, CompressOutcome};
+pub use service::{EvalRequest, EvalResponse, EvalService, ServiceConfig};

@@ -1,0 +1,148 @@
+//! Per-matrix compression job scheduler.
+//!
+//! Every matrix in a [`CompressionPlan`] is an independent job; the
+//! scheduler runs them on a fixed worker pool (std threads + channels —
+//! the vendored crate set has no rayon/tokio) and merges results into a
+//! single [`SwscFile`]. Output is deterministic: job seeds are derived
+//! from matrix names at planning time, and the merge sorts by name.
+
+use crate::compress::{compress_matrix, matrix_stats, CompressionPlan, MatrixStats};
+use crate::coordinator::metrics::Metrics;
+use crate::io::{Checkpoint, SwscFile};
+use crate::util::timer::time_it;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Result of compressing a whole model.
+pub struct CompressOutcome {
+    pub file: SwscFile,
+    pub stats: Vec<MatrixStats>,
+    pub wall_seconds: f64,
+}
+
+/// Compress every matrix in `plan`, spreading jobs across `workers`
+/// threads. Tensors *not* named by the plan pass through as dense entries.
+pub fn compress_model(
+    ck: &Checkpoint,
+    plan: &CompressionPlan,
+    workers: usize,
+    metrics: Option<Arc<Metrics>>,
+) -> Result<CompressOutcome> {
+    let workers = workers.clamp(1, 64);
+    let (outcome, wall) = time_it(|| -> Result<(SwscFile, Vec<MatrixStats>)> {
+        // Job list: (name, tensor, config).
+        let mut jobs = Vec::new();
+        for mp in &plan.matrices {
+            let t = ck.get(&mp.name).with_context(|| format!("plan names missing tensor `{}`", mp.name))?;
+            anyhow::ensure!(t.ndim() == 2, "plan matrix `{}` is not 2-D", mp.name);
+            jobs.push((mp.name.clone(), t.clone(), mp.config.clone()));
+        }
+
+        let (result_tx, result_rx) = mpsc::channel();
+        let jobs = Arc::new(std::sync::Mutex::new(jobs));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let jobs = jobs.clone();
+                let tx = result_tx.clone();
+                let metrics = metrics.clone();
+                scope.spawn(move || loop {
+                    let job = jobs.lock().unwrap().pop();
+                    let Some((name, tensor, cfg)) = job else { break };
+                    let (compressed, secs) = time_it(|| compress_matrix(&tensor, &cfg));
+                    if let Some(m) = &metrics {
+                        m.incr("compress.jobs", 1);
+                        m.record("compress.job_seconds", secs);
+                    }
+                    let stats = matrix_stats(&name, &tensor, &compressed);
+                    // Receiver outlives the scope; ignore send error on
+                    // early drop.
+                    let _ = tx.send((name, compressed, stats));
+                });
+            }
+        });
+        drop(result_tx);
+
+        let mut file = SwscFile::new();
+        let mut stats = Vec::new();
+        for (name, compressed, st) in result_rx {
+            file.compressed.insert(name, compressed);
+            stats.push(st);
+        }
+        stats.sort_by(|a, b| a.name.cmp(&b.name));
+
+        // Dense passthrough for everything the plan did not compress.
+        for (name, t) in ck.iter() {
+            if !file.compressed.contains_key(name) {
+                file.dense.insert(name.to_string(), t.clone());
+            }
+        }
+        Ok((file, stats))
+    });
+    let (file, stats) = outcome?;
+    Ok(CompressOutcome { file, stats, wall_seconds: wall })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::ProjectorSet;
+    use crate::model::{init_params, ModelConfig};
+
+    fn setup() -> (Checkpoint, CompressionPlan) {
+        let cfg = ModelConfig::tiny();
+        let ck = init_params(&cfg, 5);
+        let plan =
+            CompressionPlan::for_target_bits(&ck.shapes(), ProjectorSet::QAndK, 2.0, 0.5, 9);
+        (ck, plan)
+    }
+
+    #[test]
+    fn compresses_exactly_the_planned_matrices() {
+        let (ck, plan) = setup();
+        let out = compress_model(&ck, &plan, 4, None).unwrap();
+        assert_eq!(out.file.compressed.len(), plan.len());
+        for mp in &plan.matrices {
+            assert!(out.file.compressed.contains_key(&mp.name), "{} missing", mp.name);
+        }
+        // Everything else is dense, and nothing is both.
+        assert_eq!(out.file.compressed.len() + out.file.dense.len(), ck.len());
+        for name in out.file.compressed.keys() {
+            assert!(!out.file.dense.contains_key(name));
+        }
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let (ck, plan) = setup();
+        let a = compress_model(&ck, &plan, 1, None).unwrap();
+        let b = compress_model(&ck, &plan, 8, None).unwrap();
+        assert_eq!(a.file.to_bytes(), b.file.to_bytes(), "parallelism changed the result");
+    }
+
+    #[test]
+    fn metrics_are_recorded() {
+        let (ck, plan) = setup();
+        let m = Arc::new(Metrics::new());
+        compress_model(&ck, &plan, 2, Some(m.clone())).unwrap();
+        assert_eq!(m.counter("compress.jobs") as usize, plan.len());
+        assert_eq!(m.timing_count("compress.job_seconds"), plan.len());
+    }
+
+    #[test]
+    fn stats_sorted_by_name() {
+        let (ck, plan) = setup();
+        let out = compress_model(&ck, &plan, 4, None).unwrap();
+        let names: Vec<&str> = out.stats.iter().map(|s| s.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn missing_tensor_in_plan_errors() {
+        let (ck, mut plan) = setup();
+        plan.matrices[0].name = "does.not.exist".into();
+        assert!(compress_model(&ck, &plan, 2, None).is_err());
+    }
+}

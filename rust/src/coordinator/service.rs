@@ -1,0 +1,257 @@
+//! Batched evaluation service.
+//!
+//! A vLLM-router-style front end over the `fwd_eval` executable: clients
+//! submit [`EvalRequest`]s (one token window each) and receive per-request
+//! NLL. A dedicated batcher thread drains a bounded queue, packs up to
+//! `batch` requests into the executable's fixed `[batch, seq]` shape
+//! (padding short batches by repeating row 0 — padded rows are discarded on
+//! the way out), executes, and replies through per-request channels.
+//!
+//! Invariants (property-tested in `rust/tests/prop_invariants.rs`):
+//! - every submitted request receives exactly one response;
+//! - a batch never exceeds the executable's batch size;
+//! - the queue bound enforces backpressure on submitters;
+//! - responses are independent of how requests were interleaved into
+//!   batches (same tokens ⇒ same NLL).
+
+use crate::coordinator::metrics::Metrics;
+use crate::model::ModelConfig;
+use crate::runtime::convert::literal_to_tensor;
+use crate::runtime::{tensor_to_literal, tokens_to_literal, ArtifactManifest, Engine};
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One evaluation request: a `seq+1`-token window (input + next-token
+/// targets derive from it).
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    pub tokens: Vec<i32>,
+}
+
+/// Per-request response.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResponse {
+    /// Sum of negative log-likelihood over the window.
+    pub nll_sum: f64,
+    /// Number of scored tokens.
+    pub tokens: usize,
+}
+
+/// Service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Bounded queue capacity (backpressure limit).
+    pub queue_capacity: usize,
+    /// Max time the batcher waits to fill a batch before flushing a
+    /// partial one.
+    pub max_batch_delay: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { queue_capacity: 256, max_batch_delay: Duration::from_millis(10) }
+    }
+}
+
+enum Job {
+    Eval(EvalRequest, mpsc::Sender<Result<EvalResponse, String>>),
+    Shutdown,
+}
+
+/// Handle to a running evaluation service.
+pub struct EvalService {
+    tx: mpsc::SyncSender<Job>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    seq: usize,
+}
+
+impl EvalService {
+    /// Spawn the batcher thread.
+    ///
+    /// PJRT handles are `!Send` (the xla crate wraps raw pointers in `Rc`),
+    /// so the batcher thread constructs its *own* [`Engine`] from the
+    /// manifest — only `Send` data (manifest, host tensors, channels)
+    /// crosses the thread boundary.
+    pub fn start(
+        manifest: ArtifactManifest,
+        cfg: ModelConfig,
+        host_params: Vec<crate::tensor::Tensor>,
+        svc_cfg: ServiceConfig,
+    ) -> Result<EvalService> {
+        manifest.verify_config(&cfg)?;
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::sync_channel::<Job>(svc_cfg.queue_capacity);
+        let m = metrics.clone();
+        let seq = cfg.seq;
+
+        let worker = std::thread::spawn(move || {
+            let engine = match Engine::new(manifest) {
+                Ok(e) => e,
+                Err(err) => {
+                    let msg = format!("engine init failed: {err:#}");
+                    for job in rx {
+                        if let Job::Eval(_, tx) = job {
+                            let _ = tx.send(Err(msg.clone()));
+                        }
+                    }
+                    return;
+                }
+            };
+            batcher_loop(engine, cfg, host_params, rx, svc_cfg, m);
+        });
+        Ok(EvalService { tx, worker: Some(worker), metrics, seq })
+    }
+
+    /// Submit a request; blocks when the queue is full (backpressure).
+    /// Returns a receiver for the response.
+    pub fn submit(&self, req: EvalRequest) -> Result<mpsc::Receiver<Result<EvalResponse, String>>> {
+        anyhow::ensure!(
+            req.tokens.len() == self.seq + 1,
+            "request wants {} tokens (seq+1), got {}",
+            self.seq + 1,
+            req.tokens.len()
+        );
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Job::Eval(req, rtx)).context("service stopped")?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait.
+    pub fn eval_blocking(&self, req: EvalRequest) -> Result<EvalResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().context("service dropped response")?.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Graceful shutdown: drain, stop the batcher.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for EvalService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    engine: Engine,
+    cfg: ModelConfig,
+    host_params: Vec<crate::tensor::Tensor>,
+    rx: mpsc::Receiver<Job>,
+    svc_cfg: ServiceConfig,
+    metrics: Arc<Metrics>,
+) {
+    let exe = match engine.load("fwd_eval") {
+        Ok(e) => e,
+        Err(err) => {
+            // Fail every request that arrives.
+            let msg = format!("fwd_eval load failed: {err:#}");
+            for job in rx {
+                if let Job::Eval(_, tx) = job {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+            return;
+        }
+    };
+
+    let mut pending: Vec<(EvalRequest, mpsc::Sender<Result<EvalResponse, String>>)> = Vec::new();
+    let mut shutting_down = false;
+    loop {
+        // Fill up to a full batch or until the delay elapses.
+        let deadline = std::time::Instant::now() + svc_cfg.max_batch_delay;
+        while pending.len() < cfg.batch && !shutting_down {
+            let timeout = deadline.saturating_duration_since(std::time::Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(Job::Eval(req, tx)) => pending.push((req, tx)),
+                Ok(Job::Shutdown) => shutting_down = true,
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    shutting_down = true;
+                }
+            }
+        }
+        if pending.is_empty() {
+            if shutting_down {
+                return;
+            }
+            continue;
+        }
+
+        let real = pending.len();
+        metrics.incr("service.batches", 1);
+        metrics.incr("service.requests", real as u64);
+        if real < cfg.batch {
+            metrics.incr("service.padded_rows", (cfg.batch - real) as u64);
+        }
+
+        let t0 = std::time::Instant::now();
+        let result = run_batch(&exe, &cfg, &host_params, &pending);
+        metrics.record("service.batch_seconds", t0.elapsed().as_secs_f64());
+
+        match result {
+            Ok(responses) => {
+                for ((_, tx), resp) in pending.drain(..).zip(responses) {
+                    let _ = tx.send(Ok(resp));
+                }
+            }
+            Err(err) => {
+                let msg = format!("batch failed: {err:#}");
+                for (_, tx) in pending.drain(..) {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+        }
+        if shutting_down {
+            return;
+        }
+    }
+}
+
+fn run_batch(
+    exe: &crate::runtime::LoadedExec,
+    cfg: &ModelConfig,
+    host_params: &[crate::tensor::Tensor],
+    pending: &[(EvalRequest, mpsc::Sender<Result<EvalResponse, String>>)],
+) -> Result<Vec<EvalResponse>> {
+    let real = pending.len();
+    // Pack rows; pad the tail by repeating the first request (discarded).
+    let mut inputs_flat = Vec::with_capacity(cfg.batch * cfg.seq);
+    let mut targets_flat = Vec::with_capacity(cfg.batch * cfg.seq);
+    for row in 0..cfg.batch {
+        let req = &pending[row.min(real - 1)].0;
+        inputs_flat.extend_from_slice(&req.tokens[..cfg.seq]);
+        targets_flat.extend_from_slice(&req.tokens[1..cfg.seq + 1]);
+    }
+
+    let mut args = Vec::with_capacity(host_params.len() + 2);
+    for t in host_params {
+        args.push(tensor_to_literal(t)?);
+    }
+    args.push(tokens_to_literal(&inputs_flat, cfg.batch, cfg.seq)?);
+    args.push(tokens_to_literal(&targets_flat, cfg.batch, cfg.seq)?);
+
+    let outs = exe.run(&args)?;
+    let nll_rows = literal_to_tensor(&outs[0])?;
+    let tok_rows = literal_to_tensor(&outs[1])?;
+    Ok((0..real)
+        .map(|i| EvalResponse {
+            nll_sum: nll_rows.data()[i] as f64,
+            tokens: tok_rows.data()[i] as usize,
+        })
+        .collect())
+}
+
+/// Shared lock for tests that need a single service at a time (PJRT CPU
+/// clients are heavy; serializing keeps test memory bounded).
+pub static TEST_SERVICE_LOCK: Mutex<()> = Mutex::new(());

@@ -1,0 +1,91 @@
+//! Perplexity evaluation over the AOT `fwd_eval` executable.
+//!
+//! `fwd_eval(params..., tokens, targets)` returns per-row negative
+//! log-likelihood sums and per-row token counts; perplexity is
+//! `exp(Σ nll / Σ tokens)` over the eval stream — the same quantity the
+//! paper reports on WikiText-2.
+
+use crate::io::Checkpoint;
+use crate::model::{param_specs, ModelConfig};
+use crate::runtime::{literal_to_tensor, tensor_to_literal, tokens_to_literal, Engine};
+use crate::text::Dataset;
+use anyhow::{Context, Result};
+
+/// Perplexity evaluator bound to one engine + model config.
+pub struct Evaluator {
+    engine: Engine,
+    cfg: ModelConfig,
+}
+
+/// Result of an eval pass.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub perplexity: f64,
+    pub nll_per_token: f64,
+    pub tokens: usize,
+    pub batches: usize,
+}
+
+impl Evaluator {
+    pub fn new(engine: Engine, cfg: ModelConfig) -> Result<Evaluator> {
+        engine.manifest().verify_config(&cfg)?;
+        Ok(Evaluator { engine, cfg })
+    }
+
+    /// Convert a checkpoint into the canonical literal argument list.
+    pub fn params_from_checkpoint(&self, ck: &Checkpoint) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::new();
+        for spec in param_specs(&self.cfg) {
+            let t = ck.get(&spec.name).with_context(|| format!("checkpoint missing {}", spec.name))?;
+            anyhow::ensure!(
+                t.shape() == &spec.shape[..],
+                "param {} shape {:?} != {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+            out.push(tensor_to_literal(t)?);
+        }
+        Ok(out)
+    }
+
+    /// Full-dataset perplexity with explicit parameter literals.
+    pub fn perplexity(&self, params: &[xla::Literal], data: &Dataset) -> Result<EvalResult> {
+        let exe = self.engine.load("fwd_eval")?;
+        let mut total_nll = 0.0f64;
+        let mut total_tok = 0usize;
+        let mut batches = 0usize;
+        for batch in data.iter() {
+            // Params by reference — converted once by the caller, reused
+            // for every batch (§Perf: was 2 host copies per param/batch).
+            let tok_lit = tokens_to_literal(&batch.inputs, batch.batch, batch.seq)?;
+            let tgt_lit = tokens_to_literal(&batch.targets, batch.batch, batch.seq)?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 2);
+            inputs.extend(params.iter());
+            inputs.extend([&tok_lit, &tgt_lit]);
+            let outs = exe.run_refs(&inputs)?;
+            let nll_rows = literal_to_tensor(&outs[0])?;
+            let tok_rows = literal_to_tensor(&outs[1])?;
+            total_nll += nll_rows.data().iter().map(|&v| v as f64).sum::<f64>();
+            total_tok += tok_rows.data().iter().map(|&v| v as f64).sum::<f64>() as usize;
+            batches += 1;
+        }
+        anyhow::ensure!(batches > 0, "eval dataset produced no batches");
+        let nll_per_token = total_nll / total_tok.max(1) as f64;
+        Ok(EvalResult { perplexity: nll_per_token.exp(), nll_per_token, tokens: total_tok, batches })
+    }
+
+    /// Convenience: perplexity straight from a checkpoint.
+    pub fn perplexity_of(&self, ck: &Checkpoint, data: &Dataset) -> Result<EvalResult> {
+        let params = self.params_from_checkpoint(ck)?;
+        self.perplexity(&params, data)
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}

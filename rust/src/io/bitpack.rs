@@ -1,0 +1,99 @@
+//! Bit-packing for the cluster label list.
+//!
+//! The paper stores one `⌈log2 k⌉`-bit label per channel; packing them
+//! tightly is where the label storage term in the avg-bits accounting comes
+//! from. LSB-first within each byte, values must fit in `bits`.
+
+/// Pack `values` at `bits` bits each (1..=32), LSB-first.
+pub fn pack_u32(values: &[u32], bits: u32) -> Vec<u8> {
+    assert!((1..=32).contains(&bits), "bits out of range: {bits}");
+    let total_bits = values.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    let mut bitpos = 0usize;
+    for &v in values {
+        debug_assert!(v <= mask, "value {v} does not fit in {bits} bits");
+        let v = (v & mask) as u64;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let span = (v << off) as u128;
+        // Write up to 5 bytes.
+        let mut s = span;
+        let mut b = byte;
+        while s != 0 {
+            out[b] |= (s & 0xFF) as u8;
+            s >>= 8;
+            b += 1;
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `count` values at `bits` bits each from `data`.
+pub fn unpack_u32(data: &[u8], count: usize, bits: u32) -> Vec<u32> {
+    assert!((1..=32).contains(&bits));
+    let mask = if bits == 32 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut chunk = 0u64;
+        for i in 0..((bits as usize + off).div_ceil(8)) {
+            if byte + i < data.len() {
+                chunk |= (data[byte + i] as u64) << (8 * i);
+            }
+        }
+        out.push(((chunk >> off) & mask) as u32);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn round_trip_various_widths() {
+        prop::check(
+            "bitpack round trip",
+            111,
+            64,
+            |r| {
+                let bits = 1 + r.below(16) as u32;
+                let n = r.below(200);
+                let mask = (1u64 << bits) - 1;
+                let vals: Vec<u32> = (0..n).map(|_| (r.next_u64() & mask) as u32).collect();
+                (vals, bits)
+            },
+            |(vals, bits)| {
+                let packed = pack_u32(vals, *bits);
+                let got = unpack_u32(&packed, vals.len(), *bits);
+                if &got == vals { Ok(()) } else { Err(format!("{got:?} != {vals:?}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn packed_size_is_tight() {
+        let vals = vec![1u32; 100];
+        assert_eq!(pack_u32(&vals, 1).len(), 13); // ceil(100/8)
+        assert_eq!(pack_u32(&vals, 7).len(), 88); // ceil(700/8)
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(pack_u32(&[], 4).is_empty());
+        assert!(unpack_u32(&[], 0, 4).is_empty());
+    }
+
+    #[test]
+    fn known_pattern() {
+        // 4-bit values 0xA, 0xB -> byte 0xBA (LSB-first).
+        assert_eq!(pack_u32(&[0xA, 0xB], 4), vec![0xBA]);
+        assert_eq!(unpack_u32(&[0xBA], 2, 4), vec![0xA, 0xB]);
+    }
+}

@@ -1,0 +1,224 @@
+//! Named-tensor checkpoint format.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "SWCK" | u32 version | u32 tensor_count
+//! per tensor: u32 name_len | name bytes | u32 ndim | u64 dims...
+//!             | u64 payload_len | f32 payload...
+//! trailer: u32 crc32 over everything after the magic
+//! ```
+//! Deterministic: tensors are written sorted by name.
+
+use crate::io::crc32;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SWCK";
+const VERSION: u32 = 1;
+
+/// An in-memory named-tensor map with binary (de)serialization.
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Checkpoint { tensors: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.tensors.remove(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.tensors.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Name + shape list (drives `CompressionPlan`).
+    pub fn shapes(&self) -> Vec<(String, Vec<usize>)> {
+        self.tensors.iter().map(|(k, v)| (k.clone(), v.shape().to_vec())).collect()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            body.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            body.extend_from_slice(name.as_bytes());
+            body.extend_from_slice(&(t.ndim() as u32).to_le_bytes());
+            for &d in t.shape() {
+                body.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            body.extend_from_slice(&(t.len() as u64 * 4).to_le_bytes());
+            for &v in t.data() {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(body.len() + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out
+    }
+
+    /// Deserialize from bytes, verifying magic + CRC.
+    pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
+        if data.len() < 12 || &data[..4] != MAGIC {
+            bail!("not a SWCK checkpoint (bad magic)");
+        }
+        let body = &data[4..data.len() - 4];
+        let stored_crc = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+        if crc32(body) != stored_crc {
+            bail!("checkpoint CRC mismatch — file corrupted");
+        }
+        let mut cur = body;
+        let version = read_u32(&mut cur)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = read_u32(&mut cur)? as usize;
+        let mut ck = Checkpoint::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut cur)? as usize;
+            let name = std::str::from_utf8(take(&mut cur, name_len)?)
+                .context("tensor name not utf-8")?
+                .to_string();
+            let ndim = read_u32(&mut cur)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut cur)? as usize);
+            }
+            let payload_len = read_u64(&mut cur)? as usize;
+            let raw = take(&mut cur, payload_len)?;
+            let n = payload_len / 4;
+            if n != shape.iter().product::<usize>() {
+                bail!("tensor `{name}`: payload/shape mismatch");
+            }
+            let mut vals = Vec::with_capacity(n);
+            for c in raw.chunks_exact(4) {
+                vals.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            ck.insert(&name, Tensor::from_vec(&shape, vals));
+        }
+        Ok(ck)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?
+            .read_to_end(&mut data)?;
+        Self::from_bytes(&data)
+    }
+}
+
+fn take<'a>(cur: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+    if cur.len() < n {
+        bail!("truncated checkpoint");
+    }
+    let (head, rest) = cur.split_at(n);
+    *cur = rest;
+    Ok(head)
+}
+
+fn read_u32(cur: &mut &[u8]) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(cur, 4)?.try_into().unwrap()))
+}
+
+fn read_u64(cur: &mut &[u8]) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(cur, 8)?.try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_in_memory() {
+        let mut rng = Rng::new(121);
+        let mut ck = Checkpoint::new();
+        ck.insert("w1", Tensor::randn(&[4, 6], &mut rng));
+        ck.insert("b1", Tensor::randn(&[6], &mut rng));
+        let restored = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(restored.len(), 2);
+        assert_eq!(restored.get("w1"), ck.get("w1"));
+        assert_eq!(restored.get("b1"), ck.get("b1"));
+    }
+
+    #[test]
+    fn round_trip_on_disk() {
+        let dir = std::env::temp_dir().join("swsc_ck_test");
+        let path = dir.join("model.swck");
+        let mut rng = Rng::new(122);
+        let mut ck = Checkpoint::new();
+        ck.insert("layers.0.attn.wq", Tensor::randn(&[8, 8], &mut rng));
+        ck.save(&path).unwrap();
+        let restored = Checkpoint::load(&path).unwrap();
+        assert_eq!(restored.get("layers.0.attn.wq"), ck.get("layers.0.attn.wq"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut ck = Checkpoint::new();
+        ck.insert("t", Tensor::full(&[2, 2], 1.0));
+        let mut bytes = ck.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(Checkpoint::from_bytes(b"NOPE00000000").is_err());
+        assert!(Checkpoint::from_bytes(b"").is_err());
+    }
+
+    #[test]
+    fn serialization_is_deterministic_and_sorted() {
+        let mut a = Checkpoint::new();
+        a.insert("zz", Tensor::full(&[1], 1.0));
+        a.insert("aa", Tensor::full(&[1], 2.0));
+        let mut b = Checkpoint::new();
+        b.insert("aa", Tensor::full(&[1], 2.0));
+        b.insert("zz", Tensor::full(&[1], 1.0));
+        assert_eq!(a.to_bytes(), b.to_bytes());
+        assert_eq!(a.names().collect::<Vec<_>>(), vec!["aa", "zz"]);
+    }
+}

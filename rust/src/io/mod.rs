@@ -1,0 +1,53 @@
+//! On-disk formats: named-tensor checkpoints, the packed SWSC container,
+//! and the bit-packing primitives the label list uses.
+//!
+//! Both formats are custom little-endian binary with magic + version +
+//! CRC32 over the payload — no serde in the vendored crate set, and the
+//! formats are simple enough that hand-rolled is clearer anyway.
+
+pub mod bitpack;
+pub mod checkpoint;
+pub mod swsc_format;
+
+pub use bitpack::{pack_u32, unpack_u32};
+pub use checkpoint::Checkpoint;
+pub use swsc_format::SwscFile;
+
+/// CRC32 (IEEE) for payload integrity checks — small table-driven impl.
+pub fn crc32(data: &[u8]) -> u32 {
+    const POLY: u32 = 0xEDB88320;
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard test vector.
+        assert_eq!(super::crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(super::crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_detects_flip() {
+        let a = super::crc32(b"hello world");
+        let b = super::crc32(b"hello worle");
+        assert_ne!(a, b);
+    }
+}

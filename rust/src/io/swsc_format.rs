@@ -1,0 +1,396 @@
+//! The `.swsc` packed compressed-model container.
+//!
+//! This is the paper's storage story made concrete: per compressed matrix
+//! we store the bit-packed label list, fp16-encoded centroid columns, and
+//! fp16-encoded low-rank factors. Uncompressed tensors (everything not in
+//! the plan — V projectors, MLPs, embeddings) ride along as fp32 so a
+//! single file restores a runnable model.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "SWSC" | u32 version
+//! u32 n_compressed
+//!   per entry: name | u32 m | u32 n | u32 k | u32 r
+//!              | packed labels (ceil(log2 k) bits each)
+//!              | centroids fp16 (m·k) | A fp16 (m·r) | B fp16 (r·n)
+//! u32 n_dense
+//!   per entry: name | u32 ndim | u64 dims... | f32 payload
+//! trailer crc32
+//! ```
+//! fp16 here is real IEEE half-precision encode/decode (not just
+//! accounting), so the on-disk size *is* the avg-bits story.
+
+use crate::compress::CompressedMatrix;
+use crate::io::{bitpack, crc32};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SWSC";
+const VERSION: u32 = 1;
+
+/// A compressed model file: compressed matrices + dense passthrough.
+#[derive(Debug, Clone, Default)]
+pub struct SwscFile {
+    pub compressed: BTreeMap<String, CompressedMatrix>,
+    pub dense: BTreeMap<String, Tensor>,
+}
+
+impl SwscFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Restore a full named-tensor map: compressed entries are
+    /// reconstructed (`W' + A·B`), dense entries pass through.
+    pub fn restore_all(&self) -> BTreeMap<String, Tensor> {
+        let mut out = BTreeMap::new();
+        for (name, c) in &self.compressed {
+            out.insert(name.clone(), c.reconstruct());
+        }
+        for (name, t) in &self.dense {
+            out.insert(name.clone(), t.clone());
+        }
+        out
+    }
+
+    /// Total on-disk payload bytes of the compressed entries.
+    pub fn compressed_payload_bytes(&self) -> usize {
+        self.compressed.values().map(|c| (c.bits().total_bits as usize).div_ceil(8)).sum()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        body.extend_from_slice(&VERSION.to_le_bytes());
+
+        body.extend_from_slice(&(self.compressed.len() as u32).to_le_bytes());
+        for (name, c) in &self.compressed {
+            write_name(&mut body, name);
+            let (m, n) = c.shape;
+            let (k, r) = (c.k(), c.rank());
+            for v in [m as u32, n as u32, k as u32, r as u32] {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            let label_bits = ceil_log2(k).max(1);
+            let packed = bitpack::pack_u32(&c.labels, label_bits);
+            body.extend_from_slice(&(packed.len() as u64).to_le_bytes());
+            body.extend_from_slice(&packed);
+            write_f16(&mut body, c.centroids.data());
+            write_f16(&mut body, c.factor_a.data());
+            write_f16(&mut body, c.factor_b.data());
+        }
+
+        body.extend_from_slice(&(self.dense.len() as u32).to_le_bytes());
+        for (name, t) in &self.dense {
+            write_name(&mut body, name);
+            body.extend_from_slice(&(t.ndim() as u32).to_le_bytes());
+            for &d in t.shape() {
+                body.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &v in t.data() {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+
+        let mut out = Vec::with_capacity(body.len() + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<SwscFile> {
+        if data.len() < 12 || &data[..4] != MAGIC {
+            bail!("not a SWSC container (bad magic)");
+        }
+        let body = &data[4..data.len() - 4];
+        let stored = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+        if crc32(body) != stored {
+            bail!("SWSC container CRC mismatch");
+        }
+        let mut cur = body;
+        let version = read_u32(&mut cur)?;
+        if version != VERSION {
+            bail!("unsupported SWSC version {version}");
+        }
+
+        let mut file = SwscFile::new();
+        let n_comp = read_u32(&mut cur)? as usize;
+        for _ in 0..n_comp {
+            let name = read_name(&mut cur)?;
+            let m = read_u32(&mut cur)? as usize;
+            let n = read_u32(&mut cur)? as usize;
+            let k = read_u32(&mut cur)? as usize;
+            let r = read_u32(&mut cur)? as usize;
+            let packed_len = read_u64(&mut cur)? as usize;
+            let packed = take(&mut cur, packed_len)?;
+            let label_bits = ceil_log2(k).max(1);
+            let labels = bitpack::unpack_u32(packed, n, label_bits);
+            if labels.iter().any(|&l| l as usize >= k.max(1)) {
+                bail!("matrix `{name}`: label out of range");
+            }
+            let centroids = Tensor::from_vec(&[m, k], read_f16(&mut cur, m * k)?);
+            let factor_a = Tensor::from_vec(&[m, r], read_f16(&mut cur, m * r)?);
+            let factor_b = Tensor::from_vec(&[r, n], read_f16(&mut cur, r * n)?);
+            file.compressed.insert(
+                name,
+                CompressedMatrix { shape: (m, n), labels, centroids, factor_a, factor_b },
+            );
+        }
+
+        let n_dense = read_u32(&mut cur)? as usize;
+        for _ in 0..n_dense {
+            let name = read_name(&mut cur)?;
+            let ndim = read_u32(&mut cur)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut cur)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let raw = take(&mut cur, count * 4)?;
+            let mut vals = Vec::with_capacity(count);
+            for c in raw.chunks_exact(4) {
+                vals.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            file.dense.insert(name, Tensor::from_vec(&shape, vals));
+        }
+        Ok(file)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::File::create(path)
+            .with_context(|| format!("create {path:?}"))?
+            .write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<SwscFile> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?
+            .read_to_end(&mut data)?;
+        Self::from_bytes(&data)
+    }
+}
+
+// --- fp16 encode/decode -------------------------------------------------
+
+/// f32 → IEEE 754 half (round-to-nearest-even), as u16 bits.
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal half.
+        let half_exp = (unbiased + 15) as u32;
+        let mut half_mant = mant >> 13;
+        // Round to nearest even on the dropped 13 bits.
+        let rem = mant & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (half_mant & 1) == 1) {
+            half_mant += 1;
+            if half_mant == 0x400 {
+                return sign | (((half_exp + 1) as u16) << 10);
+            }
+        }
+        return sign | ((half_exp as u16) << 10) | half_mant as u16;
+    }
+    if unbiased >= -24 {
+        // Subnormal half: value = half_mant · 2⁻²⁴, so
+        // half_mant = round(1.mant · 2^(unbiased+24)) = full >> (−unbiased−1).
+        let shift = (-unbiased - 1) as u32; // 14..=23
+        let full = mant | 0x80_0000;
+        let mut half_mant = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half_point = 1u32 << (shift - 1);
+        if rem > half_point || (rem == half_point && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        return sign | half_mant as u16;
+    }
+    sign // underflow -> ±0
+}
+
+/// IEEE 754 half bits → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            sign | (((112 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+fn write_f16(out: &mut Vec<u8>, vals: &[f32]) {
+    for &v in vals {
+        out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+    }
+}
+
+fn read_f16(cur: &mut &[u8], count: usize) -> Result<Vec<f32>> {
+    let raw = take(cur, count * 2)?;
+    Ok(raw.chunks_exact(2).map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()))).collect())
+}
+
+fn write_name(out: &mut Vec<u8>, name: &str) {
+    out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+}
+
+fn read_name(cur: &mut &[u8]) -> Result<String> {
+    let len = read_u32(cur)? as usize;
+    Ok(std::str::from_utf8(take(cur, len)?).context("name not utf-8")?.to_string())
+}
+
+fn take<'a>(cur: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+    if cur.len() < n {
+        bail!("truncated SWSC container");
+    }
+    let (head, rest) = cur.split_at(n);
+    *cur = rest;
+    Ok(head)
+}
+
+fn read_u32(cur: &mut &[u8]) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(cur, 4)?.try_into().unwrap()))
+}
+
+fn read_u64(cur: &mut &[u8]) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(cur, 8)?.try_into().unwrap()))
+}
+
+fn ceil_log2(k: usize) -> u32 {
+    if k <= 1 {
+        0
+    } else {
+        (usize::BITS - (k - 1).leading_zeros()).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f16_round_trip_representable() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, -65504.0, 1.5, 0.099975586] {
+            let r = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(r, v, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        let mut rng = Rng::new(131);
+        for _ in 0..10_000 {
+            let v = rng.normal_f32(0.0, 10.0);
+            let r = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!((r - v).abs() <= v.abs() * 1e-3 + 1e-7, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY); // overflow
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-12)), 0.0); // underflow
+        // Subnormal round trip.
+        let sub = 3.0e-6f32;
+        let r = f16_bits_to_f32(f32_to_f16_bits(sub));
+        assert!((r - sub).abs() < 1e-6);
+    }
+
+    #[test]
+    fn container_round_trip() {
+        let mut rng = Rng::new(132);
+        let w = Tensor::randn(&[32, 32], &mut rng);
+        let c = compress_matrix(&w, &SwscConfig::new(4, 3));
+        let mut file = SwscFile::new();
+        file.compressed.insert("layers.0.attn.wq".into(), c.clone());
+        file.dense.insert("embed.tok".into(), Tensor::randn(&[16, 8], &mut rng));
+
+        let restored = SwscFile::from_bytes(&file.to_bytes()).unwrap();
+        assert_eq!(restored.compressed.len(), 1);
+        assert_eq!(restored.dense.len(), 1);
+        let rc = &restored.compressed["layers.0.attn.wq"];
+        assert_eq!(rc.labels, c.labels);
+        assert_eq!(rc.shape, c.shape);
+        // fp16 quantization of payloads: close but not exact.
+        let orig_rec = c.reconstruct();
+        let rest_rec = rc.reconstruct();
+        assert!(orig_rec.mse(&rest_rec) < 1e-5, "mse {}", orig_rec.mse(&rest_rec));
+        assert_eq!(restored.dense["embed.tok"], file.dense["embed.tok"]);
+    }
+
+    #[test]
+    fn on_disk_size_matches_avg_bits_accounting() {
+        let mut rng = Rng::new(133);
+        let m = 128;
+        let w = Tensor::randn(&[m, m], &mut rng);
+        let c = compress_matrix(&w, &SwscConfig::new(16, 8));
+        let accounted_bits = c.bits().total_bits as f64;
+        let mut file = SwscFile::new();
+        file.compressed.insert("w".into(), c);
+        let bytes = file.to_bytes().len() as f64 * 8.0;
+        // Allow header overhead but the payload must dominate.
+        assert!(bytes >= accounted_bits);
+        assert!(bytes < accounted_bits * 1.05 + 1024.0, "container too fat: {bytes} vs {accounted_bits}");
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut file = SwscFile::new();
+        file.dense.insert("t".into(), Tensor::full(&[4], 2.0));
+        let mut bytes = file.to_bytes();
+        let mid = bytes.len() - 10;
+        bytes[mid] ^= 1;
+        assert!(SwscFile::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn restore_all_merges_both_kinds() {
+        let mut rng = Rng::new(134);
+        let w = Tensor::randn(&[16, 16], &mut rng);
+        let mut file = SwscFile::new();
+        file.compressed.insert("wq".into(), compress_matrix(&w, &SwscConfig::new(4, 2)));
+        file.dense.insert("wv".into(), w.clone());
+        let all = file.restore_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all["wv"], w);
+        assert_eq!(all["wq"].shape(), w.shape());
+    }
+}

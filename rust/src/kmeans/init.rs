@@ -1,0 +1,99 @@
+//! Centroid seeding: uniform-random and k-means++.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Seeding strategy for K-Means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitMethod {
+    /// Pick `k` distinct channels uniformly at random.
+    Random,
+    /// k-means++ (Arthur & Vassilvitskii): D²-weighted sequential seeding.
+    KMeansPlusPlus,
+}
+
+/// `points` is row-major (one point per row, n × m). Returns k × m centroids.
+pub fn init_random(points: &Tensor, k: usize, rng: &mut Rng) -> Tensor {
+    let n = points.rows();
+    let m = points.cols();
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut out = Tensor::zeros(&[k, m]);
+    for c in 0..k {
+        out.row_mut(c).copy_from_slice(points.row(idx[c % n]));
+    }
+    out
+}
+
+/// k-means++ seeding: first centroid uniform, then each next centroid drawn
+/// with probability proportional to its squared distance to the nearest
+/// centroid chosen so far. Keeps a running `d2` array so the whole thing is
+/// O(n·k·m).
+pub fn init_kmeans_pp(points: &Tensor, k: usize, rng: &mut Rng) -> Tensor {
+    let n = points.rows();
+    let m = points.cols();
+    let mut out = Tensor::zeros(&[k, m]);
+
+    let first = rng.below(n);
+    out.row_mut(0).copy_from_slice(points.row(first));
+
+    let mut d2: Vec<f64> = (0..n).map(|j| Tensor::dist2(points.row(j), out.row(0))).collect();
+
+    for c in 1..k {
+        let pick = rng.weighted(&d2);
+        // Copy via split to satisfy the borrow checker.
+        let (src_is_done, pick_row): (bool, Vec<f32>) = (false, points.row(pick).to_vec());
+        let _ = src_is_done;
+        out.row_mut(c).copy_from_slice(&pick_row);
+        // Update running nearest-distance.
+        for j in 0..n {
+            let d = Tensor::dist2(points.row(j), out.row(c));
+            if d < d2[j] {
+                d2[j] = d;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_init_rows_are_input_points() {
+        let mut rng = Rng::new(31);
+        let pts = Tensor::randn(&[10, 4], &mut rng);
+        let cen = init_random(&pts, 3, &mut rng);
+        for c in 0..3 {
+            assert!((0..10).any(|j| pts.row(j) == cen.row(c)));
+        }
+    }
+
+    #[test]
+    fn kpp_spreads_centroids() {
+        // Two tight far-apart blobs; k-means++ must pick one seed from each.
+        let mut rng = Rng::new(32);
+        let mut pts = Tensor::zeros(&[20, 2]);
+        for j in 0..20 {
+            let base = if j < 10 { 0.0 } else { 100.0 };
+            pts.row_mut(j)
+                .copy_from_slice(&[base + rng.normal_f32(0.0, 0.1), base + rng.normal_f32(0.0, 0.1)]);
+        }
+        let cen = init_kmeans_pp(&pts, 2, &mut rng);
+        let far = Tensor::dist2(cen.row(0), cen.row(1));
+        assert!(far > 1_000.0, "seeds not spread: d2 = {far}");
+    }
+
+    #[test]
+    fn kpp_handles_duplicate_points() {
+        let mut rng = Rng::new(33);
+        let pts = Tensor::full(&[8, 3], 1.0);
+        let cen = init_kmeans_pp(&pts, 4, &mut rng);
+        assert_eq!(cen.shape(), &[4, 3]);
+        // All distances zero → weighted() falls back to uniform; no panic.
+        for c in 0..4 {
+            assert_eq!(cen.row(c), &[1.0, 1.0, 1.0]);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Lloyd iterations: assign → update, with empty-cluster repair.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Output of the assignment step.
+#[derive(Debug, Clone)]
+pub struct AssignResult {
+    pub labels: Vec<u32>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Assign every point (row of `points`) to its nearest centroid row.
+///
+/// Distance uses the expansion ‖x−c‖² = ‖x‖² − 2·xᵀc + ‖c‖²; the cross term
+/// is a matmul, which is exactly how the L1 Pallas kernel phrases it for the
+/// MXU — keeping the two implementations step-equivalent.
+pub fn assign(points: &Tensor, centroids: &Tensor) -> (Vec<u32>, f64) {
+    let n = points.rows();
+    let k = centroids.rows();
+    debug_assert_eq!(points.cols(), centroids.cols());
+
+    let cnorm: Vec<f64> = (0..k).map(|c| Tensor::dot(centroids.row(c), centroids.row(c))).collect();
+    // cross[j][c] = points[j] · centroids[c]   (n×m · m×k)
+    let cross = points.matmul(&centroids.transpose());
+
+    let mut labels = vec![0u32; n];
+    let mut inertia = 0.0f64;
+    for j in 0..n {
+        let pnorm = Tensor::dot(points.row(j), points.row(j));
+        let mut best_c = 0usize;
+        let mut best_d = f64::INFINITY;
+        let crow = cross.row(j);
+        for c in 0..k {
+            let d = pnorm - 2.0 * crow[c] as f64 + cnorm[c];
+            if d < best_d {
+                best_d = d;
+                best_c = c;
+            }
+        }
+        labels[j] = best_c as u32;
+        inertia += best_d.max(0.0);
+    }
+    (labels, inertia)
+}
+
+/// Recompute centroids as the mean of their assigned points.
+/// Returns the per-cluster counts. Empty clusters keep their old position
+/// (repair happens in [`lloyd`]).
+pub fn update(points: &Tensor, labels: &[u32], centroids: &mut Tensor) -> Vec<usize> {
+    let (k, m) = (centroids.rows(), centroids.cols());
+    let mut counts = vec![0usize; k];
+    let mut sums = vec![0.0f64; k * m];
+    for (j, &lab) in labels.iter().enumerate() {
+        let c = lab as usize;
+        counts[c] += 1;
+        let row = points.row(j);
+        let acc = &mut sums[c * m..(c + 1) * m];
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += v as f64;
+        }
+    }
+    for c in 0..k {
+        if counts[c] == 0 {
+            continue;
+        }
+        let inv = 1.0 / counts[c] as f64;
+        let dst = centroids.row_mut(c);
+        let src = &sums[c * m..(c + 1) * m];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = (s * inv) as f32;
+        }
+    }
+    counts
+}
+
+/// Full Lloyd loop. `centroids` is mutated in place (k × m, row per
+/// centroid). Empty clusters are re-seeded at the point farthest from its
+/// centroid — the classic repair that keeps k live clusters.
+pub fn lloyd(
+    points: &Tensor,
+    centroids: &mut Tensor,
+    max_iters: usize,
+    tol: f64,
+    rng: &mut Rng,
+) -> AssignResult {
+    let mut labels = vec![0u32; points.rows()];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+
+    for it in 0..max_iters.max(1) {
+        iterations = it + 1;
+        let (new_labels, new_inertia) = assign(points, centroids);
+        labels = new_labels;
+        inertia = new_inertia;
+
+        let before = centroids.clone();
+        let counts = update(points, &labels, centroids);
+
+        // Empty-cluster repair: move dead centroids onto the worst-served
+        // points so no representative vector is wasted.
+        if counts.iter().any(|&c| c == 0) {
+            repair_empty(points, &labels, centroids, &counts, rng);
+        }
+
+        let shift = centroids.sub(&before).fro_norm();
+        if shift < tol {
+            // Re-assign once more so labels match the final centroids.
+            let (fin_labels, fin_inertia) = assign(points, centroids);
+            labels = fin_labels;
+            inertia = fin_inertia;
+            break;
+        }
+    }
+
+    AssignResult { labels, inertia, iterations }
+}
+
+fn repair_empty(
+    points: &Tensor,
+    labels: &[u32],
+    centroids: &mut Tensor,
+    counts: &[usize],
+    rng: &mut Rng,
+) {
+    // Rank points by distance to their assigned centroid, descending.
+    let mut dists: Vec<(usize, f64)> = labels
+        .iter()
+        .enumerate()
+        .map(|(j, &lab)| (j, Tensor::dist2(points.row(j), centroids.row(lab as usize))))
+        .collect();
+    dists.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    let mut next = 0usize;
+    for c in 0..counts.len() {
+        if counts[c] > 0 {
+            continue;
+        }
+        let j = if next < dists.len() { dists[next].0 } else { rng.below(points.rows()) };
+        next += 1;
+        let row: Vec<f32> = points.row(j).to_vec();
+        centroids.row_mut(c).copy_from_slice(&row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_picks_nearest() {
+        let pts = Tensor::from_vec(&[3, 1], vec![0.0, 0.9, 10.0]);
+        let cen = Tensor::from_vec(&[2, 1], vec![0.0, 10.0]);
+        let (labels, inertia) = assign(&pts, &cen);
+        assert_eq!(labels, vec![0, 0, 1]);
+        assert!((inertia - 0.81).abs() < 1e-6);
+    }
+
+    #[test]
+    fn update_computes_means() {
+        let pts = Tensor::from_vec(&[4, 1], vec![0.0, 2.0, 10.0, 14.0]);
+        let mut cen = Tensor::from_vec(&[2, 1], vec![0.0, 10.0]);
+        let counts = update(&pts, &[0, 0, 1, 1], &mut cen);
+        assert_eq!(counts, vec![2, 2]);
+        assert_eq!(cen.data(), &[1.0, 12.0]);
+    }
+
+    #[test]
+    fn lloyd_converges_on_two_blobs() {
+        let mut rng = Rng::new(41);
+        let mut pts = Tensor::zeros(&[40, 2]);
+        for j in 0..40 {
+            let base = if j < 20 { 0.0 } else { 50.0 };
+            pts.row_mut(j)
+                .copy_from_slice(&[base + rng.normal_f32(0.0, 0.5), base + rng.normal_f32(0.0, 0.5)]);
+        }
+        let mut cen = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 2.0, 2.0]);
+        let res = lloyd(&pts, &mut cen, 100, 1e-9, &mut rng);
+        // One centroid near (0,0), one near (50,50).
+        let near0 = (0..2).any(|c| Tensor::dist2(cen.row(c), &[0.0, 0.0]) < 5.0);
+        let near50 = (0..2).any(|c| Tensor::dist2(cen.row(c), &[50.0, 50.0]) < 5.0);
+        assert!(near0 && near50, "centroids: {:?}", cen.data());
+        assert!(res.inertia < 40.0);
+    }
+
+    #[test]
+    fn empty_cluster_gets_repaired() {
+        // Both seeds in the same spot; second cluster would stay empty
+        // without repair.
+        let pts = Tensor::from_vec(&[4, 1], vec![0.0, 0.1, 9.9, 10.0]);
+        let mut cen = Tensor::from_vec(&[2, 1], vec![0.0, 0.0]);
+        let mut rng = Rng::new(42);
+        let res = lloyd(&pts, &mut cen, 20, 1e-9, &mut rng);
+        let mut seen: Vec<u32> = res.labels.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 2, "repair failed; labels {:?}", res.labels);
+    }
+
+    #[test]
+    fn inertia_non_increasing_over_iters() {
+        let mut rng = Rng::new(43);
+        let pts = Tensor::randn(&[60, 5], &mut rng);
+        let mut cen = super::super::init::init_kmeans_pp(&pts, 6, &mut rng);
+        let mut last = f64::INFINITY;
+        for _ in 0..10 {
+            let (labels, inertia) = assign(&pts, &cen);
+            assert!(inertia <= last + 1e-6, "inertia went up: {inertia} > {last}");
+            last = inertia;
+            update(&pts, &labels, &mut cen);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Mini-batch K-Means (Sculley 2010) for very wide matrices.
+//!
+//! Full Lloyd over an `n = 11008`-channel MLP matrix is affordable but the
+//! coordinator exposes this variant for the widest layers and for the
+//! ablation bench: sample a batch of channels, assign them, and move each
+//! centroid toward the batch mean with a per-centroid learning rate
+//! `1/count`.
+
+use super::lloyd::assign;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Run mini-batch k-means. `points` is n × m (row per channel); returns the
+/// final centroids (k × m) plus a full-data assignment pass.
+pub fn minibatch_kmeans(
+    points: &Tensor,
+    mut centroids: Tensor,
+    batch: usize,
+    steps: usize,
+    rng: &mut Rng,
+) -> (Tensor, Vec<u32>, f64) {
+    let n = points.rows();
+    let m = points.cols();
+    let k = centroids.rows();
+    let batch = batch.clamp(1, n);
+    let mut counts = vec![1.0f64; k];
+
+    let mut scratch = Tensor::zeros(&[batch, m]);
+    for _ in 0..steps {
+        // Sample a batch of rows.
+        let mut picks = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let j = rng.below(n);
+            picks.push(j);
+            scratch.row_mut(b).copy_from_slice(points.row(j));
+        }
+        let (labels, _) = assign(&scratch, &centroids);
+        for (b, &lab) in labels.iter().enumerate() {
+            let c = lab as usize;
+            counts[c] += 1.0;
+            let eta = (1.0 / counts[c]) as f32;
+            let dst = centroids.row_mut(c);
+            let src = scratch.row(b);
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += eta * (s - *d);
+            }
+        }
+    }
+
+    let (labels, inertia) = assign(points, &centroids);
+    (centroids, labels, inertia)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::init::init_kmeans_pp;
+
+    #[test]
+    fn minibatch_close_to_full_on_blobs() {
+        let mut rng = Rng::new(51);
+        let mut pts = Tensor::zeros(&[200, 3]);
+        for j in 0..200 {
+            let base = (j % 4) as f32 * 20.0;
+            let row: Vec<f32> = (0..3).map(|_| base + rng.normal_f32(0.0, 0.3)).collect();
+            pts.row_mut(j).copy_from_slice(&row);
+        }
+        let init = init_kmeans_pp(&pts, 4, &mut rng);
+        let (_, labels, inertia) = minibatch_kmeans(&pts, init, 32, 100, &mut rng);
+        // Each true blob maps to a single cluster.
+        for blob in 0..4 {
+            let first = labels[blob];
+            for j in (blob..200).step_by(4) {
+                assert_eq!(labels[j], first, "blob {blob} split");
+            }
+        }
+        assert!(inertia < 600.0, "inertia {inertia}");
+    }
+
+    #[test]
+    fn batch_larger_than_n_is_clamped() {
+        let mut rng = Rng::new(52);
+        let pts = Tensor::randn(&[10, 2], &mut rng);
+        let init = init_kmeans_pp(&pts, 2, &mut rng);
+        let (c, labels, _) = minibatch_kmeans(&pts, init, 1000, 5, &mut rng);
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(labels.len(), 10);
+    }
+}

@@ -1,0 +1,246 @@
+//! K-Means clustering over weight channels.
+//!
+//! The paper clusters the *columns* ("channels") of a weight matrix and
+//! replaces each cluster by a representative vector. This module is the L3
+//! CPU implementation: k-means++ (or random) init, Lloyd iterations with
+//! empty-cluster repair, an optional mini-batch variant for very wide
+//! matrices, and both mean and medoid representatives (ablation §5).
+//!
+//! The L1 Pallas kernel (`python/compile/kernels/kmeans.py`) implements the
+//! same assignment/update steps for the accelerated path; the integration
+//! tests check both agree.
+
+mod init;
+mod lloyd;
+mod minibatch;
+
+pub use init::{init_kmeans_pp, init_random, InitMethod};
+pub use lloyd::{assign, lloyd, update, AssignResult};
+pub use minibatch::minibatch_kmeans;
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Which vector represents a cluster (paper uses the mean; medoid is our
+/// ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Representative {
+    Mean,
+    Medoid,
+}
+
+/// K-Means configuration.
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    /// Number of clusters `k`.
+    pub k: usize,
+    /// Maximum Lloyd iterations.
+    pub max_iters: usize,
+    /// Stop when total centroid movement (Frobenius) falls below this.
+    pub tol: f64,
+    /// Seeding strategy.
+    pub init: InitMethod,
+    /// Cluster representative.
+    pub representative: Representative,
+    /// RNG seed (clustering is deterministic given the seed).
+    pub seed: u64,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig {
+            k: 16,
+            max_iters: 50,
+            tol: 1e-6,
+            init: InitMethod::KMeansPlusPlus,
+            representative: Representative::Mean,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of clustering the channels (columns) of a matrix.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// `m × k` matrix whose columns are the representative vectors.
+    pub centroids: Tensor,
+    /// For each of the `n` input channels, the cluster it belongs to.
+    pub labels: Vec<u32>,
+    /// Final within-cluster sum of squared distances.
+    pub inertia: f64,
+    /// Lloyd iterations actually run.
+    pub iterations: usize,
+}
+
+impl KMeansResult {
+    /// Reconstruct the approximation `W'`: every channel replaced by its
+    /// cluster representative.
+    pub fn reconstruct(&self) -> Tensor {
+        let m = self.centroids.rows();
+        let n = self.labels.len();
+        let mut out = Tensor::zeros(&[m, n]);
+        for (j, &lab) in self.labels.iter().enumerate() {
+            for i in 0..m {
+                *out.at_mut(i, j) = self.centroids.at(i, lab as usize);
+            }
+        }
+        out
+    }
+}
+
+/// Cluster the channels (columns) of `w` into `cfg.k` clusters.
+///
+/// `w` is `m × n`; channels are the `n` columns, each a vector in `R^m`.
+pub fn cluster_channels(w: &Tensor, cfg: &KMeansConfig) -> KMeansResult {
+    let n = w.cols();
+    let k = cfg.k.min(n).max(1);
+    let mut rng = Rng::new(cfg.seed);
+
+    // Work in channel-major layout: row i = channel i (n × m). A transposed
+    // copy makes every distance computation contiguous.
+    let channels = w.transpose();
+
+    let mut centroids_rows = match cfg.init {
+        InitMethod::Random => init_random(&channels, k, &mut rng),
+        InitMethod::KMeansPlusPlus => init_kmeans_pp(&channels, k, &mut rng),
+    };
+
+    let res = lloyd(&channels, &mut centroids_rows, cfg.max_iters, cfg.tol, &mut rng);
+
+    let centroids_rows = match cfg.representative {
+        Representative::Mean => centroids_rows,
+        Representative::Medoid => to_medoids(&channels, &centroids_rows, &res.labels),
+    };
+
+    // Back to the paper's orientation: centroids as columns (m × k).
+    KMeansResult {
+        centroids: centroids_rows.transpose(),
+        labels: res.labels,
+        inertia: res.inertia,
+        iterations: res.iterations,
+    }
+}
+
+/// Replace each mean centroid by the in-cluster channel closest to it.
+fn to_medoids(channels: &Tensor, centroids: &Tensor, labels: &[u32]) -> Tensor {
+    let k = centroids.rows();
+    let mut best: Vec<(f64, Option<usize>)> = vec![(f64::INFINITY, None); k];
+    for (j, &lab) in labels.iter().enumerate() {
+        let d = Tensor::dist2(channels.row(j), centroids.row(lab as usize));
+        if d < best[lab as usize].0 {
+            best[lab as usize] = (d, Some(j));
+        }
+    }
+    let mut out = centroids.clone();
+    for (c, (_, j)) in best.iter().enumerate() {
+        if let Some(j) = j {
+            out.row_mut(c).copy_from_slice(channels.row(*j));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// Build a matrix whose channels form `k` well-separated groups.
+    fn grouped_matrix(m: usize, n: usize, k: usize, seed: u64) -> (Tensor, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut w = Tensor::zeros(&[m, n]);
+        let mut truth = Vec::with_capacity(n);
+        let centers: Vec<Vec<f32>> =
+            (0..k).map(|c| (0..m).map(|_| rng.normal_f32(10.0 * c as f32, 1.0)).collect()).collect();
+        for j in 0..n {
+            let c = j % k;
+            truth.push(c);
+            let col: Vec<f32> = centers[c].iter().map(|&v| v + rng.normal_f32(0.0, 0.05)).collect();
+            w.set_col(j, &col);
+        }
+        (w, truth)
+    }
+
+    #[test]
+    fn recovers_well_separated_groups() {
+        let (w, truth) = grouped_matrix(16, 48, 4, 21);
+        let res = cluster_channels(&w, &KMeansConfig { k: 4, ..Default::default() });
+        // Labels must be a relabeling of the truth: same partition.
+        let mut map = std::collections::HashMap::new();
+        for (j, &lab) in res.labels.iter().enumerate() {
+            let entry = map.entry(truth[j]).or_insert(lab);
+            assert_eq!(*entry, lab, "channel {j} split from its true group");
+        }
+        assert_eq!(map.len(), 4);
+        // Expected inertia ≈ n·m·σ² = 48·16·0.0025 ≈ 1.9 for correct
+        // clustering; a mis-clustering would add ~10²-scale terms.
+        assert!(res.inertia < 4.0, "inertia {}", res.inertia);
+    }
+
+    #[test]
+    fn reconstruct_shape_and_labels_in_range() {
+        let (w, _) = grouped_matrix(8, 20, 3, 22);
+        let res = cluster_channels(&w, &KMeansConfig { k: 3, ..Default::default() });
+        let rec = res.reconstruct();
+        assert_eq!(rec.shape(), w.shape());
+        assert!(res.labels.iter().all(|&l| (l as usize) < 3));
+    }
+
+    #[test]
+    fn k_capped_at_n() {
+        let mut rng = Rng::new(23);
+        let w = Tensor::randn(&[4, 3], &mut rng);
+        let res = cluster_channels(&w, &KMeansConfig { k: 100, ..Default::default() });
+        assert!(res.centroids.cols() <= 3);
+        // With k >= n each channel is its own cluster: perfect reconstruction.
+        assert!(res.reconstruct().mse(&w) < 1e-10);
+    }
+
+    #[test]
+    fn medoid_representative_is_an_actual_channel() {
+        let (w, _) = grouped_matrix(8, 24, 3, 24);
+        let res = cluster_channels(
+            &w,
+            &KMeansConfig { k: 3, representative: Representative::Medoid, ..Default::default() },
+        );
+        // Every centroid column equals some input channel exactly.
+        for c in 0..res.centroids.cols() {
+            let cen = res.centroids.col(c);
+            let found = (0..w.cols()).any(|j| w.col(j) == cen);
+            assert!(found, "medoid {c} is not an input channel");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (w, _) = grouped_matrix(8, 30, 4, 25);
+        let cfg = KMeansConfig { k: 4, seed: 77, ..Default::default() };
+        let a = cluster_channels(&w, &cfg);
+        let b = cluster_channels(&w, &cfg);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn mean_reconstruction_never_worse_than_trivial_single_cluster() {
+        prop::check(
+            "k>=2 inertia <= k=1 inertia",
+            26,
+            12,
+            |r| {
+                let m = 4 + r.below(12);
+                let n = 8 + r.below(24);
+                (Tensor::randn(&[m, n], r), 2 + r.below(6))
+            },
+            |(w, k)| {
+                let one = cluster_channels(w, &KMeansConfig { k: 1, ..Default::default() });
+                let many = cluster_channels(w, &KMeansConfig { k: *k, ..Default::default() });
+                if many.inertia <= one.inertia + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("k={k}: {} > k=1: {}", many.inertia, one.inertia))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! # SWSC — Shared Weight for Similar Channel
+//!
+//! A full reproduction of *"SWSC: Shared Weight for Similar Channel in LLM"*
+//! (Zeng et al., 2025) as a three-layer rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: per-matrix compression job
+//!   scheduling, a batched evaluation service, training/eval drivers, and
+//!   every substrate the paper depends on (K-Means, SVD, RTN, tokenizer,
+//!   corpus, checkpoint formats) built from scratch.
+//! - **Layer 2 (`python/compile/model.py`)** — the transformer forward /
+//!   backward and the compressed forward, lowered once to HLO text.
+//! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for K-Means
+//!   assignment/update, SWSC reconstruction, RTN fake-quant, and the fused
+//!   decompress-matmul, all validated against pure-jnp oracles.
+//!
+//! Python runs only at build time (`make artifacts`); the rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT and is self-contained afterwards.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use swsc::compress::{SwscConfig, compress_matrix};
+//! use swsc::tensor::Tensor;
+//! use swsc::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0xC0FFEE);
+//! let w = Tensor::randn(&[256, 256], &mut rng);
+//! let cfg = SwscConfig { clusters: 16, rank: 8, ..Default::default() };
+//! let compressed = compress_matrix(&w, &cfg);
+//! let restored = compressed.reconstruct();
+//! println!("avg bits: {:.3}", compressed.avg_bits());
+//! println!("mse: {:.3e}", restored.mse(&w));
+//! ```
+
+pub mod bench;
+pub mod compress;
+pub mod coordinator;
+pub mod eval;
+pub mod io;
+pub mod kmeans;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod text;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

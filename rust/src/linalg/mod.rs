@@ -1,0 +1,19 @@
+//! Dense linear algebra built from scratch.
+//!
+//! The paper's error-compensation step needs a truncated SVD of the
+//! reconstruction error `W_err`. `jnp.linalg.svd` lowers to a LAPACK
+//! custom-call on CPU that does not survive the HLO-text interchange (see
+//! DESIGN.md §9), so the SVD lives here in rust:
+//!
+//! - [`svd_jacobi`] — exact one-sided Jacobi SVD; cubic but rock-solid,
+//!   used for small matrices and as the oracle in tests.
+//! - [`svd_randomized`] — Halko/Martinsson/Tropp randomized range finder +
+//!   subspace iteration; the production path for `m ≥ a few hundred` when
+//!   only `r ≪ min(m,n)` factors are kept.
+//! - [`qr_householder`] — thin QR used by the randomized method.
+
+mod qr;
+mod svd;
+
+pub use qr::qr_householder;
+pub use svd::{svd_jacobi, svd_randomized, truncate, Svd};

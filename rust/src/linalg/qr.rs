@@ -1,0 +1,128 @@
+//! Thin QR via Householder reflections.
+
+use crate::tensor::Tensor;
+
+/// Thin QR factorization of `a` (m × n, m ≥ n): returns `Q` (m × n) with
+/// orthonormal columns such that `Q·R = a` for upper-triangular `R`
+/// (R itself is not returned — the randomized SVD only needs the range).
+pub fn qr_householder(a: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "thin QR wants m >= n, got {m} x {n}");
+
+    // Work on a mutable copy in f64 for stability.
+    let mut r: Vec<f64> = a.data().iter().map(|&v| v as f64).collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+
+    for k in 0..n {
+        // Column k below the diagonal.
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let v = r[i * n + k];
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm > 0.0 {
+            let alpha = if r[k * n + k] >= 0.0 { -norm } else { norm };
+            v[0] = r[k * n + k] - alpha;
+            for i in (k + 1)..m {
+                v[i - k] = r[i * n + k];
+            }
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 > 1e-300 {
+                // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
+                for j in k..n {
+                    let mut dot = 0.0;
+                    for i in k..m {
+                        dot += v[i - k] * r[i * n + j];
+                    }
+                    let f = 2.0 * dot / vnorm2;
+                    for i in k..m {
+                        r[i * n + j] -= f * v[i - k];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q = H_0 · H_1 ··· H_{n-1} · [I_n; 0].
+    let mut q = vec![0.0f64; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= f * v[i - k];
+            }
+        }
+    }
+
+    Tensor::from_vec(&[m, n], q.into_iter().map(|v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::new(61);
+        let a = Tensor::randn(&[30, 8], &mut rng);
+        let q = qr_householder(&a);
+        let qtq = q.t_matmul(&q);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (qtq.at(i, j) - want).abs() < 1e-4,
+                    "QtQ[{i},{j}] = {}",
+                    qtq.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q_spans_the_column_space() {
+        // Projecting A onto range(Q) must reproduce A: Q Qᵀ A == A.
+        let mut rng = Rng::new(62);
+        let a = Tensor::randn(&[25, 6], &mut rng);
+        let q = qr_householder(&a);
+        let proj = q.matmul(&q.t_matmul(&a));
+        prop::assert_close(proj.data(), a.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn handles_rank_deficient_input() {
+        // Two identical columns.
+        let mut rng = Rng::new(63);
+        let mut a = Tensor::randn(&[10, 3], &mut rng);
+        let c0 = a.col(0);
+        a.set_col(2, &c0);
+        let q = qr_householder(&a);
+        assert_eq!(q.shape(), &[10, 3]);
+        assert!(q.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn square_identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let q = qr_householder(&a);
+        let qtq = q.t_matmul(&q);
+        prop::assert_close(qtq.data(), &[1.0, 0.0, 0.0, 1.0], 1e-5, 0.0).unwrap();
+    }
+}

@@ -1,0 +1,328 @@
+//! Singular value decomposition: exact one-sided Jacobi and randomized
+//! truncated SVD.
+
+use super::qr::qr_householder;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// An SVD `A ≈ U · diag(s) · Vᵀ` with `U: m × r`, `s: r`, `Vt: r × n`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub vt: Tensor,
+}
+
+impl Svd {
+    /// Number of retained singular triplets.
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Reconstruct `U · diag(s) · Vᵀ`.
+    pub fn reconstruct(&self) -> Tensor {
+        let us = self.scaled_u();
+        us.matmul(&self.vt)
+    }
+
+    /// `U · diag(s)` — convenient for the paper's `A = U_r Σ^{1/2}`,
+    /// `B = Σ^{1/2} V_rᵀ` split (see [`Svd::split_factors`]).
+    pub fn scaled_u(&self) -> Tensor {
+        let (m, r) = (self.u.rows(), self.rank());
+        let mut out = self.u.clone();
+        for i in 0..m {
+            for j in 0..r {
+                *out.at_mut(i, j) *= self.s[j];
+            }
+        }
+        out
+    }
+
+    /// The paper's storage split: `A = U_r Σ^{1/2}` (m × r) and
+    /// `B = Σ^{1/2} V_rᵀ` (r × n), so `A·B = U Σ Vᵀ`.
+    pub fn split_factors(&self) -> (Tensor, Tensor) {
+        let (m, r, n) = (self.u.rows(), self.rank(), self.vt.cols());
+        let mut a = self.u.clone();
+        let mut b = self.vt.clone();
+        for j in 0..r {
+            let sq = self.s[j].max(0.0).sqrt();
+            for i in 0..m {
+                *a.at_mut(i, j) *= sq;
+            }
+            for c in 0..n {
+                *b.at_mut(j, c) *= sq;
+            }
+        }
+        (a, b)
+    }
+
+    /// Fraction of squared Frobenius energy captured by the retained
+    /// triplets relative to `total_fro2` (‖A‖_F²).
+    pub fn energy_fraction(&self, total_fro2: f64) -> f64 {
+        if total_fro2 <= 0.0 {
+            return 1.0;
+        }
+        let kept: f64 = self.s.iter().map(|&s| (s as f64) * (s as f64)).sum();
+        (kept / total_fro2).min(1.0)
+    }
+}
+
+/// Exact SVD via one-sided Jacobi (Hestenes). Orthogonalizes the columns of
+/// `A` by plane rotations; converges quadratically. O(m·n²·sweeps) — used
+/// for matrices up to ~512 per side and as the test oracle.
+pub fn svd_jacobi(a: &Tensor) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    // Work column-major in f64: col[j] is a vector of length m.
+    let mut cols: Vec<Vec<f64>> =
+        (0..n).map(|j| (0..m).map(|i| a.at(i, j) as f64).collect()).collect();
+    // V accumulates the right rotations, starts as identity (n × n).
+    let mut v = vec![0.0f64; n * n];
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+
+    let eps = 1e-12;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) off-diagonal of AᵀA.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let vp = cols[p][i];
+                    let vq = cols[q][i];
+                    cols[p][i] = c * vp - s * vq;
+                    cols[q][i] = s * vp + c * vq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // Singular values are the column norms; U columns the normalized columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols.iter().map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Tensor::zeros(&[m, n]);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = Tensor::zeros(&[n, n]);
+    for (out_j, &j) in order.iter().enumerate() {
+        let nrm = norms[j];
+        s.push(nrm as f32);
+        if nrm > 1e-300 {
+            for i in 0..m {
+                *u.at_mut(i, out_j) = (cols[j][i] / nrm) as f32;
+            }
+        }
+        for i in 0..n {
+            *vt.at_mut(out_j, i) = v[i * n + j] as f32;
+        }
+    }
+
+    Svd { u, s, vt }
+}
+
+/// Keep only the top-`r` triplets of an SVD.
+pub fn truncate(svd: &Svd, r: usize) -> Svd {
+    let r = r.min(svd.rank());
+    let (m, n) = (svd.u.rows(), svd.vt.cols());
+    let mut u = Tensor::zeros(&[m, r]);
+    let mut vt = Tensor::zeros(&[r, n]);
+    for j in 0..r {
+        for i in 0..m {
+            *u.at_mut(i, j) = svd.u.at(i, j);
+        }
+        vt.row_mut(j).copy_from_slice(svd.vt.row(j));
+    }
+    Svd { u, s: svd.s[..r].to_vec(), vt }
+}
+
+/// Randomized truncated SVD (Halko et al. 2011): range sketch `Y = A·Ω`,
+/// `q` power iterations with QR re-orthogonalization, small exact SVD of
+/// `Qᵀ·A`. `oversample` extra sketch columns sharpen the tail.
+pub fn svd_randomized(a: &Tensor, rank: usize, oversample: usize, power_iters: usize, rng: &mut Rng) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    let r = rank.min(m.min(n)).max(1);
+    let sketch = (r + oversample).min(m.min(n));
+
+    // Y = A · Ω, Ω: n × sketch gaussian.
+    let omega = Tensor::randn(&[n, sketch], rng);
+    let mut q = qr_householder(&a.matmul(&omega));
+
+    // Power iterations: (A Aᵀ)^q Y with re-orthogonalization each half-step.
+    for _ in 0..power_iters {
+        let z = qr_householder(&a.t_matmul(&q)); // n × sketch
+        q = qr_householder(&a.matmul(&z)); // m × sketch
+    }
+
+    // B = Qᵀ A  (sketch × n) — small; exact Jacobi on Bᵀ (n × sketch) keeps
+    // m >= n orientation for the one-sided method.
+    let b = q.t_matmul(a);
+    let svd_bt = svd_jacobi(&b.transpose()); // Bᵀ = U_b S V_bᵀ  ⇒  B = V_b S U_bᵀ
+    let r_keep = r.min(svd_bt.rank());
+
+    // B = (V_b) S (U_bᵀ): left factors of B are V_b's columns.
+    // U = Q · V_b[:, :r], Vt = U_b[:, :r]ᵀ.
+    let vb = svd_bt.vt.transpose(); // sketch × sketch
+    let mut vb_r = Tensor::zeros(&[vb.rows(), r_keep]);
+    for j in 0..r_keep {
+        for i in 0..vb.rows() {
+            *vb_r.at_mut(i, j) = vb.at(i, j);
+        }
+    }
+    let u = q.matmul(&vb_r);
+    let mut vt = Tensor::zeros(&[r_keep, n]);
+    for j in 0..r_keep {
+        for i in 0..n {
+            *vt.at_mut(j, i) = svd_bt.u.at(i, j);
+        }
+    }
+
+    Svd { u, s: svd_bt.s[..r_keep].to_vec(), vt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn low_rank_matrix(m: usize, n: usize, r: usize, rng: &mut Rng) -> Tensor {
+        let a = Tensor::randn(&[m, r], rng);
+        let b = Tensor::randn(&[r, n], rng);
+        a.matmul(&b)
+    }
+
+    #[test]
+    fn jacobi_reconstructs_exactly() {
+        let mut rng = Rng::new(71);
+        let a = Tensor::randn(&[12, 8], &mut rng);
+        let svd = svd_jacobi(&a);
+        prop::assert_close(svd.reconstruct().data(), a.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn jacobi_singular_values_sorted_nonneg() {
+        let mut rng = Rng::new(72);
+        let a = Tensor::randn(&[10, 10], &mut rng);
+        let svd = svd_jacobi(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn jacobi_u_v_orthonormal() {
+        let mut rng = Rng::new(73);
+        let a = Tensor::randn(&[15, 9], &mut rng);
+        let svd = svd_jacobi(&a);
+        let utu = svd.u.t_matmul(&svd.u);
+        let vvt = svd.vt.matmul(&svd.vt.transpose());
+        for i in 0..9 {
+            for j in 0..9 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at(i, j) - want).abs() < 1e-3, "UtU[{i},{j}]={}", utu.at(i, j));
+                assert!((vvt.at(i, j) - want).abs() < 1e-3, "VVt[{i},{j}]={}", vvt.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_is_best_low_rank_on_known_spectrum() {
+        // Diagonal matrix: truncated SVD error is exactly the dropped sigmas.
+        let mut a = Tensor::zeros(&[6, 6]);
+        for i in 0..6 {
+            *a.at_mut(i, i) = (6 - i) as f32;
+        }
+        let svd = truncate(&svd_jacobi(&a), 3);
+        let err = a.sub(&svd.reconstruct());
+        // ‖err‖_F² = 3² + 2² + 1² = 14.
+        assert!((err.fro_norm().powi(2) - 14.0).abs() < 1e-3, "{}", err.fro_norm().powi(2));
+    }
+
+    #[test]
+    fn randomized_matches_jacobi_on_low_rank() {
+        let mut rng = Rng::new(74);
+        let a = low_rank_matrix(40, 30, 5, &mut rng);
+        let rsvd = svd_randomized(&a, 5, 8, 2, &mut rng);
+        // Rank-5 matrix: rank-5 randomized SVD reconstructs it (almost) exactly.
+        let rel = a.sub(&rsvd.reconstruct()).fro_norm() / a.fro_norm();
+        assert!(rel < 1e-3, "relative error {rel}");
+    }
+
+    #[test]
+    fn randomized_close_to_optimal_on_full_rank() {
+        let mut rng = Rng::new(75);
+        let a = Tensor::randn(&[50, 40], &mut rng);
+        let r = 10;
+        let exact_err = {
+            let svd = truncate(&svd_jacobi(&a), r);
+            a.sub(&svd.reconstruct()).fro_norm()
+        };
+        let rand_err = {
+            let svd = svd_randomized(&a, r, 10, 3, &mut rng);
+            a.sub(&svd.reconstruct()).fro_norm()
+        };
+        assert!(
+            rand_err <= exact_err * 1.15,
+            "randomized {rand_err} vs optimal {exact_err}"
+        );
+    }
+
+    #[test]
+    fn split_factors_multiply_back() {
+        let mut rng = Rng::new(76);
+        let a = Tensor::randn(&[12, 10], &mut rng);
+        let svd = truncate(&svd_jacobi(&a), 4);
+        let (fa, fb) = svd.split_factors();
+        assert_eq!(fa.shape(), &[12, 4]);
+        assert_eq!(fb.shape(), &[4, 10]);
+        prop::assert_close(fa.matmul(&fb).data(), svd.reconstruct().data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn energy_fraction_monotone_in_rank() {
+        let mut rng = Rng::new(77);
+        let a = Tensor::randn(&[20, 16], &mut rng);
+        let full = svd_jacobi(&a);
+        let total = a.fro_norm().powi(2);
+        let mut last = 0.0;
+        for r in 1..=16 {
+            let e = truncate(&full, r).energy_fraction(total);
+            assert!(e >= last - 1e-9, "energy not monotone at r={r}");
+            last = e;
+        }
+        assert!((last - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_matrix_svd() {
+        let a = Tensor::zeros(&[5, 4]);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        prop::assert_close(svd.reconstruct().data(), a.data(), 1e-9, 0.0).unwrap();
+    }
+}

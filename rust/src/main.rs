@@ -1,0 +1,350 @@
+//! `swsc` — the SWSC coordinator CLI.
+//!
+//! Subcommands:
+//! - `train`     train the LM from scratch on the synthetic corpus
+//! - `compress`  run the SWSC pipeline on a checkpoint → `.swsc` container
+//! - `eval`      perplexity of a checkpoint or `.swsc` container
+//! - `table1`    reproduce the paper's Table I end-to-end
+//! - `table2`    print the paper's Table II (avg-bits accounting)
+//! - `pipeline`  train → compress → eval in one go (Fig. 1)
+//! - `info`      model/artifact info
+//!
+//! Arg parsing is hand-rolled (`--key value` pairs) — the vendored crate
+//! set has no clap.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use swsc::compress::{CompressionPlan, ProjectorSet};
+use swsc::coordinator::compress_model;
+use swsc::eval::Evaluator;
+use swsc::io::{Checkpoint, SwscFile};
+use swsc::model::{init_params, ModelConfig};
+use swsc::quant::{rtn_quantize, RtnConfig};
+use swsc::report::{render_table1, render_table2, Table1Row};
+use swsc::runtime::{ArtifactManifest, Engine};
+use swsc::text::{BpeTokenizer, CorpusConfig, Dataset, SyntheticCorpus};
+use swsc::train::{LrSchedule, Trainer};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = args.remove(0);
+    let opts = parse_opts(&args)?;
+    match cmd.as_str() {
+        "train" => cmd_train(&opts),
+        "compress" => cmd_compress(&opts),
+        "eval" => cmd_eval(&opts),
+        "table1" => cmd_table1(&opts),
+        "table2" => cmd_table2(&opts),
+        "pipeline" => cmd_pipeline(&opts),
+        "info" => cmd_info(&opts),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` — try `swsc help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "swsc — Shared Weight for Similar Channel (paper reproduction)\n\
+         \n\
+         usage: swsc <command> [--key value]...\n\
+         \n\
+         commands:\n\
+           train     --preset small --steps 300 --out runs/default [--artifacts artifacts]\n\
+           compress  --ckpt runs/default/model.swck --proj qk --bits 2 --out model.swsc\n\
+           eval      --ckpt model.swck | --swsc model.swsc  [--preset small]\n\
+           table1    --ckpt runs/default/model.swck [--bits 3,2] [--out table1.txt]\n\
+           table2    [--m 4096]\n\
+           pipeline  --steps 300 --out runs/pipeline\n\
+           info      [--preset small]\n"
+    );
+}
+
+type Opts = HashMap<String, String>;
+
+fn parse_opts(args: &[String]) -> Result<Opts> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .with_context(|| format!("expected --key, got `{}`", args[i]))?;
+        let val = args.get(i + 1).with_context(|| format!("--{key} needs a value"))?;
+        out.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+fn opt<'a>(opts: &'a Opts, key: &str, default: &'a str) -> &'a str {
+    opts.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn engine_for(opts: &Opts, cfg: &ModelConfig) -> Result<Engine> {
+    let dir = PathBuf::from(opt(opts, "artifacts", "artifacts"));
+    let preset = opt(opts, "preset", "small");
+    let manifest = ArtifactManifest::load(&dir, preset)?;
+    manifest.verify_config(cfg)?;
+    Engine::new(manifest)
+}
+
+/// Build tokenizer + train/eval datasets the same way everywhere.
+fn corpus_and_data(cfg: &ModelConfig, seed: u64) -> (BpeTokenizer, Dataset, Dataset) {
+    let corpus = SyntheticCorpus::generate(&CorpusConfig { seed, ..Default::default() });
+    let tok = BpeTokenizer::train(&corpus.train_text, cfg.vocab);
+    let train = Dataset::from_text(&corpus.train_text, &tok, cfg.batch, cfg.seq);
+    let eval = Dataset::from_text(&corpus.eval_text, &tok, cfg.batch, cfg.seq);
+    (tok, train, eval)
+}
+
+fn cmd_train(opts: &Opts) -> Result<()> {
+    let cfg = ModelConfig::by_name(opt(opts, "preset", "small"))?;
+    cfg.validate()?;
+    let steps: usize = opt(opts, "steps", "300").parse()?;
+    let out_dir = PathBuf::from(opt(opts, "out", "runs/default"));
+    let seed: u64 = opt(opts, "seed", "42").parse()?;
+
+    let engine = engine_for(opts, &cfg)?;
+    println!("platform: {}  params: {}", engine.platform(), cfg.param_count());
+
+    let (tok, train_data, eval_data) = corpus_and_data(&cfg, seed);
+    println!(
+        "corpus: {} train tokens, {} eval tokens, {} batches/epoch",
+        train_data.tokens(),
+        eval_data.tokens(),
+        train_data.num_batches()
+    );
+
+    let base_lr: f32 = opt(opts, "lr", "6e-4").parse()?;
+    let init = init_params(&cfg, seed);
+    let mut trainer = Trainer::new(engine.clone(), cfg.clone(), &init)?;
+    let mut sched = LrSchedule::new(base_lr, steps / 20 + 1, steps);
+    // Keep a meaningful floor: attention (induction) structure emerges
+    // late; decaying to near-zero freezes it half-formed.
+    sched.min_lr = base_lr * 0.25;
+
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let batch = train_data.batch(step);
+        let loss = trainer.step(&batch, sched.at(step))?;
+        if step % 20 == 0 || step + 1 == steps {
+            println!(
+                "step {step:>5}  loss {loss:.4}  lr {:.2e}  {:.1}s",
+                sched.at(step),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+
+    let ck = trainer.to_checkpoint()?;
+    std::fs::create_dir_all(&out_dir)?;
+    ck.save(&out_dir.join("model.swck"))?;
+    std::fs::write(out_dir.join("tokenizer.bpe"), tok.to_text())?;
+    let loss_log: String =
+        trainer.losses.iter().enumerate().map(|(i, l)| format!("{i} {l}\n")).collect();
+    std::fs::write(out_dir.join("loss.log"), loss_log)?;
+
+    let evaluator = Evaluator::new(engine, cfg)?;
+    let res = evaluator.perplexity(trainer.params(), &eval_data)?;
+    println!("final eval: ppl {:.3} ({} tokens)", res.perplexity, res.tokens);
+    std::fs::write(out_dir.join("eval.txt"), format!("perplexity {}\n", res.perplexity))?;
+    println!("saved to {}", out_dir.display());
+    Ok(())
+}
+
+fn proj_from_str(s: &str) -> Result<ProjectorSet> {
+    Ok(match s {
+        "q" => ProjectorSet::Q,
+        "k" => ProjectorSet::K,
+        "qk" => ProjectorSet::QAndK,
+        "v" => ProjectorSet::V,
+        other => bail!("unknown projector set `{other}` (q|k|qk|v)"),
+    })
+}
+
+fn cmd_compress(opts: &Opts) -> Result<()> {
+    let ckpt = PathBuf::from(opts.get("ckpt").context("--ckpt required")?);
+    let proj = proj_from_str(opt(opts, "proj", "qk"))?;
+    let bits: f64 = opt(opts, "bits", "2").parse()?;
+    let out = PathBuf::from(opt(opts, "out", "model.swsc"));
+    let workers: usize = opt(opts, "workers", "8").parse()?;
+    let seed: u64 = opt(opts, "seed", "42").parse()?;
+
+    let ck = Checkpoint::load(&ckpt)?;
+    let plan = CompressionPlan::for_target_bits(&ck.shapes(), proj, bits, 0.5, seed);
+    anyhow::ensure!(!plan.is_empty(), "plan selected no matrices");
+    println!("compressing {} matrices ({} workers, target {bits} avg bits)...", plan.len(), workers);
+    let outcome = compress_model(&ck, &plan, workers, None)?;
+    for s in &outcome.stats {
+        println!("  {s}");
+    }
+    outcome.file.save(&out)?;
+    println!(
+        "wrote {} ({}) in {:.2}s",
+        out.display(),
+        swsc::util::human_bytes(std::fs::metadata(&out)?.len() as usize),
+        outcome.wall_seconds
+    );
+    Ok(())
+}
+
+fn cmd_eval(opts: &Opts) -> Result<()> {
+    let cfg = ModelConfig::by_name(opt(opts, "preset", "small"))?;
+    let engine = engine_for(opts, &cfg)?;
+    let (_tok, _train, eval_data) = corpus_and_data(&cfg, opt(opts, "seed", "42").parse()?);
+
+    let ck = if let Some(p) = opts.get("swsc") {
+        let file = SwscFile::load(Path::new(p))?;
+        let mut ck = Checkpoint::new();
+        for (name, t) in file.restore_all() {
+            ck.insert(&name, t);
+        }
+        ck
+    } else if let Some(p) = opts.get("ckpt") {
+        Checkpoint::load(Path::new(p))?
+    } else {
+        bail!("need --ckpt or --swsc");
+    };
+
+    let evaluator = Evaluator::new(engine, cfg)?;
+    let res = evaluator.perplexity_of(&ck, &eval_data)?;
+    println!("perplexity {:.4}  (nll/token {:.4}, {} tokens, {} batches)", res.perplexity, res.nll_per_token, res.tokens, res.batches);
+    Ok(())
+}
+
+/// The Table-I experiment: for each projector set and bit budget, compare
+/// RTN vs SWSC perplexity at equal storage.
+fn cmd_table1(opts: &Opts) -> Result<()> {
+    let cfg = ModelConfig::by_name(opt(opts, "preset", "small"))?;
+    let engine = engine_for(opts, &cfg)?;
+    let seed: u64 = opt(opts, "seed", "42").parse()?;
+    let workers: usize = opt(opts, "workers", "8").parse()?;
+    let ckpt = PathBuf::from(opts.get("ckpt").context("--ckpt required (train first)")?);
+    let bits_list: Vec<f64> = opt(opts, "bits", "3,2")
+        .split(',')
+        .map(|s| s.parse::<f64>().map_err(Into::into))
+        .collect::<Result<_>>()?;
+
+    let ck = Checkpoint::load(&ckpt)?;
+    let (_tok, _train, eval_data) = corpus_and_data(&cfg, seed);
+    let evaluator = Evaluator::new(engine, cfg.clone())?;
+
+    let fp32 = evaluator.perplexity_of(&ck, &eval_data)?.perplexity;
+    println!("fp32 baseline perplexity: {fp32:.3}\n");
+
+    let mut rows = Vec::new();
+    for proj in [ProjectorSet::Q, ProjectorSet::K, ProjectorSet::QAndK] {
+        for &bits in &bits_list {
+            // RTN baseline at the same storage budget.
+            let rtn_ppl = {
+                let mut qck = ck.clone();
+                let rtn_cfg = RtnConfig { bits: bits.round() as u32, ..Default::default() };
+                for (name, _) in ck.shapes() {
+                    if proj.matches(&name) {
+                        let t = qck.get(&name).unwrap();
+                        let q = rtn_quantize(t, &rtn_cfg);
+                        qck.insert(&name, q);
+                    }
+                }
+                evaluator.perplexity_of(&qck, &eval_data)?.perplexity
+            };
+            rows.push(Table1Row {
+                projector: proj.label().into(),
+                method: "RTN".into(),
+                avg_bits: bits,
+                perplexity: rtn_ppl,
+            });
+
+            // SWSC at the same budget.
+            let plan = CompressionPlan::for_target_bits(&ck.shapes(), proj, bits, 0.5, seed);
+            let outcome = compress_model(&ck, &plan, workers, None)?;
+            let mut sck = ck.clone();
+            for (name, t) in outcome.file.restore_all() {
+                sck.insert(&name, t);
+            }
+            let swsc_ppl = evaluator.perplexity_of(&sck, &eval_data)?.perplexity;
+            rows.push(Table1Row {
+                projector: proj.label().into(),
+                method: "SWSC".into(),
+                avg_bits: bits,
+                perplexity: swsc_ppl,
+            });
+            println!(
+                "{:<6} {:>4} bits: RTN {:>10.3}  SWSC {:>10.3}",
+                proj.label(),
+                bits,
+                rtn_ppl,
+                swsc_ppl
+            );
+        }
+    }
+
+    let table = render_table1(
+        &format!("{} on synthetic tiny-wiki (paper: Llama-2-7B on WikiText-2)", cfg.fingerprint()),
+        fp32,
+        &rows,
+    );
+    println!("\n{table}");
+    if let Some(out) = opts.get("out") {
+        std::fs::write(out, &table)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_table2(opts: &Opts) -> Result<()> {
+    let m: usize = opt(opts, "m", "4096").parse()?;
+    println!("{}", render_table2(m));
+    if m != 4096 {
+        println!("(paper reports m = 4096; shown for m = {m})");
+    }
+    Ok(())
+}
+
+/// Fig. 1 end-to-end: train → compress → restore → eval.
+fn cmd_pipeline(opts: &Opts) -> Result<()> {
+    let mut o = opts.clone();
+    let out = opt(opts, "out", "runs/pipeline").to_string();
+    o.insert("out".into(), out.clone());
+    cmd_train(&o)?;
+    o.insert("ckpt".into(), format!("{out}/model.swck"));
+    o.insert("out".into(), format!("{out}/model.swsc"));
+    cmd_compress(&o)?;
+    let mut e = opts.clone();
+    e.insert("swsc".into(), format!("{out}/model.swsc"));
+    cmd_eval(&e)
+}
+
+fn cmd_info(opts: &Opts) -> Result<()> {
+    let cfg = ModelConfig::by_name(opt(opts, "preset", "small"))?;
+    println!("preset:      {}", opt(opts, "preset", "small"));
+    println!("fingerprint: {}", cfg.fingerprint());
+    println!("params:      {}", cfg.param_count());
+    println!("channels:    d_model = {} (paper m = 4096)", cfg.d_model);
+    let dir = PathBuf::from(opt(opts, "artifacts", "artifacts"));
+    match ArtifactManifest::load(&dir, opt(opts, "preset", "small")) {
+        Ok(man) => {
+            println!("artifacts:   {} executables in {}", man.executables.len(), dir.display());
+            for name in man.executables.keys() {
+                println!("  - {name}");
+            }
+        }
+        Err(e) => println!("artifacts:   not available ({e})"),
+    }
+    Ok(())
+}

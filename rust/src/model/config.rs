@@ -1,0 +1,117 @@
+//! Transformer configuration shared between rust and the AOT artifacts.
+
+use anyhow::{bail, Result};
+
+/// GPT-style decoder configuration. Must match the configuration the
+/// artifacts were lowered with; `runtime::manifest` verifies this at load.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// MLP hidden dim (conventionally 4·d_model).
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self::small()
+    }
+}
+
+impl ModelConfig {
+    /// Default experiment config (~4.8 M params): CPU-trainable in minutes,
+    /// d_model = 256 channels so SWSC's (k, r) scale matches the paper's
+    /// m = 4096 at the same avg-bits points (DESIGN.md §2).
+    pub fn small() -> Self {
+        ModelConfig { vocab: 512, d_model: 256, n_layers: 4, n_heads: 4, d_ff: 1024, seq: 128, batch: 8 }
+    }
+
+    /// Tiny config for tests (fast to train for a handful of steps).
+    pub fn tiny() -> Self {
+        ModelConfig { vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 128, seq: 32, batch: 4 }
+    }
+
+    /// ~110 M params — the "prove it scales" preset (slow on CPU).
+    pub fn big() -> Self {
+        ModelConfig { vocab: 8192, d_model: 768, n_layers: 12, n_heads: 12, d_ff: 3072, seq: 256, batch: 8 }
+    }
+
+    pub fn by_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "tiny" => Self::tiny(),
+            "small" => Self::small(),
+            "big" => Self::big(),
+            other => bail!("unknown model preset `{other}` (tiny|small|big)"),
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        super::params::param_specs(self).iter().map(|s| s.shape.iter().product::<usize>()).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model % self.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        if self.vocab == 0 || self.seq == 0 || self.batch == 0 || self.n_layers == 0 {
+            bail!("zero-sized model dimension");
+        }
+        Ok(())
+    }
+
+    /// Stable textual form, embedded in the artifact manifest so the rust
+    /// side can verify it loaded artifacts for the right model.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "v{}_d{}_l{}_h{}_f{}_s{}_b{}",
+            self.vocab, self.d_model, self.n_layers, self.n_heads, self.d_ff, self.seq, self.batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for cfg in [ModelConfig::tiny(), ModelConfig::small(), ModelConfig::big()] {
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn small_param_count_in_expected_range() {
+        let n = ModelConfig::small().param_count();
+        assert!((3_000_000..8_000_000).contains(&n), "small = {n}");
+    }
+
+    #[test]
+    fn big_is_about_100m() {
+        let n = ModelConfig::big().param_count();
+        assert!((80_000_000..150_000_000).contains(&n), "big = {n}");
+    }
+
+    #[test]
+    fn by_name_and_fingerprint() {
+        assert_eq!(ModelConfig::by_name("small").unwrap(), ModelConfig::small());
+        assert!(ModelConfig::by_name("huge").is_err());
+        assert_eq!(ModelConfig::small().fingerprint(), "v512_d256_l4_h4_f1024_s128_b8");
+    }
+
+    #[test]
+    fn invalid_heads_rejected() {
+        let mut c = ModelConfig::small();
+        c.n_heads = 5;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Model definition (host side).
+//!
+//! The transformer's *compute* lives in JAX (layer 2) and is AOT-lowered to
+//! HLO; this module owns the host-side picture of it: the configuration
+//! (must match what `python/compile/aot.py` lowered), the canonical
+//! parameter naming/ordering (rust and python agree on it by construction —
+//! the manifest pins the order), and parameter initialization for
+//! from-scratch training.
+
+pub mod config;
+pub mod params;
+
+pub use config::ModelConfig;
+pub use params::{init_params, param_specs, ParamSpec};

@@ -1,0 +1,140 @@
+//! Canonical parameter registry: names, shapes, order, initialization.
+//!
+//! Order matters: the AOT train/forward executables take parameters as a
+//! flat argument list, and `python/compile/model.py` uses the *same*
+//! generation logic (layer-major, fixed per-layer order), so index `i` here
+//! is argument `i` there. The artifact manifest additionally records every
+//! name so `runtime::manifest` can assert the two sides agree.
+
+use super::config::ModelConfig;
+use crate::io::Checkpoint;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One parameter's name + shape + init scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Std-dev for gaussian init; 0.0 ⇒ zeros, 1.0-with-ones ⇒ see `ones`.
+    pub init_std: f64,
+    /// LayerNorm gains start at one.
+    pub ones: bool,
+}
+
+/// The canonical, ordered parameter list for a config.
+///
+/// Naming: `embed.tok`, `embed.pos`, `layers.{i}.ln1.{g,b}`,
+/// `layers.{i}.attn.{wq,wk,wv,wo}`, `layers.{i}.ln2.{g,b}`,
+/// `layers.{i}.mlp.{w1,b1,w2,b2}`, `final_ln.{g,b}`. The LM head is tied to
+/// `embed.tok`.
+pub fn param_specs(cfg: &ModelConfig) -> Vec<ParamSpec> {
+    let d = cfg.d_model;
+    let std_embed = 0.02;
+    // GPT-2-style scaled init for residual-writing projections.
+    let std_resid = 0.02 / (2.0 * cfg.n_layers as f64).sqrt();
+    let mut specs = Vec::new();
+    let mut push = |name: String, shape: Vec<usize>, init_std: f64, ones: bool| {
+        specs.push(ParamSpec { name, shape, init_std, ones });
+    };
+
+    push("embed.tok".into(), vec![cfg.vocab, d], std_embed, false);
+    push("embed.pos".into(), vec![cfg.seq, d], std_embed, false);
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}");
+        push(format!("{p}.ln1.g"), vec![d], 0.0, true);
+        push(format!("{p}.ln1.b"), vec![d], 0.0, false);
+        push(format!("{p}.attn.wq"), vec![d, d], 0.02, false);
+        push(format!("{p}.attn.wk"), vec![d, d], 0.02, false);
+        push(format!("{p}.attn.wv"), vec![d, d], 0.02, false);
+        push(format!("{p}.attn.wo"), vec![d, d], std_resid, false);
+        push(format!("{p}.ln2.g"), vec![d], 0.0, true);
+        push(format!("{p}.ln2.b"), vec![d], 0.0, false);
+        push(format!("{p}.mlp.w1"), vec![d, cfg.d_ff], 0.02, false);
+        push(format!("{p}.mlp.b1"), vec![cfg.d_ff], 0.0, false);
+        push(format!("{p}.mlp.w2"), vec![cfg.d_ff, d], std_resid, false);
+        push(format!("{p}.mlp.b2"), vec![d], 0.0, false);
+    }
+    push("final_ln.g".into(), vec![d], 0.0, true);
+    push("final_ln.b".into(), vec![d], 0.0, false);
+    specs
+}
+
+/// Initialize a fresh parameter checkpoint.
+pub fn init_params(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+    let mut ck = Checkpoint::new();
+    let mut rng = Rng::new(seed);
+    for spec in param_specs(cfg) {
+        let t = if spec.ones {
+            Tensor::full(&spec.shape, 1.0)
+        } else if spec.init_std == 0.0 {
+            Tensor::zeros(&spec.shape)
+        } else {
+            let mut t = Tensor::randn(&spec.shape, &mut rng);
+            for v in t.data_mut() {
+                *v *= spec.init_std as f32;
+            }
+            t
+        };
+        ck.insert(&spec.name, t);
+    }
+    ck
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_count_matches_formula() {
+        let cfg = ModelConfig::small();
+        let specs = param_specs(&cfg);
+        assert_eq!(specs.len(), 2 + cfg.n_layers * 12 + 2);
+    }
+
+    #[test]
+    fn order_is_layer_major_and_stable() {
+        let cfg = ModelConfig::tiny();
+        let names: Vec<String> = param_specs(&cfg).into_iter().map(|s| s.name).collect();
+        assert_eq!(names[0], "embed.tok");
+        assert_eq!(names[1], "embed.pos");
+        assert_eq!(names[2], "layers.0.ln1.g");
+        assert!(names.iter().position(|n| n == "layers.0.attn.wq").unwrap()
+            < names.iter().position(|n| n == "layers.1.attn.wq").unwrap());
+        assert_eq!(names.last().unwrap(), "final_ln.b");
+    }
+
+    #[test]
+    fn init_shapes_match_specs() {
+        let cfg = ModelConfig::tiny();
+        let ck = init_params(&cfg, 1);
+        for spec in param_specs(&cfg) {
+            let t = ck.get(&spec.name).expect(&spec.name);
+            assert_eq!(t.shape(), &spec.shape[..], "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn layernorm_gains_are_ones_biases_zero() {
+        let ck = init_params(&ModelConfig::tiny(), 2);
+        assert!(ck.get("layers.0.ln1.g").unwrap().data().iter().all(|&v| v == 1.0));
+        assert!(ck.get("layers.0.ln1.b").unwrap().data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn weights_have_roughly_requested_std() {
+        let ck = init_params(&ModelConfig::small(), 3);
+        let w = ck.get("layers.0.attn.wq").unwrap();
+        let n = w.len() as f64;
+        let mean: f64 = w.data().iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = w.data().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!((var.sqrt() - 0.02).abs() < 0.002, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = init_params(&ModelConfig::tiny(), 7);
+        let b = init_params(&ModelConfig::tiny(), 7);
+        assert_eq!(a.to_bytes(), b.to_bytes());
+    }
+}

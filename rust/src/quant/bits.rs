@@ -1,0 +1,149 @@
+//! Average-bits accounting (paper §IV-C, Table II).
+//!
+//! Both methods are charged fp16 (16-bit) storage for real-valued payloads,
+//! matching the paper's accounting:
+//!
+//! - **SWSC** on an `m × n` matrix with `k` clusters and rank `r`:
+//!   centroids `m·k·16` + labels `n·⌈log2 k⌉` + factors `(m + n)·r·16` bits.
+//!   For square `m = n` this is `16(k + 2r)/m + ⌈log2 k⌉/m` — the paper
+//!   drops the label term and reports `16(k + 2r)/m`, which is what
+//!   [`swsc_avg_bits_paper`] returns (Table II exactly).
+//! - **RTN** at `b` bits per weight with per-channel fp16 scale+zero:
+//!   `b + 32/m` bits per weight.
+
+/// Detailed storage breakdown for one compressed matrix, in bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitsBreakdown {
+    pub centroid_bits: u64,
+    pub label_bits: u64,
+    pub factor_bits: u64,
+    pub total_bits: u64,
+    /// Bits per original weight element.
+    pub avg_bits: f64,
+}
+
+/// Exact SWSC storage accounting for an `m × n` matrix.
+pub fn swsc_avg_bits(m: usize, n: usize, k: usize, r: usize) -> BitsBreakdown {
+    let payload = 16u64; // fp16 accounting
+    let centroid_bits = (m * k) as u64 * payload;
+    let label_bits = n as u64 * ceil_log2(k) as u64;
+    let factor_bits = ((m + n) * r) as u64 * payload;
+    let total_bits = centroid_bits + label_bits + factor_bits;
+    let avg_bits = total_bits as f64 / (m as f64 * n as f64);
+    BitsBreakdown { centroid_bits, label_bits, factor_bits, total_bits, avg_bits }
+}
+
+/// The paper's simplified formula for square matrices: `16(k + 2r)/m`.
+/// Reproduces Table II: for m = 4096, k = 128 → 0.5, r = 64 → 0.5, etc.
+pub fn swsc_avg_bits_paper(m: usize, k: usize, r: usize) -> f64 {
+    16.0 * (k as f64 + 2.0 * r as f64) / m as f64
+}
+
+/// RTN storage: `b` bits/weight + per-channel fp16 scale and zero-point.
+pub fn rtn_avg_bits(m: usize, _n: usize, b: u32) -> f64 {
+    b as f64 + 32.0 / m as f64
+}
+
+/// Choose `(k, r)` for a target average-bits budget on an `m × n` matrix,
+/// splitting the budget between clusters and rank according to
+/// `rank_share ∈ [0, 1]` (the paper's Table II uses an even split:
+/// 1 bit of clusters + 1 bit of rank = 2 avg bits).
+pub fn swsc_params_for_bits(m: usize, target_bits: f64, rank_share: f64) -> (usize, usize) {
+    let share = rank_share.clamp(0.0, 1.0);
+    let k_bits = target_bits * (1.0 - share);
+    let r_bits = target_bits * share;
+    // centroids: 16k/m bits ⇒ k = k_bits·m/16; factors: 32r/m ⇒ r = r_bits·m/32.
+    let k = ((k_bits * m as f64) / 16.0).round().max(1.0) as usize;
+    let r = ((r_bits * m as f64) / 32.0).round().max(0.0) as usize;
+    (k.max(1), r)
+}
+
+fn ceil_log2(k: usize) -> u32 {
+    if k <= 1 {
+        0
+    } else {
+        (usize::BITS - (k - 1).leading_zeros()).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table II of the paper, verbatim: m = 4096.
+    #[test]
+    fn paper_table2_clusters() {
+        assert_eq!(swsc_avg_bits_paper(4096, 128, 0), 0.5);
+        assert_eq!(swsc_avg_bits_paper(4096, 256, 0), 1.0);
+        assert_eq!(swsc_avg_bits_paper(4096, 512, 0), 2.0);
+    }
+
+    #[test]
+    fn paper_table2_rank() {
+        assert_eq!(swsc_avg_bits_paper(4096, 0, 64), 0.5);
+        assert_eq!(swsc_avg_bits_paper(4096, 0, 128), 1.0);
+        assert_eq!(swsc_avg_bits_paper(4096, 0, 256), 2.0);
+    }
+
+    #[test]
+    fn exact_vs_paper_label_overhead_is_small() {
+        let exact = swsc_avg_bits(4096, 4096, 256, 128);
+        let paper = swsc_avg_bits_paper(4096, 256, 128);
+        let overhead = exact.avg_bits - paper;
+        assert!(overhead > 0.0 && overhead < 0.01, "label overhead {overhead}");
+    }
+
+    #[test]
+    fn params_for_bits_round_trip() {
+        for &m in &[256usize, 512, 4096] {
+            for &target in &[1.0f64, 2.0, 3.0] {
+                let (k, r) = swsc_params_for_bits(m, target, 0.5);
+                let got = swsc_avg_bits_paper(m, k, r);
+                assert!(
+                    (got - target).abs() < 0.25,
+                    "m={m} target={target}: k={k} r={r} -> {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_share_extremes() {
+        let (k, r) = swsc_params_for_bits(4096, 2.0, 0.0);
+        assert_eq!((k, r), (512, 0));
+        let (k, r) = swsc_params_for_bits(4096, 2.0, 1.0);
+        assert_eq!(k, 1); // clamped to at least one cluster
+        assert_eq!(r, 256);
+    }
+
+    #[test]
+    fn rtn_bits_accounting() {
+        assert!((rtn_avg_bits(4096, 4096, 3) - 3.0078125).abs() < 1e-9);
+        assert!((rtn_avg_bits(256, 256, 2) - 2.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ceil_log2_edges() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(256), 8);
+        assert_eq!(ceil_log2(257), 9);
+    }
+
+    #[test]
+    fn monotone_in_k_and_r() {
+        let mut last = 0.0;
+        for k in [8, 16, 32, 64] {
+            let b = swsc_avg_bits(256, 256, k, 4).avg_bits;
+            assert!(b > last);
+            last = b;
+        }
+        let mut last = 0.0;
+        for r in [1, 2, 4, 8] {
+            let b = swsc_avg_bits(256, 256, 8, r).avg_bits;
+            assert!(b > last);
+            last = b;
+        }
+    }
+}

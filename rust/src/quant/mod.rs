@@ -1,0 +1,9 @@
+//! Quantization: the RTN baseline the paper compares against, plus the
+//! average-bits accounting used by Table II and by the Table-I budget
+//! matching (SWSC and RTN are compared *at equal storage*).
+
+pub mod bits;
+pub mod rtn;
+
+pub use bits::{rtn_avg_bits, swsc_avg_bits, swsc_avg_bits_paper, BitsBreakdown};
+pub use rtn::{rtn_quantize, RtnConfig, RtnMode};

@@ -1,0 +1,163 @@
+//! Round-to-nearest (RTN) quantization — the paper's baseline.
+//!
+//! Per-channel (per-column) affine quantization to `bits` levels: each
+//! channel stores its own scale/zero-point (fp16-equivalent in the bit
+//! accounting) and every weight is rounded to the nearest level. This is
+//! the standard weight-only PTQ baseline; at 2 bits it collapses exactly as
+//! the paper's Table I shows.
+
+use crate::tensor::Tensor;
+
+/// Symmetric (zero-point fixed at mid-range of signed levels) vs asymmetric
+/// (min/max affine) RTN.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RtnMode {
+    Symmetric,
+    Asymmetric,
+}
+
+/// RTN configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RtnConfig {
+    /// Bit width (levels = 2^bits).
+    pub bits: u32,
+    pub mode: RtnMode,
+}
+
+impl Default for RtnConfig {
+    fn default() -> Self {
+        RtnConfig { bits: 3, mode: RtnMode::Asymmetric }
+    }
+}
+
+/// Fake-quantize `w` per channel (column): quantize then dequantize, so the
+/// result is directly usable as a weight matrix. Returns the dequantized
+/// matrix — storage accounting lives in [`super::bits`].
+pub fn rtn_quantize(w: &Tensor, cfg: &RtnConfig) -> Tensor {
+    let (m, n) = (w.rows(), w.cols());
+    let levels = (1u32 << cfg.bits) as f32;
+    let mut out = Tensor::zeros(&[m, n]);
+
+    for j in 0..n {
+        let col = w.col(j);
+        let (deq_col, _scale, _zero) = match cfg.mode {
+            RtnMode::Asymmetric => quantize_channel_asym(&col, levels),
+            RtnMode::Symmetric => quantize_channel_sym(&col, levels),
+        };
+        out.set_col(j, &deq_col);
+    }
+    out
+}
+
+fn quantize_channel_asym(col: &[f32], levels: f32) -> (Vec<f32>, f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in col {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        return (col.to_vec(), 1.0, 0.0);
+    }
+    let scale = (hi - lo) / (levels - 1.0);
+    let zero = (-lo / scale).round();
+    let deq = col
+        .iter()
+        .map(|&v| {
+            let q = (v / scale + zero).round().clamp(0.0, levels - 1.0);
+            (q - zero) * scale
+        })
+        .collect();
+    (deq, scale, zero)
+}
+
+fn quantize_channel_sym(col: &[f32], levels: f32) -> (Vec<f32>, f32, f32) {
+    let amax = col.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        return (col.to_vec(), 1.0, 0.0);
+    }
+    // Signed levels: [-levels/2, levels/2 - 1].
+    let qmax = levels / 2.0 - 1.0;
+    let scale = amax / qmax;
+    let deq = col
+        .iter()
+        .map(|&v| {
+            let q = (v / scale).round().clamp(-(levels / 2.0), qmax);
+            q * scale
+        })
+        .collect();
+    (deq, scale, 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn high_bits_is_nearly_lossless() {
+        let mut rng = Rng::new(81);
+        let w = Tensor::randn(&[32, 32], &mut rng);
+        let q = rtn_quantize(&w, &RtnConfig { bits: 12, mode: RtnMode::Asymmetric });
+        assert!(w.mse(&q) < 1e-6, "mse {}", w.mse(&q));
+    }
+
+    #[test]
+    fn error_shrinks_with_bits() {
+        let mut rng = Rng::new(82);
+        let w = Tensor::randn(&[64, 64], &mut rng);
+        let mut last = f64::INFINITY;
+        for bits in [2u32, 3, 4, 6, 8] {
+            let q = rtn_quantize(&w, &RtnConfig { bits, mode: RtnMode::Asymmetric });
+            let mse = w.mse(&q);
+            assert!(mse < last, "bits={bits}: {mse} !< {last}");
+            last = mse;
+        }
+    }
+
+    #[test]
+    fn quantized_values_on_grid() {
+        let mut rng = Rng::new(83);
+        let w = Tensor::randn(&[16, 4], &mut rng);
+        let bits = 3u32;
+        let q = rtn_quantize(&w, &RtnConfig { bits, mode: RtnMode::Asymmetric });
+        // Per channel, at most 2^bits distinct values.
+        for j in 0..4 {
+            let mut vals: Vec<f32> = q.col(j);
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup_by(|a, b| (*a - *b).abs() < 1e-6);
+            assert!(vals.len() <= 1 << bits, "channel {j}: {} levels", vals.len());
+        }
+    }
+
+    #[test]
+    fn constant_channel_is_exact() {
+        let w = Tensor::full(&[8, 2], 3.25);
+        let q = rtn_quantize(&w, &RtnConfig { bits: 2, mode: RtnMode::Asymmetric });
+        prop::assert_close(q.data(), w.data(), 1e-9, 0.0).unwrap();
+    }
+
+    #[test]
+    fn outliers_wreck_low_bit_rtn() {
+        // The paper's motivation: a single outlier stretches the grid so the
+        // bulk of the channel collapses to few levels.
+        let mut rng = Rng::new(84);
+        let mut w = Tensor::randn(&[128, 1], &mut rng);
+        let base = rtn_quantize(&w, &RtnConfig { bits: 2, mode: RtnMode::Asymmetric });
+        let base_mse = w.mse(&base);
+        w.data_mut()[0] = 100.0; // inject outlier
+        let hit = rtn_quantize(&w, &RtnConfig { bits: 2, mode: RtnMode::Asymmetric });
+        let hit_mse = w.mse(&hit);
+        // One 100σ outlier in a 128-long channel stretches the 4-level grid
+        // so the bulk collapses: several-fold MSE inflation.
+        assert!(hit_mse > base_mse * 3.0, "outlier should blow up RTN: {base_mse} -> {hit_mse}");
+    }
+
+    #[test]
+    fn symmetric_mode_zero_maps_to_zero() {
+        let w = Tensor::from_vec(&[4, 1], vec![-1.0, 0.0, 0.5, 1.0]);
+        let q = rtn_quantize(&w, &RtnConfig { bits: 4, mode: RtnMode::Symmetric });
+        assert_eq!(q.data()[1], 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Paper-style table rendering (Table I / Table II rows) shared by the CLI
+//! and the bench targets, so every reproduction prints identically.
+
+pub mod tables;
+
+pub use tables::{render_table1, render_table2, Table1Row};

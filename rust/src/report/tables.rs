@@ -1,0 +1,123 @@
+//! Renderers that print results in the exact shape of the paper's tables.
+
+use crate::quant::bits::{swsc_avg_bits_paper, swsc_params_for_bits};
+
+/// One row of the Table-I reproduction.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub projector: String,
+    pub method: String,
+    pub avg_bits: f64,
+    pub perplexity: f64,
+}
+
+/// Render the Table-I reproduction (paper §IV-B):
+/// "THE PERPLEXITY RESULTS OF THE `<model>` COMPRESSED BY SWSC AND QUANTIZED
+/// BY RTN".
+pub fn render_table1(title: &str, fp32_ppl: f64, rows: &[Table1Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("TABLE I — {title}\n"));
+    out.push_str(&format!("(uncompressed fp32 baseline perplexity: {:.3})\n", fp32_ppl));
+    out.push_str("| Projector | Method | Avg. Bits | Perplexity |\n");
+    out.push_str("|-----------|--------|-----------|------------|\n");
+    let mut last_proj = String::new();
+    let mut last_bits = f64::NAN;
+    for r in rows {
+        let proj = if r.projector == last_proj { String::new() } else { r.projector.clone() };
+        let bits = if r.projector == last_proj && (r.avg_bits - last_bits).abs() < 1e-9 {
+            String::new()
+        } else {
+            fmt_bits(r.avg_bits)
+        };
+        let ppl = if r.perplexity.is_nan() {
+            "nan".to_string()
+        } else if r.perplexity >= 1000.0 {
+            format!("{:.0}", r.perplexity)
+        } else {
+            format!("{:.3}", r.perplexity)
+        };
+        out.push_str(&format!("| {:<9} | {:<6} | {:<9} | {:<10} |\n", proj, r.method, bits, ppl));
+        last_proj = r.projector.clone();
+        last_bits = r.avg_bits;
+    }
+    out
+}
+
+/// Render the Table-II reproduction (paper §IV-C): average bits vs number
+/// of clusters and vs retained rank, for channel dimension `m`.
+pub fn render_table2(m: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("TABLE II — AVERAGE BITS vs CLUSTERS / RANK (m = {m})\n"));
+    out.push_str("| Cluster | Avg Bits. | K (rank) | Avg Bits. |\n");
+    out.push_str("|---------|-----------|----------|-----------|\n");
+    // The paper's grid scaled to m: clusters at m/32, m/16, m/8;
+    // ranks at m/64, m/32, m/16 — the same 0.5/1/2-bit points.
+    let clusters = [m / 32, m / 16, m / 8];
+    let ranks = [m / 64, m / 32, m / 16];
+    for i in 0..3 {
+        let cb = swsc_avg_bits_paper(m, clusters[i], 0);
+        let rb = swsc_avg_bits_paper(m, 0, ranks[i]);
+        out.push_str(&format!(
+            "| {:<7} | {:<9} | {:<8} | {:<9} |\n",
+            clusters[i], fmt_bits(cb), ranks[i], fmt_bits(rb)
+        ));
+    }
+    out
+}
+
+/// Format a bits value compactly: integral values without decimals.
+fn fmt_bits(b: f64) -> String {
+    if (b - b.round()).abs() < 1e-9 {
+        format!("{}", b.round() as i64)
+    } else {
+        format!("{b:.2}").trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+/// Helper: the (k, r) grid used by the Table-I runs at a target budget.
+pub fn table1_params(m: usize, target_bits: f64) -> (usize, usize) {
+    swsc_params_for_bits(m, target_bits, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper_at_4096() {
+        let t = render_table2(4096);
+        assert!(t.contains("| 128     | 0.5"), "{t}");
+        assert!(t.contains("| 256     | 1"), "{t}");
+        assert!(t.contains("| 512     | 2"), "{t}");
+        assert!(t.contains("| 64       | 0.5"), "{t}");
+        assert!(t.contains("| 128      | 1"), "{t}");
+        assert!(t.contains("| 256      | 2"), "{t}");
+    }
+
+    #[test]
+    fn table1_renders_nan_and_grouping() {
+        let rows = vec![
+            Table1Row { projector: "Q".into(), method: "RTN".into(), avg_bits: 3.0, perplexity: 20.55 },
+            Table1Row { projector: "Q".into(), method: "SWSC".into(), avg_bits: 3.0, perplexity: 6.547 },
+            Table1Row { projector: "K".into(), method: "RTN".into(), avg_bits: 2.0, perplexity: f64::NAN },
+        ];
+        let t = render_table1("test", 5.5, &rows);
+        assert!(t.contains("20.550"));
+        assert!(t.contains("nan"));
+        // Second Q row elides the projector cell.
+        assert!(t.contains("|           | SWSC"));
+    }
+
+    #[test]
+    fn big_ppl_rendered_without_decimals() {
+        let rows = vec![Table1Row {
+            projector: "Q".into(),
+            method: "RTN".into(),
+            avg_bits: 2.0,
+            perplexity: 4958.396,
+        }];
+        let t = render_table1("t", 5.0, &rows);
+        assert!(t.contains("4958"), "{t}");
+        assert!(!t.contains("4958.396"));
+    }
+}

@@ -1,0 +1,107 @@
+//! PJRT client wrapper + executable cache.
+
+use super::manifest::ArtifactManifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A compiled executable plus its manifest metadata.
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub name: String,
+    pub n_outputs: usize,
+}
+
+impl LoadedExec {
+    /// Execute with literal inputs; returns the decomposed output tuple
+    /// (all artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.run_refs(&inputs.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with borrowed literal inputs — the zero-copy hot path.
+    ///
+    /// Inputs are staged to device buffers *owned by this function* and
+    /// executed via `execute_b`. This deliberately avoids the crate's
+    /// literal-taking `execute`, whose C++ shim leaks every input device
+    /// buffer (`buffer.release()` with no matching free — ~55 MB/step on
+    /// the `small` train loop, an OOM after ~900 steps; §Perf #3 in
+    /// EXPERIMENTS.md). With `execute_b` the rust `PjRtBuffer` wrappers
+    /// free the inputs on drop.
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut staged = Vec::with_capacity(inputs.len());
+        for lit in inputs {
+            staged.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .with_context(|| format!("stage input for {}", self.name))?,
+            );
+        }
+        let bufs = self.exe.execute_b::<xla::PjRtBuffer>(&staged).with_context(|| format!("execute {}", self.name))?;
+        drop(staged); // inputs freed here — not leaked as in execute()
+        let lit = bufs[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == self.n_outputs,
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.n_outputs,
+            outs.len()
+        );
+        Ok(outs)
+    }
+}
+
+/// The engine: one PJRT CPU client + a lazily-populated executable cache.
+/// Cloneable and thread-safe; compilation happens once per executable name.
+#[derive(Clone)]
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Arc<ArtifactManifest>,
+    cache: Arc<Mutex<HashMap<String, Arc<LoadedExec>>>>,
+}
+
+impl Engine {
+    /// Create the engine over a parsed manifest.
+    pub fn new(manifest: ArtifactManifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest: Arc::new(manifest), cache: Arc::new(Mutex::new(HashMap::new())) })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) the executable `name` from the manifest.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedExec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.executable(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        let loaded = Arc::new(LoadedExec {
+            exe,
+            client: self.client.clone(),
+            name: entry.name,
+            n_outputs: entry.n_outputs,
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Number of executables currently compiled.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

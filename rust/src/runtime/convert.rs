@@ -1,0 +1,70 @@
+//! Host tensor ⇄ XLA literal conversion.
+
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// f32 host tensor → XLA literal with the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Token-id batch → i32 literal of shape `[batch, seq]`.
+pub fn tokens_to_literal(ids: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(ids.len() == batch * seq, "token count {} != {batch}x{seq}", ids.len());
+    Ok(xla::Literal::vec1(ids).reshape(&[batch as i64, seq as i64])?)
+}
+
+/// XLA literal → f32 host tensor (converts dtype if needed).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let lit_f32 = if shape.ty() == xla::ElementType::F32 {
+        None
+    } else {
+        Some(lit.convert(xla::PrimitiveType::F32)?)
+    };
+    let data = match &lit_f32 {
+        Some(l) => l.to_vec::<f32>()?,
+        None => lit.to_vec::<f32>()?,
+    };
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Extract a scalar f32 from a literal (any convertible dtype).
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let t = literal_to_tensor(lit)?;
+    anyhow::ensure!(t.len() == 1, "expected scalar, got shape {:?}", t.shape());
+    Ok(t.data()[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tensor_literal_round_trip() {
+        let mut rng = Rng::new(141);
+        let t = Tensor::randn(&[3, 5], &mut rng);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tokens_shape_checked() {
+        assert!(tokens_to_literal(&[1, 2, 3], 2, 2).is_err());
+        let lit = tokens_to_literal(&[1, 2, 3, 4], 2, 2).unwrap();
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let lit = xla::Literal::scalar(2.5f32);
+        assert_eq!(literal_scalar_f32(&lit).unwrap(), 2.5);
+        let t = Tensor::zeros(&[2]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert!(literal_scalar_f32(&lit).is_err());
+    }
+}

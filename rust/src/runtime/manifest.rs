@@ -1,0 +1,208 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt`, a line-oriented
+//! format (the vendored crate set has no serde/JSON, and the manifest is
+//! simple enough that a bespoke text format is clearer):
+//!
+//! ```text
+//! # comments and blank lines ignored
+//! preset small
+//! fingerprint v512_d256_l4_h4_f1024_s128_b8
+//! param embed.tok 512,256
+//! ...                              # every model param, canonical order
+//! executable train_step small_train_step.hlo.txt 163
+//! executable fwd_eval small_fwd_eval.hlo.txt 2
+//! executable kmeans_assign_k16 small_kmeans_assign_k16.hlo.txt 2
+//! ```
+//!
+//! The `param` lines let rust assert its canonical parameter order
+//! (`model::params::param_specs`) matches what python lowered — a build-time
+//! contract check, not a runtime convention.
+
+use crate::model::{param_specs, ModelConfig};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One executable artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutableEntry {
+    pub name: String,
+    pub file: String,
+    pub n_outputs: usize,
+}
+
+/// Parsed manifest for one preset.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub fingerprint: String,
+    /// (name, shape) in the exact argument order of the executables.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub executables: BTreeMap<String, ExecutableEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load and parse `<dir>/manifest.txt`, keeping only `preset` entries.
+    pub fn load(dir: &Path, preset: &str) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir, preset)
+    }
+
+    /// Parse manifest text. Lines are grouped by `preset` headers; `param`,
+    /// `fingerprint` and `executable` lines apply to the current preset.
+    pub fn parse(text: &str, dir: &Path, want: &str) -> Result<ArtifactManifest> {
+        let mut current = String::new();
+        let mut fingerprint = String::new();
+        let mut params = Vec::new();
+        let mut executables = BTreeMap::new();
+        let mut found = false;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let kind = it.next().unwrap();
+            let err = |msg: &str| anyhow::anyhow!("manifest line {}: {msg}: `{raw}`", lineno + 1);
+            match kind {
+                "preset" => {
+                    current = it.next().ok_or_else(|| err("missing preset name"))?.to_string();
+                    if current == want {
+                        found = true;
+                    }
+                }
+                "fingerprint" if current == want => {
+                    fingerprint = it.next().ok_or_else(|| err("missing fingerprint"))?.to_string();
+                }
+                "param" if current == want => {
+                    let name = it.next().ok_or_else(|| err("missing param name"))?.to_string();
+                    let dims = it.next().ok_or_else(|| err("missing dims"))?;
+                    let shape: Vec<usize> = dims
+                        .split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.parse().map_err(|_| err("bad dim")))
+                        .collect::<Result<_>>()?;
+                    params.push((name, shape));
+                }
+                "executable" if current == want => {
+                    let name = it.next().ok_or_else(|| err("missing exe name"))?.to_string();
+                    let file = it.next().ok_or_else(|| err("missing exe file"))?.to_string();
+                    let n_outputs: usize =
+                        it.next().ok_or_else(|| err("missing n_outputs"))?.parse().map_err(|_| err("bad n_outputs"))?;
+                    executables.insert(name.clone(), ExecutableEntry { name, file, n_outputs });
+                }
+                _ => {} // other presets' lines, unknown keys: ignore
+            }
+        }
+
+        if !found {
+            bail!("preset `{want}` not present in manifest (run `make artifacts`)");
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            preset: want.to_string(),
+            fingerprint,
+            params,
+            executables,
+        })
+    }
+
+    /// Assert the manifest's parameter list matches rust's canonical order
+    /// for `cfg` — the build-time contract between layers.
+    pub fn verify_config(&self, cfg: &ModelConfig) -> Result<()> {
+        if self.fingerprint != cfg.fingerprint() {
+            bail!(
+                "artifact fingerprint `{}` does not match model config `{}` — re-run `make artifacts`",
+                self.fingerprint,
+                cfg.fingerprint()
+            );
+        }
+        let specs = param_specs(cfg);
+        if specs.len() != self.params.len() {
+            bail!("param count mismatch: manifest {} vs rust {}", self.params.len(), specs.len());
+        }
+        for (spec, (name, shape)) in specs.iter().zip(&self.params) {
+            if &spec.name != name || &spec.shape != shape {
+                bail!(
+                    "param order mismatch: rust `{}` {:?} vs manifest `{}` {:?}",
+                    spec.name,
+                    spec.shape,
+                    name,
+                    shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableEntry> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("executable `{name}` not in manifest (have: {:?})", self.executables.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.executable(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# test manifest
+preset tiny
+fingerprint v256_d64_l2_h2_f128_s32_b4
+param embed.tok 256,64
+param embed.pos 32,64
+executable fwd_eval tiny_fwd_eval.hlo.txt 2
+
+preset small
+fingerprint v512_d256_l4_h4_f1024_s128_b8
+param embed.tok 512,256
+executable train_step small_train_step.hlo.txt 163
+";
+
+    #[test]
+    fn parses_selected_preset_only() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a"), "tiny").unwrap();
+        assert_eq!(m.fingerprint, "v256_d64_l2_h2_f128_s32_b4");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0], ("embed.tok".to_string(), vec![256, 64]));
+        assert!(m.executables.contains_key("fwd_eval"));
+        assert!(!m.executables.contains_key("train_step"));
+    }
+
+    #[test]
+    fn missing_preset_errors() {
+        assert!(ArtifactManifest::parse(SAMPLE, Path::new("/tmp"), "big").is_err());
+    }
+
+    #[test]
+    fn hlo_path_joins_dir() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/art"), "small").unwrap();
+        assert_eq!(m.hlo_path("train_step").unwrap(), PathBuf::from("/art/small_train_step.hlo.txt"));
+        assert!(m.hlo_path("nope").is_err());
+    }
+
+    #[test]
+    fn verify_config_checks_fingerprint() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp"), "tiny").unwrap();
+        let cfg = ModelConfig::small();
+        assert!(m.verify_config(&cfg).is_err(), "wrong config must be rejected");
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        let bad = "preset x\nfingerprint f\nparam name\n";
+        assert!(ArtifactManifest::parse(bad, Path::new("/tmp"), "x").is_err());
+        let bad2 = "preset x\nexecutable onlyname\n";
+        assert!(ArtifactManifest::parse(bad2, Path::new("/tmp"), "x").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The interchange format is HLO **text**, not serialized protos —
+//! xla_extension 0.5.1 rejects jax ≥ 0.5 protos with 64-bit instruction
+//! ids, while the text parser reassigns ids (see DESIGN.md §9 and
+//! /opt/xla-example/README.md). Every executable is lowered with
+//! `return_tuple=True`, so outputs come back as one tuple literal that we
+//! decompose.
+
+mod client;
+pub mod convert;
+mod manifest;
+
+pub use client::{Engine, LoadedExec};
+pub use convert::{literal_to_tensor, tensor_to_literal, tokens_to_literal};
+pub use manifest::{ArtifactManifest, ExecutableEntry};

@@ -1,0 +1,181 @@
+//! Host-side dense tensors.
+//!
+//! A deliberately small, dependency-free row-major `f32` tensor with the
+//! operations the compression pipeline needs: matmul (blocked), transpose,
+//! column/row views, norms, elementwise combinators. Device tensors live in
+//! `runtime::` as PJRT buffers; this type is the host staging format.
+
+mod ops;
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from explicit shape + data. Panics if sizes disagree.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} wants {n} elements, got {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// Standard-normal random tensor.
+    pub fn randn(shape: &[usize], rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Uniform random tensor in `[lo, hi)`.
+    pub fn rand(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.uniform_in(lo, hi)).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "rows() on non-matrix");
+        self.shape[0]
+    }
+
+    /// Number of columns for a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "cols() on non-matrix");
+        self.shape[1]
+    }
+
+    /// Element accessor for 2-D tensors.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    /// Borrow row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Copy column `j` of a 2-D tensor into a fresh vector.
+    /// Columns are the paper's "channels".
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        let (r, c) = (self.rows(), self.cols());
+        (0..r).map(|i| self.data[i * c + j]).collect()
+    }
+
+    /// Overwrite column `j` from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        let (r, c) = (self.rows(), self.cols());
+        assert_eq!(v.len(), r);
+        for i in 0..r {
+            self.data[i * c + j] = v[i];
+        }
+    }
+
+    /// Reshape without copying. Product of dims must match.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn set_col_roundtrip() {
+        let mut t = Tensor::zeros(&[3, 2]);
+        t.set_col(1, &[7., 8., 9.]);
+        assert_eq!(t.col(1), vec![7., 8., 9.]);
+        assert_eq!(t.col(0), vec![0., 0., 0.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_size_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        assert_eq!(Tensor::randn(&[4, 4], &mut r1), Tensor::randn(&[4, 4], &mut r2));
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.at(2, 1), 6.0);
+    }
+}

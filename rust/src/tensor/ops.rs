@@ -1,0 +1,234 @@
+//! Tensor operations: blocked matmul, transpose, norms, elementwise.
+//!
+//! The matmul here is the L3 CPU hot path for compression-time work (SVD
+//! subspace iteration, k-means distance blocks). It is a cache-blocked
+//! i-k-j kernel — not BLAS, but within a small factor of it at the sizes
+//! the pipeline sees (≤ a few thousand per side). The model's own matmuls
+//! run inside XLA, not here.
+
+use super::Tensor;
+
+/// Cache block edge for the matmul microkernel (f32: 64·64·4 B = 16 KiB per
+/// operand block, comfortably inside L1/L2).
+const BLOCK: usize = 64;
+
+impl Tensor {
+    /// Matrix product `self · other` for 2-D tensors.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        let a = self.data();
+        let b = other.data();
+        for ib in (0..m).step_by(BLOCK) {
+            let imax = (ib + BLOCK).min(m);
+            for kb in (0..k).step_by(BLOCK) {
+                let kmax = (kb + BLOCK).min(k);
+                for jb in (0..n).step_by(BLOCK) {
+                    let jmax = (jb + BLOCK).min(n);
+                    for i in ib..imax {
+                        let arow = &a[i * k..(i + 1) * k];
+                        let orow = &mut out[i * n..(i + 1) * n];
+                        for kk in kb..kmax {
+                            let aik = arow[kk];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let brow = &b[kk * n..(kk + 1) * n];
+                            // Innermost j loop: contiguous, auto-vectorizes.
+                            for j in jb..jmax {
+                                orow[j] += aik * brow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// `selfᵀ · other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Tensor) -> Tensor {
+        // (k×m)ᵀ·(k×n): result m×n. Transpose-copy then blocked matmul is
+        // faster than a strided kernel at our sizes.
+        self.transpose().matmul(other)
+    }
+
+    /// Transposed copy of a 2-D tensor.
+    pub fn transpose(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; r * c];
+        // Blocked transpose for cache friendliness.
+        for ib in (0..r).step_by(BLOCK) {
+            for jb in (0..c).step_by(BLOCK) {
+                for i in ib..(ib + BLOCK).min(r) {
+                    for j in jb..(jb + BLOCK).min(c) {
+                        out[j * r + i] = self.data()[i * c + j];
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[c, r], out)
+    }
+
+    /// Elementwise `self - other`.
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data().iter().zip(other.data()).map(|(a, b)| a - b).collect();
+        Tensor::from_vec(self.shape(), data)
+    }
+
+    /// Elementwise `self + other`.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data().iter().zip(other.data()).map(|(a, b)| a + b).collect();
+        Tensor::from_vec(self.shape(), data)
+    }
+
+    /// Scale by a constant.
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor::from_vec(self.shape(), self.data().iter().map(|a| a * s).collect())
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean squared error against another tensor of the same shape.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        let n = self.len().max(1) as f64;
+        self.data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n
+    }
+
+    /// Largest absolute element.
+    pub fn abs_max(&self) -> f32 {
+        self.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Dot product of two equal-length slices (helper for kmeans/svd).
+    pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        // Two partial sums help the autovectorizer; f64 accumulate for
+        // stability on long channels.
+        let mut s0 = 0.0f64;
+        let mut s1 = 0.0f64;
+        let mut i = 0;
+        while i + 1 < a.len() {
+            s0 += a[i] as f64 * b[i] as f64;
+            s1 += a[i + 1] as f64 * b[i + 1] as f64;
+            i += 2;
+        }
+        if i < a.len() {
+            s0 += a[i] as f64 * b[i] as f64;
+        }
+        s0 + s1
+    }
+
+    /// Squared L2 distance between two slices.
+    pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut s = 0.0f64;
+        for (&x, &y) in a.iter().zip(b) {
+            let d = (x - y) as f64;
+            s += d * d;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(a.matmul(&b).data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random_shapes() {
+        prop::check(
+            "blocked matmul == naive",
+            11,
+            16,
+            |r| {
+                let (m, k, n) = (1 + r.below(90), 1 + r.below(90), 1 + r.below(90));
+                let a = Tensor::randn(&[m, k], r);
+                let b = Tensor::randn(&[k, n], r);
+                (a, b)
+            },
+            |(a, b)| prop::assert_close(a.matmul(b).data(), naive_matmul(a, b).data(), 1e-3, 1e-3),
+        );
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(12);
+        let t = Tensor::randn(&[17, 31], &mut r);
+        assert_eq!(t.transpose().transpose(), t);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        let mut r = Rng::new(13);
+        let a = Tensor::randn(&[20, 15], &mut r);
+        let b = Tensor::randn(&[20, 10], &mut r);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        prop::assert_close(got.data(), want.data(), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn mse_and_norms() {
+        let a = Tensor::from_vec(&[1, 2], vec![3., 4.]);
+        let b = Tensor::zeros(&[1, 2]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-9);
+        assert!((a.mse(&b) - 12.5).abs() < 1e-9);
+        assert_eq!(a.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = Tensor::from_vec(&[2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[2], vec![3., 5.]);
+        assert_eq!(a.add(&b).data(), &[4., 7.]);
+        assert_eq!(b.sub(&a).data(), &[2., 3.]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4.]);
+    }
+
+    #[test]
+    fn dot_dist2() {
+        assert_eq!(Tensor::dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+        assert_eq!(Tensor::dist2(&[0., 0.], &[3., 4.]), 25.0);
+    }
+}

@@ -1,0 +1,334 @@
+//! Deterministic synthetic "tiny-wiki" corpus.
+//!
+//! Stands in for WikiText-2 (unavailable offline — DESIGN.md §2). The
+//! generator builds a pseudo-English lexicon, assigns Zipf-distributed
+//! unigram frequencies, and samples sentences from an order-2 word-level
+//! Markov chain whose transitions are themselves deterministically derived
+//! from the seed. Articles get headings and paragraph breaks so the token
+//! stream has WikiText-like structure (headings, punctuation, topic drift).
+//!
+//! What matters for the reproduction is not Englishness but that the
+//! stream is (a) learnable — a small LM reaches low perplexity, leaving
+//! headroom for compression damage to show, (b) fixed — every method is
+//! evaluated on byte-identical text, and (c) **attention-dependent**: each
+//! article carries a hidden *topic* that mixes topic-specific vocabulary
+//! into the Markov stream. A bigram model (embedding→MLP) cannot predict
+//! topic words; only attention over earlier context can — so the Q/K
+//! projectors the paper compresses carry real, measurable function, and
+//! damaging them moves perplexity (the Table-I signal).
+
+use crate::util::rng::Rng;
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    /// Number of distinct words in the lexicon.
+    pub lexicon: usize,
+    /// Number of articles.
+    pub articles: usize,
+    /// Sentences per article (mean; actual is uniform ±50%).
+    pub sentences_per_article: usize,
+    /// Zipf exponent for unigram frequencies.
+    pub zipf_s: f64,
+    /// Number of hidden article topics.
+    pub topics: usize,
+    /// Words per topic vocabulary.
+    pub topic_words: usize,
+    /// Probability a word is drawn from the article's topic vocabulary
+    /// instead of the Markov chain — the attention-only predictable mass.
+    pub topic_prob: f64,
+    /// Probability a sentence verbatim-repeats an earlier sentence of the
+    /// same article. Predicting a repeat is an induction/copy task that
+    /// only precise Q/K attention can solve — the strongest lever that
+    /// makes the compressed projectors' fidelity measurable.
+    pub repeat_prob: f64,
+    /// Seed — the corpus is a pure function of this config.
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            lexicon: 800,
+            articles: 120,
+            sentences_per_article: 30,
+            zipf_s: 1.1,
+            topics: 16,
+            topic_words: 40,
+            topic_prob: 0.2,
+            repeat_prob: 0.5,
+            seed: 42,
+        }
+    }
+}
+
+/// A generated corpus with train/eval splits.
+#[derive(Debug, Clone)]
+pub struct SyntheticCorpus {
+    pub train_text: String,
+    pub eval_text: String,
+}
+
+impl SyntheticCorpus {
+    /// Generate the corpus. ~90% of articles go to train, 10% to eval.
+    pub fn generate(cfg: &CorpusConfig) -> SyntheticCorpus {
+        let mut rng = Rng::new(cfg.seed);
+        let words = build_lexicon(cfg.lexicon, &mut rng);
+
+        // Zipf weights over the lexicon.
+        let zipf: Vec<f64> = (0..words.len()).map(|i| 1.0 / ((i + 1) as f64).powf(cfg.zipf_s)).collect();
+
+        // Markov chain: successor candidates per previous word are derived
+        // on the fly from a seeded hash — no giant table.
+        let chain_salt = rng.next_u64();
+
+        let mut train = String::new();
+        let mut eval = String::new();
+        for a in 0..cfg.articles {
+            let mut art_rng = rng.fork(a as u64);
+            let article = generate_article(a, &words, &zipf, chain_salt, cfg, &mut art_rng);
+            if a % 10 == 9 {
+                eval.push_str(&article);
+            } else {
+                train.push_str(&article);
+            }
+        }
+        SyntheticCorpus { train_text: train, eval_text: eval }
+    }
+}
+
+/// Pseudo-English word builder: syllable concatenation.
+fn build_lexicon(n: usize, rng: &mut Rng) -> Vec<String> {
+    const ONSETS: [&str; 12] = ["b", "c", "d", "f", "g", "l", "m", "n", "p", "r", "s", "t"];
+    const NUCLEI: [&str; 6] = ["a", "e", "i", "o", "u", "ia"];
+    const CODAS: [&str; 8] = ["", "n", "s", "r", "l", "t", "m", "nd"];
+    let mut words = Vec::with_capacity(n);
+    let mut seen = std::collections::HashSet::new();
+    while words.len() < n {
+        let syllables = 1 + rng.below(3);
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push_str(ONSETS[rng.below(ONSETS.len())]);
+            w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+            w.push_str(CODAS[rng.below(CODAS.len())]);
+        }
+        if seen.insert(w.clone()) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// The word-id slice owned by topic `t`: a contiguous window of the
+/// mid-frequency lexicon, so topic words are distinctive but not rare.
+fn topic_slice(t: usize, cfg: &CorpusConfig, lexicon: usize) -> (usize, usize) {
+    let start = (50 + t * cfg.topic_words).min(lexicon.saturating_sub(cfg.topic_words));
+    (start, (start + cfg.topic_words).min(lexicon))
+}
+
+fn generate_article(
+    index: usize,
+    words: &[String],
+    zipf: &[f64],
+    chain_salt: u64,
+    cfg: &CorpusConfig,
+    rng: &mut Rng,
+) -> String {
+    let mut out = String::new();
+    // Hidden topic for the whole article; announced by the heading so the
+    // model can pick it up early.
+    let topic = rng.below(cfg.topics.max(1));
+    let (ts, te) = topic_slice(topic, cfg, words.len());
+
+    // Heading, WikiText style, built from topic vocabulary.
+    let title_len = 1 + rng.below(3);
+    out.push_str("\n = ");
+    for t in 0..title_len {
+        if t > 0 {
+            out.push(' ');
+        }
+        out.push_str(&words[ts + rng.below(te - ts)]);
+    }
+    out.push_str(" = \n\n");
+
+    let n_sent = {
+        let base = cfg.sentences_per_article;
+        base / 2 + rng.below(base.max(1))
+    };
+    let mut prev1 = index % words.len();
+    let mut history: Vec<String> = Vec::new();
+    for s in 0..n_sent {
+        // Induction structure: verbatim-replay one of the *last two*
+        // sentences with probability repeat_prob. Locality matters: the
+        // source must fall inside the model's attention window (seq
+        // tokens) for the copy to be predictable at all — a repeat of a
+        // far-away sentence is unlearnable and just adds noise.
+        let sentence = if !history.is_empty() && rng.uniform() < cfg.repeat_prob {
+            // Adjacent repeat ("X. X.") — source guaranteed in-window.
+            history[history.len() - 1].clone()
+        } else {
+            let len = 5 + rng.below(14);
+            let mut sent = String::new();
+            for w in 0..len {
+                // Topic mixture: attention-only predictable mass.
+                let next = if rng.uniform() < cfg.topic_prob {
+                    ts + rng.below(te - ts)
+                } else {
+                    next_word(prev1, words.len(), zipf, chain_salt, rng)
+                };
+                if w == 0 {
+                    // Capitalize sentence start.
+                    let word = &words[next];
+                    let mut c = word.chars();
+                    if let Some(f) = c.next() {
+                        sent.push(f.to_ascii_uppercase());
+                        sent.push_str(c.as_str());
+                    }
+                } else {
+                    sent.push_str(&words[next]);
+                }
+                prev1 = next;
+                if w + 1 < len {
+                    // Occasional comma.
+                    if rng.uniform() < 0.08 {
+                        sent.push(',');
+                    }
+                    sent.push(' ');
+                }
+            }
+            history.push(sent.clone());
+            sent
+        };
+        out.push_str(&sentence);
+        out.push_str(". ");
+        if s % 8 == 7 {
+            out.push_str("\n\n");
+        }
+    }
+    out.push('\n');
+    out
+}
+
+/// Deterministic order-1 Markov successor: each previous word picks a small
+/// candidate set via hashing; the next word is Zipf-weighted within that
+/// set. Order 1 with ~8 successors per word gives dense, repeated bigram
+/// structure a small LM can actually learn (order 2 would make nearly every
+/// bigram unique at our corpus sizes).
+fn next_word(prev1: usize, vocab: usize, zipf: &[f64], salt: u64, rng: &mut Rng) -> usize {
+    const CANDIDATES: usize = 8;
+    let ctx = (prev1 as u64).wrapping_mul(0xC2B2AE3D27D4EB4F) ^ salt;
+    let mut weights = [0.0f64; CANDIDATES];
+    let mut cands = [0usize; CANDIDATES];
+    for c in 0..CANDIDATES {
+        // splitmix-style candidate derivation
+        let mut z = ctx.wrapping_add((c as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        let cand = (z >> 33) as usize % vocab;
+        cands[c] = cand;
+        weights[c] = zipf[cand];
+    }
+    cands[rng.weighted(&weights)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = CorpusConfig { articles: 6, ..Default::default() };
+        let a = SyntheticCorpus::generate(&cfg);
+        let b = SyntheticCorpus::generate(&cfg);
+        assert_eq!(a.train_text, b.train_text);
+        assert_eq!(a.eval_text, b.eval_text);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = SyntheticCorpus::generate(&CorpusConfig { articles: 4, seed: 1, ..Default::default() });
+        let b = SyntheticCorpus::generate(&CorpusConfig { articles: 4, seed: 2, ..Default::default() });
+        assert_ne!(a.train_text, b.train_text);
+    }
+
+    #[test]
+    fn has_train_eval_split_and_structure() {
+        let c = SyntheticCorpus::generate(&CorpusConfig { articles: 20, ..Default::default() });
+        assert!(!c.train_text.is_empty());
+        assert!(!c.eval_text.is_empty());
+        assert!(c.train_text.len() > c.eval_text.len() * 4, "≈90/10 split");
+        assert!(c.train_text.contains(" = "), "headings present");
+        assert!(c.train_text.contains(". "), "sentences present");
+    }
+
+    #[test]
+    fn text_is_learnable_not_uniform() {
+        // Markov structure ⇒ repeated bigrams at the word level; verify the
+        // corpus repeats itself far more than an i.i.d. stream would.
+        let c = SyntheticCorpus::generate(&CorpusConfig { articles: 40, ..Default::default() });
+        let words: Vec<&str> = c.train_text.split_whitespace().collect();
+        let mut bigrams = std::collections::HashMap::new();
+        for w in words.windows(2) {
+            *bigrams.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+        let repeats = bigrams.values().filter(|&&v| v > 1).count();
+        // The Markov share (1 - topic_prob) keeps bigram structure dense;
+        // topic words add attention-only structure instead.
+        assert!(
+            repeats * 8 > bigrams.len(),
+            "too few repeated bigrams: {repeats}/{}",
+            bigrams.len()
+        );
+    }
+
+    #[test]
+    fn articles_have_topic_concentration() {
+        // Within one article, the modal topic's vocabulary share must be
+        // far above its global share — the attention-only signal.
+        let cfg = CorpusConfig { articles: 20, ..Default::default() };
+        let c = SyntheticCorpus::generate(&cfg);
+        let words_list = build_lexicon(cfg.lexicon, &mut Rng::new(cfg.seed));
+        let word_id: std::collections::HashMap<&str, usize> =
+            words_list.iter().enumerate().map(|(i, w)| (w.as_str(), i)).collect();
+
+        let mut concentrated = 0;
+        let mut total_articles = 0;
+        for article in c.train_text.split("\n = ").skip(1) {
+            let body: Vec<usize> = article
+                .split_whitespace()
+                .filter_map(|w| {
+                    let lw = w.trim_matches(|ch: char| !ch.is_ascii_lowercase());
+                    word_id.get(lw).copied()
+                })
+                .collect();
+            if body.len() < 50 {
+                continue;
+            }
+            total_articles += 1;
+            let mut best = 0.0f64;
+            for t in 0..cfg.topics {
+                let (ts, te) = topic_slice(t, &cfg, cfg.lexicon);
+                let share = body.iter().filter(|&&id| id >= ts && id < te).count() as f64
+                    / body.len() as f64;
+                best = best.max(share);
+            }
+            // Global share of one 40-word slice is ~5-8%; topic articles
+            // should be >20%.
+            if best > 0.15 {
+                concentrated += 1;
+            }
+        }
+        assert!(total_articles > 5, "article split failed");
+        assert!(
+            concentrated * 10 >= total_articles * 7,
+            "only {concentrated}/{total_articles} articles topic-concentrated"
+        );
+    }
+
+    #[test]
+    fn scale_with_articles() {
+        let small = SyntheticCorpus::generate(&CorpusConfig { articles: 5, ..Default::default() });
+        let large = SyntheticCorpus::generate(&CorpusConfig { articles: 50, ..Default::default() });
+        assert!(large.train_text.len() > small.train_text.len() * 5);
+    }
+}

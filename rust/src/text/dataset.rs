@@ -1,0 +1,129 @@
+//! Token stream → fixed-shape training/eval batches.
+//!
+//! The AOT-compiled executables have static shapes `(batch, seq)`, so the
+//! dataset packs the tokenized corpus into a contiguous stream and slices
+//! non-overlapping windows: inputs `t[i..i+S]`, targets `t[i+1..i+S+1]`
+//! (next-token prediction).
+
+use super::tokenizer::Tokenizer;
+
+/// One fixed-shape batch of token ids (row-major `[batch, seq]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub inputs: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// A tokenized corpus with deterministic batch slicing.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    stream: Vec<i32>,
+    batch: usize,
+    seq: usize,
+}
+
+impl Dataset {
+    /// Tokenize `text` and build a dataset producing `[batch, seq]` windows.
+    pub fn from_text(text: &str, tok: &dyn Tokenizer, batch: usize, seq: usize) -> Dataset {
+        let stream: Vec<i32> = tok.encode(text).into_iter().map(|t| t as i32).collect();
+        Dataset { stream, batch, seq }
+    }
+
+    /// Build directly from token ids (tests / pre-tokenized caches).
+    pub fn from_ids(stream: Vec<i32>, batch: usize, seq: usize) -> Dataset {
+        Dataset { stream, batch, seq }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.stream.len()
+    }
+
+    /// Number of non-overlapping batches available.
+    pub fn num_batches(&self) -> usize {
+        let span = self.batch * self.seq;
+        if self.stream.len() <= span {
+            0
+        } else {
+            (self.stream.len() - 1) / span
+        }
+    }
+
+    /// Fetch batch `index` (wraps modulo [`Self::num_batches`], so a
+    /// training loop can run more steps than the corpus has windows).
+    pub fn batch(&self, index: usize) -> Batch {
+        let nb = self.num_batches();
+        assert!(nb > 0, "corpus too small for a single {}x{} batch", self.batch, self.seq);
+        let b = index % nb;
+        let span = self.batch * self.seq;
+        let start = b * span;
+        let mut inputs = Vec::with_capacity(span);
+        let mut targets = Vec::with_capacity(span);
+        for row in 0..self.batch {
+            let s = start + row * self.seq;
+            inputs.extend_from_slice(&self.stream[s..s + self.seq]);
+            targets.extend_from_slice(&self.stream[s + 1..s + self.seq + 1]);
+        }
+        Batch { inputs, targets, batch: self.batch, seq: self.seq }
+    }
+
+    /// Iterator over every full batch once (eval pass).
+    pub fn iter(&self) -> impl Iterator<Item = Batch> + '_ {
+        (0..self.num_batches()).map(|i| self.batch(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::tokenizer::BpeTokenizer;
+
+    #[test]
+    fn windows_are_shifted_by_one() {
+        let ids: Vec<i32> = (0..100).collect();
+        let ds = Dataset::from_ids(ids, 2, 5);
+        let b = ds.batch(0);
+        assert_eq!(b.inputs[..5], [0, 1, 2, 3, 4]);
+        assert_eq!(b.targets[..5], [1, 2, 3, 4, 5]);
+        assert_eq!(b.inputs[5..10], [5, 6, 7, 8, 9]);
+        assert_eq!(b.targets[5..10], [6, 7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn num_batches_and_wraparound() {
+        let ids: Vec<i32> = (0..101).collect();
+        let ds = Dataset::from_ids(ids, 2, 5);
+        assert_eq!(ds.num_batches(), 10);
+        assert_eq!(ds.batch(0), ds.batch(10), "index wraps");
+    }
+
+    #[test]
+    fn too_small_corpus_has_zero_batches() {
+        let ds = Dataset::from_ids(vec![1, 2, 3], 2, 5);
+        assert_eq!(ds.num_batches(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus too small")]
+    fn batch_on_empty_panics() {
+        Dataset::from_ids(vec![1, 2], 2, 5).batch(0);
+    }
+
+    #[test]
+    fn from_text_uses_tokenizer() {
+        let tok = BpeTokenizer::byte_level();
+        let ds = Dataset::from_text("abcdefghijklmnopqrstuvwxyz", &tok, 1, 4);
+        assert_eq!(ds.tokens(), 26);
+        let b = ds.batch(0);
+        assert_eq!(b.inputs, vec!['a' as i32, 'b' as i32, 'c' as i32, 'd' as i32]);
+        assert_eq!(b.targets, vec!['b' as i32, 'c' as i32, 'd' as i32, 'e' as i32]);
+    }
+
+    #[test]
+    fn eval_iter_covers_all_batches() {
+        let ids: Vec<i32> = (0..201).collect();
+        let ds = Dataset::from_ids(ids, 4, 5);
+        assert_eq!(ds.iter().count(), ds.num_batches());
+    }
+}

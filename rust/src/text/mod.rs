@@ -1,0 +1,16 @@
+//! Text substrate: tokenizer, synthetic corpus, and batch iterator.
+//!
+//! WikiText-2 is not available in this environment (see DESIGN.md §2), so
+//! [`corpus`] synthesizes a deterministic "tiny-wiki": Zipf-distributed
+//! vocabulary, order-2 Markov word transitions, article/heading structure.
+//! Perplexity measured on a held-out split of this corpus plays the role
+//! the paper gives WikiText-2: a fixed eval stream on which compression
+//! damage is measured.
+
+pub mod corpus;
+pub mod dataset;
+pub mod tokenizer;
+
+pub use corpus::{CorpusConfig, SyntheticCorpus};
+pub use dataset::{Batch, Dataset};
+pub use tokenizer::{BpeTokenizer, Tokenizer};

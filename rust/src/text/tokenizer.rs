@@ -1,0 +1,208 @@
+//! Byte-level BPE tokenizer, trained from scratch.
+//!
+//! Base alphabet is the 256 bytes; `train` greedily merges the most
+//! frequent adjacent pair until the requested vocab size. Encoding applies
+//! merges in training order (classic BPE), decoding concatenates the byte
+//! sequences. Round-trip is exact for any input.
+
+use std::collections::HashMap;
+
+/// Common tokenizer interface (byte-level fallback + BPE).
+pub trait Tokenizer {
+    fn encode(&self, text: &str) -> Vec<u32>;
+    fn decode(&self, ids: &[u32]) -> String;
+    fn vocab_size(&self) -> usize;
+}
+
+/// Byte-level BPE.
+#[derive(Debug, Clone)]
+pub struct BpeTokenizer {
+    /// token id -> byte string
+    vocab: Vec<Vec<u8>>,
+    /// merge rules in priority order: (left, right) -> merged id
+    merges: Vec<(u32, u32)>,
+    merge_lookup: HashMap<(u32, u32), u32>,
+}
+
+impl BpeTokenizer {
+    /// Byte-level tokenizer with no merges (vocab = 256).
+    pub fn byte_level() -> Self {
+        let vocab = (0..256u32).map(|b| vec![b as u8]).collect();
+        BpeTokenizer { vocab, merges: Vec::new(), merge_lookup: HashMap::new() }
+    }
+
+    /// Train BPE on `text` until `vocab_size` tokens (≥ 256).
+    pub fn train(text: &str, vocab_size: usize) -> Self {
+        let mut tok = Self::byte_level();
+        let target = vocab_size.max(256);
+        // Work on the corpus as a sequence of token ids.
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+
+        while tok.vocab.len() < target {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // Deterministic argmax: highest count, ties by smallest pair.
+            let best = counts.iter().max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)));
+            let (&pair, &count) = match best {
+                Some(kv) => kv,
+                None => break,
+            };
+            if count < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = tok.vocab.len() as u32;
+            let mut merged_bytes = tok.vocab[pair.0 as usize].clone();
+            merged_bytes.extend_from_slice(&tok.vocab[pair.1 as usize]);
+            tok.vocab.push(merged_bytes);
+            tok.merges.push(pair);
+            tok.merge_lookup.insert(pair, new_id);
+            ids = merge_pair(&ids, pair, new_id);
+        }
+        tok
+    }
+
+    /// Serialize to a compact text form (one merge per line).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for (a, b) in &self.merges {
+            s.push_str(&format!("{a} {b}\n"));
+        }
+        s
+    }
+
+    /// Deserialize from [`Self::to_text`] output.
+    pub fn from_text(s: &str) -> anyhow::Result<Self> {
+        let mut tok = Self::byte_level();
+        for (lineno, line) in s.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let a: u32 = it.next().ok_or_else(|| anyhow::anyhow!("line {lineno}: missing left"))?.parse()?;
+            let b: u32 = it.next().ok_or_else(|| anyhow::anyhow!("line {lineno}: missing right"))?.parse()?;
+            if a as usize >= tok.vocab.len() || b as usize >= tok.vocab.len() {
+                anyhow::bail!("line {lineno}: merge refers to unknown token ({a},{b})");
+            }
+            let new_id = tok.vocab.len() as u32;
+            let mut bytes = tok.vocab[a as usize].clone();
+            bytes.extend_from_slice(&tok.vocab[b as usize]);
+            tok.vocab.push(bytes);
+            tok.merges.push((a, b));
+            tok.merge_lookup.insert((a, b), new_id);
+        }
+        Ok(tok)
+    }
+}
+
+fn merge_pair(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+impl Tokenizer for BpeTokenizer {
+    fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        // Apply merges in training order. For our corpus sizes this simple
+        // pass-per-merge scheme is fast enough and exactly mirrors training.
+        for (rank, &pair) in self.merges.iter().enumerate() {
+            let new_id = 256 + rank as u32;
+            if ids.len() < 2 {
+                break;
+            }
+            ids = merge_pair(&ids, pair, new_id);
+        }
+        ids
+    }
+
+    fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(tok) = self.vocab.get(id as usize) {
+                bytes.extend_from_slice(tok);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_level_round_trip() {
+        let tok = BpeTokenizer::byte_level();
+        let s = "hello, wörld! 123";
+        assert_eq!(tok.decode(&tok.encode(s)), s);
+        assert_eq!(tok.vocab_size(), 256);
+    }
+
+    #[test]
+    fn training_grows_vocab_and_compresses() {
+        let text = "the cat sat on the mat. the cat sat on the hat. ".repeat(50);
+        let tok = BpeTokenizer::train(&text, 300);
+        assert!(tok.vocab_size() > 256);
+        let ids = tok.encode(&text);
+        assert!(ids.len() < text.len(), "BPE should shorten: {} vs {}", ids.len(), text.len());
+        assert_eq!(tok.decode(&ids), text);
+    }
+
+    #[test]
+    fn round_trip_on_unseen_text() {
+        let train = "aaabbb ababab aabb ".repeat(100);
+        let tok = BpeTokenizer::train(&train, 280);
+        let unseen = "zebra aab xyz ab";
+        assert_eq!(tok.decode(&tok.encode(unseen)), unseen);
+    }
+
+    #[test]
+    fn serialization_round_trip() {
+        let text = "low lower lowest newer newest wide wider widest ".repeat(40);
+        let tok = BpeTokenizer::train(&text, 320);
+        let restored = BpeTokenizer::from_text(&tok.to_text()).unwrap();
+        assert_eq!(restored.vocab_size(), tok.vocab_size());
+        let sample = "lower and wider than the newest";
+        assert_eq!(restored.encode(sample), tok.encode(sample));
+    }
+
+    #[test]
+    fn from_text_rejects_bad_merge() {
+        assert!(BpeTokenizer::from_text("999 1000\n").is_err());
+        assert!(BpeTokenizer::from_text("abc def\n").is_err());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let text = "some repeated text some repeated text ".repeat(30);
+        let a = BpeTokenizer::train(&text, 290);
+        let b = BpeTokenizer::train(&text, 290);
+        assert_eq!(a.to_text(), b.to_text());
+    }
+
+    #[test]
+    fn ids_below_vocab_size() {
+        let text = "abc abd abe abf ".repeat(60);
+        let tok = BpeTokenizer::train(&text, 270);
+        for id in tok.encode(&text) {
+            assert!((id as usize) < tok.vocab_size());
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Learning-rate schedules.
+
+/// Linear warmup followed by cosine decay to `min_lr`.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub min_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f32, warmup_steps: usize, total_steps: usize) -> Self {
+        LrSchedule { base_lr, min_lr: base_lr * 0.1, warmup_steps, total_steps }
+    }
+
+    /// LR at `step` (0-based).
+    pub fn at(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if step >= self.total_steps {
+            return self.min_lr;
+        }
+        let progress = (step - self.warmup_steps) as f32
+            / (self.total_steps - self.warmup_steps).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.min_lr + (self.base_lr - self.min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(1.0, 10, 100);
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decays_to_min() {
+        let s = LrSchedule::new(1.0, 10, 100);
+        assert!((s.at(10) - 1.0).abs() < 1e-5);
+        assert!(s.at(55) < 1.0);
+        assert!((s.at(100) - 0.1).abs() < 1e-6);
+        assert!((s.at(5000) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = LrSchedule::new(3e-4, 20, 300);
+        let mut last = f32::INFINITY;
+        for step in 20..300 {
+            let lr = s.at(step);
+            assert!(lr <= last + 1e-9);
+            last = lr;
+        }
+    }
+
+    #[test]
+    fn zero_warmup() {
+        let s = LrSchedule::new(1.0, 0, 10);
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+    }
+}

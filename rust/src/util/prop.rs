@@ -1,0 +1,73 @@
+//! Minimal property-testing harness.
+//!
+//! The vendored crate set does not include `proptest`, so this module
+//! provides the small subset we need: run a property over many randomly
+//! generated cases with a fixed seed, and on failure report the case index
+//! and seed so it can be replayed exactly.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (overridable via `SWSC_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("SWSC_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop` over `cases` random cases. `gen` builds a case from the RNG;
+/// `prop` returns `Err(msg)` to fail. Panics with seed + case on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("mismatch at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("u64 parity", 1, 32, |r| r.next_u64(), |&x| {
+            if x % 2 == 0 || x % 2 == 1 { Ok(()) } else { Err("impossible".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn check_reports_failure() {
+        check("always fails", 2, 4, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6, 0.0).is_err());
+    }
+}

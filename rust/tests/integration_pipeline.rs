@@ -1,0 +1,185 @@
+//! End-to-end pipeline integration (tiny preset, artifact-gated): train a
+//! few steps through the AOT train step, compress Q/K, evaluate all the
+//! variants, and exercise the batched eval service.
+
+use swsc::compress::{CompressionPlan, ProjectorSet};
+use swsc::coordinator::{compress_model, EvalRequest, EvalService, ServiceConfig};
+use swsc::eval::Evaluator;
+use swsc::io::Checkpoint;
+use swsc::model::{init_params, param_specs, ModelConfig};
+use swsc::runtime::{ArtifactManifest, Engine};
+use swsc::text::{BpeTokenizer, CorpusConfig, Dataset, SyntheticCorpus};
+use swsc::train::{LrSchedule, Trainer};
+use std::path::Path;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(ArtifactManifest::load(dir, "tiny").expect("manifest"))
+}
+
+fn tiny_data(cfg: &ModelConfig) -> (Dataset, Dataset) {
+    let corpus = SyntheticCorpus::generate(&CorpusConfig { articles: 30, seed: 7, ..Default::default() });
+    let tok = BpeTokenizer::train(&corpus.train_text, cfg.vocab);
+    (
+        Dataset::from_text(&corpus.train_text, &tok, cfg.batch, cfg.seq),
+        Dataset::from_text(&corpus.eval_text, &tok, cfg.batch, cfg.seq),
+    )
+}
+
+#[test]
+fn train_compress_eval_end_to_end() {
+    let Some(man) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let engine = Engine::new(man).unwrap();
+    let (train_data, eval_data) = tiny_data(&cfg);
+
+    // 1. Train a handful of steps — loss must drop.
+    let init = init_params(&cfg, 3);
+    let mut trainer = Trainer::new(engine.clone(), cfg.clone(), &init).unwrap();
+    let sched = LrSchedule::new(3e-3, 2, 40);
+    for step in 0..40 {
+        trainer.step(&train_data.batch(step), sched.at(step)).unwrap();
+    }
+    let first = trainer.losses[0];
+    let last = *trainer.losses.last().unwrap();
+    assert!(last < first - 0.3, "loss did not drop: {first} -> {last}");
+
+    // 2. Evaluate the trained model.
+    let ck = trainer.to_checkpoint().unwrap();
+    let evaluator = Evaluator::new(engine.clone(), cfg.clone()).unwrap();
+    let fp32 = evaluator.perplexity_of(&ck, &eval_data).unwrap();
+    assert!(fp32.perplexity < cfg.vocab as f64, "trained ppl must beat uniform");
+
+    // 3. Compress Q&K at 2 bits and re-evaluate: damage should be finite
+    //    and bounded (SWSC keeps the model usable).
+    let plan = CompressionPlan::for_target_bits(&ck.shapes(), ProjectorSet::QAndK, 2.0, 0.5, 0);
+    let out = compress_model(&ck, &plan, 4, None).unwrap();
+    let mut sck = ck.clone();
+    for (name, t) in out.file.restore_all() {
+        sck.insert(&name, t);
+    }
+    let swsc = evaluator.perplexity_of(&sck, &eval_data).unwrap();
+    assert!(swsc.perplexity.is_finite());
+    assert!(
+        swsc.perplexity < fp32.perplexity * 20.0,
+        "SWSC damage out of range: {} vs fp32 {}",
+        swsc.perplexity,
+        fp32.perplexity
+    );
+}
+
+#[test]
+fn eval_service_batches_and_answers_everyone() {
+    let Some(man) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let (_, eval_data) = tiny_data(&cfg);
+
+    // Host-side params for the service (zeros = uniform model is fine —
+    // the service test is about plumbing, not quality).
+    let ck = init_params(&cfg, 4);
+    let host_params: Vec<swsc::tensor::Tensor> = param_specs(&cfg)
+        .iter()
+        .map(|s| ck.get(&s.name).unwrap().clone())
+        .collect();
+
+    let service = EvalService::start(man, cfg.clone(), host_params, ServiceConfig::default()).unwrap();
+
+    // Submit an odd number of requests (forces a padded final batch).
+    let n_req = cfg.batch * 2 + 3;
+    let mut rxs = Vec::new();
+    let b0 = eval_data.batch(0);
+    for i in 0..n_req {
+        let mut window: Vec<i32> = b0.inputs[..cfg.seq].to_vec();
+        window.push(b0.targets[cfg.seq - 1]);
+        // Perturb each request so they are distinct.
+        window[0] = (window[0] + i as i32) % cfg.vocab as i32;
+        rxs.push(service.submit(EvalRequest { tokens: window }).unwrap());
+    }
+    let mut responses = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.nll_sum.is_finite() && resp.nll_sum > 0.0);
+        assert_eq!(resp.tokens, cfg.seq);
+        responses.push(resp);
+    }
+    assert_eq!(responses.len(), n_req);
+    assert!(service.metrics.counter("service.requests") as usize == n_req);
+    assert!(service.metrics.counter("service.batches") >= 3);
+    service.shutdown();
+}
+
+#[test]
+fn service_results_match_direct_evaluator() {
+    let Some(man) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let (_, eval_data) = tiny_data(&cfg);
+    let ck = init_params(&cfg, 5);
+
+    // Direct evaluator on one batch.
+    let engine = Engine::new(ArtifactManifest::load(Path::new("artifacts"), "tiny").unwrap()).unwrap();
+    let evaluator = Evaluator::new(engine, cfg.clone()).unwrap();
+    let one_batch = {
+        let b = eval_data.batch(0);
+        Dataset::from_ids(
+            {
+                // Rebuild the exact stream for row 0: inputs + final target.
+                let mut ids = b.inputs[..cfg.seq].to_vec();
+                ids.push(b.targets[cfg.seq - 1]);
+                // Pad to fill a full batch of identical rows.
+                let row = ids.clone();
+                let mut all = Vec::new();
+                for _ in 0..cfg.batch {
+                    all.extend_from_slice(&row[..cfg.seq]);
+                }
+                all.push(row[cfg.seq]);
+                all
+            },
+            cfg.batch,
+            cfg.seq,
+        )
+    };
+    // NOTE: from_ids builds shifted windows over a contiguous stream, so
+    // row boundaries differ from the service's per-request windows; compare
+    // only the first row's window, which is identical in both layouts.
+    let direct = evaluator.perplexity_of(&ck, &one_batch).unwrap();
+
+    let host_params: Vec<swsc::tensor::Tensor> = param_specs(&cfg)
+        .iter()
+        .map(|s| ck.get(&s.name).unwrap().clone())
+        .collect();
+    let man2 = ArtifactManifest::load(Path::new("artifacts"), "tiny").unwrap();
+    let service = EvalService::start(man2, cfg.clone(), host_params, ServiceConfig::default()).unwrap();
+
+    let b = eval_data.batch(0);
+    let mut window: Vec<i32> = b.inputs[..cfg.seq].to_vec();
+    window.push(b.targets[cfg.seq - 1]);
+    let resp = service.eval_blocking(EvalRequest { tokens: window }).unwrap();
+    let per_tok_service = resp.nll_sum / resp.tokens as f64;
+
+    // Same model, same kind of stream ⇒ per-token NLL in the same ballpark
+    // (uniform-ish model: both ≈ log vocab).
+    assert!(
+        (per_tok_service - direct.nll_per_token).abs() < 0.2,
+        "service {per_tok_service} vs direct {}",
+        direct.nll_per_token
+    );
+    service.shutdown();
+}
+
+#[test]
+fn wrong_window_size_rejected() {
+    let Some(man) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let ck = init_params(&cfg, 6);
+    let host_params: Vec<swsc::tensor::Tensor> = param_specs(&cfg)
+        .iter()
+        .map(|s| ck.get(&s.name).unwrap().clone())
+        .collect();
+    let service = EvalService::start(man, cfg.clone(), host_params, ServiceConfig::default()).unwrap();
+    assert!(service.submit(EvalRequest { tokens: vec![1; 3] }).is_err());
+    service.shutdown();
+}

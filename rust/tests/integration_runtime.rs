@@ -1,0 +1,171 @@
+//! Cross-layer integration: the AOT artifacts (L1/L2) executed from rust
+//! must agree with the rust-side (L3) CPU implementations of the same math.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::kmeans::{assign, update};
+use swsc::model::ModelConfig;
+use swsc::quant::{rtn_quantize, RtnConfig, RtnMode};
+use swsc::runtime::{literal_to_tensor, tensor_to_literal, ArtifactManifest, Engine};
+use swsc::tensor::Tensor;
+use swsc::util::prop::assert_close;
+use swsc::util::rng::Rng;
+use std::path::Path;
+
+fn engine() -> Option<(Engine, ModelConfig)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let man = ArtifactManifest::load(dir, "tiny").expect("manifest parse");
+    let cfg = ModelConfig::tiny();
+    man.verify_config(&cfg).expect("fingerprint");
+    Some((Engine::new(man).expect("engine"), cfg))
+}
+
+#[test]
+fn manifest_param_contract_holds() {
+    let Some((engine, _cfg)) = engine() else { return };
+    // verify_config already ran; double-check params non-empty and ordered.
+    let params = &engine.manifest().params;
+    assert_eq!(params[0].0, "embed.tok");
+    assert!(params.len() > 10);
+}
+
+#[test]
+fn hlo_kmeans_step_matches_rust_lloyd_step() {
+    let Some((engine, cfg)) = engine() else { return };
+    let d = cfg.d_model;
+    let k = 4; // tiny preset 2-bit budget
+    let exe = engine.load(&format!("kmeans_step_k{k}")).expect("load");
+
+    let mut rng = Rng::new(201);
+    let points = Tensor::randn(&[d, d], &mut rng); // channels as rows
+    let centroids = {
+        let mut c = Tensor::zeros(&[k, d]);
+        for i in 0..k {
+            c.row_mut(i).copy_from_slice(points.row(i * 3));
+        }
+        c
+    };
+
+    let outs = exe
+        .run(&[tensor_to_literal(&points).unwrap(), tensor_to_literal(&centroids).unwrap()])
+        .expect("run");
+    let hlo_labels = outs[0].to_vec::<i32>().expect("labels");
+    let hlo_inertia = literal_to_tensor(&outs[1]).unwrap().data()[0] as f64;
+    let hlo_newc = literal_to_tensor(&outs[2]).unwrap();
+
+    // Rust-side equivalent step.
+    let (labels, inertia) = assign(&points, &centroids);
+    let mut newc = centroids.clone();
+    update(&points, &labels, &mut newc);
+
+    let rust_labels: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+    assert_eq!(hlo_labels, rust_labels, "assignment disagrees");
+    assert!(
+        (hlo_inertia - inertia).abs() / inertia.max(1e-9) < 1e-3,
+        "inertia {hlo_inertia} vs {inertia}"
+    );
+    assert_close(hlo_newc.data(), newc.data(), 1e-4, 1e-4).expect("centroid update");
+}
+
+#[test]
+fn hlo_reconstruct_matches_rust_reconstruct() {
+    let Some((engine, cfg)) = engine() else { return };
+    let d = cfg.d_model;
+    let (k, r) = (4, 2);
+    let exe = engine.load(&format!("reconstruct_k{k}_r{r}")).expect("load");
+
+    let mut rng = Rng::new(202);
+    let w = Tensor::randn(&[d, d], &mut rng);
+    let c = compress_matrix(&w, &SwscConfig::new(k, r));
+
+    let labels_i32: Vec<i32> = c.labels.iter().map(|&l| l as i32).collect();
+    let labels_lit = xla::Literal::vec1(&labels_i32);
+    let outs = exe
+        .run(&[
+            labels_lit,
+            tensor_to_literal(&c.centroids).unwrap(),
+            tensor_to_literal(&c.factor_a).unwrap(),
+            tensor_to_literal(&c.factor_b).unwrap(),
+        ])
+        .expect("run");
+    let hlo_w = literal_to_tensor(&outs[0]).unwrap();
+    let rust_w = c.reconstruct();
+    assert_close(hlo_w.data(), rust_w.data(), 1e-4, 1e-4).expect("reconstruct parity");
+}
+
+#[test]
+fn hlo_rtn_matches_rust_rtn() {
+    let Some((engine, cfg)) = engine() else { return };
+    let d = cfg.d_model;
+    for bits in [2u32, 3] {
+        let exe = engine.load(&format!("rtn_b{bits}")).expect("load");
+        let mut rng = Rng::new(203 + bits as u64);
+        let w = Tensor::randn(&[d, d], &mut rng);
+        let outs = exe.run(&[tensor_to_literal(&w).unwrap()]).expect("run");
+        let hlo_q = literal_to_tensor(&outs[0]).unwrap();
+        let rust_q = rtn_quantize(&w, &RtnConfig { bits, mode: RtnMode::Asymmetric });
+        assert_close(hlo_q.data(), rust_q.data(), 1e-4, 1e-4)
+            .unwrap_or_else(|e| panic!("rtn_b{bits} parity: {e}"));
+    }
+}
+
+#[test]
+fn hlo_decode_matmul_matches_dense_path() {
+    let Some((engine, cfg)) = engine() else { return };
+    let d = cfg.d_model;
+    let (k, r) = (4, 2);
+    let exe = engine.load(&format!("decode_matmul_k{k}_r{r}")).expect("load");
+
+    let mut rng = Rng::new(204);
+    let w = Tensor::randn(&[d, d], &mut rng);
+    let c = compress_matrix(&w, &SwscConfig::new(k, r));
+    let b = cfg.batch * cfg.seq;
+    let x = Tensor::randn(&[b, d], &mut rng);
+
+    let labels_i32: Vec<i32> = c.labels.iter().map(|&l| l as i32).collect();
+    let outs = exe
+        .run(&[
+            tensor_to_literal(&x).unwrap(),
+            xla::Literal::vec1(&labels_i32),
+            tensor_to_literal(&c.centroids).unwrap(),
+            tensor_to_literal(&c.factor_a).unwrap(),
+            tensor_to_literal(&c.factor_b).unwrap(),
+        ])
+        .expect("run");
+    let y_fused = literal_to_tensor(&outs[0]).unwrap();
+    let y_dense = x.matmul(&c.reconstruct());
+    assert_close(y_fused.data(), y_dense.data(), 1e-2, 1e-2).expect("fused == dense");
+}
+
+#[test]
+fn fwd_eval_perplexity_of_uniform_model_is_vocab() {
+    // With all-zero weights the logits are uniform ⇒ ppl == vocab size.
+    let Some((engine, cfg)) = engine() else { return };
+    use swsc::eval::Evaluator;
+    use swsc::io::Checkpoint;
+    use swsc::model::param_specs;
+    use swsc::text::Dataset;
+
+    let mut ck = Checkpoint::new();
+    for spec in param_specs(&cfg) {
+        // zeros everywhere (incl. LN gain: output = bias = 0 -> uniform).
+        ck.insert(&spec.name, Tensor::zeros(&spec.shape));
+    }
+    let ids: Vec<i32> = (0..(cfg.batch * cfg.seq * 2 + 1) as i32)
+        .map(|i| i % cfg.vocab as i32)
+        .collect();
+    let data = Dataset::from_ids(ids, cfg.batch, cfg.seq);
+    let ev = Evaluator::new(engine, cfg.clone()).expect("evaluator");
+    let res = ev.perplexity_of(&ck, &data).expect("ppl");
+    let want = cfg.vocab as f64;
+    assert!(
+        (res.perplexity - want).abs() / want < 1e-3,
+        "uniform ppl {} != vocab {want}",
+        res.perplexity
+    );
+}

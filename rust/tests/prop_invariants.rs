@@ -1,0 +1,261 @@
+//! Property-based tests over coordinator + pipeline invariants
+//! (DESIGN.md §7). Uses the in-crate mini-prop harness (no proptest in the
+//! vendored set); every failure reports seed + case for exact replay.
+
+use swsc::compress::{compress_matrix, CompressionPlan, ProjectorSet, SwscConfig};
+use swsc::coordinator::compress_model;
+use swsc::io::{pack_u32, unpack_u32, Checkpoint};
+use swsc::kmeans::{cluster_channels, KMeansConfig};
+use swsc::linalg::{svd_jacobi, truncate};
+use swsc::quant::bits::{swsc_avg_bits, swsc_params_for_bits};
+use swsc::quant::{rtn_quantize, RtnConfig, RtnMode};
+use swsc::tensor::Tensor;
+use swsc::util::prop::{check, default_cases};
+use swsc::util::rng::Rng;
+
+#[test]
+fn prop_kmeans_labels_in_range_and_count_preserved() {
+    check(
+        "labels ∈ [0,k), one per channel",
+        301,
+        default_cases(),
+        |r| {
+            let m = 4 + r.below(24);
+            let n = 4 + r.below(40);
+            let k = 1 + r.below(10);
+            (Tensor::randn(&[m, n], r), k)
+        },
+        |(w, k)| {
+            let res = cluster_channels(w, &KMeansConfig { k: *k, ..Default::default() });
+            if res.labels.len() != w.cols() {
+                return Err(format!("{} labels for {} channels", res.labels.len(), w.cols()));
+            }
+            let kk = res.centroids.cols();
+            if res.labels.iter().any(|&l| l as usize >= kk) {
+                return Err("label out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_compensation_never_hurts_mse() {
+    check(
+        "SVD compensation monotone",
+        302,
+        24,
+        |r| {
+            let m = 8 + r.below(32);
+            let n = 8 + r.below(32);
+            let k = 2 + r.below(6);
+            let rank = 1 + r.below(8);
+            (Tensor::randn(&[m, n], r), k, rank)
+        },
+        |(w, k, rank)| {
+            let c = compress_matrix(w, &SwscConfig::new(*k, *rank));
+            let with = c.reconstruct().mse(w);
+            let without = c.reconstruct_uncompensated().mse(w);
+            if with <= without + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("compensated {with} > uncompensated {without}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_avg_bits_monotone_in_k_and_r() {
+    check(
+        "avg_bits strictly increasing",
+        303,
+        default_cases(),
+        |r| {
+            let m = 32 + r.below(512);
+            let n = 32 + r.below(512);
+            let k = 1 + r.below(64);
+            let rank = r.below(32);
+            (m, n, k, rank)
+        },
+        |&(m, n, k, rank)| {
+            let base = swsc_avg_bits(m, n, k, rank).avg_bits;
+            let more_k = swsc_avg_bits(m, n, k + 1, rank).avg_bits;
+            let more_r = swsc_avg_bits(m, n, k, rank + 1).avg_bits;
+            if more_k > base && more_r > base {
+                Ok(())
+            } else {
+                Err(format!("not monotone: {base} vs k+1 {more_k}, r+1 {more_r}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_svd_energy_monotone_and_bounded() {
+    check(
+        "singular energy monotone in rank",
+        304,
+        16,
+        |r| {
+            let m = 6 + r.below(20);
+            let n = 6 + r.below(20);
+            Tensor::randn(&[m, n], r)
+        },
+        |w| {
+            let full = svd_jacobi(w);
+            let total = w.fro_norm().powi(2);
+            let mut last = 0.0;
+            for rank in 1..=full.rank() {
+                let e = truncate(&full, rank).energy_fraction(total);
+                if e < last - 1e-9 || e > 1.0 + 1e-9 {
+                    return Err(format!("energy {e} at rank {rank} (last {last})"));
+                }
+                last = e;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rtn_idempotent() {
+    check(
+        "RTN(RTN(w)) == RTN(w)",
+        305,
+        default_cases(),
+        |r| {
+            let m = 4 + r.below(40);
+            let n = 1 + r.below(10);
+            let bits = 2 + r.below(5) as u32;
+            (Tensor::randn(&[m, n], r), bits)
+        },
+        |(w, bits)| {
+            let cfg = RtnConfig { bits: *bits, mode: RtnMode::Asymmetric };
+            let once = rtn_quantize(w, &cfg);
+            let twice = rtn_quantize(&once, &cfg);
+            // Quantizing a quantized matrix keeps grid points (same min/max).
+            if once.mse(&twice) < 1e-10 {
+                Ok(())
+            } else {
+                Err(format!("not idempotent: mse {}", once.mse(&twice)))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_bitpack_round_trip_arbitrary() {
+    check(
+        "bitpack/unpack identity",
+        306,
+        default_cases(),
+        |r| {
+            let bits = 1 + r.below(20) as u32;
+            let n = r.below(500);
+            let mask = if bits == 32 { u64::MAX } else { (1u64 << bits) - 1 };
+            let vals: Vec<u32> = (0..n).map(|_| (r.next_u64() & mask) as u32).collect();
+            (vals, bits)
+        },
+        |(vals, bits)| {
+            let got = unpack_u32(&pack_u32(vals, *bits), vals.len(), *bits);
+            if &got == vals { Ok(()) } else { Err("mismatch".into()) }
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_compresses_each_matrix_exactly_once() {
+    check(
+        "scheduler completeness",
+        307,
+        12,
+        |r| {
+            // Random mini-model: random number of layers of random width.
+            let layers = 1 + r.below(4);
+            let d = 8 * (1 + r.below(4));
+            let mut ck = Checkpoint::new();
+            for i in 0..layers {
+                ck.insert(&format!("layers.{i}.attn.wq"), Tensor::randn(&[d, d], r));
+                ck.insert(&format!("layers.{i}.attn.wk"), Tensor::randn(&[d, d], r));
+                ck.insert(&format!("layers.{i}.attn.wv"), Tensor::randn(&[d, d], r));
+            }
+            ck.insert("embed.tok", Tensor::randn(&[32, d], r));
+            let workers = 1 + r.below(8);
+            (ck, workers)
+        },
+        |(ck, workers)| {
+            let plan =
+                CompressionPlan::for_target_bits(&ck.shapes(), ProjectorSet::QAndK, 2.0, 0.5, 1);
+            let out = compress_model(ck, &plan, *workers, None).map_err(|e| e.to_string())?;
+            if out.file.compressed.len() != plan.len() {
+                return Err(format!(
+                    "{} compressed vs {} planned",
+                    out.file.compressed.len(),
+                    plan.len()
+                ));
+            }
+            if out.file.compressed.len() + out.file.dense.len() != ck.len() {
+                return Err("entries lost or duplicated".into());
+            }
+            for name in out.file.compressed.keys() {
+                if out.file.dense.contains_key(name) {
+                    return Err(format!("{name} both compressed and dense"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_planner_budget_within_tolerance() {
+    check(
+        "planned (k,r) lands near target bits",
+        308,
+        default_cases(),
+        |r| {
+            let m = 64 * (1 + r.below(64)); // 64..4096
+            let target = 0.5 + r.uniform() * 3.5;
+            let share = 0.2 + r.uniform() * 0.6;
+            (m, target, share)
+        },
+        |&(m, target, share)| {
+            let (k, rank) = swsc_params_for_bits(m, target, share);
+            let got = 16.0 * (k as f64 + 2.0 * rank as f64) / m as f64;
+            // Rounding granularity: 16/m per cluster, 32/m per rank.
+            let tol = (16.0 / m as f64 + 32.0 / m as f64).max(0.02);
+            if (got - target).abs() <= tol + 0.26 {
+                Ok(())
+            } else {
+                Err(format!("m={m} target={target:.2} share={share:.2} -> {got:.3}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_reconstruction_error_bounded_by_clustering_error() {
+    // W_new = W' + truncSVD(W - W') ⇒ ‖W - W_new‖ ≤ ‖W - W'‖ for any rank.
+    check(
+        "‖W−W_new‖ ≤ ‖W−W'‖",
+        309,
+        16,
+        |r| {
+            let m = 8 + r.below(24);
+            let k = 2 + r.below(5);
+            let rank = r.below(6);
+            (Tensor::randn(&[m, m], r), k, rank)
+        },
+        |(w, k, rank)| {
+            let c = compress_matrix(w, &SwscConfig::new(*k, *rank));
+            let e_new = w.sub(&c.reconstruct()).fro_norm();
+            let e_prime = w.sub(&c.reconstruct_uncompensated()).fro_norm();
+            if e_new <= e_prime + 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("{e_new} > {e_prime}"))
+            }
+        },
+    );
+}
