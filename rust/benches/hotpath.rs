@@ -1,54 +1,103 @@
 //! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf):
 //! the L3 CPU kernels (matmul, SVD, kmeans assign, packing) and the PJRT
 //! round trip (literal conversion + fwd_eval execution, artifact-gated).
+//!
+//! The parallel cases sweep thread counts {1, 2, 4, max} through the
+//! deterministic executor; because results are bit-identical at any thread
+//! count, the sweep is purely a wall-clock comparison. Every case lands in
+//! `BENCH_hotpath.json` (op, size, threads, ns/iter) for cross-PR perf
+//! tracking.
 
 use std::path::Path;
 use swsc::bench::Bench;
 use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::exec::{self, ExecConfig};
 use swsc::io::{pack_u32, unpack_u32};
-use swsc::kmeans::assign;
-use swsc::linalg::{qr_householder, svd_jacobi, svd_randomized};
+use swsc::kmeans::assign_with;
+use swsc::linalg::{qr_householder, svd_jacobi, svd_randomized_with};
 use swsc::tensor::Tensor;
 use swsc::util::rng::Rng;
+
+/// Thread counts to sweep: 1, 2, 4 (where available), always ending at the
+/// machine max so the full-parallelism data point is recorded.
+fn thread_sweep() -> Vec<usize> {
+    let max = exec::global().threads;
+    let mut t: Vec<usize> = [1, 2, 4].iter().copied().filter(|&t| t <= max).collect();
+    if !t.contains(&max) {
+        t.push(max);
+    }
+    t
+}
 
 fn main() {
     let bench = Bench::new("hotpath");
     let mut rng = Rng::new(404);
+    let sweep = thread_sweep();
 
-    bench.section("L3 tensor kernels");
-    let a = Tensor::randn(&[256, 256], &mut rng);
-    let b = Tensor::randn(&[256, 256], &mut rng);
-    let m = bench.case("matmul_256", || a.matmul(&b));
-    let flops = 2.0 * 256f64.powi(3);
-    println!("  -> {:.2} GFLOP/s", flops / m / 1e9);
+    bench.section("L3 tensor kernels (threads sweep)");
+    for &size in &[256usize, 512, 1024] {
+        let a = Tensor::randn(&[size, size], &mut rng);
+        let b = Tensor::randn(&[size, size], &mut rng);
+        let flops = 2.0 * (size as f64).powi(3);
+        let mut serial_mean = f64::NAN;
+        for &t in &sweep {
+            let cfg = ExecConfig::with_threads(t);
+            let m = bench.case_at(&format!("matmul_{size}_t{t}"), size, t, || a.matmul_with(&b, cfg));
+            if t == 1 {
+                serial_mean = m;
+            }
+            println!("  -> {:.2} GFLOP/s ({:.2}x vs t1)", flops / m / 1e9, serial_mean / m);
+        }
+    }
     let a512 = Tensor::randn(&[512, 512], &mut rng);
-    let b512 = Tensor::randn(&[512, 512], &mut rng);
-    let m = bench.case("matmul_512", || a512.matmul(&b512));
-    println!("  -> {:.2} GFLOP/s", 2.0 * 512f64.powi(3) / m / 1e9);
-    bench.case("transpose_512", || a512.transpose());
+    for &t in &sweep {
+        let cfg = ExecConfig::with_threads(t);
+        bench.case_at(&format!("transpose_512_t{t}"), 512, t, || a512.transpose_with(cfg));
+    }
 
     bench.section("L3 linalg");
     let err = Tensor::randn(&[256, 256], &mut rng);
-    bench.case("svd_jacobi_256", || svd_jacobi(&err));
-    let mut r2 = Rng::new(405);
-    bench.case("svd_randomized_256_r8", || svd_randomized(&err, 8, 8, 2, &mut r2));
+    bench.case_at("svd_jacobi_256", 256, 1, || svd_jacobi(&err));
+    let err512 = Tensor::randn(&[512, 512], &mut rng);
+    for &t in &sweep {
+        let cfg = ExecConfig::with_threads(t);
+        let mut r2 = Rng::new(405);
+        bench.case_at(&format!("svd_randomized_512_r8_t{t}"), 512, t, || {
+            svd_randomized_with(&err512, 8, 8, 2, &mut r2, cfg)
+        });
+    }
     let tall = Tensor::randn(&[256, 24], &mut rng);
-    bench.case("qr_256x24", || qr_householder(&tall));
+    bench.case_at("qr_256x24", 256, 1, || qr_householder(&tall));
 
     bench.section("L3 kmeans");
-    let pts = Tensor::randn(&[256, 256], &mut rng);
-    let cen = Tensor::randn(&[16, 256], &mut rng);
-    bench.case("assign_n256_k16", || assign(&pts, &cen));
+    let pts512 = Tensor::randn(&[512, 512], &mut rng);
+    let cen = Tensor::randn(&[16, 512], &mut rng);
+    for &t in &sweep {
+        let cfg = ExecConfig::with_threads(t);
+        bench.case_at(&format!("assign_n512_k16_t{t}"), 512, t, || assign_with(&pts512, &cen, cfg));
+    }
 
-    bench.section("pipeline: full matrix compression");
-    bench.case("compress_256_k16_r8", || compress_matrix(&pts, &SwscConfig::new(16, 8)));
-    bench.case("compress_256_k24_r12", || compress_matrix(&pts, &SwscConfig::new(24, 12)));
+    bench.section("pipeline: full matrix compression (threads sweep)");
+    for &t in &sweep {
+        let mut cfg = SwscConfig::new(16, 8);
+        cfg.exec = ExecConfig::with_threads(t);
+        bench.case_at(&format!("compress_512_k16_r8_t{t}"), 512, t, || {
+            compress_matrix(&pts512, &cfg)
+        });
+    }
+    let pts256 = Tensor::randn(&[256, 256], &mut rng);
+    bench.case_at("compress_256_k16_r8", 256, exec::global().threads, || {
+        compress_matrix(&pts256, &SwscConfig::new(16, 8))
+    });
+    bench.case_at("compress_256_k24_r12", 256, exec::global().threads, || {
+        compress_matrix(&pts256, &SwscConfig::new(24, 12))
+    });
 
     bench.section("label packing");
     let labels: Vec<u32> = (0..4096).map(|i| (i * 7) as u32 % 16).collect();
-    bench.case("pack_4096_labels_4bit", || pack_u32(&labels, 4));
+    bench.case_at("pack_4096_labels_4bit", 4096, 1, || pack_u32(&labels, 4));
     let packed = pack_u32(&labels, 4);
-    bench.case("unpack_4096_labels_4bit", || unpack_u32(&packed, 4096, 4));
+    bench.case_at("unpack_4096_labels_4bit", 4096, 1, || unpack_u32(&packed, 4096, 4));
 
     // PJRT round trip (needs artifacts).
     let dir = Path::new("artifacts");
@@ -78,5 +127,11 @@ fn main() {
         });
     } else {
         println!("(skipping PJRT section — run `make artifacts`)");
+    }
+
+    let json_path = Path::new("BENCH_hotpath.json");
+    match bench.write_json(json_path) {
+        Ok(()) => println!("\nwrote {} ({} records)", json_path.display(), bench.records().len()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", json_path.display()),
     }
 }

@@ -4,21 +4,42 @@
 //! declared `harness = false` and drive this module instead: warmup, timed
 //! iterations, and a stable text report (mean ± std, min, p50). Benches
 //! that reproduce a paper table print the table rows after the timings.
+//!
+//! Each timed case is also recorded as a machine-readable
+//! [`BenchRecord`]; [`Bench::write_json`] dumps them as a JSON array
+//! (`op`, `size`, `threads`, `ns_per_iter`) so successive PRs have a perf
+//! trajectory to diff against.
 
 use crate::util::timer::Stats;
+use std::cell::RefCell;
+use std::path::Path;
 use std::time::Instant;
+
+/// One machine-readable timing row.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Case label, e.g. `matmul`.
+    pub op: String,
+    /// Problem size (side length, element count — case-defined; 0 if n/a).
+    pub size: usize,
+    /// Worker threads the case ran with.
+    pub threads: usize,
+    /// Mean wall-clock per iteration, nanoseconds.
+    pub ns_per_iter: f64,
+}
 
 /// One benchmark group with shared formatting.
 pub struct Bench {
     name: String,
     warmup: usize,
     iters: usize,
+    records: RefCell<Vec<BenchRecord>>,
 }
 
 impl Bench {
     pub fn new(name: &str) -> Self {
         let iters = std::env::var("SWSC_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
-        Bench { name: name.to_string(), warmup: 2, iters }
+        Bench { name: name.to_string(), warmup: 2, iters, records: RefCell::new(Vec::new()) }
     }
 
     pub fn with_iters(mut self, iters: usize) -> Self {
@@ -27,8 +48,21 @@ impl Bench {
     }
 
     /// Run one case: calls `f` warmup+iters times, prints a line, returns
-    /// the mean seconds.
-    pub fn case<T>(&self, label: &str, mut f: impl FnMut() -> T) -> f64 {
+    /// the mean seconds. Recorded with size 0 and threads 1 (cases that go
+    /// through the executor should use [`Bench::case_at`] with the real
+    /// axes so the JSON perf trajectory stays comparable across machines).
+    pub fn case<T>(&self, label: &str, f: impl FnMut() -> T) -> f64 {
+        self.case_at(label, 0, 1, f)
+    }
+
+    /// Run one case with explicit size/threads axes for the JSON record.
+    pub fn case_at<T>(
+        &self,
+        label: &str,
+        size: usize,
+        threads: usize,
+        mut f: impl FnMut() -> T,
+    ) -> f64 {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -48,7 +82,36 @@ impl Bench {
             fmt_secs(stats.percentile(50.0)),
             stats.count(),
         );
+        self.records.borrow_mut().push(BenchRecord {
+            op: label.to_string(),
+            size,
+            threads,
+            ns_per_iter: mean * 1e9,
+        });
         mean
+    }
+
+    /// All records so far, in run order.
+    pub fn records(&self) -> Vec<BenchRecord> {
+        self.records.borrow().clone()
+    }
+
+    /// Write every recorded case as a JSON array. Labels are plain
+    /// identifiers (no quoting/escaping needed).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        let records = self.records.borrow();
+        let mut s = String::from("[\n");
+        for (i, r) in records.iter().enumerate() {
+            if i > 0 {
+                s.push_str(",\n");
+            }
+            s.push_str(&format!(
+                "  {{\"op\": \"{}\", \"size\": {}, \"threads\": {}, \"ns_per_iter\": {:.1}}}",
+                r.op, r.size, r.threads, r.ns_per_iter
+            ));
+        }
+        s.push_str("\n]\n");
+        std::fs::write(path, s)
     }
 
     /// Print a section header.
@@ -87,5 +150,27 @@ mod tests {
         let b = Bench::new("unit").with_iters(3);
         let mean = b.case("noop", || 1 + 1);
         assert!(mean >= 0.0);
+    }
+
+    #[test]
+    fn records_and_json_round_trip() {
+        let b = Bench::new("unit").with_iters(2);
+        b.case_at("alpha", 512, 4, || 1 + 1);
+        b.case_at("beta", 256, 1, || 2 + 2);
+        let recs = b.records();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].op, "alpha");
+        assert_eq!((recs[0].size, recs[0].threads), (512, 4));
+        assert!(recs.iter().all(|r| r.ns_per_iter >= 0.0));
+
+        let path = std::env::temp_dir().join("swsc_bench_unit.json");
+        b.write_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.starts_with("[\n"));
+        assert!(body.contains("\"op\": \"alpha\""));
+        assert!(body.contains("\"size\": 512"));
+        assert!(body.contains("\"threads\": 4"));
+        assert!(body.trim_end().ends_with(']'));
     }
 }

@@ -1,8 +1,9 @@
 //! Core SWSC transform: cluster channels, share the representative vector,
 //! compensate the residual with a truncated SVD (paper §III-B, §III-C).
 
+use crate::exec::{self, ExecConfig};
 use crate::kmeans::{cluster_channels, KMeansConfig, Representative};
-use crate::linalg::{svd_jacobi, svd_randomized, truncate, Svd};
+use crate::linalg::{svd_jacobi, svd_randomized_with, truncate, Svd};
 use crate::quant::bits::{swsc_avg_bits, BitsBreakdown};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -36,6 +37,10 @@ pub struct SwscConfig {
     pub svd: SvdBackend,
     /// Seed for the randomized SVD sketch.
     pub seed: u64,
+    /// Thread config for the k-means and SVD hot paths. The compressed
+    /// output is bit-identical at any thread count, so this only trades
+    /// wall-clock (deterministic chunked scheduling in [`crate::exec`]).
+    pub exec: ExecConfig,
 }
 
 impl Default for SwscConfig {
@@ -46,6 +51,7 @@ impl Default for SwscConfig {
             kmeans: KMeansConfig::default(),
             svd: SvdBackend::Auto,
             seed: 0,
+            exec: exec::global(),
         }
     }
 }
@@ -148,6 +154,7 @@ pub fn compress_matrix(w: &Tensor, cfg: &SwscConfig) -> CompressedMatrix {
     let mut km_cfg = cfg.kmeans.clone();
     km_cfg.k = cfg.clusters;
     km_cfg.seed = cfg.seed;
+    km_cfg.exec = cfg.exec;
     let km = cluster_channels(w, &km_cfg);
     let w_prime = km.reconstruct();
 
@@ -176,7 +183,7 @@ fn run_svd(err: &Tensor, rank: usize, cfg: &SwscConfig) -> Svd {
         truncate(&svd_jacobi(err), rank)
     } else {
         let mut rng = Rng::new(cfg.seed ^ 0x5D5C_77E1);
-        svd_randomized(err, rank, 8, 2, &mut rng)
+        svd_randomized_with(err, rank, 8, 2, &mut rng, cfg.exec)
     }
 }
 

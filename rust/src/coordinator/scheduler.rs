@@ -1,17 +1,19 @@
 //! Per-matrix compression job scheduler.
 //!
 //! Every matrix in a [`CompressionPlan`] is an independent job; the
-//! scheduler runs them on a fixed worker pool (std threads + channels —
-//! the vendored crate set has no rayon/tokio) and merges results into a
-//! single [`SwscFile`]. Output is deterministic: job seeds are derived
-//! from matrix names at planning time, and the merge sorts by name.
+//! scheduler fans them out on the deterministic executor ([`crate::exec`])
+//! and merges results into a single [`SwscFile`]. Output is deterministic
+//! twice over: job seeds are derived from matrix names at planning time,
+//! each job lands in its plan-order slot regardless of which worker ran it,
+//! and the per-matrix compression itself is bit-identical at any thread
+//! count.
 
 use crate::compress::{compress_matrix, matrix_stats, CompressionPlan, MatrixStats};
 use crate::coordinator::metrics::Metrics;
+use crate::exec::{self, ExecConfig};
 use crate::io::{Checkpoint, SwscFile};
 use crate::util::timer::time_it;
 use anyhow::{Context, Result};
-use std::sync::mpsc;
 use std::sync::Arc;
 
 /// Result of compressing a whole model.
@@ -23,6 +25,13 @@ pub struct CompressOutcome {
 
 /// Compress every matrix in `plan`, spreading jobs across `workers`
 /// threads. Tensors *not* named by the plan pass through as dense entries.
+///
+/// `workers` bounds the *total* CPU budget: the job-level fan-out takes
+/// `min(workers, jobs)` threads and each job's internal `SwscConfig.exec`
+/// gets the remaining `workers / fan-out` share, so `workers = 1` is fully
+/// serial. With many small matrices the job-level fan-out dominates, with
+/// few large ones the in-matrix fan-out does. Either way the merged file
+/// is bit-identical at any worker count.
 pub fn compress_model(
     ck: &Checkpoint,
     plan: &CompressionPlan,
@@ -30,43 +39,41 @@ pub fn compress_model(
     metrics: Option<Arc<Metrics>>,
 ) -> Result<CompressOutcome> {
     let workers = workers.clamp(1, 64);
+    let job_threads = workers.min(plan.len().max(1));
+    // Floor split keeps total threads ≤ workers — the budget is a hard
+    // bound, so a remainder core may idle (workers=8, 3 jobs → 3×2) rather
+    // than oversubscribe for the whole run. Thread counts never touch
+    // numerics either way.
+    let inner = ExecConfig::with_threads(workers / job_threads);
     let (outcome, wall) = time_it(|| -> Result<(SwscFile, Vec<MatrixStats>)> {
-        // Job list: (name, tensor, config).
-        let mut jobs = Vec::new();
+        // Validate up front so workers never see a bad job.
+        let mut jobs = Vec::with_capacity(plan.len());
         for mp in &plan.matrices {
             let t = ck.get(&mp.name).with_context(|| format!("plan names missing tensor `{}`", mp.name))?;
             anyhow::ensure!(t.ndim() == 2, "plan matrix `{}` is not 2-D", mp.name);
-            jobs.push((mp.name.clone(), t.clone(), mp.config.clone()));
+            let mut cfg = mp.config.clone();
+            cfg.exec = inner;
+            jobs.push((mp.name.as_str(), t, cfg));
         }
 
-        let (result_tx, result_rx) = mpsc::channel();
-        let jobs = Arc::new(std::sync::Mutex::new(jobs));
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let jobs = jobs.clone();
-                let tx = result_tx.clone();
-                let metrics = metrics.clone();
-                scope.spawn(move || loop {
-                    let job = jobs.lock().unwrap().pop();
-                    let Some((name, tensor, cfg)) = job else { break };
-                    let (compressed, secs) = time_it(|| compress_matrix(&tensor, &cfg));
-                    if let Some(m) = &metrics {
-                        m.incr("compress.jobs", 1);
-                        m.record("compress.job_seconds", secs);
-                    }
-                    let stats = matrix_stats(&name, &tensor, &compressed);
-                    // Receiver outlives the scope; ignore send error on
-                    // early drop.
-                    let _ = tx.send((name, compressed, stats));
-                });
-            }
+        // One pre-assigned slot per plan entry: results come back in plan
+        // order no matter which worker ran which job. Jobs are uneven
+        // (matrix sizes vary), so use the dynamically balanced variant.
+        let results = exec::map_indexed_balanced(ExecConfig::with_threads(job_threads), jobs.len(), |i| {
+            let (name, tensor, cfg) = &jobs[i];
+            let (compressed, secs) = time_it(|| compress_matrix(tensor, cfg));
+            let stats = matrix_stats(name, tensor, &compressed);
+            (compressed, stats, secs)
         });
-        drop(result_tx);
 
         let mut file = SwscFile::new();
-        let mut stats = Vec::new();
-        for (name, compressed, st) in result_rx {
-            file.compressed.insert(name, compressed);
+        let mut stats = Vec::with_capacity(results.len());
+        for ((name, _, _), (compressed, st, secs)) in jobs.iter().zip(results) {
+            if let Some(m) = &metrics {
+                m.incr("compress.jobs", 1);
+                m.record("compress.job_seconds", secs);
+            }
+            file.compressed.insert(name.to_string(), compressed);
             stats.push(st);
         }
         stats.sort_by(|a, b| a.name.cmp(&b.name));

@@ -1,0 +1,405 @@
+//! Deterministic parallel execution core.
+//!
+//! Every compression-time hot path (blocked matmul, Lloyd assign/update,
+//! randomized-SVD GEMMs, the model-level compression driver) runs through
+//! this module. The design goal is *bit-identical output at any thread
+//! count*, which is what lets the rest of the repo treat parallelism as a
+//! pure go-faster knob: property tests compare `threads = 1` against
+//! `threads ∈ {2, 4, 8}` with exact equality, and a `.swsc` file produced
+//! on a 64-core box byte-matches one produced on a laptop.
+//!
+//! ## Why determinism is an invariant here
+//!
+//! SWSC compression is seeded end-to-end (k-means++ picks, randomized-SVD
+//! sketches, per-matrix job seeds derived from the plan seed). A scheduler
+//! that let thread count perturb float summation order would silently break
+//! that contract: Table I numbers would stop being reproducible, the
+//! L1-vs-L3 parity tests would need sloppy tolerances, and checkpoint
+//! byte-diffs would be useless. Determinism is therefore treated as a hard
+//! invariant, not a nice-to-have — the scheduling policy below is chosen so
+//! that it costs us almost nothing.
+//!
+//! ## Deterministic chunked scheduling
+//!
+//! Work of size `n` is cut at **fixed chunk boundaries** that depend only
+//! on `n` and the per-call chunk size — never on the thread count. Each
+//! chunk either
+//!
+//! - writes into a **pre-assigned disjoint slot** (a row band of the output
+//!   buffer, or element `i` of a result vector), or
+//! - returns a **partial value** (e.g. a partial inertia sum) that the
+//!   caller reduces **in chunk order**.
+//!
+//! Which worker executes which chunk is irrelevant: slots don't overlap and
+//! reductions never happen in completion order. Fine-grained uniform loops
+//! get chunks by static round-robin (worker `w` runs chunks `w, w + T,
+//! w + 2T, …` — no atomics, fully safe Rust); coarse uneven jobs use
+//! [`map_indexed_balanced`], where workers claim indices from an atomic
+//! counter but still write to their pre-assigned slots. With `threads = 1`
+//! the chunks run in order on the calling thread — the serial path is
+//! literally the same code.
+//!
+//! Note the guarantee is *identical output across thread counts*, with the
+//! same fixed chunk layout everywhere. For independent outputs (matmul
+//! rows, k-means labels) this is also bit-identical to an un-chunked serial
+//! loop; for float reductions the per-chunk grouping is the canonical
+//! order.
+//!
+//! ## Picking thread counts
+//!
+//! [`ExecConfig::from_env`] resolves, in order: the `SWSC_THREADS`
+//! environment variable, then `std::thread::available_parallelism()`, then
+//! 1. The process-wide default is cached in [`global`]; APIs that need
+//! explicit control (property tests, the bench thread sweep, the
+//! coordinator's `--workers` flag) take an [`ExecConfig`] and everything
+//! else delegates to the global one. Workers are scoped `std::thread`s
+//! spawned per call — at the matrix sizes this pipeline sees (≥ 128 per
+//! side) spawn cost is well under 1% of the work; tiny inputs fall back to
+//! the inline serial path via the `threads.min(chunks)` clamp.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Hard ceiling on worker threads — a guard against absurd env values, not
+/// a tuning knob.
+pub const MAX_THREADS: usize = 256;
+
+/// Thread-count configuration for the deterministic executor.
+///
+/// The thread count never affects results, only wall-clock; `threads = 1`
+/// reproduces the serial path exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Number of worker threads (including the calling thread). Always ≥ 1.
+    pub threads: usize,
+}
+
+impl ExecConfig {
+    /// Resolve from the environment: `SWSC_THREADS` if set and positive,
+    /// otherwise the machine's available parallelism, otherwise 1.
+    pub fn from_env() -> ExecConfig {
+        let threads = std::env::var("SWSC_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        ExecConfig::with_threads(threads)
+    }
+
+    /// Single-threaded config — the reference serial path.
+    pub fn serial() -> ExecConfig {
+        ExecConfig { threads: 1 }
+    }
+
+    /// Explicit thread count (clamped to `1..=MAX_THREADS`).
+    pub fn with_threads(threads: usize) -> ExecConfig {
+        ExecConfig { threads: threads.clamp(1, MAX_THREADS) }
+    }
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        global()
+    }
+}
+
+/// Process-wide default config, resolved from the environment once.
+pub fn global() -> ExecConfig {
+    static GLOBAL: OnceLock<ExecConfig> = OnceLock::new();
+    *GLOBAL.get_or_init(ExecConfig::from_env)
+}
+
+/// Fixed chunk boundaries for `n` items: `⌈n/chunk⌉` ranges of `chunk`
+/// items (the last one ragged). Depends only on `n` and `chunk` — never on
+/// the thread count — which is what makes the scheduling deterministic.
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<Range<usize>> {
+    let chunk = chunk.max(1);
+    (0..n).step_by(chunk).map(|s| s..(s + chunk).min(n)).collect()
+}
+
+/// The one static scheduling policy: deal `items` round-robin to `workers`
+/// lists (worker `w` gets items `w, w + W, w + 2W, …`), run list 0 on the
+/// calling thread and the rest on scoped threads. Callers guarantee
+/// `workers ≥ 2`; item payloads carry their own pre-assigned destinations,
+/// so which worker runs an item never affects results. Panics in `f`
+/// propagate to the caller.
+fn run_static<I, F>(workers: usize, items: Vec<I>, f: F)
+where
+    I: Send,
+    F: Fn(I) + Sync,
+{
+    let mut per_worker: Vec<Vec<I>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        per_worker[i % workers].push(item);
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut lists = per_worker.into_iter();
+        let mine = lists.next().unwrap();
+        for work in lists {
+            scope.spawn(move || {
+                for item in work {
+                    f(item);
+                }
+            });
+        }
+        for item in mine {
+            f(item);
+        }
+    });
+}
+
+/// Map `0..m` to values, one pre-assigned output slot per index.
+///
+/// `f(i)` may run on any worker, but its result always lands in slot `i`,
+/// so the returned vector is identical at every thread count. Panics in `f`
+/// propagate to the caller.
+pub fn map_indexed<T, F>(cfg: ExecConfig, m: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = cfg.threads.min(m);
+    if workers <= 1 {
+        return (0..m).map(f).collect();
+    }
+
+    let mut slots: Vec<Option<T>> = (0..m).map(|_| None).collect();
+    {
+        let items: Vec<(usize, &mut Option<T>)> = slots.iter_mut().enumerate().collect();
+        run_static(workers, items, |(i, slot)| *slot = Some(f(i)));
+    }
+    slots.into_iter().map(|s| s.expect("exec: unfilled slot")).collect()
+}
+
+/// Like [`map_indexed`], but workers claim indices dynamically from an
+/// atomic counter instead of the static round-robin split. Results still
+/// land in pre-assigned slots, so the output is identical — which worker
+/// ran an index never matters. Use this when items have very uneven cost
+/// and each dwarfs one lock acquisition (e.g. whole-matrix compression
+/// jobs); keep [`map_indexed`] for fine-grained uniform loops.
+pub fn map_indexed_balanced<T, F>(cfg: ExecConfig, m: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = cfg.threads.min(m);
+    if workers <= 1 {
+        return (0..m).map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = (0..m).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let (f, slots, next) = (&f, &slots, &next);
+        let run = move || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= m {
+                break;
+            }
+            *slots[i].lock().unwrap() = Some(f(i));
+        };
+        for _ in 1..workers {
+            scope.spawn(run);
+        }
+        run();
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("exec: unfilled slot"))
+        .collect()
+}
+
+/// Map fixed chunks of `0..n` to values, returned in chunk order.
+///
+/// The canonical shape for deterministic reductions: compute a partial per
+/// chunk, then fold the returned vector front-to-back.
+pub fn map_chunks<T, F>(cfg: ExecConfig, n: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let ranges = chunk_ranges(n, chunk);
+    map_indexed(cfg, ranges.len(), |i| f(ranges[i].clone()))
+}
+
+/// Deterministic bounded-memory chunk reduction: [`map_chunks`] followed by
+/// an in-order fold, but with at most `cfg.threads` partials alive at once.
+/// Chunk boundaries and fold order are fixed, so results are bit-identical
+/// at any thread count; only how many partials coexist in memory varies.
+/// Use this when partials are large (e.g. k×m centroid sums) and full
+/// materialization would be gigabytes on wide matrices.
+pub fn fold_chunks<T, F, G>(cfg: ExecConfig, n: usize, chunk: usize, map: F, mut fold: G)
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+    G: FnMut(T),
+{
+    let ranges = chunk_ranges(n, chunk);
+    for wave in ranges.chunks(cfg.threads.max(1)) {
+        for partial in map_indexed(cfg, wave.len(), |i| map(wave[i].clone())) {
+            fold(partial);
+        }
+    }
+}
+
+/// Run `f` over fixed row bands of a mutable `rows × row_len` buffer.
+///
+/// `data` is split every `rows_per_chunk` rows; `f(first_row, band)` gets
+/// the band's starting row index and its disjoint `&mut` slice. Bands never
+/// alias, so no synchronization is needed and the write pattern is
+/// identical at every thread count.
+pub fn for_row_bands<T, F>(
+    cfg: ExecConfig,
+    data: &mut [T],
+    rows: usize,
+    row_len: usize,
+    rows_per_chunk: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), rows * row_len, "band buffer is not rows × row_len");
+    if rows == 0 {
+        return;
+    }
+    let rpc = rows_per_chunk.max(1);
+
+    let mut bands: Vec<(usize, &mut [T])> = Vec::with_capacity(rows.div_ceil(rpc));
+    let mut rest = data;
+    let mut row = 0;
+    while row < rows {
+        let take = rpc.min(rows - row);
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+        bands.push((row, head));
+        rest = tail;
+        row += take;
+    }
+
+    let workers = cfg.threads.min(bands.len());
+    if workers <= 1 {
+        for (first_row, band) in bands {
+            f(first_row, band);
+        }
+        return;
+    }
+    run_static(workers, bands, |(first_row, band)| f(first_row, band));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        assert_eq!(chunk_ranges(10, 4), vec![0..4, 4..8, 8..10]);
+        assert_eq!(chunk_ranges(0, 4), Vec::<Range<usize>>::new());
+        assert_eq!(chunk_ranges(3, 100), vec![0..3]);
+        // chunk = 0 is clamped, not an infinite loop
+        assert_eq!(chunk_ranges(2, 0), vec![0..1, 1..2]);
+    }
+
+    #[test]
+    fn map_indexed_preserves_slot_order() {
+        for threads in [1, 2, 4, 8] {
+            let got = map_indexed(ExecConfig::with_threads(threads), 37, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_runs_every_index_once() {
+        let hits = AtomicUsize::new(0);
+        let out = map_indexed(ExecConfig::with_threads(4), 100, |i| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn map_indexed_balanced_preserves_slot_order() {
+        for threads in [1, 2, 4, 8] {
+            let got = map_indexed_balanced(ExecConfig::with_threads(threads), 53, |i| i * 3);
+            let want: Vec<usize> = (0..53).map(|i| i * 3).collect();
+            assert_eq!(got, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn map_chunks_reduces_in_fixed_order() {
+        // Partial sums per chunk, folded front-to-back, must not depend on
+        // the thread count — the bit-for-bit guarantee the pipeline uses.
+        let xs: Vec<f64> = (0..1000).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let reduce = |threads: usize| -> f64 {
+            map_chunks(ExecConfig::with_threads(threads), xs.len(), 64, |r| {
+                r.map(|i| xs[i]).sum::<f64>()
+            })
+            .iter()
+            .sum()
+        };
+        let base = reduce(1);
+        for threads in [2, 3, 4, 8] {
+            assert_eq!(base.to_bits(), reduce(threads).to_bits(), "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn fold_chunks_matches_map_chunks_bitwise() {
+        let xs: Vec<f64> = (0..777).map(|i| 1.0 / (3.0 + i as f64)).collect();
+        let full: f64 = map_chunks(ExecConfig::serial(), xs.len(), 50, |r| {
+            r.map(|i| xs[i]).sum::<f64>()
+        })
+        .iter()
+        .sum();
+        for threads in [1, 2, 4, 8] {
+            let mut folded = 0.0f64;
+            fold_chunks(
+                ExecConfig::with_threads(threads),
+                xs.len(),
+                50,
+                |r| r.map(|i| xs[i]).sum::<f64>(),
+                |p| folded += p,
+            );
+            assert_eq!(full.to_bits(), folded.to_bits(), "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn row_bands_write_disjoint_slots() {
+        for threads in [1, 2, 4, 8] {
+            let (rows, row_len) = (23, 7);
+            let mut buf = vec![0u32; rows * row_len];
+            for_row_bands(ExecConfig::with_threads(threads), &mut buf, rows, row_len, 4, |r0, band| {
+                for (off, v) in band.iter_mut().enumerate() {
+                    *v = (r0 * row_len + off) as u32;
+                }
+            });
+            let want: Vec<u32> = (0..rows * row_len).map(|i| i as u32).collect();
+            assert_eq!(buf, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_work_is_fine() {
+        assert!(map_indexed(ExecConfig::with_threads(4), 0, |i| i).is_empty());
+        let mut empty: Vec<f32> = Vec::new();
+        for_row_bands(ExecConfig::with_threads(4), &mut empty, 0, 5, 8, |_, _| {
+            panic!("no bands expected")
+        });
+    }
+
+    #[test]
+    fn env_override_and_clamps() {
+        assert_eq!(ExecConfig::with_threads(0).threads, 1);
+        assert_eq!(ExecConfig::with_threads(100_000).threads, MAX_THREADS);
+        assert!(ExecConfig::from_env().threads >= 1);
+        assert_eq!(ExecConfig::serial().threads, 1);
+    }
+}

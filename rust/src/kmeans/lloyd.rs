@@ -1,7 +1,19 @@
 //! Lloyd iterations: assign → update, with empty-cluster repair.
+//!
+//! Both steps run on the deterministic executor: points are cut into fixed
+//! [`POINT_CHUNK`]-sized chunks (independent of thread count), each chunk
+//! produces labels plus partial sums, and partials are reduced in chunk
+//! order — so labels, inertia, and centroids are bit-identical at any
+//! thread count.
 
+use crate::exec::{self, ExecConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Fixed chunk size (in points) for the assign/update steps. Part of the
+/// numeric contract: partial inertia/centroid sums are grouped per chunk,
+/// so this constant must not depend on the thread count.
+pub const POINT_CHUNK: usize = 128;
 
 /// Output of the assignment step.
 #[derive(Debug, Clone)]
@@ -17,30 +29,47 @@ pub struct AssignResult {
 /// is a matmul, which is exactly how the L1 Pallas kernel phrases it for the
 /// MXU — keeping the two implementations step-equivalent.
 pub fn assign(points: &Tensor, centroids: &Tensor) -> (Vec<u32>, f64) {
+    assign_with(points, centroids, exec::global())
+}
+
+/// [`assign`] with an explicit thread config. Labels are per-point
+/// independent; inertia is reduced from fixed-chunk partials in chunk
+/// order — bit-identical at any `exec.threads`.
+pub fn assign_with(points: &Tensor, centroids: &Tensor, exec: ExecConfig) -> (Vec<u32>, f64) {
     let n = points.rows();
     let k = centroids.rows();
     debug_assert_eq!(points.cols(), centroids.cols());
 
     let cnorm: Vec<f64> = (0..k).map(|c| Tensor::dot(centroids.row(c), centroids.row(c))).collect();
     // cross[j][c] = points[j] · centroids[c]   (n×m · m×k)
-    let cross = points.matmul(&centroids.transpose());
+    let cross = points.matmul_with(&centroids.transpose_with(exec), exec);
 
-    let mut labels = vec![0u32; n];
-    let mut inertia = 0.0f64;
-    for j in 0..n {
-        let pnorm = Tensor::dot(points.row(j), points.row(j));
-        let mut best_c = 0usize;
-        let mut best_d = f64::INFINITY;
-        let crow = cross.row(j);
-        for c in 0..k {
-            let d = pnorm - 2.0 * crow[c] as f64 + cnorm[c];
-            if d < best_d {
-                best_d = d;
-                best_c = c;
+    let parts = exec::map_chunks(exec, n, POINT_CHUNK, |range| {
+        let mut labels = Vec::with_capacity(range.len());
+        let mut partial = 0.0f64;
+        for j in range {
+            let pnorm = Tensor::dot(points.row(j), points.row(j));
+            let mut best_c = 0usize;
+            let mut best_d = f64::INFINITY;
+            let crow = cross.row(j);
+            for c in 0..k {
+                let d = pnorm - 2.0 * crow[c] as f64 + cnorm[c];
+                if d < best_d {
+                    best_d = d;
+                    best_c = c;
+                }
             }
+            labels.push(best_c as u32);
+            partial += best_d.max(0.0);
         }
-        labels[j] = best_c as u32;
-        inertia += best_d.max(0.0);
+        (labels, partial)
+    });
+
+    let mut labels = Vec::with_capacity(n);
+    let mut inertia = 0.0f64;
+    for (chunk_labels, partial) in parts {
+        labels.extend_from_slice(&chunk_labels);
+        inertia += partial;
     }
     (labels, inertia)
 }
@@ -49,18 +78,52 @@ pub fn assign(points: &Tensor, centroids: &Tensor) -> (Vec<u32>, f64) {
 /// Returns the per-cluster counts. Empty clusters keep their old position
 /// (repair happens in [`lloyd`]).
 pub fn update(points: &Tensor, labels: &[u32], centroids: &mut Tensor) -> Vec<usize> {
+    update_with(points, labels, centroids, exec::global())
+}
+
+/// [`update`] with an explicit thread config. Each fixed chunk of points
+/// accumulates its own `k × m` partial sums; partials are folded in chunk
+/// order, so the means are bit-identical at any `exec.threads`.
+pub fn update_with(
+    points: &Tensor,
+    labels: &[u32],
+    centroids: &mut Tensor,
+    exec: ExecConfig,
+) -> Vec<usize> {
     let (k, m) = (centroids.rows(), centroids.cols());
     let mut counts = vec![0usize; k];
     let mut sums = vec![0.0f64; k * m];
-    for (j, &lab) in labels.iter().enumerate() {
-        let c = lab as usize;
-        counts[c] += 1;
-        let row = points.row(j);
-        let acc = &mut sums[c * m..(c + 1) * m];
-        for (a, &v) in acc.iter_mut().zip(row) {
-            *a += v as f64;
-        }
-    }
+    // Bounded-memory reduction: each chunk's k×m partial would be gigabytes
+    // if all ⌈n/POINT_CHUNK⌉ of them were materialized on very wide
+    // matrices; fold_chunks keeps at most `threads` alive while preserving
+    // the fixed chunk layout and fold order.
+    exec::fold_chunks(
+        exec,
+        labels.len(),
+        POINT_CHUNK,
+        |range| {
+            let mut counts = vec![0usize; k];
+            let mut sums = vec![0.0f64; k * m];
+            for j in range {
+                let c = labels[j] as usize;
+                counts[c] += 1;
+                let row = points.row(j);
+                let acc = &mut sums[c * m..(c + 1) * m];
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += v as f64;
+                }
+            }
+            (counts, sums)
+        },
+        |(chunk_counts, chunk_sums)| {
+            for (c, &cc) in chunk_counts.iter().enumerate() {
+                counts[c] += cc;
+            }
+            for (a, &v) in sums.iter_mut().zip(&chunk_sums) {
+                *a += v;
+            }
+        },
+    );
     for c in 0..k {
         if counts[c] == 0 {
             continue;
@@ -85,18 +148,31 @@ pub fn lloyd(
     tol: f64,
     rng: &mut Rng,
 ) -> AssignResult {
+    lloyd_with(points, centroids, max_iters, tol, rng, exec::global())
+}
+
+/// [`lloyd`] with an explicit thread config (bit-identical at any
+/// `exec.threads`, like every `_with` variant).
+pub fn lloyd_with(
+    points: &Tensor,
+    centroids: &mut Tensor,
+    max_iters: usize,
+    tol: f64,
+    rng: &mut Rng,
+    exec: ExecConfig,
+) -> AssignResult {
     let mut labels = vec![0u32; points.rows()];
     let mut inertia = f64::INFINITY;
     let mut iterations = 0;
 
     for it in 0..max_iters.max(1) {
         iterations = it + 1;
-        let (new_labels, new_inertia) = assign(points, centroids);
+        let (new_labels, new_inertia) = assign_with(points, centroids, exec);
         labels = new_labels;
         inertia = new_inertia;
 
         let before = centroids.clone();
-        let counts = update(points, &labels, centroids);
+        let counts = update_with(points, &labels, centroids, exec);
 
         // Empty-cluster repair: move dead centroids onto the worst-served
         // points so no representative vector is wasted.
@@ -107,7 +183,7 @@ pub fn lloyd(
         let shift = centroids.sub(&before).fro_norm();
         if shift < tol {
             // Re-assign once more so labels match the final centroids.
-            let (fin_labels, fin_inertia) = assign(points, centroids);
+            let (fin_labels, fin_inertia) = assign_with(points, centroids, exec);
             labels = fin_labels;
             inertia = fin_inertia;
             break;
@@ -167,6 +243,28 @@ mod tests {
     }
 
     #[test]
+    fn assign_update_bitwise_parity_across_threads() {
+        let mut rng = Rng::new(44);
+        // > 2 chunks of POINT_CHUNK so the reduction actually crosses chunks.
+        let pts = Tensor::randn(&[3 * super::POINT_CHUNK + 17, 9], &mut rng);
+        let cen0 = Tensor::randn(&[7, 9], &mut rng);
+        let bits = |x: &Tensor| x.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        let (base_labels, base_inertia) = assign_with(&pts, &cen0, ExecConfig::serial());
+        let mut base_cen = cen0.clone();
+        let base_counts = update_with(&pts, &base_labels, &mut base_cen, ExecConfig::serial());
+        for threads in [2, 4, 8] {
+            let cfg = ExecConfig::with_threads(threads);
+            let (labels, inertia) = assign_with(&pts, &cen0, cfg);
+            assert_eq!(labels, base_labels, "labels, {threads} threads");
+            assert_eq!(inertia.to_bits(), base_inertia.to_bits(), "inertia, {threads} threads");
+            let mut cen = cen0.clone();
+            let counts = update_with(&pts, &labels, &mut cen, cfg);
+            assert_eq!(counts, base_counts, "counts, {threads} threads");
+            assert_eq!(bits(&cen), bits(&base_cen), "centroids, {threads} threads");
+        }
+    }
+
+    #[test]
     fn lloyd_converges_on_two_blobs() {
         let mut rng = Rng::new(41);
         let mut pts = Tensor::zeros(&[40, 2]);
@@ -191,7 +289,7 @@ mod tests {
         let pts = Tensor::from_vec(&[4, 1], vec![0.0, 0.1, 9.9, 10.0]);
         let mut cen = Tensor::from_vec(&[2, 1], vec![0.0, 0.0]);
         let mut rng = Rng::new(42);
-        let res = lloyd(&pts, &mut cen, 20, 1e-9, &mut rng);
+        let res = lloyd_with(&pts, &mut cen, 20, 1e-9, &mut rng, ExecConfig::serial());
         let mut seen: Vec<u32> = res.labels.clone();
         seen.sort_unstable();
         seen.dedup();

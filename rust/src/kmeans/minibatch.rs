@@ -6,7 +6,8 @@
 //! centroid toward the batch mean with a per-centroid learning rate
 //! `1/count`.
 
-use super::lloyd::assign;
+use super::lloyd::assign_with;
+use crate::exec::{self, ExecConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -14,10 +15,25 @@ use crate::util::rng::Rng;
 /// final centroids (k × m) plus a full-data assignment pass.
 pub fn minibatch_kmeans(
     points: &Tensor,
+    centroids: Tensor,
+    batch: usize,
+    steps: usize,
+    rng: &mut Rng,
+) -> (Tensor, Vec<u32>, f64) {
+    minibatch_kmeans_with(points, centroids, batch, steps, rng, exec::global())
+}
+
+/// [`minibatch_kmeans`] with an explicit thread config. The per-batch and
+/// final assignments run on the deterministic executor; the centroid drift
+/// loop is inherently sequential (counts evolve sample by sample) and stays
+/// serial, so results are bit-identical at any `exec.threads`.
+pub fn minibatch_kmeans_with(
+    points: &Tensor,
     mut centroids: Tensor,
     batch: usize,
     steps: usize,
     rng: &mut Rng,
+    exec: ExecConfig,
 ) -> (Tensor, Vec<u32>, f64) {
     let n = points.rows();
     let m = points.cols();
@@ -34,7 +50,7 @@ pub fn minibatch_kmeans(
             picks.push(j);
             scratch.row_mut(b).copy_from_slice(points.row(j));
         }
-        let (labels, _) = assign(&scratch, &centroids);
+        let (labels, _) = assign_with(&scratch, &centroids, exec);
         for (b, &lab) in labels.iter().enumerate() {
             let c = lab as usize;
             counts[c] += 1.0;
@@ -47,7 +63,7 @@ pub fn minibatch_kmeans(
         }
     }
 
-    let (labels, inertia) = assign(points, &centroids);
+    let (labels, inertia) = assign_with(points, &centroids, exec);
     (centroids, labels, inertia)
 }
 

@@ -15,9 +15,10 @@ mod lloyd;
 mod minibatch;
 
 pub use init::{init_kmeans_pp, init_random, InitMethod};
-pub use lloyd::{assign, lloyd, update, AssignResult};
-pub use minibatch::minibatch_kmeans;
+pub use lloyd::{assign, assign_with, lloyd, lloyd_with, update, update_with, AssignResult, POINT_CHUNK};
+pub use minibatch::{minibatch_kmeans, minibatch_kmeans_with};
 
+use crate::exec::{self, ExecConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -44,6 +45,9 @@ pub struct KMeansConfig {
     pub representative: Representative,
     /// RNG seed (clustering is deterministic given the seed).
     pub seed: u64,
+    /// Thread config for the assign/update steps. Results are bit-identical
+    /// at any thread count (deterministic chunked scheduling in [`exec`]).
+    pub exec: ExecConfig,
 }
 
 impl Default for KMeansConfig {
@@ -55,6 +59,7 @@ impl Default for KMeansConfig {
             init: InitMethod::KMeansPlusPlus,
             representative: Representative::Mean,
             seed: 0,
+            exec: exec::global(),
         }
     }
 }
@@ -98,14 +103,14 @@ pub fn cluster_channels(w: &Tensor, cfg: &KMeansConfig) -> KMeansResult {
 
     // Work in channel-major layout: row i = channel i (n × m). A transposed
     // copy makes every distance computation contiguous.
-    let channels = w.transpose();
+    let channels = w.transpose_with(cfg.exec);
 
     let mut centroids_rows = match cfg.init {
         InitMethod::Random => init_random(&channels, k, &mut rng),
         InitMethod::KMeansPlusPlus => init_kmeans_pp(&channels, k, &mut rng),
     };
 
-    let res = lloyd(&channels, &mut centroids_rows, cfg.max_iters, cfg.tol, &mut rng);
+    let res = lloyd_with(&channels, &mut centroids_rows, cfg.max_iters, cfg.tol, &mut rng, cfg.exec);
 
     let centroids_rows = match cfg.representative {
         Representative::Mean => centroids_rows,
@@ -114,7 +119,7 @@ pub fn cluster_channels(w: &Tensor, cfg: &KMeansConfig) -> KMeansResult {
 
     // Back to the paper's orientation: centroids as columns (m × k).
     KMeansResult {
-        centroids: centroids_rows.transpose(),
+        centroids: centroids_rows.transpose_with(cfg.exec),
         labels: res.labels,
         inertia: res.inertia,
         iterations: res.iterations,

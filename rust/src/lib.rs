@@ -16,6 +16,12 @@
 //! Python runs only at build time (`make artifacts`); the rust binary loads
 //! `artifacts/*.hlo.txt` through PJRT and is self-contained afterwards.
 //!
+//! Compression-time compute (matmul, Lloyd steps, randomized-SVD GEMMs, the
+//! per-matrix driver) is parallelized through the [`exec`] module, whose
+//! deterministic chunked scheduling keeps every numeric result bit-identical
+//! at any thread count (`SWSC_THREADS` overrides the default of all
+//! available cores; `1` reproduces the serial path exactly).
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -36,6 +42,7 @@ pub mod bench;
 pub mod compress;
 pub mod coordinator;
 pub mod eval;
+pub mod exec;
 pub mod io;
 pub mod kmeans;
 pub mod linalg;

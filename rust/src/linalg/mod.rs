@@ -16,4 +16,4 @@ mod qr;
 mod svd;
 
 pub use qr::qr_householder;
-pub use svd::{svd_jacobi, svd_randomized, truncate, Svd};
+pub use svd::{svd_jacobi, svd_randomized, svd_randomized_with, truncate, Svd};

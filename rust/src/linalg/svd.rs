@@ -2,6 +2,7 @@
 //! truncated SVD.
 
 use super::qr::qr_householder;
+use crate::exec::{self, ExecConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -164,36 +165,52 @@ pub fn truncate(svd: &Svd, r: usize) -> Svd {
 /// `q` power iterations with QR re-orthogonalization, small exact SVD of
 /// `Qᵀ·A`. `oversample` extra sketch columns sharpen the tail.
 pub fn svd_randomized(a: &Tensor, rank: usize, oversample: usize, power_iters: usize, rng: &mut Rng) -> Svd {
+    svd_randomized_with(a, rank, oversample, power_iters, rng, exec::global())
+}
+
+/// [`svd_randomized`] with an explicit thread config. The subspace-iteration
+/// GEMMs (`A·Ω`, `Aᵀ·Q`, `A·Z`, `Qᵀ·A`, `Q·V_b`) are the cost center and run
+/// row-parallel on the deterministic executor; the Householder QR and the
+/// small exact Jacobi stay serial. Output is bit-identical at any
+/// `exec.threads`.
+pub fn svd_randomized_with(
+    a: &Tensor,
+    rank: usize,
+    oversample: usize,
+    power_iters: usize,
+    rng: &mut Rng,
+    exec: ExecConfig,
+) -> Svd {
     let (m, n) = (a.rows(), a.cols());
     let r = rank.min(m.min(n)).max(1);
     let sketch = (r + oversample).min(m.min(n));
 
     // Y = A · Ω, Ω: n × sketch gaussian.
     let omega = Tensor::randn(&[n, sketch], rng);
-    let mut q = qr_householder(&a.matmul(&omega));
+    let mut q = qr_householder(&a.matmul_with(&omega, exec));
 
     // Power iterations: (A Aᵀ)^q Y with re-orthogonalization each half-step.
     for _ in 0..power_iters {
-        let z = qr_householder(&a.t_matmul(&q)); // n × sketch
-        q = qr_householder(&a.matmul(&z)); // m × sketch
+        let z = qr_householder(&a.t_matmul_with(&q, exec)); // n × sketch
+        q = qr_householder(&a.matmul_with(&z, exec)); // m × sketch
     }
 
     // B = Qᵀ A  (sketch × n) — small; exact Jacobi on Bᵀ (n × sketch) keeps
     // m >= n orientation for the one-sided method.
-    let b = q.t_matmul(a);
-    let svd_bt = svd_jacobi(&b.transpose()); // Bᵀ = U_b S V_bᵀ  ⇒  B = V_b S U_bᵀ
+    let b = q.t_matmul_with(a, exec);
+    let svd_bt = svd_jacobi(&b.transpose_with(exec)); // Bᵀ = U_b S V_bᵀ  ⇒  B = V_b S U_bᵀ
     let r_keep = r.min(svd_bt.rank());
 
     // B = (V_b) S (U_bᵀ): left factors of B are V_b's columns.
     // U = Q · V_b[:, :r], Vt = U_b[:, :r]ᵀ.
-    let vb = svd_bt.vt.transpose(); // sketch × sketch
+    let vb = svd_bt.vt.transpose_with(exec); // sketch × sketch
     let mut vb_r = Tensor::zeros(&[vb.rows(), r_keep]);
     for j in 0..r_keep {
         for i in 0..vb.rows() {
             *vb_r.at_mut(i, j) = vb.at(i, j);
         }
     }
-    let u = q.matmul(&vb_r);
+    let u = q.matmul_with(&vb_r, exec);
     let mut vt = Tensor::zeros(&[r_keep, n]);
     for j in 0..r_keep {
         for i in 0..n {

@@ -71,7 +71,12 @@ fn print_help() {
            table1    --ckpt runs/default/model.swck [--bits 3,2] [--out table1.txt]\n\
            table2    [--m 4096]\n\
            pipeline  --steps 300 --out runs/pipeline\n\
-           info      [--preset small]\n"
+           info      [--preset small]\n\
+         \n\
+         env:\n\
+           SWSC_THREADS  worker threads for compression-time compute\n\
+                         (default: all cores; results are bit-identical\n\
+                         at any thread count, 1 = serial reference)\n"
     );
 }
 

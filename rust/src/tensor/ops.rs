@@ -7,68 +7,121 @@
 //! run inside XLA, not here.
 
 use super::Tensor;
+use crate::exec::{self, ExecConfig};
 
 /// Cache block edge for the matmul microkernel (f32: 64·64·4 B = 16 KiB per
-/// operand block, comfortably inside L1/L2).
+/// operand block, comfortably inside L1/L2). Also the row-band granularity
+/// handed to the executor: output rows are independent, so any banding is
+/// bit-identical to the serial kernel.
 const BLOCK: usize = 64;
 
-impl Tensor {
-    /// Matrix product `self · other` for 2-D tensors.
-    pub fn matmul(&self, other: &Tensor) -> Tensor {
-        let (m, k) = (self.rows(), self.cols());
-        let (k2, n) = (other.rows(), other.cols());
-        assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
-        let mut out = vec![0.0f32; m * n];
-        let a = self.data();
-        let b = other.data();
-        for ib in (0..m).step_by(BLOCK) {
-            let imax = (ib + BLOCK).min(m);
-            for kb in (0..k).step_by(BLOCK) {
-                let kmax = (kb + BLOCK).min(k);
-                for jb in (0..n).step_by(BLOCK) {
-                    let jmax = (jb + BLOCK).min(n);
-                    for i in ib..imax {
-                        let arow = &a[i * k..(i + 1) * k];
-                        let orow = &mut out[i * n..(i + 1) * n];
-                        for kk in kb..kmax {
-                            let aik = arow[kk];
-                            if aik == 0.0 {
-                                continue;
-                            }
-                            let brow = &b[kk * n..(kk + 1) * n];
-                            // Innermost j loop: contiguous, auto-vectorizes.
-                            for j in jb..jmax {
-                                orow[j] += aik * brow[j];
-                            }
-                        }
+/// Below this many multiply-adds a matmul runs inline serial: scoped-thread
+/// spawn latency (~tens of µs per worker) would dwarf the work. Thresholds
+/// only pick the thread count, never the chunk layout, so they cannot
+/// affect numerics.
+const MIN_PARALLEL_MACS: usize = 1 << 21;
+
+/// Below this many elements a transpose runs inline serial (pure copy —
+/// memory-bound, so the bar is higher per element than for matmul).
+const MIN_PARALLEL_ELEMS: usize = 1 << 17;
+
+/// One row band of the blocked i-k-j kernel: computes output rows
+/// `first_row..first_row + band.len()/n` into the disjoint band slice. The
+/// per-row accumulation order (kb → jb → kk → j) is exactly the serial
+/// kernel's, so banding never changes a bit of the result.
+fn matmul_band(a: &[f32], b: &[f32], k: usize, n: usize, first_row: usize, band: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = band.len() / n;
+    for kb in (0..k).step_by(BLOCK) {
+        let kmax = (kb + BLOCK).min(k);
+        for jb in (0..n).step_by(BLOCK) {
+            let jmax = (jb + BLOCK).min(n);
+            for r in 0..rows {
+                let arow = &a[(first_row + r) * k..(first_row + r + 1) * k];
+                let orow = &mut band[r * n..(r + 1) * n];
+                for kk in kb..kmax {
+                    // No zero-skip here: on dense weights a per-element
+                    // branch in the hot loop defeats vectorization and the
+                    // mispredict costs more than the multiply it saves.
+                    // Sparsity-aware paths belong in a dedicated kernel.
+                    let aik = arow[kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    // Innermost j loop: contiguous, auto-vectorizes.
+                    for j in jb..jmax {
+                        orow[j] += aik * brow[j];
                     }
                 }
             }
         }
+    }
+}
+
+impl Tensor {
+    /// Matrix product `self · other` for 2-D tensors, parallelized over row
+    /// bands with the process-wide [`exec::global`] config.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        self.matmul_with(other, exec::global())
+    }
+
+    /// [`Tensor::matmul`] with an explicit thread config. Output is
+    /// bit-identical for every `exec.threads`.
+    pub fn matmul_with(&self, other: &Tensor, exec: ExecConfig) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+        let exec = if m * n * k < MIN_PARALLEL_MACS { ExecConfig::serial() } else { exec };
+        let mut out = vec![0.0f32; m * n];
+        let a = self.data();
+        let b = other.data();
+        exec::for_row_bands(exec, &mut out, m, n, BLOCK, |first_row, band| {
+            matmul_band(a, b, k, n, first_row, band);
+        });
         Tensor::from_vec(&[m, n], out)
     }
 
     /// `selfᵀ · other` without materializing the transpose.
     pub fn t_matmul(&self, other: &Tensor) -> Tensor {
+        self.t_matmul_with(other, exec::global())
+    }
+
+    /// [`Tensor::t_matmul`] with an explicit thread config.
+    pub fn t_matmul_with(&self, other: &Tensor, exec: ExecConfig) -> Tensor {
         // (k×m)ᵀ·(k×n): result m×n. Transpose-copy then blocked matmul is
         // faster than a strided kernel at our sizes.
-        self.transpose().matmul(other)
+        self.transpose_with(exec).matmul_with(other, exec)
     }
 
     /// Transposed copy of a 2-D tensor.
     pub fn transpose(&self) -> Tensor {
+        self.transpose_with(exec::global())
+    }
+
+    /// [`Tensor::transpose`] with an explicit thread config. Pure disjoint
+    /// writes — trivially bit-identical at any thread count.
+    pub fn transpose_with(&self, exec: ExecConfig) -> Tensor {
         let (r, c) = (self.rows(), self.cols());
         let mut out = vec![0.0f32; r * c];
-        // Blocked transpose for cache friendliness.
-        for ib in (0..r).step_by(BLOCK) {
-            for jb in (0..c).step_by(BLOCK) {
-                for i in ib..(ib + BLOCK).min(r) {
-                    for j in jb..(jb + BLOCK).min(c) {
-                        out[j * r + i] = self.data()[i * c + j];
+        if r == 0 || c == 0 {
+            return Tensor::from_vec(&[c, r], out);
+        }
+        let exec = if r * c < MIN_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
+        let src = self.data();
+        // Band over output rows (input columns); blocked inner loops keep
+        // the cache behavior of the serial version.
+        exec::for_row_bands(exec, &mut out, c, r, BLOCK, |j0, band| {
+            let jrows = band.len() / r;
+            for ib in (0..r).step_by(BLOCK) {
+                let imax = (ib + BLOCK).min(r);
+                for jr in 0..jrows {
+                    let j = j0 + jr;
+                    for i in ib..imax {
+                        band[jr * r + i] = src[i * c + j];
                     }
                 }
             }
-        }
+        });
         Tensor::from_vec(&[c, r], out)
     }
 
@@ -189,6 +242,28 @@ mod tests {
             },
             |(a, b)| prop::assert_close(a.matmul(b).data(), naive_matmul(a, b).data(), 1e-3, 1e-3),
         );
+    }
+
+    #[test]
+    fn matmul_transpose_bitwise_parity_across_threads() {
+        let mut r = Rng::new(14);
+        // Ragged shapes on purpose (bands must handle partial chunks), and
+        // large enough to clear the serial-fallback thresholds so the
+        // parallel paths actually run.
+        let a = Tensor::randn(&[260, 190], &mut r);
+        let b = Tensor::randn(&[190, 170], &mut r);
+        let t = Tensor::randn(&[430, 310], &mut r);
+        assert!(260 * 190 * 170 >= MIN_PARALLEL_MACS);
+        assert!(430 * 310 >= MIN_PARALLEL_ELEMS);
+        // to_bits: derived f32 PartialEq is not bitwise (0.0 == -0.0).
+        let bits = |x: &Tensor| x.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        let base_mm = bits(&a.matmul_with(&b, ExecConfig::serial()));
+        let base_t = bits(&t.transpose_with(ExecConfig::serial()));
+        for threads in [2, 4, 8] {
+            let cfg = ExecConfig::with_threads(threads);
+            assert_eq!(bits(&a.matmul_with(&b, cfg)), base_mm, "matmul, {threads} threads");
+            assert_eq!(bits(&t.transpose_with(cfg)), base_t, "transpose, {threads} threads");
+        }
     }
 
     #[test]

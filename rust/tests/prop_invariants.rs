@@ -2,8 +2,9 @@
 //! (DESIGN.md §7). Uses the in-crate mini-prop harness (no proptest in the
 //! vendored set); every failure reports seed + case for exact replay.
 
-use swsc::compress::{compress_matrix, CompressionPlan, ProjectorSet, SwscConfig};
+use swsc::compress::{compress_matrix, CompressionPlan, ProjectorSet, SvdBackend, SwscConfig};
 use swsc::coordinator::compress_model;
+use swsc::exec::ExecConfig;
 use swsc::io::{pack_u32, unpack_u32, Checkpoint};
 use swsc::kmeans::{cluster_channels, KMeansConfig};
 use swsc::linalg::{svd_jacobi, truncate};
@@ -230,6 +231,93 @@ fn prop_planner_budget_within_tolerance() {
             } else {
                 Err(format!("m={m} target={target:.2} share={share:.2} -> {got:.3}"))
             }
+        },
+    );
+}
+
+/// ISSUE 1 tentpole invariant: the deterministic executor makes every
+/// compression-time result bit-identical across thread counts. Checks
+/// matmul, k-means labels/inertia/centroids, and the full
+/// `CompressedMatrix` against the `threads = 1` reference for threads ∈
+/// {2, 4, 8} on random shapes.
+#[test]
+fn prop_serial_parallel_parity_bitwise() {
+    const THREADS: [usize; 3] = [2, 4, 8];
+    // True bitwise comparison: derived f32 PartialEq would equate 0.0 with
+    // -0.0 and mismatch identical NaNs.
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+    check(
+        "threads ∈ {1,2,4,8} are bit-identical",
+        310,
+        6,
+        |r| {
+            // ≥ 128 per side so the matmul leg clears the serial-fallback
+            // work threshold and the parallel kernel actually runs; sizes
+            // and case count stay modest so debug-mode tier-1 runs fast.
+            let m = 128 + r.below(64);
+            let n = 128 + r.below(64);
+            let p = 128 + r.below(32);
+            let k = 2 + r.below(8);
+            let rank = 1 + r.below(6);
+            (Tensor::randn(&[m, n], r), Tensor::randn(&[n, p], r), k, rank)
+        },
+        |(a, b, k, rank)| {
+            // 1. Blocked matmul: row bands are independent.
+            let mm_base = bits(&a.matmul_with(b, ExecConfig::serial()));
+            for t in THREADS {
+                if bits(&a.matmul_with(b, ExecConfig::with_threads(t))) != mm_base {
+                    return Err(format!("matmul differs at {t} threads"));
+                }
+            }
+
+            // 2. K-means labels/inertia/centroids: fixed point chunks,
+            // partials reduced in chunk order.
+            let cluster = |exec: ExecConfig| {
+                let mut cfg = KMeansConfig { k: *k, seed: 11, max_iters: 8, ..Default::default() };
+                cfg.exec = exec;
+                cluster_channels(a, &cfg)
+            };
+            let km_base = cluster(ExecConfig::serial());
+            for t in THREADS {
+                let km = cluster(ExecConfig::with_threads(t));
+                if km.labels != km_base.labels {
+                    return Err(format!("kmeans labels differ at {t} threads"));
+                }
+                if km.inertia.to_bits() != km_base.inertia.to_bits() {
+                    return Err(format!(
+                        "kmeans inertia differs at {t} threads: {} vs {}",
+                        km.inertia, km_base.inertia
+                    ));
+                }
+                if bits(&km.centroids) != bits(&km_base.centroids) {
+                    return Err(format!("kmeans centroids differ at {t} threads"));
+                }
+            }
+
+            // 3. Full SWSC output, forcing the randomized backend so the
+            // parallel subspace-iteration GEMMs are actually on the path.
+            let compress = |exec: ExecConfig| {
+                let mut cfg = SwscConfig::new(*k, *rank);
+                cfg.seed = 5;
+                cfg.svd = SvdBackend::Randomized;
+                cfg.kmeans.max_iters = 8;
+                cfg.exec = exec;
+                compress_matrix(a, &cfg)
+            };
+            let c_base = compress(ExecConfig::serial());
+            for t in THREADS {
+                let c = compress(ExecConfig::with_threads(t));
+                if c.labels != c_base.labels
+                    || bits(&c.centroids) != bits(&c_base.centroids)
+                    || bits(&c.factor_a) != bits(&c_base.factor_a)
+                    || bits(&c.factor_b) != bits(&c_base.factor_b)
+                {
+                    return Err(format!("CompressedMatrix differs at {t} threads"));
+                }
+            }
+            Ok(())
         },
     );
 }

@@ -1,0 +1,304 @@
+//! Vendored host-side stand-in for the `xla` (PJRT) bindings.
+//!
+//! The container this repo builds in has neither crates.io access nor the
+//! `xla_extension` C++ runtime, so the manifest points here. The split:
+//!
+//! - **[`Literal`] is fully functional** — a typed host buffer with shape,
+//!   reshape, dtype conversion, and tuple support. Everything in
+//!   `runtime::convert`, the trainer's scalar plumbing, and the literal
+//!   round-trip tests works unchanged.
+//! - **PJRT execution is stubbed** — [`PjRtClient::cpu`] returns an error,
+//!   so artifact-gated paths (`Engine`, `Trainer`, `Evaluator` execution)
+//!   report "PJRT runtime not available" instead of running. Those paths
+//!   already gate on `artifacts/manifest.txt` existing, so tests skip
+//!   cleanly.
+//!
+//! Swap in the real bindings by deleting `vendor/xla` and pointing the
+//! dependency at the `xla` crate built against `xla_extension`.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's: a plain message, usable with `?`
+/// into `anyhow::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime not available in this build (vendored host-only xla stub; \
+         link the real xla_extension bindings to execute artifacts)"
+    ))
+}
+
+/// Element dtypes the workspace uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Alias the real crate exposes for conversion targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Host types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn unwrap(payload: &Payload) -> Option<Vec<Self>>;
+}
+
+/// Typed storage behind a literal. Public only because `NativeType`
+/// mentions it; not part of the real crate's API surface.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(payload: &Payload) -> Option<Vec<f32>> {
+        match payload {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::S32(data)
+    }
+    fn unwrap(payload: &Payload) -> Option<Vec<i32>> {
+        match payload {
+            Payload::S32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Array shape: dimensions + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host literal: typed data plus shape (or a tuple of literals).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal { payload: T::wrap(values.to_vec()), dims: vec![values.len() as i64] }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal { payload: T::wrap(vec![value]), dims: Vec::new() }
+    }
+
+    /// Tuple literal (what `return_tuple=True` executables produce).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { payload: Payload::Tuple(elements), dims: Vec::new() }
+    }
+
+    /// Reshape to `dims`; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!("reshape {:?} -> {dims:?}: {have} elements vs {want}", self.dims)));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Number of elements (1 for scalars, sum over leaves for tuples).
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::S32(v) => v.len(),
+            Payload::Tuple(es) => es.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Shape of an array literal; errors on tuples.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::S32(_) => ElementType::S32,
+            Payload::Tuple(_) => return Err(Error("array_shape on tuple literal".into())),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy out the data as `T`; dtype must match exactly (use
+    /// [`Literal::convert`] to cast first, as the real crate requires).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .ok_or_else(|| Error(format!("to_vec: literal is not {:?}", T::TY)))
+    }
+
+    /// Elementwise dtype conversion (value cast, like XLA's `convert`).
+    pub fn convert(&self, ty: PrimitiveType) -> Result<Literal> {
+        let payload = match (&self.payload, ty) {
+            (Payload::F32(v), PrimitiveType::F32) => Payload::F32(v.clone()),
+            (Payload::S32(v), PrimitiveType::S32) => Payload::S32(v.clone()),
+            (Payload::F32(v), PrimitiveType::S32) => {
+                Payload::S32(v.iter().map(|&x| x as i32).collect())
+            }
+            (Payload::S32(v), PrimitiveType::F32) => {
+                Payload::F32(v.iter().map(|&x| x as f32).collect())
+            }
+            (Payload::Tuple(_), _) => return Err(Error("convert on tuple literal".into())),
+        };
+        Ok(Literal { payload, dims: self.dims.clone() })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(es) => Ok(es),
+            _ => Err(Error("to_tuple on non-tuple literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module handle. Parsing needs the real runtime.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parse HLO text `{path}`")))
+    }
+}
+
+/// Computation handle built from a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle. Unreachable in the stub (no client can exist).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Loaded executable handle. Unreachable in the stub.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// PJRT client. [`PjRtClient::cpu`] always errors in the stub, so the
+/// handles above can never actually be reached at runtime.
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_literal"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_round_trip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_convert() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        let i = Literal::vec1(&[1i32, 2, 3]).convert(PrimitiveType::F32).unwrap();
+        assert_eq!(i.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(Literal::vec1(&[1i32]).to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decompose() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::vec1(&[1i32, 2])]);
+        assert_eq!(t.element_count(), 3);
+        assert!(t.clone().array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_is_stubbed_with_clear_error() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT runtime not available"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
