@@ -7,8 +7,9 @@
 //!
 //! Each timed case is also recorded as a machine-readable
 //! [`BenchRecord`]; [`Bench::write_json`] dumps them as a JSON array
-//! (`op`, `size`, `threads`, `ns_per_iter`) so successive PRs have a perf
-//! trajectory to diff against.
+//! (`op`, `size`, `threads`, `ns_per_iter`, plus `speedup_vs_spawn` on
+//! [`Bench::comparison`] rows) so successive PRs have a perf trajectory to
+//! diff against.
 
 use crate::util::timer::Stats;
 use std::cell::RefCell;
@@ -26,6 +27,10 @@ pub struct BenchRecord {
     pub threads: usize,
     /// Mean wall-clock per iteration, nanoseconds.
     pub ns_per_iter: f64,
+    /// For `pool_vs_spawn_*` comparison rows: spawn-backend mean divided by
+    /// pool-backend mean (> 1 ⇒ the persistent pool is faster). `None` for
+    /// plain timing rows.
+    pub speedup_vs_spawn: Option<f64>,
 }
 
 /// One benchmark group with shared formatting.
@@ -87,8 +92,39 @@ impl Bench {
             size,
             threads,
             ns_per_iter: mean * 1e9,
+            speedup_vs_spawn: None,
         });
         mean
+    }
+
+    /// Record a `pool_vs_spawn` comparison row for one op/size: the op's
+    /// mean seconds under the persistent-pool backend vs under the
+    /// spawn-per-call backend on the identical workload. The row's
+    /// `ns_per_iter` is the pool time (the shipping configuration);
+    /// `speedup_vs_spawn` is `spawn / pool`. Returns the speedup.
+    pub fn comparison(
+        &self,
+        op: &str,
+        size: usize,
+        threads: usize,
+        pool_secs: f64,
+        spawn_secs: f64,
+    ) -> f64 {
+        let speedup = spawn_secs / pool_secs.max(1e-12);
+        println!(
+            "bench {:<40} pool {:>10} vs spawn {:>10}  ({speedup:.2}x)",
+            format!("{}/pool_vs_spawn_{op}", self.name),
+            fmt_secs(pool_secs),
+            fmt_secs(spawn_secs),
+        );
+        self.records.borrow_mut().push(BenchRecord {
+            op: format!("pool_vs_spawn_{op}"),
+            size,
+            threads,
+            ns_per_iter: pool_secs * 1e9,
+            speedup_vs_spawn: Some(speedup),
+        });
+        speedup
     }
 
     /// All records so far, in run order.
@@ -106,9 +142,13 @@ impl Bench {
                 s.push_str(",\n");
             }
             s.push_str(&format!(
-                "  {{\"op\": \"{}\", \"size\": {}, \"threads\": {}, \"ns_per_iter\": {:.1}}}",
+                "  {{\"op\": \"{}\", \"size\": {}, \"threads\": {}, \"ns_per_iter\": {:.1}",
                 r.op, r.size, r.threads, r.ns_per_iter
             ));
+            if let Some(sp) = r.speedup_vs_spawn {
+                s.push_str(&format!(", \"speedup_vs_spawn\": {sp:.3}"));
+            }
+            s.push('}');
         }
         s.push_str("\n]\n");
         std::fs::write(path, s)
@@ -162,6 +202,7 @@ mod tests {
         assert_eq!(recs[0].op, "alpha");
         assert_eq!((recs[0].size, recs[0].threads), (512, 4));
         assert!(recs.iter().all(|r| r.ns_per_iter >= 0.0));
+        assert!(recs.iter().all(|r| r.speedup_vs_spawn.is_none()));
 
         let path = std::env::temp_dir().join("swsc_bench_unit.json");
         b.write_json(&path).unwrap();
@@ -172,5 +213,23 @@ mod tests {
         assert!(body.contains("\"size\": 512"));
         assert!(body.contains("\"threads\": 4"));
         assert!(body.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn comparison_rows_carry_speedup() {
+        let b = Bench::new("unit").with_iters(1);
+        let sp = b.comparison("matmul_512", 512, 4, 1.0e-3, 2.5e-3);
+        assert!((sp - 2.5).abs() < 1e-9);
+        let recs = b.records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].op, "pool_vs_spawn_matmul_512");
+        assert!((recs[0].speedup_vs_spawn.unwrap() - 2.5).abs() < 1e-9);
+
+        let path = std::env::temp_dir().join("swsc_bench_cmp.json");
+        b.write_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.contains("\"op\": \"pool_vs_spawn_matmul_512\""));
+        assert!(body.contains("\"speedup_vs_spawn\": 2.500"));
     }
 }

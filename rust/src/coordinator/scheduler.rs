@@ -7,6 +7,11 @@
 //! each job lands in its plan-order slot regardless of which worker ran it,
 //! and the per-matrix compression itself is bit-identical at any thread
 //! count.
+//!
+//! On the persistent-pool backend the job fan-out and each job's inner ops
+//! (matmuls, Lloyd chunks, SVD GEMMs) all share one worker pool via nested
+//! submission — jobs are claimed dynamically either way, so the pool
+//! migration changed no semantics here, only dispatch cost.
 
 use crate::compress::{compress_matrix, matrix_stats, CompressionPlan, MatrixStats};
 use crate::coordinator::metrics::Metrics;

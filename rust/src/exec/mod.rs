@@ -6,7 +6,8 @@
 //! count*, which is what lets the rest of the repo treat parallelism as a
 //! pure go-faster knob: property tests compare `threads = 1` against
 //! `threads ∈ {2, 4, 8}` with exact equality, and a `.swsc` file produced
-//! on a 64-core box byte-matches one produced on a laptop.
+//! on a 64-core box byte-matches one produced on a laptop (the golden-file
+//! test in `tests/golden_swsc.rs` pins exactly that).
 //!
 //! ## Why determinism is an invariant here
 //!
@@ -31,13 +32,10 @@
 //!   caller reduces **in chunk order**.
 //!
 //! Which worker executes which chunk is irrelevant: slots don't overlap and
-//! reductions never happen in completion order. Fine-grained uniform loops
-//! get chunks by static round-robin (worker `w` runs chunks `w, w + T,
-//! w + 2T, …` — no atomics, fully safe Rust); coarse uneven jobs use
-//! [`map_indexed_balanced`], where workers claim indices from an atomic
-//! counter but still write to their pre-assigned slots. With `threads = 1`
-//! the chunks run in order on the calling thread — the serial path is
-//! literally the same code.
+//! reductions never happen in completion order. That freedom is what lets
+//! chunks be claimed dynamically (an atomic counter) without touching
+//! numerics. With `threads = 1` the chunks run in order on the calling
+//! thread — the serial path is literally the same code.
 //!
 //! Note the guarantee is *identical output across thread counts*, with the
 //! same fixed chunk layout everywhere. For independent outputs (matmul
@@ -45,20 +43,60 @@
 //! loop; for float reductions the per-chunk grouping is the canonical
 //! order.
 //!
-//! ## Picking thread counts
+//! ## The persistent worker pool
+//!
+//! Parallel submissions execute on a process-wide [`pool::WorkerPool`]:
+//!
+//! - **Lazy spawn.** The pool starts with zero threads. A submission that
+//!   asks for `t` executors grows the pool until `t − 1` *idle* workers
+//!   exist (workers busy on other jobs — e.g. the outer job of a nested
+//!   submission — don't count), so demand from nested pipelines is met
+//!   without ever respawning. Idle workers park on a condvar — no
+//!   spinning.
+//! - **Reuse, not respawn.** Submitting a job costs one short mutex
+//!   critical section plus a wakeup (~µs), versus tens of µs *per worker
+//!   per call* for the old scoped spawn-per-call scheme. That is why the
+//!   pool backend affords finer-grained parallelism: the serial-fallback
+//!   thresholds in `tensor::ops` are lower under [`ExecBackend::Pool`].
+//! - **Shutdown on drop.** Dropping a pool flips a shutdown flag, wakes
+//!   every worker, and joins them. The global pool is never dropped; the
+//!   lifecycle is exercised by private pools in tests.
+//! - **Panic isolation.** A panicking task poisons only its own job: the
+//!   panic is re-thrown in the submitting thread once the batch drains,
+//!   and the workers keep serving later jobs.
+//! - **Nested submission.** A task may itself submit a job (the
+//!   coordinator's per-matrix jobs do exactly this for their inner ops).
+//!   The submitting thread always helps drain its own job, so nesting
+//!   cannot deadlock even with every worker busy.
+//!
+//! ## Picking thread counts — `SWSC_THREADS` semantics
 //!
 //! [`ExecConfig::from_env`] resolves, in order: the `SWSC_THREADS`
 //! environment variable, then `std::thread::available_parallelism()`, then
 //! 1. The process-wide default is cached in [`global`]; APIs that need
 //! explicit control (property tests, the bench thread sweep, the
 //! coordinator's `--workers` flag) take an [`ExecConfig`] and everything
-//! else delegates to the global one. Workers are scoped `std::thread`s
-//! spawned per call — at the matrix sizes this pipeline sees (≥ 128 per
-//! side) spawn cost is well under 1% of the work; tiny inputs fall back to
-//! the inline serial path via the `threads.min(chunks)` clamp.
+//! else delegates to the global one. `SWSC_THREADS` therefore bounds how
+//! many workers *default-config* callers ever cause the pool to spawn; an
+//! explicit `ExecConfig::with_threads(t)` may grow the pool past it (the
+//! parity tests rely on this to exercise real parallelism even under
+//! `SWSC_THREADS=1`). `SWSC_THREADS=1` makes every default-config call run
+//! the inline serial reference path; tiny inputs always do, via the
+//! `threads.min(chunks)` clamp.
+//!
+//! ## Backends
+//!
+//! [`ExecBackend::Pool`] (the default) runs batches on the persistent
+//! pool; [`ExecBackend::SpawnPerCall`] is the old scoped-thread scheme,
+//! kept so the bench harness can measure `pool_vs_spawn` on identical
+//! workloads (and because it is a useful oracle: both backends share the
+//! chunk contract, so their outputs must be bit-identical). Select with
+//! [`set_backend`] or `SWSC_EXEC_BACKEND=spawn`.
+
+pub mod pool;
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 /// Hard ceiling on worker threads — a guard against absurd env values, not
@@ -112,6 +150,51 @@ pub fn global() -> ExecConfig {
     *GLOBAL.get_or_init(ExecConfig::from_env)
 }
 
+/// Which execution engine carries parallel batches. Outputs are
+/// bit-identical between backends — both obey the chunk contract — so this
+/// is purely a wall-clock/bench knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Persistent worker pool (default): spawn once, reuse forever.
+    Pool,
+    /// Scoped `std::thread` spawn per parallel call — the pre-pool scheme,
+    /// kept as the bench baseline and as a cross-check oracle.
+    SpawnPerCall,
+}
+
+// 0 = unresolved, 1 = Pool, 2 = SpawnPerCall.
+static BACKEND: AtomicU8 = AtomicU8::new(0);
+
+/// Current backend; first call resolves `SWSC_EXEC_BACKEND` (`"spawn"`
+/// selects [`ExecBackend::SpawnPerCall`], anything else the pool).
+pub fn backend() -> ExecBackend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => ExecBackend::Pool,
+        2 => ExecBackend::SpawnPerCall,
+        _ => {
+            let resolved = match std::env::var("SWSC_EXEC_BACKEND").ok().as_deref() {
+                Some("spawn") => ExecBackend::SpawnPerCall,
+                _ => ExecBackend::Pool,
+            };
+            set_backend(resolved);
+            resolved
+        }
+    }
+}
+
+/// Override the backend process-wide. Intended for the bench harness and
+/// for parity tests; safe to flip at any time because both backends
+/// produce bit-identical outputs (only wall-clock changes).
+pub fn set_backend(b: ExecBackend) {
+    BACKEND.store(
+        match b {
+            ExecBackend::Pool => 1,
+            ExecBackend::SpawnPerCall => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
 /// Fixed chunk boundaries for `n` items: `⌈n/chunk⌉` ranges of `chunk`
 /// items (the last one ragged). Depends only on `n` and `chunk` — never on
 /// the thread count — which is what makes the scheduling deterministic.
@@ -120,7 +203,24 @@ pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<Range<usize>> {
     (0..n).step_by(chunk).map(|s| s..(s + chunk).min(n)).collect()
 }
 
-/// The one static scheduling policy: deal `items` round-robin to `workers`
+/// Raw-pointer courier for pre-assigned disjoint slots. Soundness comes
+/// from the claim discipline: every index is claimed exactly once, so no
+/// two tasks ever touch the same slot. Access goes through [`SendPtr::at`]
+/// so closures capture the `Sync` wrapper itself, never the bare `*mut T`
+/// (2021-edition closures capture fields, and `*mut T` is not `Sync`).
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Pointer to element `i`. Caller guarantees `i` is in bounds and that
+    /// no other thread touches it.
+    unsafe fn at(&self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
+/// Spawn-per-call scheduling policy: deal `items` round-robin to `workers`
 /// lists (worker `w` gets items `w, w + W, w + 2W, …`), run list 0 on the
 /// calling thread and the rest on scoped threads. Callers guarantee
 /// `workers ≥ 2`; item payloads carry their own pre-assigned destinations,
@@ -155,8 +255,8 @@ where
 /// Map `0..m` to values, one pre-assigned output slot per index.
 ///
 /// `f(i)` may run on any worker, but its result always lands in slot `i`,
-/// so the returned vector is identical at every thread count. Panics in `f`
-/// propagate to the caller.
+/// so the returned vector is identical at every thread count (and between
+/// backends). Panics in `f` propagate to the caller.
 pub fn map_indexed<T, F>(cfg: ExecConfig, m: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -168,19 +268,32 @@ where
     }
 
     let mut slots: Vec<Option<T>> = (0..m).map(|_| None).collect();
-    {
-        let items: Vec<(usize, &mut Option<T>)> = slots.iter_mut().enumerate().collect();
-        run_static(workers, items, |(i, slot)| *slot = Some(f(i)));
+    match backend() {
+        ExecBackend::Pool => {
+            let base = SendPtr(slots.as_mut_ptr());
+            let task = |i: usize| {
+                let v = f(i);
+                // SAFETY: index i is claimed exactly once; slots are
+                // disjoint and the Vec outlives the blocking `run` call.
+                unsafe { *base.at(i) = Some(v) };
+            };
+            pool::global().run(workers, m, &task);
+        }
+        ExecBackend::SpawnPerCall => {
+            let items: Vec<(usize, &mut Option<T>)> = slots.iter_mut().enumerate().collect();
+            run_static(workers, items, |(i, slot)| *slot = Some(f(i)));
+        }
     }
     slots.into_iter().map(|s| s.expect("exec: unfilled slot")).collect()
 }
 
-/// Like [`map_indexed`], but workers claim indices dynamically from an
-/// atomic counter instead of the static round-robin split. Results still
-/// land in pre-assigned slots, so the output is identical — which worker
-/// ran an index never matters. Use this when items have very uneven cost
-/// and each dwarfs one lock acquisition (e.g. whole-matrix compression
-/// jobs); keep [`map_indexed`] for fine-grained uniform loops.
+/// Like [`map_indexed`], but guaranteed to claim indices dynamically even
+/// on the spawn backend (where plain `map_indexed` deals statically).
+/// Results still land in pre-assigned slots, so the output is identical —
+/// which worker ran an index never matters. Use this when items have very
+/// uneven cost (e.g. whole-matrix compression jobs). On the pool backend
+/// claiming is always dynamic, so this is the same code path as
+/// [`map_indexed`].
 pub fn map_indexed_balanced<T, F>(cfg: ExecConfig, m: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -189,6 +302,9 @@ where
     let workers = cfg.threads.min(m);
     if workers <= 1 {
         return (0..m).map(f).collect();
+    }
+    if backend() == ExecBackend::Pool {
+        return map_indexed(cfg, m, f);
     }
     let slots: Vec<Mutex<Option<T>>> = (0..m).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
@@ -267,32 +383,63 @@ pub fn for_row_bands<T, F>(
         return;
     }
     let rpc = rows_per_chunk.max(1);
+    let n_bands = rows.div_ceil(rpc);
+    let workers = cfg.threads.min(n_bands);
 
-    let mut bands: Vec<(usize, &mut [T])> = Vec::with_capacity(rows.div_ceil(rpc));
-    let mut rest = data;
-    let mut row = 0;
-    while row < rows {
-        let take = rpc.min(rows - row);
-        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
-        bands.push((row, head));
-        rest = tail;
-        row += take;
-    }
-
-    let workers = cfg.threads.min(bands.len());
     if workers <= 1 {
-        for (first_row, band) in bands {
-            f(first_row, band);
+        for first_row in (0..rows).step_by(rpc) {
+            let take = rpc.min(rows - first_row);
+            f(first_row, &mut data[first_row * row_len..(first_row + take) * row_len]);
         }
         return;
     }
-    run_static(workers, bands, |(first_row, band)| f(first_row, band));
+
+    match backend() {
+        ExecBackend::Pool => {
+            let base = SendPtr(data.as_mut_ptr());
+            let task = |i: usize| {
+                let first_row = i * rpc;
+                let take = rpc.min(rows - first_row);
+                // SAFETY: band i covers rows [i·rpc, i·rpc + take), claimed
+                // exactly once; bands are disjoint and within `data`.
+                let band = unsafe {
+                    std::slice::from_raw_parts_mut(base.at(first_row * row_len), take * row_len)
+                };
+                f(first_row, band);
+            };
+            pool::global().run(workers, n_bands, &task);
+        }
+        ExecBackend::SpawnPerCall => {
+            let mut bands: Vec<(usize, &mut [T])> = Vec::with_capacity(n_bands);
+            let mut rest = data;
+            let mut row = 0;
+            while row < rows {
+                let take = rpc.min(rows - row);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+                bands.push((row, head));
+                rest = tail;
+                row += take;
+            }
+            run_static(workers, bands, |(first_row, band)| f(first_row, band));
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Run `body` under both backends, restoring the pool default after.
+    /// Safe even with other tests running concurrently: backends are
+    /// bit-identical, so a transient global flip only changes wall-clock.
+    fn with_both_backends(body: impl Fn(ExecBackend)) {
+        for b in [ExecBackend::Pool, ExecBackend::SpawnPerCall] {
+            set_backend(b);
+            body(b);
+        }
+        set_backend(ExecBackend::Pool);
+    }
 
     #[test]
     fn chunk_ranges_cover_exactly() {
@@ -305,31 +452,37 @@ mod tests {
 
     #[test]
     fn map_indexed_preserves_slot_order() {
-        for threads in [1, 2, 4, 8] {
-            let got = map_indexed(ExecConfig::with_threads(threads), 37, |i| i * i);
-            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
-            assert_eq!(got, want, "threads = {threads}");
-        }
+        with_both_backends(|b| {
+            for threads in [1, 2, 4, 8] {
+                let got = map_indexed(ExecConfig::with_threads(threads), 37, |i| i * i);
+                let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+                assert_eq!(got, want, "threads = {threads}, backend {b:?}");
+            }
+        });
     }
 
     #[test]
     fn map_indexed_runs_every_index_once() {
-        let hits = AtomicUsize::new(0);
-        let out = map_indexed(ExecConfig::with_threads(4), 100, |i| {
-            hits.fetch_add(1, Ordering::Relaxed);
-            i
+        with_both_backends(|b| {
+            let hits = AtomicUsize::new(0);
+            let out = map_indexed(ExecConfig::with_threads(4), 100, |i| {
+                hits.fetch_add(1, Ordering::Relaxed);
+                i
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 100, "backend {b:?}");
+            assert_eq!(out.len(), 100);
         });
-        assert_eq!(hits.load(Ordering::Relaxed), 100);
-        assert_eq!(out.len(), 100);
     }
 
     #[test]
     fn map_indexed_balanced_preserves_slot_order() {
-        for threads in [1, 2, 4, 8] {
-            let got = map_indexed_balanced(ExecConfig::with_threads(threads), 53, |i| i * 3);
-            let want: Vec<usize> = (0..53).map(|i| i * 3).collect();
-            assert_eq!(got, want, "threads = {threads}");
-        }
+        with_both_backends(|b| {
+            for threads in [1, 2, 4, 8] {
+                let got = map_indexed_balanced(ExecConfig::with_threads(threads), 53, |i| i * 3);
+                let want: Vec<usize> = (0..53).map(|i| i * 3).collect();
+                assert_eq!(got, want, "threads = {threads}, backend {b:?}");
+            }
+        });
     }
 
     #[test]
@@ -345,9 +498,15 @@ mod tests {
             .sum()
         };
         let base = reduce(1);
-        for threads in [2, 3, 4, 8] {
-            assert_eq!(base.to_bits(), reduce(threads).to_bits(), "threads = {threads}");
-        }
+        with_both_backends(|b| {
+            for threads in [2, 3, 4, 8] {
+                assert_eq!(
+                    base.to_bits(),
+                    reduce(threads).to_bits(),
+                    "threads = {threads}, backend {b:?}"
+                );
+            }
+        });
     }
 
     #[test]
@@ -373,26 +532,108 @@ mod tests {
 
     #[test]
     fn row_bands_write_disjoint_slots() {
-        for threads in [1, 2, 4, 8] {
-            let (rows, row_len) = (23, 7);
-            let mut buf = vec![0u32; rows * row_len];
-            for_row_bands(ExecConfig::with_threads(threads), &mut buf, rows, row_len, 4, |r0, band| {
-                for (off, v) in band.iter_mut().enumerate() {
-                    *v = (r0 * row_len + off) as u32;
-                }
-            });
-            let want: Vec<u32> = (0..rows * row_len).map(|i| i as u32).collect();
-            assert_eq!(buf, want, "threads = {threads}");
-        }
+        with_both_backends(|b| {
+            for threads in [1, 2, 4, 8] {
+                let (rows, row_len) = (23, 7);
+                let mut buf = vec![0u32; rows * row_len];
+                for_row_bands(
+                    ExecConfig::with_threads(threads),
+                    &mut buf,
+                    rows,
+                    row_len,
+                    4,
+                    |r0, band| {
+                        for (off, v) in band.iter_mut().enumerate() {
+                            *v = (r0 * row_len + off) as u32;
+                        }
+                    },
+                );
+                let want: Vec<u32> = (0..rows * row_len).map(|i| i as u32).collect();
+                assert_eq!(buf, want, "threads = {threads}, backend {b:?}");
+            }
+        });
     }
 
     #[test]
     fn empty_work_is_fine() {
-        assert!(map_indexed(ExecConfig::with_threads(4), 0, |i| i).is_empty());
-        let mut empty: Vec<f32> = Vec::new();
-        for_row_bands(ExecConfig::with_threads(4), &mut empty, 0, 5, 8, |_, _| {
-            panic!("no bands expected")
+        with_both_backends(|_| {
+            assert!(map_indexed(ExecConfig::with_threads(4), 0, |i| i).is_empty());
+            let mut empty: Vec<f32> = Vec::new();
+            for_row_bands(ExecConfig::with_threads(4), &mut empty, 0, 5, 8, |_, _| {
+                panic!("no bands expected")
+            });
         });
+    }
+
+    #[test]
+    fn chunks_larger_than_items() {
+        // chunk > n collapses to one chunk → inline serial, on any backend
+        // and at any thread count.
+        with_both_backends(|b| {
+            for threads in [1, 4, 8] {
+                let got = map_chunks(ExecConfig::with_threads(threads), 3, 100, |r| r.len());
+                assert_eq!(got, vec![3], "threads = {threads}, backend {b:?}");
+                let mut buf = vec![0u8; 6];
+                for_row_bands(ExecConfig::with_threads(threads), &mut buf, 3, 2, 100, |r0, band| {
+                    assert_eq!((r0, band.len()), (0, 6));
+                    band.fill(1);
+                });
+                assert_eq!(buf, vec![1; 6], "backend {b:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn nested_map_indexed_from_worker() {
+        // A parallel map whose tasks themselves run parallel maps — the
+        // shape the coordinator's per-matrix jobs create. Must not deadlock
+        // and must keep slot order on both backends.
+        with_both_backends(|b| {
+            let got = map_indexed(ExecConfig::with_threads(4), 6, |i| {
+                map_indexed(ExecConfig::with_threads(4), 5, move |j| i * 10 + j)
+            });
+            for (i, inner) in got.iter().enumerate() {
+                let want: Vec<usize> = (0..5).map(|j| i * 10 + j).collect();
+                assert_eq!(inner, &want, "outer {i}, backend {b:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        // Poisoned-job isolation end-to-end through the public API: a
+        // panicking map must panic the caller, and the executor must stay
+        // usable afterwards.
+        let r = std::panic::catch_unwind(|| {
+            map_indexed(ExecConfig::with_threads(4), 32, |i| {
+                if i == 13 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(r.is_err(), "panic must propagate to the submitter");
+        let got = map_indexed(ExecConfig::with_threads(4), 64, |i| i + 1);
+        let want: Vec<usize> = (0..64).map(|i| i + 1).collect();
+        assert_eq!(got, want, "executor unusable after a poisoned job");
+    }
+
+    #[test]
+    fn backends_bitwise_identical_on_float_reduction() {
+        let xs: Vec<f64> = (0..2048).map(|i| (1.0f64 / (2.0 + i as f64)).sqrt()).collect();
+        let sum_with = |threads: usize| -> f64 {
+            map_chunks(ExecConfig::with_threads(threads), xs.len(), 37, |r| {
+                r.map(|i| xs[i]).sum::<f64>()
+            })
+            .iter()
+            .sum()
+        };
+        set_backend(ExecBackend::Pool);
+        let pool = sum_with(8);
+        set_backend(ExecBackend::SpawnPerCall);
+        let spawn = sum_with(8);
+        set_backend(ExecBackend::Pool);
+        assert_eq!(pool.to_bits(), spawn.to_bits());
     }
 
     #[test]

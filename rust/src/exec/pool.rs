@@ -1,0 +1,371 @@
+//! Persistent worker pool backing the deterministic executor.
+//!
+//! Workers are OS threads spawned **once** (lazily, on the first parallel
+//! submission that needs them) and parked on a shared injector until jobs
+//! arrive. A *job* is a batch of `m` independent index-tasks sharing one
+//! task function; tasks are claimed by atomic counter, which is safe for
+//! determinism because every task writes to a pre-assigned output slot —
+//! which thread runs a task never affects results (see the [`crate::exec`]
+//! module docs for the full contract).
+//!
+//! Design points:
+//!
+//! - **Submitter always participates.** The thread that calls
+//!   [`WorkerPool::run`] claims tasks from its own job alongside the
+//!   helpers. This is what makes *nested* submission (a worker's task
+//!   submitting a sub-job) deadlock-free: even if every other worker is
+//!   busy, the submitter drives its own job to completion, and waiting is
+//!   only ever on strictly-newer jobs, so there is no cycle.
+//! - **Per-job helper caps.** A job carries the caller's thread budget;
+//!   workers that would exceed it skip the job. That is how `ExecConfig`
+//!   thread counts stay a pure wall-clock knob on a shared pool.
+//! - **Poisoned-job isolation.** Worker task bodies run under
+//!   `catch_unwind`; the first panic payload is stashed on the job and
+//!   re-thrown *in the submitting thread* after the batch drains. The
+//!   workers themselves survive and keep serving later jobs.
+//! - **Shutdown on drop.** Dropping a [`WorkerPool`] (only non-global pools
+//!   in tests — the process-wide pool lives forever) flips a shutdown flag,
+//!   wakes everyone, and joins the workers. By contract no jobs are in
+//!   flight at drop time: submitters block inside `run` until their job
+//!   drains, so holding `&pool` across `drop` is impossible.
+//!
+//! The injector is a short-critical-section `Mutex<Vec<Arc<Job>>>` plus a
+//! `Condvar` — not a lock-free deque, but the lock is held only to push,
+//! scan, or prune, never while running tasks; submission cost is a few
+//! microseconds against the tens-of-microseconds-per-thread cost of the old
+//! scoped spawn-per-call scheme.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use super::MAX_THREADS;
+
+/// One batch of `m` index-tasks over a shared task function.
+///
+/// `func` is a type- and lifetime-erased pointer into the submitter's
+/// stack; it is only dereferenced for claimed indices `i < m`, and the
+/// submitter does not return from [`WorkerPool::run`] until `pending`
+/// reaches zero, so the pointee outlives every dereference.
+struct Job {
+    func: *const (dyn Fn(usize) + Sync),
+    m: usize,
+    /// Next unclaimed task index (may overshoot `m`; claims ≥ `m` are
+    /// no-ops).
+    next: AtomicUsize,
+    /// Claimed-but-unfinished plus unclaimed tasks; 0 ⇒ batch fully done.
+    pending: AtomicUsize,
+    /// Workers currently helping (submitter not counted).
+    helpers: AtomicUsize,
+    /// Max workers allowed to help (thread budget minus the submitter).
+    helper_cap: usize,
+    /// First panic payload from any task, re-thrown by the submitter.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `func` is only shared between threads while the submitter keeps
+// the referent alive (it blocks in `run` until `pending == 0`), and the
+// pointee is `Sync`.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run tasks until none are left; the thread that finishes
+    /// the batch's last pending task flips `done` and wakes the submitter.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.m {
+                return;
+            }
+            // SAFETY: i < m, so the submitter is still blocked in `run`
+            // and the closure is alive.
+            let f = unsafe { &*self.func };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            // AcqRel keeps every task's writes in the release sequence, so
+            // the submitter's final Acquire load sees all output slots.
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut done = self.done.lock().unwrap();
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn fully_claimed(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.m
+    }
+}
+
+struct Injector {
+    /// Jobs with unclaimed tasks. Pruned lazily by whoever holds the lock.
+    queue: Vec<Arc<Job>>,
+    shutdown: bool,
+    /// Worker threads spawned so far (for lazy growth and drop-join).
+    handles: Vec<JoinHandle<()>>,
+    /// Workers currently executing a job (not parked, not scanning). Lazy
+    /// growth sizes against *idle* workers (`handles.len() - busy`), so
+    /// nested submissions — whose outer jobs occupy workers — still get
+    /// helpers up to their own budget instead of finding the pool "already
+    /// big enough" but fully occupied.
+    busy: usize,
+}
+
+/// A persistent pool of worker threads serving deterministic chunk batches.
+///
+/// Use [`global`] for the process-wide pool; constructing a private pool is
+/// only useful in tests (lifecycle coverage) and always allowed.
+pub struct WorkerPool {
+    inj: Arc<(Mutex<Injector>, Condvar)>,
+    /// Hard cap on workers this pool will ever spawn.
+    max_workers: usize,
+}
+
+impl WorkerPool {
+    /// Empty pool that will lazily grow up to `max_workers` helper threads.
+    pub fn new(max_workers: usize) -> WorkerPool {
+        WorkerPool {
+            inj: Arc::new((
+                Mutex::new(Injector {
+                    queue: Vec::new(),
+                    shutdown: false,
+                    handles: Vec::new(),
+                    busy: 0,
+                }),
+                Condvar::new(),
+            )),
+            max_workers: max_workers.min(MAX_THREADS),
+        }
+    }
+
+    /// Number of worker threads currently spawned (excludes submitters).
+    pub fn workers_spawned(&self) -> usize {
+        self.inj.0.lock().unwrap().handles.len()
+    }
+
+    /// Run `m` index-tasks with at most `threads` concurrent executors
+    /// (including the calling thread). Blocks until every task has run;
+    /// re-throws the first task panic, if any, after the batch drains.
+    ///
+    /// Which thread runs which index is unspecified — callers must give
+    /// every task a pre-assigned disjoint output slot (the executor-facing
+    /// wrappers in [`crate::exec`] all do).
+    pub fn run(&self, threads: usize, m: usize, f: &(dyn Fn(usize) + Sync)) {
+        if m == 0 {
+            return;
+        }
+        if threads <= 1 || m == 1 {
+            // Inline serial path: literally the same code a worker runs.
+            for i in 0..m {
+                f(i);
+            }
+            return;
+        }
+        let helper_cap = (threads - 1).min(self.max_workers);
+        let job = Arc::new(Job {
+            // Lifetime erasure happens here (raw pointers carry none); the
+            // referent stays alive because `run` blocks until the batch
+            // drains, see the `Job` docs.
+            func: f as *const (dyn Fn(usize) + Sync),
+            m,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(m),
+            helpers: AtomicUsize::new(0),
+            helper_cap,
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+
+        {
+            let (lock, cv) = &*self.inj;
+            let mut inj = lock.lock().unwrap();
+            // Lazy spawn: this job can use `want_idle` helpers, and only
+            // idle workers can help it — workers busy on other jobs (e.g.
+            // the outer job of a nested submission) don't count. Grow until
+            // enough idle workers exist or the pool cap is hit.
+            let want_idle = helper_cap.min(m.saturating_sub(1));
+            while inj.handles.len() < self.max_workers
+                && inj.handles.len() - inj.busy < want_idle
+            {
+                let arc = Arc::clone(&self.inj);
+                inj.handles.push(std::thread::spawn(move || worker_loop(&arc)));
+            }
+            inj.queue.push(Arc::clone(&job));
+            cv.notify_all();
+        }
+
+        // The submitter is always executor #1 of its own job.
+        job.work();
+
+        // Wait for helpers still running claimed tasks.
+        {
+            let mut done = job.done.lock().unwrap();
+            while !*done && job.pending.load(Ordering::Acquire) != 0 {
+                done = job.done_cv.wait(done).unwrap();
+            }
+        }
+        // Synchronize with every task's Release decrement (release sequence
+        // on `pending`), making all slot writes visible here.
+        debug_assert_eq!(job.pending.load(Ordering::Acquire), 0);
+
+        // Prune our job if no worker got to it (cheap; avoids unbounded
+        // queue growth when workers are saturated elsewhere).
+        {
+            let (lock, _) = &*self.inj;
+            let mut inj = lock.lock().unwrap();
+            inj.queue.retain(|j| !j.fully_claimed());
+        }
+
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let handles = {
+            let (lock, cv) = &*self.inj;
+            let mut inj = lock.lock().unwrap();
+            inj.shutdown = true;
+            cv.notify_all();
+            std::mem::take(&mut inj.handles)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inj: &Arc<(Mutex<Injector>, Condvar)>) {
+    let (lock, cv) = &**inj;
+    let mut guard = lock.lock().unwrap();
+    loop {
+        if guard.shutdown {
+            return;
+        }
+        // Find a job with unclaimed tasks and a free helper slot.
+        guard.queue.retain(|j| !j.fully_claimed());
+        let picked = guard.queue.iter().find_map(|j| {
+            let prev = j.helpers.fetch_add(1, Ordering::Relaxed);
+            if prev < j.helper_cap {
+                Some(Arc::clone(j))
+            } else {
+                j.helpers.fetch_sub(1, Ordering::Relaxed);
+                None
+            }
+        });
+        match picked {
+            Some(job) => {
+                guard.busy += 1;
+                drop(guard);
+                job.work();
+                job.helpers.fetch_sub(1, Ordering::Relaxed);
+                guard = lock.lock().unwrap();
+                guard.busy -= 1;
+            }
+            None => {
+                guard = cv.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+/// The process-wide pool. Spawned lazily: creating it allocates no threads;
+/// workers appear on the first parallel submission and are then reused for
+/// the life of the process (it is never dropped, so "shutdown on drop" only
+/// applies to private pools).
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(MAX_THREADS - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_runs_all_tasks_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(4, 100, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_and_single_task_jobs() {
+        let pool = WorkerPool::new(4);
+        pool.run(4, 0, &|_| panic!("no tasks expected"));
+        let ran = AtomicUsize::new(0);
+        pool.run(4, 1, &|i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn lazy_spawn_and_helper_cap() {
+        let pool = WorkerPool::new(8);
+        assert_eq!(pool.workers_spawned(), 0, "no threads before first submission");
+        pool.run(3, 64, &|_| {});
+        // threads=3 ⇒ exactly 2 helpers wanted on first submission.
+        assert!(pool.workers_spawned() <= 2, "spawned {}", pool.workers_spawned());
+        pool.run(5, 64, &|_| {});
+        // Growth sizes against *idle* workers; helpers from the previous
+        // job may not have re-parked yet (busy is decremented lazily), so
+        // the bound is want_idle (4) on top of the existing 2, never the
+        // per-pool cap.
+        assert!(pool.workers_spawned() <= 6, "spawned {}", pool.workers_spawned());
+    }
+
+    #[test]
+    fn nested_submit_from_worker_task() {
+        let pool = WorkerPool::new(4);
+        let total = AtomicUsize::new(0);
+        pool.run(4, 8, &|_| {
+            pool.run(4, 8, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn panicking_job_poisons_only_itself() {
+        let pool = WorkerPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, 16, &|i| {
+                if i == 7 {
+                    panic!("task 7 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the submitter");
+        // Pool must still serve jobs afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(4, 32, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(4);
+        pool.run(4, 16, &|_| {});
+        drop(pool); // must not hang
+    }
+}

@@ -5,6 +5,12 @@
 //! produces labels plus partial sums, and partials are reduced in chunk
 //! order — so labels, inertia, and centroids are bit-identical at any
 //! thread count.
+//!
+//! The assignment step has two implementations with bitwise-identical
+//! output: the blocked cross-term path ([`assign_blocked_with`], default —
+//! per-chunk GEMM blocks fused with the argmin, sized for 11008-channel
+//! MLP matrices) and the un-blocked full-GEMM reference
+//! ([`assign_gemm_with`], oracle/baseline).
 
 use crate::exec::{self, ExecConfig};
 use crate::tensor::Tensor;
@@ -35,7 +41,71 @@ pub fn assign(points: &Tensor, centroids: &Tensor) -> (Vec<u32>, f64) {
 /// [`assign`] with an explicit thread config. Labels are per-point
 /// independent; inertia is reduced from fixed-chunk partials in chunk
 /// order — bit-identical at any `exec.threads`.
+///
+/// Runs the blocked cross-term path ([`assign_blocked_with`]); the
+/// un-blocked full-GEMM reference ([`assign_gemm_with`]) produces
+/// bitwise-identical output and is kept as the test oracle and bench
+/// baseline.
 pub fn assign_with(points: &Tensor, centroids: &Tensor, exec: ExecConfig) -> (Vec<u32>, f64) {
+    assign_blocked_with(points, centroids, exec)
+}
+
+/// Blocked cross-term assignment — the wide-matrix path.
+///
+/// Instead of materializing the full `n × k` cross-term product (a real
+/// allocation at 11008-channel MLP widths) and re-walking it in a second
+/// pass, each fixed [`POINT_CHUNK`]-point chunk computes its own
+/// `chunk × k` cross-term block with the cache-blocked matmul microkernel
+/// (tiling k × points × dims) and fuses the argmin over centroids while the
+/// block is hot, using precomputed ‖c‖². The microkernel and operands are
+/// exactly the full-GEMM path's, so every cross term — and therefore every
+/// label, inertia bit, and downstream centroid — is bitwise identical to
+/// [`assign_gemm_with`] at any thread count.
+pub fn assign_blocked_with(points: &Tensor, centroids: &Tensor, exec: ExecConfig) -> (Vec<u32>, f64) {
+    let n = points.rows();
+    let k = centroids.rows();
+    let m = points.cols();
+    debug_assert_eq!(m, centroids.cols());
+
+    let cnorm: Vec<f64> = (0..k).map(|c| Tensor::dot(centroids.row(c), centroids.row(c))).collect();
+    // Same right-hand operand as the GEMM path: centroids transposed once
+    // (m × k — small next to the points).
+    let cent_t = centroids.transpose_with(exec);
+
+    let parts = exec::map_chunks(exec, n, POINT_CHUNK, |range| {
+        let rows = range.len();
+        // cross[jr][c] = points[range.start + jr] · centroids[c]
+        let mut cross = vec![0.0f32; rows * k];
+        crate::tensor::matmul_band(points.data(), cent_t.data(), m, k, range.start, &mut cross);
+
+        let mut labels = Vec::with_capacity(rows);
+        let mut partial = 0.0f64;
+        for (jr, j) in range.enumerate() {
+            let pnorm = Tensor::dot(points.row(j), points.row(j));
+            let crow = &cross[jr * k..(jr + 1) * k];
+            let mut best_c = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d = pnorm - 2.0 * crow[c] as f64 + cnorm[c];
+                if d < best_d {
+                    best_d = d;
+                    best_c = c;
+                }
+            }
+            labels.push(best_c as u32);
+            partial += best_d.max(0.0);
+        }
+        (labels, partial)
+    });
+
+    reduce_assign_parts(n, parts)
+}
+
+/// Un-blocked reference assignment: one full `n × k` cross-term GEMM, then
+/// a label pass. Kept public as the oracle for the blocked-vs-naive
+/// property test and the bench baseline; output is bitwise identical to
+/// [`assign_blocked_with`].
+pub fn assign_gemm_with(points: &Tensor, centroids: &Tensor, exec: ExecConfig) -> (Vec<u32>, f64) {
     let n = points.rows();
     let k = centroids.rows();
     debug_assert_eq!(points.cols(), centroids.cols());
@@ -65,6 +135,12 @@ pub fn assign_with(points: &Tensor, centroids: &Tensor, exec: ExecConfig) -> (Ve
         (labels, partial)
     });
 
+    reduce_assign_parts(n, parts)
+}
+
+/// Fold per-chunk (labels, inertia) partials in chunk order — shared by
+/// both assign paths so the reduction order is identical by construction.
+fn reduce_assign_parts(n: usize, parts: Vec<(Vec<u32>, f64)>) -> (Vec<u32>, f64) {
     let mut labels = Vec::with_capacity(n);
     let mut inertia = 0.0f64;
     for (chunk_labels, partial) in parts {
@@ -261,6 +337,21 @@ mod tests {
             let counts = update_with(&pts, &labels, &mut cen, cfg);
             assert_eq!(counts, base_counts, "counts, {threads} threads");
             assert_eq!(bits(&cen), bits(&base_cen), "centroids, {threads} threads");
+        }
+    }
+
+    #[test]
+    fn blocked_and_gemm_assign_bitwise_identical() {
+        let mut rng = Rng::new(45);
+        // Ragged point count across several chunks; k not a tile multiple.
+        let pts = Tensor::randn(&[5 * super::POINT_CHUNK + 31, 11], &mut rng);
+        let cen = Tensor::randn(&[9, 11], &mut rng);
+        for threads in [1, 2, 4, 8] {
+            let cfg = ExecConfig::with_threads(threads);
+            let (bl, bi) = assign_blocked_with(&pts, &cen, cfg);
+            let (gl, gi) = assign_gemm_with(&pts, &cen, cfg);
+            assert_eq!(bl, gl, "labels, {threads} threads");
+            assert_eq!(bi.to_bits(), gi.to_bits(), "inertia, {threads} threads");
         }
     }
 

@@ -5,6 +5,14 @@
 //! ablation bench: sample a batch of channels, assign them, and move each
 //! centroid toward the batch mean with a per-centroid learning rate
 //! `1/count`.
+//!
+//! Sampling is deterministic by construction: one value drawn from the
+//! caller's rng seeds the run, and every step then draws its indices from
+//! a private stream derived from `(that seed, step)`. The sampled channels
+//! are a pure function of the rng state at call time plus the step number
+//! — independent of thread count, and once the run seed is fixed, no step
+//! can perturb another's samples. That is what lets minibatch participate
+//! in the serial/parallel bit-parity property test alongside full Lloyd.
 
 use super::lloyd::assign_with;
 use crate::exec::{self, ExecConfig};
@@ -41,13 +49,18 @@ pub fn minibatch_kmeans_with(
     let batch = batch.clamp(1, n);
     let mut counts = vec![1.0f64; k];
 
+    // One draw from the caller's stream seeds every step (see module docs):
+    // step sampling never touches `rng` again, so the index sequence is a
+    // pure function of (sample_seed, step) — thread count and the assign
+    // calls cannot perturb it.
+    let sample_seed = rng.next_u64();
+
     let mut scratch = Tensor::zeros(&[batch, m]);
-    for _ in 0..steps {
-        // Sample a batch of rows.
-        let mut picks = Vec::with_capacity(batch);
+    for step in 0..steps {
+        // Sample this step's batch of rows from the step's private stream.
+        let mut srng = step_rng(sample_seed, step as u64);
         for b in 0..batch {
-            let j = rng.below(n);
-            picks.push(j);
+            let j = srng.below(n);
             scratch.row_mut(b).copy_from_slice(points.row(j));
         }
         let (labels, _) = assign_with(&scratch, &centroids, exec);
@@ -65,6 +78,13 @@ pub fn minibatch_kmeans_with(
 
     let (labels, inertia) = assign_with(points, &centroids, exec);
     (centroids, labels, inertia)
+}
+
+/// Private per-step sample stream: SplitMix-style scramble of `(seed,
+/// step)` so adjacent steps decorrelate and steps could be generated in
+/// any order (or in parallel) without changing the sampled indices.
+fn step_rng(seed: u64, step: u64) -> Rng {
+    Rng::new(seed ^ step.wrapping_add(1).wrapping_mul(0xA24B_AED4_963E_E407))
 }
 
 #[cfg(test)]
@@ -91,6 +111,25 @@ mod tests {
             }
         }
         assert!(inertia < 600.0, "inertia {inertia}");
+    }
+
+    #[test]
+    fn thread_count_never_changes_minibatch_output() {
+        let mut rng = Rng::new(53);
+        let pts = Tensor::randn(&[3 * crate::kmeans::POINT_CHUNK + 5, 7], &mut rng);
+        let init = init_kmeans_pp(&pts, 5, &mut rng);
+        let run = |threads: usize| {
+            let mut r = Rng::new(99);
+            minibatch_kmeans_with(&pts, init.clone(), 48, 25, &mut r, ExecConfig::with_threads(threads))
+        };
+        let (c1, l1, i1) = run(1);
+        for threads in [2, 4, 8] {
+            let (c, l, i) = run(threads);
+            let bits = |t: &Tensor| t.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&c), bits(&c1), "centroids, {threads} threads");
+            assert_eq!(l, l1, "labels, {threads} threads");
+            assert_eq!(i.to_bits(), i1.to_bits(), "inertia, {threads} threads");
+        }
     }
 
     #[test]

@@ -15,7 +15,10 @@ mod lloyd;
 mod minibatch;
 
 pub use init::{init_kmeans_pp, init_random, InitMethod};
-pub use lloyd::{assign, assign_with, lloyd, lloyd_with, update, update_with, AssignResult, POINT_CHUNK};
+pub use lloyd::{
+    assign, assign_blocked_with, assign_gemm_with, assign_with, lloyd, lloyd_with, update,
+    update_with, AssignResult, POINT_CHUNK,
+};
 pub use minibatch::{minibatch_kmeans, minibatch_kmeans_with};
 
 use crate::exec::{self, ExecConfig};

@@ -170,9 +170,11 @@ pub fn svd_randomized(a: &Tensor, rank: usize, oversample: usize, power_iters: u
 
 /// [`svd_randomized`] with an explicit thread config. The subspace-iteration
 /// GEMMs (`A·Ω`, `Aᵀ·Q`, `A·Z`, `Qᵀ·A`, `Q·V_b`) are the cost center and run
-/// row-parallel on the deterministic executor; the Householder QR and the
-/// small exact Jacobi stay serial. Output is bit-identical at any
-/// `exec.threads`.
+/// row-parallel on the deterministic executor (persistent pool by default —
+/// relevant here because each power iteration issues several short GEMMs,
+/// exactly the dispatch-bound shape spawn-per-call was slow at); the
+/// Householder QR and the small exact Jacobi stay serial. Output is
+/// bit-identical at any `exec.threads`.
 pub fn svd_randomized_with(
     a: &Tensor,
     rank: usize,

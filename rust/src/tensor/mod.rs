@@ -7,6 +7,8 @@
 
 mod ops;
 
+pub(crate) use ops::matmul_band;
+
 use crate::util::rng::Rng;
 
 /// Row-major dense f32 tensor.

@@ -15,21 +15,44 @@ use crate::exec::{self, ExecConfig};
 /// bit-identical to the serial kernel.
 const BLOCK: usize = 64;
 
-/// Below this many multiply-adds a matmul runs inline serial: scoped-thread
-/// spawn latency (~tens of µs per worker) would dwarf the work. Thresholds
-/// only pick the thread count, never the chunk layout, so they cannot
-/// affect numerics.
-const MIN_PARALLEL_MACS: usize = 1 << 21;
+/// Below this many multiply-adds a matmul runs inline serial. The floor is
+/// backend-dependent: the persistent pool dispatches a batch in ~µs, so it
+/// profitably parallelizes matmuls (e.g. the 2¹⁸-MAC k-means cross terms of
+/// a 128² compression job) that would be swamped by the tens-of-µs
+/// per-worker latency of spawn-per-call. Thresholds only pick the thread
+/// count, never the chunk layout, so they cannot affect numerics.
+const MIN_PARALLEL_MACS_POOL: usize = 1 << 18;
+const MIN_PARALLEL_MACS_SPAWN: usize = 1 << 21;
 
 /// Below this many elements a transpose runs inline serial (pure copy —
 /// memory-bound, so the bar is higher per element than for matmul).
-const MIN_PARALLEL_ELEMS: usize = 1 << 17;
+const MIN_PARALLEL_ELEMS_POOL: usize = 1 << 16;
+const MIN_PARALLEL_ELEMS_SPAWN: usize = 1 << 17;
+
+pub(crate) fn min_parallel_macs() -> usize {
+    match exec::backend() {
+        exec::ExecBackend::Pool => MIN_PARALLEL_MACS_POOL,
+        exec::ExecBackend::SpawnPerCall => MIN_PARALLEL_MACS_SPAWN,
+    }
+}
+
+fn min_parallel_elems() -> usize {
+    match exec::backend() {
+        exec::ExecBackend::Pool => MIN_PARALLEL_ELEMS_POOL,
+        exec::ExecBackend::SpawnPerCall => MIN_PARALLEL_ELEMS_SPAWN,
+    }
+}
 
 /// One row band of the blocked i-k-j kernel: computes output rows
 /// `first_row..first_row + band.len()/n` into the disjoint band slice. The
 /// per-row accumulation order (kb → jb → kk → j) is exactly the serial
 /// kernel's, so banding never changes a bit of the result.
-fn matmul_band(a: &[f32], b: &[f32], k: usize, n: usize, first_row: usize, band: &mut [f32]) {
+///
+/// `pub(crate)` because the blocked Lloyd assign (`kmeans::lloyd`) reuses
+/// it to compute per-chunk cross-term blocks without materializing the full
+/// `n × k` product — same accumulation order, hence bitwise-identical cross
+/// terms between the blocked and full-GEMM assign paths.
+pub(crate) fn matmul_band(a: &[f32], b: &[f32], k: usize, n: usize, first_row: usize, band: &mut [f32]) {
     if n == 0 {
         return;
     }
@@ -71,7 +94,7 @@ impl Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (k2, n) = (other.rows(), other.cols());
         assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
-        let exec = if m * n * k < MIN_PARALLEL_MACS { ExecConfig::serial() } else { exec };
+        let exec = if m * n * k < min_parallel_macs() { ExecConfig::serial() } else { exec };
         let mut out = vec![0.0f32; m * n];
         let a = self.data();
         let b = other.data();
@@ -106,7 +129,7 @@ impl Tensor {
         if r == 0 || c == 0 {
             return Tensor::from_vec(&[c, r], out);
         }
-        let exec = if r * c < MIN_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
+        let exec = if r * c < min_parallel_elems() { ExecConfig::serial() } else { exec };
         let src = self.data();
         // Band over output rows (input columns); blocked inner loops keep
         // the cache behavior of the serial version.
@@ -253,8 +276,8 @@ mod tests {
         let a = Tensor::randn(&[260, 190], &mut r);
         let b = Tensor::randn(&[190, 170], &mut r);
         let t = Tensor::randn(&[430, 310], &mut r);
-        assert!(260 * 190 * 170 >= MIN_PARALLEL_MACS);
-        assert!(430 * 310 >= MIN_PARALLEL_ELEMS);
+        assert!(260 * 190 * 170 >= MIN_PARALLEL_MACS_SPAWN);
+        assert!(430 * 310 >= MIN_PARALLEL_ELEMS_SPAWN);
         // to_bits: derived f32 PartialEq is not bitwise (0.0 == -0.0).
         let bits = |x: &Tensor| x.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
         let base_mm = bits(&a.matmul_with(&b, ExecConfig::serial()));

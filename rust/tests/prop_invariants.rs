@@ -6,7 +6,10 @@ use swsc::compress::{compress_matrix, CompressionPlan, ProjectorSet, SvdBackend,
 use swsc::coordinator::compress_model;
 use swsc::exec::ExecConfig;
 use swsc::io::{pack_u32, unpack_u32, Checkpoint};
-use swsc::kmeans::{cluster_channels, KMeansConfig};
+use swsc::kmeans::{
+    assign_blocked_with, assign_gemm_with, cluster_channels, init_kmeans_pp, minibatch_kmeans_with,
+    update_with, KMeansConfig,
+};
 use swsc::linalg::{svd_jacobi, truncate};
 use swsc::quant::bits::{swsc_avg_bits, swsc_params_for_bits};
 use swsc::quant::{rtn_quantize, RtnConfig, RtnMode};
@@ -315,6 +318,108 @@ fn prop_serial_parallel_parity_bitwise() {
                     || bits(&c.factor_b) != bits(&c_base.factor_b)
                 {
                     return Err(format!("CompressedMatrix differs at {t} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE 2 tentpole invariant, part 1: mini-batch k-means joins the
+/// bit-parity contract. The sampler draws every step's indices from a
+/// stream derived from (plan seed, step), and assignment runs on the
+/// deterministic executor, so centroids, labels, and inertia must be
+/// bit-identical at threads ∈ {1, 2, 4, 8}.
+#[test]
+fn prop_minibatch_parity_bitwise() {
+    const THREADS: [usize; 3] = [2, 4, 8];
+    fn bits(t: &swsc::tensor::Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+    check(
+        "minibatch threads ∈ {1,2,4,8} are bit-identical",
+        311,
+        6,
+        |r| {
+            // Several POINT_CHUNK chunks of points so the executor actually
+            // fans out; batch/steps sized to move centroids around.
+            let n = 300 + r.below(300);
+            let m = 4 + r.below(12);
+            let k = 2 + r.below(6);
+            let batch = 16 + r.below(64);
+            let steps = 5 + r.below(20);
+            let seed = r.next_u64();
+            (Tensor::randn(&[n, m], r), k, batch, steps, seed)
+        },
+        |(pts, k, batch, steps, seed)| {
+            let init = init_kmeans_pp(pts, *k, &mut Rng::new(seed ^ 1));
+            let run = |threads: usize| {
+                let mut rng = Rng::new(*seed);
+                minibatch_kmeans_with(
+                    pts,
+                    init.clone(),
+                    *batch,
+                    *steps,
+                    &mut rng,
+                    ExecConfig::with_threads(threads),
+                )
+            };
+            let (c_base, l_base, i_base) = run(1);
+            for t in THREADS {
+                let (c, l, i) = run(t);
+                if l != l_base {
+                    return Err(format!("minibatch labels differ at {t} threads"));
+                }
+                if i.to_bits() != i_base.to_bits() {
+                    return Err(format!("minibatch inertia differs at {t} threads: {i} vs {i_base}"));
+                }
+                if bits(&c) != bits(&c_base) {
+                    return Err(format!("minibatch centroids differ at {t} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE 2 tentpole invariant, part 2: the blocked cross-term assign is
+/// exactly the naive (un-blocked full-GEMM) assign — equal labels, equal
+/// inertia bits, and bit-equal centroids after the update step — at every
+/// thread count.
+#[test]
+fn prop_blocked_assign_equals_naive_exactly() {
+    fn bits(t: &swsc::tensor::Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+    check(
+        "blocked == naive Lloyd assign",
+        312,
+        8,
+        |r| {
+            // Ragged sizes on purpose: partial point chunks, k not a tile
+            // multiple, dims crossing the microkernel block edge.
+            let n = 64 + r.below(700);
+            let m = 3 + r.below(90);
+            let k = 1 + r.below(40);
+            (Tensor::randn(&[n, m], r), Tensor::randn(&[k, m], r))
+        },
+        |(pts, cen)| {
+            for t in [1usize, 2, 4, 8] {
+                let cfg = ExecConfig::with_threads(t);
+                let (bl, bi) = assign_blocked_with(pts, cen, cfg);
+                let (nl, ni) = assign_gemm_with(pts, cen, cfg);
+                if bl != nl {
+                    return Err(format!("labels differ at {t} threads"));
+                }
+                if bi.to_bits() != ni.to_bits() {
+                    return Err(format!("inertia differs at {t} threads: {bi} vs {ni}"));
+                }
+                let mut cen_b = cen.clone();
+                let mut cen_n = cen.clone();
+                update_with(pts, &bl, &mut cen_b, cfg);
+                update_with(pts, &nl, &mut cen_n, cfg);
+                if bits(&cen_b) != bits(&cen_n) {
+                    return Err(format!("updated centroids differ at {t} threads"));
                 }
             }
             Ok(())
