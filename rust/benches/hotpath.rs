@@ -12,7 +12,8 @@
 //!
 //! - Every major op also emits a `pool_vs_spawn_<op>` comparison row: the
 //!   identical workload timed under the persistent-pool backend and under
-//!   the legacy spawn-per-call backend (`speedup_vs_spawn` = spawn/pool).
+//!   the legacy spawn-per-call backend (JSON `speedup` = spawn/pool,
+//!   `vs = "spawn"`).
 //!   Backends are bit-identical, so this is a pure scheduling comparison —
 //!   including the pool's lower serial-fallback thresholds, which are part
 //!   of what "persistent pool" buys.
@@ -24,6 +25,24 @@
 //!   against the un-blocked full-GEMM reference.
 //! - A CI gate: if the pool regresses >10% vs spawn on any op ≥ 512², the
 //!   bench exits non-zero.
+//!
+//! ISSUE 3 additions:
+//!
+//! - Every GEMM-bound op also emits a `packed_vs_blocked_<op>` row: the
+//!   identical workload under the packed register-tiled engine
+//!   (`GemmKernel::Packed`, shipping default) and under the legacy
+//!   cache-blocked kernel (`GemmKernel::Blocked`). Kernels are
+//!   bit-identical, so this is a pure codegen/memory-traffic comparison;
+//!   packed regressing >10% on any op ≥ 512² fails the run.
+//! - GFLOP/s fields on the flop-counted cases (matmul, tall-skinny
+//!   t_matmul) via `case_at_flops`.
+//! - A tall-skinny (m ≫ n, SVD-shaped) `t_matmul` sweep: the shape where
+//!   strided-A packing replaces the old full `m × n` transpose
+//!   materialization paid on every `AᵀQ` power-iteration GEMM.
+//! - Baseline trajectory: after writing `BENCH_hotpath.json` the run
+//!   compares per-op against the committed `BENCH_baseline.json`
+//!   (bootstrapped from the current run if missing — commit it, like the
+//!   golden fixture) and prints before/after ratios.
 
 use std::path::Path;
 use swsc::bench::Bench;
@@ -32,6 +51,7 @@ use swsc::exec::{self, ExecBackend, ExecConfig};
 use swsc::io::{pack_u32, unpack_u32};
 use swsc::kmeans::{assign_blocked_with, assign_gemm_with, assign_with};
 use swsc::linalg::{qr_householder, svd_jacobi, svd_randomized_with};
+use swsc::tensor::gemm::{self, GemmKernel};
 use swsc::tensor::Tensor;
 use swsc::util::rng::Rng;
 
@@ -88,6 +108,54 @@ fn pool_vs_spawn<F: FnMut()>(
     speedup
 }
 
+/// Time `f` under the packed GEMM engine and under the legacy blocked
+/// kernel and record one `packed_vs_blocked_<op>` comparison row. Same
+/// retry-once policy as [`pool_vs_spawn`]; packed regressing >10% on an op
+/// ≥ 512² is queued for the CI gate.
+#[allow(clippy::too_many_arguments)]
+fn packed_vs_blocked<F: FnMut()>(
+    bench: &Bench,
+    probe: &Bench,
+    regressions: &mut Vec<String>,
+    op: &str,
+    size: usize,
+    threads: usize,
+    mut f: F,
+) -> f64 {
+    let prior = gemm::kernel();
+    let mut measure = |tag: &str| {
+        gemm::set_kernel(GemmKernel::Packed);
+        let packed = probe.case_at(&format!("{op}_packed{tag}"), size, threads, &mut f);
+        gemm::set_kernel(GemmKernel::Blocked);
+        let blocked = probe.case_at(&format!("{op}_blocked{tag}"), size, threads, &mut f);
+        (packed, blocked)
+    };
+    let (mut packed, mut blocked) = measure("");
+    if size >= 512 && blocked / packed.max(1e-12) < 0.9 {
+        let (packed2, blocked2) = measure("_retry");
+        if blocked2 / packed2.max(1e-12) > blocked / packed.max(1e-12) {
+            (packed, blocked) = (packed2, blocked2);
+        }
+    }
+    gemm::set_kernel(prior);
+    let speedup = bench.comparison_labeled(
+        "packed_vs_blocked",
+        "packed",
+        "blocked",
+        op,
+        size,
+        threads,
+        packed,
+        blocked,
+    );
+    if size >= 512 && speedup < 0.9 {
+        regressions.push(format!(
+            "{op} (size {size}, t{threads}): packed GEMM {speedup:.2}x vs blocked"
+        ));
+    }
+    speedup
+}
+
 fn main() {
     let bench = Bench::new("hotpath");
     let probe = Bench::new("probe");
@@ -96,6 +164,8 @@ fn main() {
     let sweep = thread_sweep();
     // Comparison thread count: 4 where the machine has it, else the max.
     let cmp_t = sweep.iter().copied().filter(|&t| t <= 4).max().unwrap_or(1);
+    let tile = gemm::tile();
+    println!("gemm: packed tile MR={} x NR={} (kernel {:?})", tile.mr, tile.nr, gemm::kernel());
 
     bench.section("L3 tensor kernels (threads sweep)");
     for &size in &[256usize, 512, 1024] {
@@ -105,16 +175,30 @@ fn main() {
         let mut serial_mean = f64::NAN;
         for &t in &sweep {
             let cfg = ExecConfig::with_threads(t);
-            let m = bench.case_at(&format!("matmul_{size}_t{t}"), size, t, || a.matmul_with(&b, cfg));
+            let m = bench
+                .case_at_flops(&format!("matmul_{size}_t{t}"), size, t, flops, || {
+                    a.matmul_with(&b, cfg)
+                });
             if t == 1 {
                 serial_mean = m;
             }
-            println!("  -> {:.2} GFLOP/s ({:.2}x vs t1)", flops / m / 1e9, serial_mean / m);
+            println!("  -> {:.2}x vs t1", serial_mean / m);
         }
         let cfg = ExecConfig::with_threads(cmp_t);
         pool_vs_spawn(&bench, &probe, &mut regressions, &format!("matmul_{size}"), size, cmp_t, || {
             a.matmul_with(&b, cfg);
         });
+        packed_vs_blocked(
+            &bench,
+            &probe,
+            &mut regressions,
+            &format!("matmul_{size}"),
+            size,
+            cmp_t,
+            || {
+                a.matmul_with(&b, cfg);
+            },
+        );
     }
     let a512 = Tensor::randn(&[512, 512], &mut rng);
     for &t in &sweep {
@@ -126,6 +210,36 @@ fn main() {
         pool_vs_spawn(&bench, &probe, &mut regressions, "transpose_512", 512, cmp_t, || {
             a512.transpose_with(cfg);
         });
+    }
+
+    // Tall-skinny t_matmul — the SVD power-iteration shape (AᵀQ with
+    // m ≫ n). Under the blocked baseline every iteration materializes the
+    // full m × n transpose before the GEMM; the packed engine packs A
+    // panels straight from the strided source, so this row is where the
+    // strided-A packing payoff (and the killed allocation) shows up.
+    bench.section("L3 tensor kernels — tall-skinny t_matmul (SVD-shaped)");
+    for &(m, n, r) in &[(4096usize, 128usize, 16usize), (8192, 128, 16)] {
+        let a = Tensor::randn(&[m, n], &mut rng);
+        let q = Tensor::randn(&[m, r], &mut rng);
+        let flops = 2.0 * (m as f64) * (n as f64) * (r as f64);
+        for &t in &sweep {
+            let cfg = ExecConfig::with_threads(t);
+            bench.case_at_flops(&format!("t_matmul_tall_{m}x{n}_r{r}_t{t}"), m, t, flops, || {
+                a.t_matmul_with(&q, cfg)
+            });
+        }
+        let cfg = ExecConfig::with_threads(cmp_t);
+        packed_vs_blocked(
+            &bench,
+            &probe,
+            &mut regressions,
+            &format!("t_matmul_tall_{m}x{n}_r{r}"),
+            m,
+            cmp_t,
+            || {
+                a.t_matmul_with(&q, cfg);
+            },
+        );
     }
 
     bench.section("L3 linalg");
@@ -144,6 +258,10 @@ fn main() {
         let mut r2 = Rng::new(405);
         pool_vs_spawn(&bench, &probe, &mut regressions, "svd_randomized_512_r8", 512, cmp_t, || {
             svd_randomized_with(&err512, 8, 8, 2, &mut r2, cfg);
+        });
+        let mut r3 = Rng::new(405);
+        packed_vs_blocked(&bench, &probe, &mut regressions, "svd_randomized_512_r8", 512, cmp_t, || {
+            svd_randomized_with(&err512, 8, 8, 2, &mut r3, cfg);
         });
     }
     let tall = Tensor::randn(&[256, 24], &mut rng);
@@ -184,6 +302,17 @@ fn main() {
         pool_vs_spawn(&bench, &probe, &mut regressions, "assign_blocked_n8192_k64", 8192, cmp_t, || {
             assign_blocked_with(&wide, &wide_cen, cfg);
         });
+        packed_vs_blocked(
+            &bench,
+            &probe,
+            &mut regressions,
+            "assign_blocked_n8192_k64",
+            8192,
+            cmp_t,
+            || {
+                assign_blocked_with(&wide, &wide_cen, cfg);
+            },
+        );
     }
 
     bench.section("pipeline: full matrix compression (threads sweep)");
@@ -281,12 +410,38 @@ fn main() {
         Err(e) => eprintln!("\nfailed to write {}: {e}", json_path.display()),
     }
 
+    // Cross-PR perf trajectory: compare this run against the committed
+    // baseline.
+    let baseline_path = Path::new("BENCH_baseline.json");
+    if baseline_path.exists() {
+        bench.compare_against_baseline(baseline_path);
+    }
+
     if !regressions.is_empty() {
-        eprintln!("\nPOOL REGRESSION (>10% slower than spawn-per-call on ops ≥ 512²):");
+        eprintln!(
+            "\nPERF REGRESSION (>10% slower than its baseline configuration on ops ≥ 512²):"
+        );
         for r in &regressions {
             eprintln!("  {r}");
         }
+        // Deliberately no baseline bootstrap on a failed run: a regressed
+        // run must never seed the perf trajectory.
         std::process::exit(1);
     }
-    println!("pool_vs_spawn gate: pool within 10% of (or faster than) spawn on all ops ≥ 512²");
+    println!(
+        "gates: pool within 10% of spawn AND packed GEMM within 10% of blocked on all ops ≥ 512²"
+    );
+
+    // Bootstrap a missing baseline only from a gate-clean run (same policy
+    // as the golden fixture: commit it, then future perf PRs have an
+    // in-repo before/after to cite).
+    if !baseline_path.exists() {
+        match std::fs::copy(json_path, baseline_path) {
+            Ok(_) => println!(
+                "bootstrapped {} from this run — commit it so future perf PRs compare against it",
+                baseline_path.display()
+            ),
+            Err(e) => eprintln!("failed to bootstrap {}: {e}", baseline_path.display()),
+        }
+    }
 }

@@ -7,9 +7,12 @@
 //!
 //! Each timed case is also recorded as a machine-readable
 //! [`BenchRecord`]; [`Bench::write_json`] dumps them as a JSON array
-//! (`op`, `size`, `threads`, `ns_per_iter`, plus `speedup_vs_spawn` on
-//! [`Bench::comparison`] rows) so successive PRs have a perf trajectory to
-//! diff against.
+//! (`op`, `size`, `threads`, `ns_per_iter`, plus `gflops` on flop-counted
+//! cases and `speedup`/`vs` on comparison rows) so successive PRs have a
+//! perf trajectory to diff against. [`Bench::compare_against_baseline`]
+//! reads a committed baseline JSON (`BENCH_baseline.json`, bootstrapped by
+//! the hotpath bench on first run) and prints per-op before/after ratios —
+//! the in-repo trajectory perf PRs cite.
 
 use crate::util::timer::Stats;
 use std::cell::RefCell;
@@ -27,10 +30,15 @@ pub struct BenchRecord {
     pub threads: usize,
     /// Mean wall-clock per iteration, nanoseconds.
     pub ns_per_iter: f64,
-    /// For `pool_vs_spawn_*` comparison rows: spawn-backend mean divided by
-    /// pool-backend mean (> 1 ⇒ the persistent pool is faster). `None` for
-    /// plain timing rows.
-    pub speedup_vs_spawn: Option<f64>,
+    /// Sustained GFLOP/s, for cases with a known flop count
+    /// ([`Bench::case_at_flops`]). `None` otherwise.
+    pub gflops: Option<f64>,
+    /// For comparison rows (`pool_vs_spawn_*`, `packed_vs_blocked_*`):
+    /// baseline mean divided by new mean (> 1 ⇒ the new configuration is
+    /// faster). `None` for plain timing rows.
+    pub speedup: Option<f64>,
+    /// What a comparison row is measured against (`"spawn"`, `"blocked"`).
+    pub vs: Option<String>,
 }
 
 /// One benchmark group with shared formatting.
@@ -66,6 +74,30 @@ impl Bench {
         label: &str,
         size: usize,
         threads: usize,
+        f: impl FnMut() -> T,
+    ) -> f64 {
+        self.run_case(label, size, threads, None, f)
+    }
+
+    /// Like [`Bench::case_at`], with a known flop count per iteration: the
+    /// record (and the printed line) carries sustained GFLOP/s.
+    pub fn case_at_flops<T>(
+        &self,
+        label: &str,
+        size: usize,
+        threads: usize,
+        flops: f64,
+        f: impl FnMut() -> T,
+    ) -> f64 {
+        self.run_case(label, size, threads, Some(flops), f)
+    }
+
+    fn run_case<T>(
+        &self,
+        label: &str,
+        size: usize,
+        threads: usize,
+        flops: Option<f64>,
         mut f: impl FnMut() -> T,
     ) -> f64 {
         for _ in 0..self.warmup {
@@ -78,8 +110,10 @@ impl Bench {
             stats.push(t0.elapsed().as_secs_f64());
         }
         let mean = stats.mean();
+        let gflops = flops.map(|fl| fl / mean.max(1e-12) / 1e9);
+        let gf_note = gflops.map(|g| format!("  {g:>7.2} GFLOP/s")).unwrap_or_default();
         println!(
-            "bench {:<40} {:>12} ± {:>10}  min {:>10}  p50 {:>10}  (n={})",
+            "bench {:<40} {:>12} ± {:>10}  min {:>10}  p50 {:>10}  (n={}){gf_note}",
             format!("{}/{}", self.name, label),
             fmt_secs(mean),
             fmt_secs(stats.std()),
@@ -92,7 +126,9 @@ impl Bench {
             size,
             threads,
             ns_per_iter: mean * 1e9,
-            speedup_vs_spawn: None,
+            gflops,
+            speedup: None,
+            vs: None,
         });
         mean
     }
@@ -101,7 +137,7 @@ impl Bench {
     /// mean seconds under the persistent-pool backend vs under the
     /// spawn-per-call backend on the identical workload. The row's
     /// `ns_per_iter` is the pool time (the shipping configuration);
-    /// `speedup_vs_spawn` is `spawn / pool`. Returns the speedup.
+    /// `speedup` is `spawn / pool`. Returns the speedup.
     pub fn comparison(
         &self,
         op: &str,
@@ -110,21 +146,82 @@ impl Bench {
         pool_secs: f64,
         spawn_secs: f64,
     ) -> f64 {
-        let speedup = spawn_secs / pool_secs.max(1e-12);
+        self.comparison_labeled("pool_vs_spawn", "pool", "spawn", op, size, threads, pool_secs, spawn_secs)
+    }
+
+    /// Generic comparison row: `new_secs` is the shipping configuration,
+    /// `base_secs` the baseline it replaces; the row lands as
+    /// `{prefix}_{op}` with `speedup = base / new` and `vs = base_name`.
+    /// Also used for the `packed_vs_blocked_*` GEMM-kernel rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn comparison_labeled(
+        &self,
+        prefix: &str,
+        new_name: &str,
+        base_name: &str,
+        op: &str,
+        size: usize,
+        threads: usize,
+        new_secs: f64,
+        base_secs: f64,
+    ) -> f64 {
+        let speedup = base_secs / new_secs.max(1e-12);
         println!(
-            "bench {:<40} pool {:>10} vs spawn {:>10}  ({speedup:.2}x)",
-            format!("{}/pool_vs_spawn_{op}", self.name),
-            fmt_secs(pool_secs),
-            fmt_secs(spawn_secs),
+            "bench {:<40} {new_name} {:>10} vs {base_name} {:>10}  ({speedup:.2}x)",
+            format!("{}/{prefix}_{op}", self.name),
+            fmt_secs(new_secs),
+            fmt_secs(base_secs),
         );
         self.records.borrow_mut().push(BenchRecord {
-            op: format!("pool_vs_spawn_{op}"),
+            op: format!("{prefix}_{op}"),
             size,
             threads,
-            ns_per_iter: pool_secs * 1e9,
-            speedup_vs_spawn: Some(speedup),
+            ns_per_iter: new_secs * 1e9,
+            gflops: None,
+            speedup: Some(speedup),
+            vs: Some(base_name.to_string()),
         });
         speedup
+    }
+
+    /// Print per-op before/after ratios against a committed baseline JSON
+    /// (as written by [`Bench::write_json`] on an earlier run — the
+    /// cross-PR perf trajectory). Rows are matched by exact op label;
+    /// missing or unreadable baselines just report and return.
+    pub fn compare_against_baseline(&self, path: &Path) {
+        let Ok(body) = std::fs::read_to_string(path) else {
+            println!("(baseline {} unreadable — skipping comparison)", path.display());
+            return;
+        };
+        let mut base: Vec<(String, f64)> = Vec::new();
+        for line in body.lines() {
+            let (Some(op), Some(ns)) = (
+                extract_json_str(line, "\"op\": \""),
+                extract_json_num(line, "\"ns_per_iter\": "),
+            ) else {
+                continue;
+            };
+            base.push((op, ns));
+        }
+        if base.is_empty() {
+            println!("(baseline {} has no records — skipping comparison)", path.display());
+            return;
+        }
+        println!("\n=== {} — vs baseline {} ===", self.name, path.display());
+        let mut matched = 0usize;
+        for r in self.records.borrow().iter() {
+            let Some(entry) = base.iter().find(|e| e.0 == r.op) else { continue };
+            let b = entry.1;
+            let ratio = b / r.ns_per_iter.max(1e-3);
+            matched += 1;
+            println!(
+                "  {:<44} baseline {:>10} -> now {:>10}  ({ratio:.2}x)",
+                r.op,
+                fmt_secs(b / 1e9),
+                fmt_secs(r.ns_per_iter / 1e9),
+            );
+        }
+        println!("  ({matched} ops matched against {} baseline records)", base.len());
     }
 
     /// All records so far, in run order.
@@ -145,8 +242,14 @@ impl Bench {
                 "  {{\"op\": \"{}\", \"size\": {}, \"threads\": {}, \"ns_per_iter\": {:.1}",
                 r.op, r.size, r.threads, r.ns_per_iter
             ));
-            if let Some(sp) = r.speedup_vs_spawn {
-                s.push_str(&format!(", \"speedup_vs_spawn\": {sp:.3}"));
+            if let Some(g) = r.gflops {
+                s.push_str(&format!(", \"gflops\": {g:.2}"));
+            }
+            if let Some(sp) = r.speedup {
+                s.push_str(&format!(", \"speedup\": {sp:.3}"));
+            }
+            if let Some(vs) = &r.vs {
+                s.push_str(&format!(", \"vs\": \"{vs}\""));
             }
             s.push('}');
         }
@@ -158,6 +261,25 @@ impl Bench {
     pub fn section(&self, title: &str) {
         println!("\n=== {} — {} ===", self.name, title);
     }
+}
+
+/// Pull the string value following `key` out of one JSON line (the bench
+/// JSON is written one record per line with plain identifier labels, so a
+/// substring scan is sufficient — no vendored JSON parser needed).
+fn extract_json_str(line: &str, key: &str) -> Option<String> {
+    let start = line.find(key)? + key.len();
+    let rest = &line[start..];
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+/// Pull the numeric value following `key` out of one JSON line.
+fn extract_json_num(line: &str, key: &str) -> Option<f64> {
+    let start = line.find(key)? + key.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
 }
 
 /// Format seconds with an adaptive unit.
@@ -202,7 +324,7 @@ mod tests {
         assert_eq!(recs[0].op, "alpha");
         assert_eq!((recs[0].size, recs[0].threads), (512, 4));
         assert!(recs.iter().all(|r| r.ns_per_iter >= 0.0));
-        assert!(recs.iter().all(|r| r.speedup_vs_spawn.is_none()));
+        assert!(recs.iter().all(|r| r.speedup.is_none() && r.gflops.is_none()));
 
         let path = std::env::temp_dir().join("swsc_bench_unit.json");
         b.write_json(&path).unwrap();
@@ -220,16 +342,64 @@ mod tests {
         let b = Bench::new("unit").with_iters(1);
         let sp = b.comparison("matmul_512", 512, 4, 1.0e-3, 2.5e-3);
         assert!((sp - 2.5).abs() < 1e-9);
+        let sk = b.comparison_labeled(
+            "packed_vs_blocked",
+            "packed",
+            "blocked",
+            "matmul_512",
+            512,
+            4,
+            1.0e-3,
+            1.8e-3,
+        );
+        assert!((sk - 1.8).abs() < 1e-9);
         let recs = b.records();
-        assert_eq!(recs.len(), 1);
+        assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].op, "pool_vs_spawn_matmul_512");
-        assert!((recs[0].speedup_vs_spawn.unwrap() - 2.5).abs() < 1e-9);
+        assert!((recs[0].speedup.unwrap() - 2.5).abs() < 1e-9);
+        assert_eq!(recs[1].op, "packed_vs_blocked_matmul_512");
+        assert_eq!(recs[1].vs.as_deref(), Some("blocked"));
 
         let path = std::env::temp_dir().join("swsc_bench_cmp.json");
         b.write_json(&path).unwrap();
         let body = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert!(body.contains("\"op\": \"pool_vs_spawn_matmul_512\""));
-        assert!(body.contains("\"speedup_vs_spawn\": 2.500"));
+        assert!(body.contains("\"speedup\": 2.500"));
+        assert!(body.contains("\"vs\": \"spawn\""));
+        assert!(body.contains("\"op\": \"packed_vs_blocked_matmul_512\""));
+        assert!(body.contains("\"vs\": \"blocked\""));
+    }
+
+    #[test]
+    fn flop_cases_record_gflops() {
+        let b = Bench::new("unit").with_iters(1);
+        b.case_at_flops("gemm", 64, 1, 2.0 * 64.0 * 64.0 * 64.0, || std::hint::black_box(1 + 1));
+        let recs = b.records();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].gflops.unwrap() > 0.0);
+
+        let path = std::env::temp_dir().join("swsc_bench_gflops.json");
+        b.write_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.contains("\"gflops\": "));
+    }
+
+    #[test]
+    fn baseline_json_fields_parse() {
+        let line = "  {\"op\": \"matmul_512_t4\", \"size\": 512, \"threads\": 4, \"ns_per_iter\": 1234.5, \"gflops\": 12.34}";
+        assert_eq!(extract_json_str(line, "\"op\": \"").as_deref(), Some("matmul_512_t4"));
+        assert_eq!(extract_json_num(line, "\"ns_per_iter\": "), Some(1234.5));
+        assert_eq!(extract_json_num(line, "\"size\": "), Some(512.0));
+        assert_eq!(extract_json_str(line, "\"missing\": \""), None);
+
+        // Round-trip: write a run, then compare a new run against it.
+        let b = Bench::new("unit").with_iters(1);
+        b.case_at("alpha", 64, 1, || 1 + 1);
+        let path = std::env::temp_dir().join("swsc_bench_baseline.json");
+        b.write_json(&path).unwrap();
+        b.compare_against_baseline(&path); // prints one matched row; must not panic
+        std::fs::remove_file(&path).ok();
     }
 }

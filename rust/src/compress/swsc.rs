@@ -96,18 +96,15 @@ impl CompressedMatrix {
     }
 
     /// Restore the inference weight `W_new = W' + A·B` (paper Fig. 3).
+    /// `W'` is gathered row-major (shared [`crate::kmeans`] helper, unit
+    /// stride instead of the old column-by-column `at_mut` walk) and the
+    /// low-rank compensation is folded into that buffer with the fused
+    /// [`Tensor::matmul_add_assign`] — no separate `m × n` product
+    /// allocation, same bits as `W'.add(&A.matmul(&B))`.
     pub fn reconstruct(&self) -> Tensor {
-        let (m, n) = self.shape;
-        let mut out = Tensor::zeros(&[m, n]);
-        // Gather representative vectors by label.
-        for (j, &lab) in self.labels.iter().enumerate() {
-            let c = lab as usize;
-            for i in 0..m {
-                *out.at_mut(i, j) = self.centroids.at(i, c);
-            }
-        }
+        let mut out = crate::kmeans::gather_representatives(&self.centroids, &self.labels);
         if self.rank() > 0 {
-            out = out.add(&self.factor_a.matmul(&self.factor_b));
+            self.factor_a.matmul_add_assign(&self.factor_b, &mut out);
         }
         out
     }
@@ -115,15 +112,7 @@ impl CompressedMatrix {
     /// Restore only the cluster approximation `W'` (no compensation) — used
     /// by the rank ablation.
     pub fn reconstruct_uncompensated(&self) -> Tensor {
-        let (m, n) = self.shape;
-        let mut out = Tensor::zeros(&[m, n]);
-        for (j, &lab) in self.labels.iter().enumerate() {
-            let c = lab as usize;
-            for i in 0..m {
-                *out.at_mut(i, j) = self.centroids.at(i, c);
-            }
-        }
-        out
+        crate::kmeans::gather_representatives(&self.centroids, &self.labels)
     }
 
     /// Exact storage accounting for this matrix.

@@ -13,6 +13,7 @@
 //! ([`assign_gemm_with`], oracle/baseline).
 
 use crate::exec::{self, ExecConfig};
+use crate::tensor::gemm::{self, GemmKernel};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -55,12 +56,15 @@ pub fn assign_with(points: &Tensor, centroids: &Tensor, exec: ExecConfig) -> (Ve
 /// Instead of materializing the full `n × k` cross-term product (a real
 /// allocation at 11008-channel MLP widths) and re-walking it in a second
 /// pass, each fixed [`POINT_CHUNK`]-point chunk computes its own
-/// `chunk × k` cross-term block with the cache-blocked matmul microkernel
-/// (tiling k × points × dims) and fuses the argmin over centroids while the
-/// block is hot, using precomputed ‖c‖². The microkernel and operands are
-/// exactly the full-GEMM path's, so every cross term — and therefore every
-/// label, inertia bit, and downstream centroid — is bitwise identical to
-/// [`assign_gemm_with`] at any thread count.
+/// `chunk × k` cross-term block and fuses the argmin over centroids while
+/// the block is hot, using precomputed ‖c‖². The per-chunk tiles run on the
+/// same shared GEMM engine as `Tensor::matmul` (packed register-tiled by
+/// default, with the centroid panels packed **once** per assign call and
+/// reused by every chunk; the old cache-blocked kernel under
+/// [`GemmKernel::Blocked`]). Every kernel accumulates each cross term in a
+/// single f32 register over increasing dims, so every label, inertia bit,
+/// and downstream centroid is bitwise identical to [`assign_gemm_with`] at
+/// any thread count and under either kernel.
 pub fn assign_blocked_with(points: &Tensor, centroids: &Tensor, exec: ExecConfig) -> (Vec<u32>, f64) {
     let n = points.rows();
     let k = centroids.rows();
@@ -69,14 +73,29 @@ pub fn assign_blocked_with(points: &Tensor, centroids: &Tensor, exec: ExecConfig
 
     let cnorm: Vec<f64> = (0..k).map(|c| Tensor::dot(centroids.row(c), centroids.row(c))).collect();
     // Same right-hand operand as the GEMM path: centroids transposed once
-    // (m × k — small next to the points).
+    // (m × k — small next to the points), then packed once into the shared
+    // engine's column panels so chunks don't re-pack it.
     let cent_t = centroids.transpose_with(exec);
+    let packed = match gemm::kernel() {
+        GemmKernel::Packed => Some(gemm::pack_b(cent_t.data(), m, k, exec)),
+        GemmKernel::Blocked => None,
+    };
 
     let parts = exec::map_chunks(exec, n, POINT_CHUNK, |range| {
         let rows = range.len();
         // cross[jr][c] = points[range.start + jr] · centroids[c]
         let mut cross = vec![0.0f32; rows * k];
-        crate::tensor::matmul_band(points.data(), cent_t.data(), m, k, range.start, &mut cross);
+        match &packed {
+            Some(pb) => gemm::gemm_rows(
+                gemm::ASrc::Rows { data: points.data(), k: m },
+                range.start,
+                rows,
+                pb,
+                &mut cross,
+                false,
+            ),
+            None => crate::tensor::matmul_band(points.data(), cent_t.data(), m, k, range.start, &mut cross),
+        }
 
         let mut labels = Vec::with_capacity(rows);
         let mut partial = 0.0f64;

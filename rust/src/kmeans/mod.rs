@@ -84,16 +84,31 @@ impl KMeansResult {
     /// Reconstruct the approximation `W'`: every channel replaced by its
     /// cluster representative.
     pub fn reconstruct(&self) -> Tensor {
-        let m = self.centroids.rows();
-        let n = self.labels.len();
-        let mut out = Tensor::zeros(&[m, n]);
-        for (j, &lab) in self.labels.iter().enumerate() {
-            for i in 0..m {
-                *out.at_mut(i, j) = self.centroids.at(i, lab as usize);
-            }
-        }
-        out
+        gather_representatives(&self.centroids, &self.labels)
     }
+}
+
+/// Gather the shared-weight approximation `W'`: channel `j` of the result
+/// is column `labels[j]` of `centroids` (`m × k`, representatives as
+/// columns). Row-major: per output row the centroid row is one contiguous
+/// `k`-slice and every write is unit-stride (the pre-PR-3 loops walked
+/// column-by-column through `at_mut`, striding `n` apart per element).
+/// Shared by [`KMeansResult::reconstruct`] and the compressed-matrix
+/// reconstruction in `compress::swsc`.
+pub(crate) fn gather_representatives(centroids: &Tensor, labels: &[u32]) -> Tensor {
+    let (m, k) = (centroids.rows(), centroids.cols());
+    let n = labels.len();
+    let mut out = Tensor::zeros(&[m, n]);
+    let cent = centroids.data();
+    let data = out.data_mut();
+    for i in 0..m {
+        let crow = &cent[i * k..(i + 1) * k];
+        let orow = &mut data[i * n..(i + 1) * n];
+        for (o, &lab) in orow.iter_mut().zip(labels) {
+            *o = crow[lab as usize];
+        }
+    }
+    out
 }
 
 /// Cluster the channels (columns) of `w` into `cfg.k` clusters.

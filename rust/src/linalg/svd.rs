@@ -27,31 +27,35 @@ impl Svd {
     }
 
     /// `U · diag(s)` — convenient for the paper's `A = U_r Σ^{1/2}`,
-    /// `B = Σ^{1/2} V_rᵀ` split (see [`Svd::split_factors`]).
+    /// `B = Σ^{1/2} V_rᵀ` split (see [`Svd::split_factors`]). One row-major
+    /// pass: each U row is scaled elementwise by `s` in place of the old
+    /// column-by-column walk that strided `r` apart on every write.
     pub fn scaled_u(&self) -> Tensor {
-        let (m, r) = (self.u.rows(), self.rank());
         let mut out = self.u.clone();
-        for i in 0..m {
-            for j in 0..r {
-                *out.at_mut(i, j) *= self.s[j];
+        for i in 0..out.rows() {
+            for (v, &s) in out.row_mut(i).iter_mut().zip(&self.s) {
+                *v *= s;
             }
         }
         out
     }
 
     /// The paper's storage split: `A = U_r Σ^{1/2}` (m × r) and
-    /// `B = Σ^{1/2} V_rᵀ` (r × n), so `A·B = U Σ Vᵀ`.
+    /// `B = Σ^{1/2} V_rᵀ` (r × n), so `A·B = U Σ Vᵀ`. Both factors are
+    /// scaled in one row-major pass each (U rows elementwise by `√s`, Vᵀ
+    /// rows by their own `√s[j]`) — same multiplications, unit stride.
     pub fn split_factors(&self) -> (Tensor, Tensor) {
-        let (m, r, n) = (self.u.rows(), self.rank(), self.vt.cols());
+        let sq: Vec<f32> = self.s.iter().map(|&s| s.max(0.0).sqrt()).collect();
         let mut a = self.u.clone();
-        let mut b = self.vt.clone();
-        for j in 0..r {
-            let sq = self.s[j].max(0.0).sqrt();
-            for i in 0..m {
-                *a.at_mut(i, j) *= sq;
+        for i in 0..a.rows() {
+            for (v, &q) in a.row_mut(i).iter_mut().zip(&sq) {
+                *v *= q;
             }
-            for c in 0..n {
-                *b.at_mut(j, c) *= sq;
+        }
+        let mut b = self.vt.clone();
+        for (j, &q) in sq.iter().enumerate() {
+            for v in b.row_mut(j).iter_mut() {
+                *v *= q;
             }
         }
         (a, b)
@@ -170,10 +174,13 @@ pub fn svd_randomized(a: &Tensor, rank: usize, oversample: usize, power_iters: u
 
 /// [`svd_randomized`] with an explicit thread config. The subspace-iteration
 /// GEMMs (`A·Ω`, `Aᵀ·Q`, `A·Z`, `Qᵀ·A`, `Q·V_b`) are the cost center and run
-/// row-parallel on the deterministic executor (persistent pool by default —
-/// relevant here because each power iteration issues several short GEMMs,
-/// exactly the dispatch-bound shape spawn-per-call was slow at); the
-/// Householder QR and the small exact Jacobi stay serial. Output is
+/// row-parallel on the deterministic executor through the shared packed
+/// GEMM engine (persistent pool by default — relevant here because each
+/// power iteration issues several short GEMMs, exactly the dispatch-bound
+/// shape spawn-per-call was slow at). The transposed products `Aᵀ·Q` and
+/// `Qᵀ·A` pack their A panels straight from the strided source, so the
+/// full `m × n` transpose copy formerly paid per power iteration is gone.
+/// The Householder QR and the small exact Jacobi stay serial. Output is
 /// bit-identical at any `exec.threads`.
 pub fn svd_randomized_with(
     a: &Tensor,

@@ -1,0 +1,565 @@
+//! Packed register-tiled GEMM engine — the L3 CPU fast path.
+//!
+//! The cache-blocked i-k-j kernel that previously served every GEMM
+//! ([`crate::tensor::matmul_band`], kept as the [`GemmKernel::Blocked`]
+//! baseline/oracle) pays a load *and* a store of the output row for every
+//! multiply-add: `orow[j] += aik * brow[j]` round-trips the accumulator
+//! through L1 on each k step. This module replaces it with the standard
+//! packed-panel design:
+//!
+//! - **B is packed into column panels** of `NR` f32 lanes (the SIMD
+//!   register width, picked once at startup — see [`tile`]). Within a
+//!   panel, the `NR` values of each k step are contiguous, so the
+//!   microkernel's j-loop is a unit-stride vector load regardless of `n`.
+//! - **A is packed into row panels** of `MR` rows, column-major within the
+//!   panel (`ap[k·MR + i]`), so each k step reads one contiguous `MR`-chunk.
+//!   The packing routine also accepts a *transposed-stride* source
+//!   ([`ASrc::Cols`]): `t_matmul` packs `Aᵀ` panels directly out of the
+//!   row-major `k × m` buffer instead of materializing an `m × k` transpose
+//!   first — that copy used to be paid on every `AᵀQ` of each SVD power
+//!   iteration.
+//! - The **microkernel** holds an `MR × NR` accumulator block in registers
+//!   across the whole k loop and spills it exactly once. The unrolled
+//!   j-loop autovectorizes (dispatched through an AVX2 `target_feature`
+//!   wrapper when the CPU has it, so vector codegen does not depend on
+//!   `-C target-cpu`).
+//!
+//! ## Why the results are bit-identical to the old kernel
+//!
+//! Every kernel in this crate — naive triple loop, blocked i-k-j, and this
+//! packed engine — computes each output element as a **single f32
+//! accumulator over strictly increasing k**. Rust/LLVM never contracts
+//! `mul + add` into FMA without explicit fast-math, and vectorizing the
+//! j-loop only runs independent elements in lanes, so all three kernels
+//! produce identical bits for every element. Tile sizes (`MR`/`NR`), panel
+//! boundaries, band boundaries, and thread counts can all vary freely —
+//! including across machines — without moving a single bit. That is what
+//! keeps the `SWSC_THREADS` invariance contract, the blocked-vs-reference
+//! Lloyd equality, and the golden `.swsc` fixture bytes intact with no
+//! regeneration (see `tests/fixtures/README.md` for the policy if a future
+//! kernel *does* change the accumulation order). The unit tests below pin
+//! packed == naive **bitwise** over every MR/NR remainder combination.
+//!
+//! Kernel selection is process-wide ([`kernel`]/[`set_kernel`], env
+//! `SWSC_GEMM_KERNEL=blocked`), mirroring the `ExecBackend::SpawnPerCall`
+//! pattern: the old kernel survives purely as a bench baseline and
+//! cross-check oracle for `packed_vs_blocked_*` rows in
+//! `benches/hotpath.rs`.
+
+use crate::exec::{self, ExecConfig};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which GEMM implementation carries `Tensor::matmul`/`t_matmul` and the
+/// k-means cross-term tiles. Outputs are bit-identical between kernels —
+/// both are single-accumulator increasing-k sums — so this is purely a
+/// wall-clock/bench knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmKernel {
+    /// Packed panels + register-tiled microkernel (default).
+    Packed,
+    /// The pre-PR-3 cache-blocked i-k-j kernel, kept as the bench baseline
+    /// and as a cross-check oracle.
+    Blocked,
+}
+
+// 0 = unresolved, 1 = Packed, 2 = Blocked.
+static KERNEL: AtomicU8 = AtomicU8::new(0);
+
+/// Current kernel; first call resolves `SWSC_GEMM_KERNEL` (`"blocked"`
+/// selects [`GemmKernel::Blocked`], anything else the packed engine).
+pub fn kernel() -> GemmKernel {
+    match KERNEL.load(Ordering::Relaxed) {
+        1 => GemmKernel::Packed,
+        2 => GemmKernel::Blocked,
+        _ => {
+            let resolved = match std::env::var("SWSC_GEMM_KERNEL").ok().as_deref() {
+                Some("blocked") => GemmKernel::Blocked,
+                _ => GemmKernel::Packed,
+            };
+            set_kernel(resolved);
+            resolved
+        }
+    }
+}
+
+/// Override the kernel process-wide. Intended for the bench harness and
+/// parity tests; safe to flip at any time because both kernels produce
+/// bit-identical outputs.
+pub fn set_kernel(k: GemmKernel) {
+    KERNEL.store(
+        match k {
+            GemmKernel::Packed => 1,
+            GemmKernel::Blocked => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// Microkernel tile: `mr` packed A rows × `nr` packed B columns held in
+/// registers. `nr` is the SIMD lane budget per row (8 or 16 f32), `mr` the
+/// row unroll (4 or 8) — together sized so the accumulator block plus one B
+/// row and one A broadcast stay inside the architectural vector registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub mr: usize,
+    pub nr: usize,
+}
+
+/// The process-wide tile, chosen once at startup from CPU capabilities:
+/// 4×16 on avx512f hosts, 8×8 otherwise (8 ymm accumulator registers at
+/// AVX2 width). The 4×16 shape pays off on avx512f machines twice over:
+/// at the default baseline/AVX2 codegen it halves the A broadcasts per MAC
+/// versus 8×8 at identical accumulator register pressure (8 ymm either
+/// way), and when the crate is additionally built with AVX-512 codegen
+/// (`-C target-cpu=native`), `target_feature(enable = "avx2")` extends the
+/// base feature set, so each 16-lane row becomes a single zmm register.
+/// (A dedicated `avx512f` target-feature wrapper is deliberately not used:
+/// it was only stabilized in much newer rustc than this crate assumes.)
+/// Because every kernel is a per-element increasing-k sum, the choice
+/// affects only wall-clock — results are identical across machines.
+pub fn tile() -> Tile {
+    static TILE: OnceLock<Tile> = OnceLock::new();
+    *TILE.get_or_init(detect_tile)
+}
+
+fn detect_tile() -> Tile {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx512f") {
+            return Tile { mr: 4, nr: 16 };
+        }
+    }
+    Tile { mr: 8, nr: 8 }
+}
+
+/// Below this many elements, packing B runs inline serial (pure copy —
+/// same bar as the transpose threshold in `tensor::ops`).
+const PACK_PARALLEL_ELEMS: usize = 1 << 16;
+
+/// How many B panels each parallel packing chunk covers.
+const PACK_PANELS_PER_CHUNK: usize = 8;
+
+/// `B` repacked into `⌈n/nr⌉` column panels of `k × nr` (zero-padded past
+/// column `n`). Shared read-only by every row band of a GEMM, so it is
+/// packed once per call, not per band.
+pub(crate) struct PackedB {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+    nr: usize,
+}
+
+impl PackedB {
+    fn npanels(&self) -> usize {
+        self.n.div_ceil(self.nr)
+    }
+
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * self.nr..(p + 1) * self.k * self.nr]
+    }
+}
+
+/// Pack row-major `k × n` B into [`PackedB`] panels. Disjoint writes into
+/// pre-assigned panel slots — identical at any thread count.
+pub(crate) fn pack_b(b: &[f32], k: usize, n: usize, exec: ExecConfig) -> PackedB {
+    let nr = tile().nr;
+    if k == 0 || n == 0 {
+        return PackedB { data: Vec::new(), k, n, nr };
+    }
+    let np = n.div_ceil(nr);
+    let mut data = vec![0.0f32; np * k * nr];
+    let exec = if k * n < PACK_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
+    // One "row" per panel: band over panels, each chunk packing its own
+    // disjoint panel slots.
+    exec::for_row_bands(exec, &mut data, np, k * nr, PACK_PANELS_PER_CHUNK, |p0, band| {
+        let pcount = band.len() / (k * nr);
+        for pi in 0..pcount {
+            let p = p0 + pi;
+            let j0 = p * nr;
+            let jtake = nr.min(n - j0);
+            let panel = &mut band[pi * k * nr..(pi + 1) * k * nr];
+            for kk in 0..k {
+                let src = &b[kk * n + j0..kk * n + j0 + jtake];
+                panel[kk * nr..kk * nr + jtake].copy_from_slice(src);
+                // Columns jtake..nr stay zero (ragged right edge); their
+                // lanes compute values that are never copied out.
+            }
+        }
+    });
+    PackedB { data, k, n, nr }
+}
+
+/// Where the left operand's rows come from.
+#[derive(Clone, Copy)]
+pub(crate) enum ASrc<'a> {
+    /// Row-major `m × k`: logical element `(i, kk)` at `data[i·k + kk]`.
+    Rows { data: &'a [f32], k: usize },
+    /// Transposed-stride source: the logical `m × k` operand is stored as a
+    /// row-major `k × m` buffer (leading dimension `ld = m`), so element
+    /// `(i, kk)` sits at `data[kk·ld + i]`. Packing reads contiguous
+    /// `MR`-length runs per k step — no transpose materialization.
+    Cols { data: &'a [f32], ld: usize },
+}
+
+/// Pack `take ≤ mr` logical A rows starting at `row0` into the
+/// column-major panel `ap[kk·mr + r]`. Rows `take..mr` are zero padding;
+/// their microkernel outputs are discarded, so the pad value is irrelevant.
+fn pack_a_panel(a: ASrc<'_>, row0: usize, take: usize, mr: usize, kdim: usize, ap: &mut [f32]) {
+    if take < mr {
+        ap.fill(0.0);
+    }
+    match a {
+        ASrc::Rows { data, k } => {
+            debug_assert_eq!(k, kdim);
+            for r in 0..take {
+                let row = &data[(row0 + r) * kdim..(row0 + r + 1) * kdim];
+                for (kk, &v) in row.iter().enumerate() {
+                    ap[kk * mr + r] = v;
+                }
+            }
+        }
+        ASrc::Cols { data, ld } => {
+            for kk in 0..kdim {
+                let src = &data[kk * ld + row0..kk * ld + row0 + take];
+                ap[kk * mr..kk * mr + take].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+/// The register-tiled microkernel: `out[i·NR + j] = Σ_k ap[k·MR+i]·bp[k·NR+j]`.
+///
+/// The accumulator block is a local `[[f32; NR]; MR]` that LLVM keeps in
+/// vector registers across the k loop (no aliasing: inputs are shared
+/// borrows, `acc` is local) and spills exactly once at the end. Each
+/// element is one scalar accumulator over increasing `kk` — the
+/// bit-determinism contract.
+#[inline(always)]
+fn micro_body<const MR: usize, const NR: usize>(
+    kdim: usize,
+    ap: &[f32],
+    bp: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert!(ap.len() >= kdim * MR);
+    debug_assert!(bp.len() >= kdim * NR);
+    debug_assert!(out.len() >= MR * NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kdim {
+        let arow: &[f32; MR] = (&ap[kk * MR..kk * MR + MR]).try_into().unwrap();
+        let brow: &[f32; NR] = (&bp[kk * NR..kk * NR + NR]).try_into().unwrap();
+        for i in 0..MR {
+            let aik = arow[i];
+            for j in 0..NR {
+                acc[i][j] += aik * brow[j];
+            }
+        }
+    }
+    for i in 0..MR {
+        for j in 0..NR {
+            out[i * NR + j] = acc[i][j];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use super::micro_body;
+    use std::sync::OnceLock;
+
+    fn avx2() -> bool {
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+    }
+
+    // `target_feature` wrappers: the generic body inlines into a function
+    // compiled with AVX2 codegen, so the j-loop vectorizes at ymm width
+    // even when the crate is built for baseline x86-64. No fast-math flags
+    // are involved, so the arithmetic (mul then add, per element, in k
+    // order) is bit-identical to the fallback body.
+    #[target_feature(enable = "avx2")]
+    unsafe fn body_8x8(kdim: usize, ap: &[f32], bp: &[f32], out: &mut [f32]) {
+        micro_body::<8, 8>(kdim, ap, bp, out)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn body_4x16(kdim: usize, ap: &[f32], bp: &[f32], out: &mut [f32]) {
+        micro_body::<4, 16>(kdim, ap, bp, out)
+    }
+
+    pub(super) fn micro_8x8(kdim: usize, ap: &[f32], bp: &[f32], out: &mut [f32]) -> bool {
+        if !avx2() {
+            return false;
+        }
+        // SAFETY: AVX2 support verified at runtime above.
+        unsafe { body_8x8(kdim, ap, bp, out) };
+        true
+    }
+
+    pub(super) fn micro_4x16(kdim: usize, ap: &[f32], bp: &[f32], out: &mut [f32]) -> bool {
+        if !avx2() {
+            return false;
+        }
+        // SAFETY: AVX2 support verified at runtime above.
+        unsafe { body_4x16(kdim, ap, bp, out) };
+        true
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+mod simd {
+    pub(super) fn micro_8x8(_: usize, _: &[f32], _: &[f32], _: &mut [f32]) -> bool {
+        false
+    }
+
+    pub(super) fn micro_4x16(_: usize, _: &[f32], _: &[f32], _: &mut [f32]) -> bool {
+        false
+    }
+}
+
+fn run_micro(t: Tile, kdim: usize, ap: &[f32], bp: &[f32], out: &mut [f32]) {
+    match (t.mr, t.nr) {
+        (8, 8) => {
+            if !simd::micro_8x8(kdim, ap, bp, out) {
+                micro_body::<8, 8>(kdim, ap, bp, out);
+            }
+        }
+        (4, 16) => {
+            if !simd::micro_4x16(kdim, ap, bp, out) {
+                micro_body::<4, 16>(kdim, ap, bp, out);
+            }
+        }
+        _ => unreachable!("unsupported GEMM tile {t:?}"),
+    }
+}
+
+/// Compute `rows` output rows starting at logical row `row0` into the
+/// `rows × pb.n` band `out` (`add = true` accumulates onto existing band
+/// contents in a single per-element add — the fused `W' + A·B` path).
+///
+/// Serial per call: callers provide parallelism by banding rows (the tensor
+/// ops) or chunking points (the blocked Lloyd assign). The band/chunk
+/// layout never changes results — every element is an independent
+/// increasing-k sum.
+pub(crate) fn gemm_rows(
+    a: ASrc<'_>,
+    row0: usize,
+    rows: usize,
+    pb: &PackedB,
+    out: &mut [f32],
+    add: bool,
+) {
+    let t = tile();
+    let (mr, nr) = (t.mr, t.nr);
+    let n = pb.n;
+    let kdim = pb.k;
+    debug_assert_eq!(out.len(), rows * n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    let mut apanel = vec![0.0f32; kdim * mr];
+    let mut scratch = vec![0.0f32; mr * nr];
+    for i0 in (0..rows).step_by(mr) {
+        let take = mr.min(rows - i0);
+        pack_a_panel(a, row0 + i0, take, mr, kdim, &mut apanel);
+        for p in 0..pb.npanels() {
+            run_micro(t, kdim, &apanel, pb.panel(p), &mut scratch);
+            let j0 = p * nr;
+            let jtake = nr.min(n - j0);
+            for r in 0..take {
+                let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + jtake];
+                let srow = &scratch[r * nr..r * nr + jtake];
+                if add {
+                    for (o, &s) in orow.iter_mut().zip(srow) {
+                        *o += s;
+                    }
+                } else {
+                    orow.copy_from_slice(srow);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The reference order: one scalar accumulator per element, k increasing.
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    fn packed(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let pb = pack_b(b, k, n, ExecConfig::serial());
+        let mut out = vec![0.0f32; m * n];
+        gemm_rows(ASrc::Rows { data: a, k }, 0, m, &pb, &mut out, false);
+        out
+    }
+
+    fn randv(len: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn tile_is_supported_shape() {
+        let t = tile();
+        assert!(matches!((t.mr, t.nr), (8, 8) | (4, 16)), "tile {t:?}");
+    }
+
+    // NOTE: there is deliberately no test asserting the value of the
+    // process-wide kernel flag — lib tests run concurrently and another
+    // test flipping it (e.g. the ops.rs kernel-interchangeability test)
+    // would make such an assertion flaky. Kernel selection is covered
+    // behaviorally: outputs are bitwise identical under both kernels, which
+    // is what the interchangeability tests pin.
+
+    /// The ISSUE 3 exact-shape property: every MR remainder (m sweeps two
+    /// full panels plus one) × every NR remainder (n likewise) × ragged k,
+    /// packed output bitwise equal to the naive increasing-k sum.
+    #[test]
+    fn packed_matches_naive_bitwise_all_tile_remainders() {
+        let mut rng = Rng::new(600);
+        let t = tile();
+        for m in 1..=(2 * t.mr + 1) {
+            for n in 1..=(2 * t.nr + 1) {
+                for &k in &[1usize, 3, 64] {
+                    let a = randv(m * k, &mut rng);
+                    let b = randv(k * n, &mut rng);
+                    assert_eq!(
+                        bits(&packed(&a, &b, m, k, n)),
+                        bits(&naive(&a, &b, m, k, n)),
+                        "m={m} n={n} k={k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matches_naive_bitwise_large_ragged() {
+        let mut rng = Rng::new(601);
+        for &(m, k, n) in &[
+            (63usize, 130usize, 65usize),
+            (130, 127, 129),
+            (128, 64, 128),
+            (1, 130, 130),
+            (130, 1, 1),
+        ] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            assert_eq!(
+                bits(&packed(&a, &b, m, k, n)),
+                bits(&naive(&a, &b, m, k, n)),
+                "m={m} n={n} k={k}"
+            );
+        }
+    }
+
+    /// Strided-A packing (the t_matmul path): logical A is m × k but stored
+    /// as a row-major k × m buffer. Must still equal the naive sum bitwise.
+    #[test]
+    fn strided_a_packing_matches_naive_bitwise() {
+        let mut rng = Rng::new(602);
+        for &(kdim, m, n) in &[(35usize, 67usize, 19usize), (130, 63, 17), (64, 128, 31)] {
+            let at = randv(kdim * m, &mut rng); // k × m source
+            let b = randv(kdim * n, &mut rng);
+            let pb = pack_b(&b, kdim, n, ExecConfig::serial());
+            let mut got = vec![0.0f32; m * n];
+            gemm_rows(ASrc::Cols { data: &at, ld: m }, 0, m, &pb, &mut got, false);
+            let mut want = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f32;
+                    for kk in 0..kdim {
+                        s += at[kk * m + i] * b[kk * n + j];
+                    }
+                    want[i * n + j] = s;
+                }
+            }
+            assert_eq!(bits(&got), bits(&want), "kdim={kdim} m={m} n={n}");
+        }
+    }
+
+    /// `add = true` folds the product onto existing contents with a single
+    /// per-element add — exactly `prefill + (full register sum)`.
+    #[test]
+    fn add_mode_is_single_fused_add() {
+        let mut rng = Rng::new(603);
+        let (m, k, n) = (13usize, 37usize, 11usize);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let prefill = randv(m * n, &mut rng);
+        let pb = pack_b(&b, k, n, ExecConfig::serial());
+        let mut got = prefill.clone();
+        gemm_rows(ASrc::Rows { data: &a, k }, 0, m, &pb, &mut got, true);
+        let prod = naive(&a, &b, m, k, n);
+        let want: Vec<f32> = prefill.iter().zip(&prod).map(|(&w, &p)| w + p).collect();
+        assert_eq!(bits(&got), bits(&want));
+    }
+
+    /// Band splits (the executor's unit of parallelism) never change bits:
+    /// computing rows in two separate gemm_rows calls equals one full call.
+    #[test]
+    fn row_offset_bands_match_full_run_bitwise() {
+        let mut rng = Rng::new(604);
+        let (m, k, n) = (29usize, 45usize, 23usize);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let pb = pack_b(&b, k, n, ExecConfig::serial());
+        let mut full = vec![0.0f32; m * n];
+        gemm_rows(ASrc::Rows { data: &a, k }, 0, m, &pb, &mut full, false);
+        for split in [1usize, 5, 8, 16, 28] {
+            let mut banded = vec![0.0f32; m * n];
+            let (head, tail) = banded.split_at_mut(split * n);
+            gemm_rows(ASrc::Rows { data: &a, k }, 0, split, &pb, head, false);
+            gemm_rows(ASrc::Rows { data: &a, k }, split, m - split, &pb, tail, false);
+            assert_eq!(bits(&banded), bits(&full), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_fine() {
+        // k = 0: product of an m×0 and 0×n operand is all zeros.
+        let pb = pack_b(&[], 0, 7, ExecConfig::serial());
+        let mut out = vec![1.0f32; 3 * 7];
+        gemm_rows(ASrc::Rows { data: &[], k: 0 }, 0, 3, &pb, &mut out, false);
+        assert!(out.iter().all(|&v| v == 0.0));
+        // n = 0 / rows = 0: no-ops.
+        let pb0 = pack_b(&[], 5, 0, ExecConfig::serial());
+        assert_eq!(pb0.n, 0);
+        let mut empty: Vec<f32> = Vec::new();
+        gemm_rows(ASrc::Rows { data: &[0.0; 10], k: 5 }, 0, 2, &pb0, &mut empty, false);
+        gemm_rows(ASrc::Rows { data: &[], k: 5 }, 0, 0, &pb0, &mut empty, false);
+    }
+
+    /// Parallel B packing writes the same panels as serial packing.
+    #[test]
+    fn pack_b_thread_invariant() {
+        let mut rng = Rng::new(605);
+        // Above PACK_PARALLEL_ELEMS so the parallel path actually runs.
+        let (k, n) = (300usize, 260usize);
+        let b = randv(k * n, &mut rng);
+        let base = pack_b(&b, k, n, ExecConfig::serial());
+        for threads in [2, 4, 8] {
+            let p = pack_b(&b, k, n, ExecConfig::with_threads(threads));
+            assert_eq!(bits(&p.data), bits(&base.data), "{threads} threads");
+        }
+    }
+}

@@ -1,10 +1,13 @@
 //! Host-side dense tensors.
 //!
 //! A deliberately small, dependency-free row-major `f32` tensor with the
-//! operations the compression pipeline needs: matmul (blocked), transpose,
-//! column/row views, norms, elementwise combinators. Device tensors live in
-//! `runtime::` as PJRT buffers; this type is the host staging format.
+//! operations the compression pipeline needs: matmul (packed register-tiled
+//! GEMM in [`gemm`], with the old blocked kernel kept as baseline),
+//! transpose, column/row views, norms, elementwise combinators. Device
+//! tensors live in `runtime::` as PJRT buffers; this type is the host
+//! staging format.
 
+pub mod gemm;
 mod ops;
 
 pub(crate) use ops::matmul_band;

@@ -1,12 +1,19 @@
-//! Tensor operations: blocked matmul, transpose, norms, elementwise.
+//! Tensor operations: matmul, transpose, norms, elementwise.
 //!
 //! The matmul here is the L3 CPU hot path for compression-time work (SVD
-//! subspace iteration, k-means distance blocks). It is a cache-blocked
-//! i-k-j kernel — not BLAS, but within a small factor of it at the sizes
-//! the pipeline sees (≤ a few thousand per side). The model's own matmuls
-//! run inside XLA, not here.
+//! subspace iteration, k-means distance blocks). Since PR 3 it is the
+//! packed register-tiled GEMM engine in [`super::gemm`] — B packed into
+//! SIMD-width column panels, A into row panels (strided packing for
+//! `t_matmul`, so `AᵀQ` never materializes a transpose), an MR×NR
+//! register-accumulator microkernel. The pre-PR-3 cache-blocked i-k-j
+//! kernel ([`matmul_band`]) survives as [`gemm::GemmKernel::Blocked`] —
+//! bench baseline and cross-check oracle, selected with
+//! `SWSC_GEMM_KERNEL=blocked`. Both kernels accumulate each output element
+//! in a single f32 register over increasing k, so they are bit-identical
+//! to each other and to the naive triple loop at every thread count. The
+//! model's own matmuls run inside XLA, not here.
 
-use super::Tensor;
+use super::{gemm, Tensor};
 use crate::exec::{self, ExecConfig};
 
 /// Cache block edge for the matmul microkernel (f32: 64·64·4 B = 16 KiB per
@@ -19,8 +26,12 @@ const BLOCK: usize = 64;
 /// backend-dependent: the persistent pool dispatches a batch in ~µs, so it
 /// profitably parallelizes matmuls (e.g. the 2¹⁸-MAC k-means cross terms of
 /// a 128² compression job) that would be swamped by the tens-of-µs
-/// per-worker latency of spawn-per-call. Thresholds only pick the thread
-/// count, never the chunk layout, so they cannot affect numerics.
+/// per-worker latency of spawn-per-call. The packed kernel retires MACs
+/// roughly twice as fast as the blocked one (no per-MAC accumulator
+/// load/store), so its pool floor is one notch higher to keep the same
+/// dispatch-cost amortization. Thresholds only pick the thread count,
+/// never the chunk layout, so they cannot affect numerics.
+const MIN_PARALLEL_MACS_POOL_PACKED: usize = 1 << 19;
 const MIN_PARALLEL_MACS_POOL: usize = 1 << 18;
 const MIN_PARALLEL_MACS_SPAWN: usize = 1 << 21;
 
@@ -30,9 +41,10 @@ const MIN_PARALLEL_ELEMS_POOL: usize = 1 << 16;
 const MIN_PARALLEL_ELEMS_SPAWN: usize = 1 << 17;
 
 pub(crate) fn min_parallel_macs() -> usize {
-    match exec::backend() {
-        exec::ExecBackend::Pool => MIN_PARALLEL_MACS_POOL,
-        exec::ExecBackend::SpawnPerCall => MIN_PARALLEL_MACS_SPAWN,
+    match (exec::backend(), gemm::kernel()) {
+        (exec::ExecBackend::Pool, gemm::GemmKernel::Packed) => MIN_PARALLEL_MACS_POOL_PACKED,
+        (exec::ExecBackend::Pool, gemm::GemmKernel::Blocked) => MIN_PARALLEL_MACS_POOL,
+        (exec::ExecBackend::SpawnPerCall, _) => MIN_PARALLEL_MACS_SPAWN,
     }
 }
 
@@ -45,13 +57,15 @@ fn min_parallel_elems() -> usize {
 
 /// One row band of the blocked i-k-j kernel: computes output rows
 /// `first_row..first_row + band.len()/n` into the disjoint band slice. The
-/// per-row accumulation order (kb → jb → kk → j) is exactly the serial
-/// kernel's, so banding never changes a bit of the result.
+/// per-row accumulation order (kb → jb → kk → j) visits every k exactly
+/// once in increasing order per element, so banding never changes a bit of
+/// the result — and the packed engine in [`super::gemm`] matches it
+/// bitwise for the same reason.
 ///
-/// `pub(crate)` because the blocked Lloyd assign (`kmeans::lloyd`) reuses
-/// it to compute per-chunk cross-term blocks without materializing the full
-/// `n × k` product — same accumulation order, hence bitwise-identical cross
-/// terms between the blocked and full-GEMM assign paths.
+/// Since PR 3 this is the [`gemm::GemmKernel::Blocked`] baseline: the
+/// default path routes through the packed engine, and this kernel remains
+/// as the bench comparison (`packed_vs_blocked_*`) and as the fallback the
+/// blocked Lloyd assign uses under `SWSC_GEMM_KERNEL=blocked`.
 pub(crate) fn matmul_band(a: &[f32], b: &[f32], k: usize, n: usize, first_row: usize, band: &mut [f32]) {
     if n == 0 {
         return;
@@ -81,6 +95,55 @@ pub(crate) fn matmul_band(a: &[f32], b: &[f32], k: usize, n: usize, first_row: u
     }
 }
 
+/// Shared band dispatch for every GEMM entry point (`matmul`, the strided
+/// `t_matmul`, the fused `matmul_add_assign`): serial-threshold downgrade,
+/// kernel selection, B packing, and row-band parallelism live here exactly
+/// once. `out` is the `m × n` destination; `add = true` folds the product
+/// onto its contents with a single per-element add.
+fn gemm_into(
+    a: gemm::ASrc<'_>,
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    add: bool,
+    exec: ExecConfig,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let exec = if m * n * k < min_parallel_macs() { ExecConfig::serial() } else { exec };
+    if gemm::kernel() == gemm::GemmKernel::Blocked {
+        if let gemm::ASrc::Rows { data: araw, .. } = a {
+            exec::for_row_bands(exec, out, m, n, BLOCK, |first_row, band| {
+                if add {
+                    // Oracle route for the fused add: band product computed
+                    // separately, then folded with one add — same single-add
+                    // rounding as the packed path.
+                    let mut tmp = vec![0.0f32; band.len()];
+                    matmul_band(araw, b, k, n, first_row, &mut tmp);
+                    for (o, &v) in band.iter_mut().zip(&tmp) {
+                        *o += v;
+                    }
+                } else {
+                    matmul_band(araw, b, k, n, first_row, band);
+                }
+            });
+            return;
+        }
+        // ASrc::Cols under the blocked kernel is only reachable if the
+        // process-wide kernel flips mid-call (t_matmul routes through the
+        // transpose before getting here) — the packed path below is
+        // bit-identical, so just fall through.
+    }
+    let pb = gemm::pack_b(b, k, n, exec);
+    exec::for_row_bands(exec, out, m, n, BLOCK, |first_row, band| {
+        gemm::gemm_rows(a, first_row, band.len() / n, &pb, band, add);
+    });
+}
+
 impl Tensor {
     /// Matrix product `self · other` for 2-D tensors, parallelized over row
     /// bands with the process-wide [`exec::global`] config.
@@ -89,18 +152,22 @@ impl Tensor {
     }
 
     /// [`Tensor::matmul`] with an explicit thread config. Output is
-    /// bit-identical for every `exec.threads`.
+    /// bit-identical for every `exec.threads` and for either GEMM kernel.
     pub fn matmul_with(&self, other: &Tensor, exec: ExecConfig) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (k2, n) = (other.rows(), other.cols());
         assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
-        let exec = if m * n * k < min_parallel_macs() { ExecConfig::serial() } else { exec };
         let mut out = vec![0.0f32; m * n];
-        let a = self.data();
-        let b = other.data();
-        exec::for_row_bands(exec, &mut out, m, n, BLOCK, |first_row, band| {
-            matmul_band(a, b, k, n, first_row, band);
-        });
+        gemm_into(
+            gemm::ASrc::Rows { data: self.data(), k },
+            other.data(),
+            m,
+            k,
+            n,
+            false,
+            exec,
+            &mut out,
+        );
         Tensor::from_vec(&[m, n], out)
     }
 
@@ -110,10 +177,59 @@ impl Tensor {
     }
 
     /// [`Tensor::t_matmul`] with an explicit thread config.
+    ///
+    /// Under the packed kernel the A panels are packed straight out of the
+    /// transposed-stride source (`self` is `k × m` row-major; packing reads
+    /// contiguous MR-length runs per k step), so no `m × k` transpose is
+    /// ever allocated — the copy the SVD power iteration used to pay on
+    /// every `AᵀQ`. The blocked baseline keeps the old
+    /// transpose-then-matmul route; both produce identical bits.
     pub fn t_matmul_with(&self, other: &Tensor, exec: ExecConfig) -> Tensor {
-        // (k×m)ᵀ·(k×n): result m×n. Transpose-copy then blocked matmul is
-        // faster than a strided kernel at our sizes.
-        self.transpose_with(exec).matmul_with(other, exec)
+        let (kdim, m) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(kdim, k2, "t_matmul inner dim: {kdim} vs {k2}");
+        if gemm::kernel() == gemm::GemmKernel::Blocked {
+            return self.transpose_with(exec).matmul_with(other, exec);
+        }
+        let mut out = vec![0.0f32; m * n];
+        gemm_into(
+            gemm::ASrc::Cols { data: self.data(), ld: m },
+            other.data(),
+            m,
+            kdim,
+            n,
+            false,
+            exec,
+            &mut out,
+        );
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Fused `out += self · other` (shapes `m×k · k×n` onto `m×n`),
+    /// parallelized like [`Tensor::matmul`]. The product of each element is
+    /// fully accumulated in registers and folded onto `out` with a single
+    /// add, so the result is bit-identical to `out.add(&self.matmul(other))`
+    /// without allocating the intermediate product.
+    pub fn matmul_add_assign(&self, other: &Tensor, out: &mut Tensor) {
+        self.matmul_add_assign_with(other, out, exec::global())
+    }
+
+    /// [`Tensor::matmul_add_assign`] with an explicit thread config.
+    pub fn matmul_add_assign_with(&self, other: &Tensor, out: &mut Tensor, exec: ExecConfig) {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+        assert_eq!(out.shape(), &[m, n], "matmul_add_assign output shape");
+        gemm_into(
+            gemm::ASrc::Rows { data: self.data(), k },
+            other.data(),
+            m,
+            k,
+            n,
+            true,
+            exec,
+            out.data_mut(),
+        );
     }
 
     /// Transposed copy of a 2-D tensor.
@@ -286,6 +402,41 @@ mod tests {
             let cfg = ExecConfig::with_threads(threads);
             assert_eq!(bits(&a.matmul_with(&b, cfg)), base_mm, "matmul, {threads} threads");
             assert_eq!(bits(&t.transpose_with(cfg)), base_t, "transpose, {threads} threads");
+        }
+    }
+
+    #[test]
+    fn packed_and_blocked_kernels_bitwise_identical() {
+        use super::gemm::{self, GemmKernel};
+        let mut r = Rng::new(15);
+        let a = Tensor::randn(&[70, 45], &mut r);
+        let b = Tensor::randn(&[45, 33], &mut r);
+        let t = Tensor::randn(&[70, 21], &mut r);
+        let bits = |x: &Tensor| x.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        gemm::set_kernel(GemmKernel::Blocked);
+        let mm_blocked = bits(&a.matmul(&b));
+        let tm_blocked = bits(&a.t_matmul(&t));
+        gemm::set_kernel(GemmKernel::Packed);
+        let mm_packed = bits(&a.matmul(&b));
+        let tm_packed = bits(&a.t_matmul(&t));
+        assert_eq!(mm_packed, mm_blocked, "matmul kernels disagree");
+        assert_eq!(tm_packed, tm_blocked, "t_matmul kernels disagree");
+    }
+
+    #[test]
+    fn matmul_add_assign_matches_add_of_matmul_bitwise() {
+        let mut r = Rng::new(16);
+        // Above the spawn serial-fallback threshold so the banded parallel
+        // accumulate path actually runs.
+        let a = Tensor::randn(&[260, 190], &mut r);
+        let b = Tensor::randn(&[190, 170], &mut r);
+        let base = Tensor::randn(&[260, 170], &mut r);
+        let want = base.add(&a.matmul_with(&b, ExecConfig::serial()));
+        let bits = |x: &Tensor| x.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        for threads in [1, 2, 4, 8] {
+            let mut out = base.clone();
+            a.matmul_add_assign_with(&b, &mut out, ExecConfig::with_threads(threads));
+            assert_eq!(bits(&out), bits(&want), "{threads} threads");
         }
     }
 

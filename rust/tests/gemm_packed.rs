@@ -1,0 +1,104 @@
+//! ISSUE 3 tentpole invariants for the packed register-tiled GEMM engine,
+//! checked through the public API (the exact-shape packed-vs-naive sweep
+//! over every MR/NR remainder lives in `tensor::gemm`'s unit tests, where
+//! the packing internals are reachable directly).
+//!
+//! Everything here leans on one design fact: every GEMM kernel in the
+//! crate — packed, blocked baseline, naive — accumulates each output
+//! element in a single f32 register over strictly increasing k, with no
+//! FMA contraction. So the packed engine must match the blocked kernel,
+//! the explicit transpose-then-matmul route, and itself at any thread
+//! count *bitwise*, and a full SWSC compression must produce identical
+//! artifacts under either kernel. These tests stay correct even if another
+//! test in the binary flips the process-wide kernel concurrently — the
+//! kernels are interchangeable bit-for-bit, which is exactly the property
+//! under test.
+
+use swsc::compress::{compress_matrix, SvdBackend, SwscConfig};
+use swsc::exec::ExecConfig;
+use swsc::kmeans::{assign_blocked_with, assign_gemm_with};
+use swsc::tensor::gemm::{self, GemmKernel};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Strided-A packing (no transpose materialization) must equal the
+/// explicit transpose-then-matmul route bitwise, at every thread count.
+/// Sized above the serial-fallback threshold (260·120·350 ≈ 2²³ MACs) so
+/// the banded parallel path actually runs.
+#[test]
+fn t_matmul_strided_matches_transpose_matmul_bitwise() {
+    let mut r = Rng::new(91);
+    let a = Tensor::randn(&[350, 260], &mut r); // k × m source
+    let b = Tensor::randn(&[350, 120], &mut r);
+    let want = bits(&a.transpose_with(ExecConfig::serial()).matmul_with(&b, ExecConfig::serial()));
+    for threads in [1usize, 2, 4, 8] {
+        let got = bits(&a.t_matmul_with(&b, ExecConfig::with_threads(threads)));
+        assert_eq!(got, want, "t_matmul differs at {threads} threads");
+    }
+}
+
+/// Thread-parity bits for the packed default path: matmul and t_matmul at
+/// threads ∈ {2, 4, 8} against the serial reference.
+#[test]
+fn packed_matmul_thread_parity_bits() {
+    let mut r = Rng::new(92);
+    let a = Tensor::randn(&[260, 190], &mut r);
+    let b = Tensor::randn(&[190, 170], &mut r);
+    let q = Tensor::randn(&[260, 64], &mut r);
+    let base_mm = bits(&a.matmul_with(&b, ExecConfig::serial()));
+    let base_tm = bits(&a.t_matmul_with(&q, ExecConfig::serial()));
+    for threads in [2usize, 4, 8] {
+        let cfg = ExecConfig::with_threads(threads);
+        assert_eq!(bits(&a.matmul_with(&b, cfg)), base_mm, "matmul, {threads} threads");
+        assert_eq!(bits(&a.t_matmul_with(&q, cfg)), base_tm, "t_matmul, {threads} threads");
+    }
+}
+
+/// Kernel interchangeability end-to-end: a full SWSC compression (k-means
+/// on the shared engine, randomized-SVD GEMMs, factor split) and its
+/// reconstruction produce identical bits under the packed engine and the
+/// blocked baseline. This is the guard that says kernel swaps can never
+/// silently move the golden `.swsc` bytes.
+#[test]
+fn compression_bitwise_identical_under_both_kernels() {
+    let mut r = Rng::new(93);
+    let w = Tensor::randn(&[96, 96], &mut r);
+    let mut cfg = SwscConfig::new(8, 6);
+    cfg.seed = 7;
+    cfg.svd = SvdBackend::Randomized; // force the subspace-iteration GEMMs
+    let run = |kern: GemmKernel| {
+        gemm::set_kernel(kern);
+        let c = compress_matrix(&w, &cfg);
+        let rec = c.reconstruct();
+        gemm::set_kernel(GemmKernel::Packed);
+        (c, rec)
+    };
+    let (cp, rp) = run(GemmKernel::Packed);
+    let (cb, rb) = run(GemmKernel::Blocked);
+    assert_eq!(cp.labels, cb.labels, "labels differ between kernels");
+    assert_eq!(bits(&cp.centroids), bits(&cb.centroids), "centroids differ");
+    assert_eq!(bits(&cp.factor_a), bits(&cb.factor_a), "factor A differs");
+    assert_eq!(bits(&cp.factor_b), bits(&cb.factor_b), "factor B differs");
+    assert_eq!(bits(&rp), bits(&rb), "reconstruction differs");
+}
+
+/// The blocked Lloyd assign rides the shared engine too: packed-kernel
+/// per-chunk tiles vs the full-GEMM reference, equal labels and inertia
+/// bits at every thread count (ragged n, k, dims on purpose).
+#[test]
+fn blocked_assign_on_packed_engine_equals_reference() {
+    let mut r = Rng::new(94);
+    let pts = Tensor::randn(&[3 * 128 + 45, 37], &mut r);
+    let cen = Tensor::randn(&[11, 37], &mut r);
+    for threads in [1usize, 2, 4, 8] {
+        let cfg = ExecConfig::with_threads(threads);
+        let (bl, bi) = assign_blocked_with(&pts, &cen, cfg);
+        let (gl, gi) = assign_gemm_with(&pts, &cen, cfg);
+        assert_eq!(bl, gl, "labels, {threads} threads");
+        assert_eq!(bi.to_bits(), gi.to_bits(), "inertia, {threads} threads");
+    }
+}
