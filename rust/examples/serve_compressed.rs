@@ -1,0 +1,119 @@
+//! Compressed-domain serving demo — forward passes straight from `.swsc`
+//! factors, no reconstruction, no artifacts required.
+//!
+//! Compresses a freshly initialized model's Q/K projectors, round-trips
+//! the container through the on-disk format, then serves concurrent
+//! linear requests through [`EvalService`] in both [`InferMode`]s:
+//! `compressed` (bucket-sum/gather + low-rank GEMMs from the raw factors)
+//! vs `reconstructed` (dense weights materialized at load — the old
+//! route, kept as the oracle/baseline). Prints latency, throughput, the
+//! compressed/dense storage ratio, and the flop-model speedup.
+//!
+//! Unlike `examples/serve_eval.rs` this needs no `make artifacts`: the
+//! PJRT engine is only constructed lazily for eval requests, which this
+//! demo never sends.
+
+use std::sync::Arc;
+use swsc::compress::{CompressionPlan, ProjectorSet};
+use swsc::coordinator::{compress_model, EvalService, LinearRequest, ServiceConfig};
+use swsc::infer::{CompressedLinear, CompressedModel, InferMode};
+use swsc::io::SwscFile;
+use swsc::model::{init_params, ModelConfig};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+use swsc::util::timer::Stats;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::small();
+    let ck = init_params(&cfg, 11);
+
+    // Compress Q & K at 2 avg bits — the paper's Table I operating point.
+    let plan = CompressionPlan::for_target_bits(&ck.shapes(), ProjectorSet::QAndK, 2.0, 0.5, 11);
+    println!("compressing {} matrices ({} avg bits target)...", plan.len(), 2.0);
+    let outcome = compress_model(&ck, &plan, 8, None)?;
+
+    // Round-trip the container through the on-disk format.
+    let file = SwscFile::from_bytes(&outcome.file.to_bytes())?;
+    let dense_bytes: usize = file
+        .compressed
+        .values()
+        .map(|c| c.shape.0 * c.shape.1 * 2) // fp16 dense baseline
+        .sum();
+    println!(
+        "container: {} compressed matrices, {} payload bytes (dense fp16 would be {}, {:.1}x)",
+        file.compressed.len(),
+        file.compressed_payload_bytes(),
+        dense_bytes,
+        dense_bytes as f64 / file.compressed_payload_bytes().max(1) as f64,
+    );
+    if let Some((name, c)) = file.compressed.iter().next() {
+        let lin = CompressedLinear::from_matrix(c);
+        println!(
+            "flop model for {name} at b = {}: dense {} MACs vs compressed {} ({:.1}x)",
+            cfg.d_model,
+            lin.dense_macs(cfg.d_model),
+            lin.compressed_macs(cfg.d_model),
+            lin.dense_macs(cfg.d_model) as f64 / lin.compressed_macs(cfg.d_model) as f64,
+        );
+    }
+
+    let names: Vec<String> = file.compressed.keys().cloned().collect();
+    let clients = 4;
+    let per_client = 32;
+    let batch_rows = 16;
+
+    for mode in [InferMode::Compressed, InferMode::Reconstructed] {
+        // Direct-model sanity check before going through the service.
+        let model = CompressedModel::from_file(&file, mode);
+        let probe = Tensor::randn(&[2, cfg.d_model], &mut Rng::new(1));
+        let y = model.apply(&names[0], &probe)?;
+        anyhow::ensure!(y.shape() == [2, cfg.d_model], "unexpected output shape");
+
+        let service = Arc::new(EvalService::start_with_swsc(
+            None, // no artifacts: linear-only serving
+            cfg.clone(),
+            &file,
+            ServiceConfig { infer_mode: mode, queue_capacity: 64, ..Default::default() },
+        )?);
+
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for cl in 0..clients {
+            let service = service.clone();
+            let names = names.clone();
+            let d = cfg.d_model;
+            handles.push(std::thread::spawn(move || -> anyhow::Result<Stats> {
+                let mut rng = Rng::new(100 + cl as u64);
+                let mut lat = Stats::new();
+                for i in 0..per_client {
+                    let name = names[(cl + i) % names.len()].clone();
+                    let x = Tensor::randn(&[batch_rows, d], &mut rng);
+                    let t = std::time::Instant::now();
+                    let resp = service.linear_blocking(LinearRequest { name, x })?;
+                    lat.push(t.elapsed().as_secs_f64());
+                    anyhow::ensure!(resp.y.shape() == [batch_rows, d]);
+                }
+                Ok(lat)
+            }));
+        }
+        let mut mean_ms = 0.0;
+        for h in handles {
+            let lat = h.join().unwrap()?;
+            mean_ms += lat.mean() * 1e3 / clients as f64;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total = clients * per_client;
+        println!(
+            "\nmode {mode:?}: {total} linear requests ({batch_rows}-row batches) in {wall:.3}s \
+             -> {:.0} req/s, mean latency {mean_ms:.3} ms",
+            total as f64 / wall
+        );
+        println!("batcher metrics:\n{}", service.metrics.render());
+        if let Ok(s) = Arc::try_unwrap(service) {
+            s.shutdown();
+        }
+    }
+
+    println!("note: perplexity eval still needs `make artifacts` (fwd_eval takes dense params)");
+    Ok(())
+}

@@ -9,6 +9,8 @@ pub mod plan;
 pub mod stats;
 mod swsc;
 
-pub use plan::{CompressionPlan, MatrixPlan, ProjectorSet};
+pub use plan::{
+    kmeans_method_for_width, CompressionPlan, MatrixPlan, ProjectorSet, MINIBATCH_MIN_CHANNELS,
+};
 pub use stats::{matrix_stats, MatrixStats};
 pub use swsc::{compress_matrix, CompressedMatrix, SvdBackend, SwscConfig};

@@ -6,10 +6,12 @@
 //! coordinator can schedule each matrix as an independent job.
 
 use super::swsc::SwscConfig;
+use crate::kmeans::KMeansMethod;
 use crate::quant::bits::swsc_params_for_bits;
 use crate::quant::RtnConfig;
 
-/// Which attention projectors to compress — the paper's Table I rows.
+/// Which projectors to compress — the paper's Table I rows, plus the MLP
+/// scaling workload.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ProjectorSet {
     Q,
@@ -17,17 +19,24 @@ pub enum ProjectorSet {
     QAndK,
     /// Ablation only: the paper argues V must not be compressed.
     V,
+    /// Beyond the paper: the MLP matrices — `mlp.w1` is the widest matrix
+    /// in the model (`d × 4d` channels; 11008 on Llama-scale configs),
+    /// which is exactly the regime the planner routes through mini-batch
+    /// k-means.
+    Mlp,
 }
 
 impl ProjectorSet {
     /// Suffixes of parameter names this set selects (see `model::params`
-    /// naming convention `layers.{i}.attn.{wq,wk,wv,wo}`).
+    /// naming convention `layers.{i}.attn.{wq,wk,wv,wo}`,
+    /// `layers.{i}.mlp.{w1,w2}`).
     pub fn suffixes(&self) -> &'static [&'static str] {
         match self {
             ProjectorSet::Q => &["attn.wq"],
             ProjectorSet::K => &["attn.wk"],
             ProjectorSet::QAndK => &["attn.wq", "attn.wk"],
             ProjectorSet::V => &["attn.wv"],
+            ProjectorSet::Mlp => &["mlp.w1", "mlp.w2"],
         }
     }
 
@@ -37,11 +46,33 @@ impl ProjectorSet {
             ProjectorSet::K => "K",
             ProjectorSet::QAndK => "Q & K",
             ProjectorSet::V => "V",
+            ProjectorSet::Mlp => "MLP",
         }
     }
 
     pub fn matches(&self, param_name: &str) -> bool {
         self.suffixes().iter().any(|s| param_name.ends_with(s))
+    }
+}
+
+/// Channel count at/above which the planner routes a matrix's clustering
+/// through mini-batch k-means: full Lloyd is `O(iters·n·k·m)` in the
+/// channel count, and past a few thousand channels (the MLP `w1` regime)
+/// the sampled variant reaches the same inertia basin in a fraction of
+/// the assignments (PR 2 measured the blocked assign at 8192×128; this
+/// closes the remaining headroom named in ROADMAP.md).
+pub const MINIBATCH_MIN_CHANNELS: usize = 2048;
+
+/// Deterministic method choice for an `n`-channel matrix: Lloyd below
+/// [`MINIBATCH_MIN_CHANNELS`]; above it, ~4 sampled passes in
+/// 1024-channel batches (floor of 40 steps so narrow-but-routed matrices
+/// still converge). Pure function of `n` — plans stay reproducible.
+pub fn kmeans_method_for_width(n: usize) -> KMeansMethod {
+    if n >= MINIBATCH_MIN_CHANNELS {
+        let batch = 1024.min(n);
+        KMeansMethod::Minibatch { batch, steps: (4 * n / batch).max(40) }
+    } else {
+        KMeansMethod::Lloyd
     }
 }
 
@@ -85,6 +116,8 @@ impl CompressionPlan {
             // reproducible regardless of scheduling order.
             cfg.seed = seed ^ fnv1a(name);
             cfg.kmeans.seed = cfg.seed;
+            // Widest matrices (MLP w1 channels) go through mini-batch.
+            cfg.kmeans.method = kmeans_method_for_width(shape[1]);
             matrices.push(MatrixPlan { name: name.clone(), config: cfg });
         }
         CompressionPlan {
@@ -168,5 +201,60 @@ mod tests {
         let p = CompressionPlan::for_target_bits(&shapes(), ProjectorSet::V, 2.0, 0.5, 0);
         assert_eq!(p.len(), 3);
         assert!(p.matrices.iter().all(|m| m.name.ends_with("attn.wv")));
+    }
+
+    #[test]
+    fn mlp_plan_selects_w1_and_w2() {
+        let mut s = shapes();
+        for i in 0..3 {
+            s.push((format!("layers.{i}.mlp.w2"), vec![1024, 256]));
+        }
+        let p = CompressionPlan::for_target_bits(&s, ProjectorSet::Mlp, 2.0, 0.5, 0);
+        assert_eq!(p.len(), 6);
+        assert!(p.matrices.iter().all(|m| m.name.contains(".mlp.w")));
+    }
+
+    /// The PR 2 headroom item: the widest matrices (MLP w1 channels) route
+    /// through mini-batch k-means; everything narrower stays on full
+    /// Lloyd. The choice is a pure function of the channel count, so plans
+    /// remain reproducible.
+    #[test]
+    fn widest_mlp_matrices_route_through_minibatch() {
+        let s = vec![
+            ("layers.0.attn.wq".to_string(), vec![256usize, 256usize]),
+            ("layers.0.mlp.w1".to_string(), vec![256, 4096]),
+            ("layers.0.mlp.w2".to_string(), vec![4096, 256]),
+        ];
+        let p = CompressionPlan::for_target_bits(&s, ProjectorSet::Mlp, 2.0, 0.5, 0);
+        assert_eq!(p.len(), 2);
+        for m in &p.matrices {
+            let method = m.config.kmeans.method;
+            if m.name.ends_with("mlp.w1") {
+                // 4096 channels ≥ the threshold: sampled passes.
+                match method {
+                    KMeansMethod::Minibatch { batch, steps } => {
+                        assert_eq!(batch, 1024);
+                        assert_eq!(steps, 16.max(40));
+                    }
+                    KMeansMethod::Lloyd => panic!("wide w1 should use minibatch"),
+                }
+            } else {
+                // w2 has only 256 channels: full Lloyd.
+                assert_eq!(method, KMeansMethod::Lloyd, "{} should stay on Lloyd", m.name);
+            }
+        }
+        // Attention plans at paper widths are untouched by the routing.
+        let q = CompressionPlan::for_target_bits(&s, ProjectorSet::Q, 2.0, 0.5, 0);
+        assert!(q.matrices.iter().all(|m| m.config.kmeans.method == KMeansMethod::Lloyd));
+        // Boundary behavior of the pure routing function.
+        assert_eq!(kmeans_method_for_width(MINIBATCH_MIN_CHANNELS - 1), KMeansMethod::Lloyd);
+        assert!(matches!(
+            kmeans_method_for_width(MINIBATCH_MIN_CHANNELS),
+            KMeansMethod::Minibatch { .. }
+        ));
+        assert_eq!(
+            kmeans_method_for_width(11008),
+            KMeansMethod::Minibatch { batch: 1024, steps: 43 }
+        );
     }
 }

@@ -10,7 +10,10 @@
 //! - [`service`]: a batched evaluation service in the vLLM-router mould —
 //!   clients submit token windows, a batcher thread assembles fixed-shape
 //!   batches (padding partial batches), executes `fwd_eval` through PJRT,
-//!   and returns per-request NLL. Bounded queue = backpressure.
+//!   and returns per-request NLL. Bounded queue = backpressure. Since the
+//!   infer layer it also serves [`LinearRequest`]s straight from a
+//!   `.swsc` container — compressed-domain matmuls with no dense weight
+//!   materialization, behind the `ServiceConfig::infer_mode` flag.
 //!
 //! [`metrics`] carries counters/timings for both.
 
@@ -20,4 +23,6 @@ pub mod service;
 
 pub use metrics::Metrics;
 pub use scheduler::{compress_model, CompressOutcome};
-pub use service::{EvalRequest, EvalResponse, EvalService, ServiceConfig};
+pub use service::{
+    EvalRequest, EvalResponse, EvalService, LinearRequest, LinearResponse, ServiceConfig,
+};

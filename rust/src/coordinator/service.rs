@@ -1,23 +1,46 @@
-//! Batched evaluation service.
+//! Batched evaluation + compressed-domain linear serving.
 //!
-//! A vLLM-router-style front end over the `fwd_eval` executable: clients
-//! submit [`EvalRequest`]s (one token window each) and receive per-request
-//! NLL. A dedicated batcher thread drains a bounded queue, packs up to
-//! `batch` requests into the executable's fixed `[batch, seq]` shape
-//! (padding short batches by repeating row 0 — padded rows are discarded on
-//! the way out), executes, and replies through per-request channels.
+//! A vLLM-router-style front end with two request kinds:
 //!
-//! Invariants (property-tested in `rust/tests/prop_invariants.rs`):
+//! - [`EvalRequest`] (one token window each) → per-request NLL. A
+//!   dedicated batcher thread drains a bounded queue, packs up to `batch`
+//!   requests into the `fwd_eval` executable's fixed `[batch, seq]` shape
+//!   (padding short batches by repeating row 0 — padded rows are discarded
+//!   on the way out), executes through PJRT, and replies through
+//!   per-request channels.
+//! - [`LinearRequest`] (named weight + activation batch) → `Y = X·W`,
+//!   served host-side from a [`CompressedModel`]. Behind the
+//!   [`ServiceConfig::infer_mode`] flag these run **in the compressed
+//!   domain** — bucket-sum/gather + low-rank GEMMs straight from the
+//!   `.swsc` factors, no dense weight ever materialized
+//!   ([`InferMode::Compressed`], the default) — or from weights
+//!   reconstructed once at load ([`InferMode::Reconstructed`], the dense
+//!   oracle/baseline). Linear requests are answered inline as they
+//!   arrive and never wait on the batch *fill clock*; one caveat: the
+//!   single batcher thread serves both kinds, so a linear request that
+//!   lands while an eval batch is executing on PJRT queues behind that
+//!   in-flight execution.
+//!
+//! The PJRT engine is constructed lazily on the first eval request, so a
+//! linear-only service (started with [`EvalService::start_with_swsc`] and
+//! no artifact manifest) works without any AOT artifacts — which is also
+//! what `examples/serve_compressed.rs` demonstrates.
+//!
+//! Invariants:
 //! - every submitted request receives exactly one response;
 //! - a batch never exceeds the executable's batch size;
 //! - the queue bound enforces backpressure on submitters;
 //! - responses are independent of how requests were interleaved into
-//!   batches (same tokens ⇒ same NLL).
+//!   batches (same tokens ⇒ same NLL; linear responses are additionally
+//!   bit-identical at any `SWSC_THREADS` — the `infer` contract).
 
 use crate::coordinator::metrics::Metrics;
+use crate::infer::{CompressedModel, InferMode};
+use crate::io::SwscFile;
 use crate::model::ModelConfig;
 use crate::runtime::convert::literal_to_tensor;
-use crate::runtime::{tensor_to_literal, tokens_to_literal, ArtifactManifest, Engine};
+use crate::runtime::{tensor_to_literal, tokens_to_literal, ArtifactManifest, Engine, LoadedExec};
+use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -39,6 +62,20 @@ pub struct EvalResponse {
     pub tokens: usize,
 }
 
+/// One linear-layer request: apply the named weight to a row-major
+/// activation batch (`x` is `[b, in_features]`).
+#[derive(Debug, Clone)]
+pub struct LinearRequest {
+    pub name: String,
+    pub x: Tensor,
+}
+
+/// Response to a [`LinearRequest`]: `y = x · W[name]`, `[b, out_features]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearResponse {
+    pub y: Tensor,
+}
+
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -47,16 +84,24 @@ pub struct ServiceConfig {
     /// Max time the batcher waits to fill a batch before flushing a
     /// partial one.
     pub max_batch_delay: Duration,
+    /// How linear requests are served when the service holds a
+    /// [`CompressedModel`] (see [`EvalService::start_with_swsc`]).
+    pub infer_mode: InferMode,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { queue_capacity: 256, max_batch_delay: Duration::from_millis(10) }
+        ServiceConfig {
+            queue_capacity: 256,
+            max_batch_delay: Duration::from_millis(10),
+            infer_mode: InferMode::Compressed,
+        }
     }
 }
 
 enum Job {
     Eval(EvalRequest, mpsc::Sender<Result<EvalResponse, String>>),
+    Linear(LinearRequest, mpsc::Sender<Result<LinearResponse, String>>),
     Shutdown,
 }
 
@@ -69,7 +114,9 @@ pub struct EvalService {
 }
 
 impl EvalService {
-    /// Spawn the batcher thread.
+    /// Spawn the batcher thread over explicit dense parameters — the
+    /// original eval-only surface (no compressed model; linear requests
+    /// are answered with an error).
     ///
     /// PJRT handles are `!Send` (the xla crate wraps raw pointers in `Rc`),
     /// so the batcher thread constructs its *own* [`Engine`] from the
@@ -78,31 +125,56 @@ impl EvalService {
     pub fn start(
         manifest: ArtifactManifest,
         cfg: ModelConfig,
-        host_params: Vec<crate::tensor::Tensor>,
+        host_params: Vec<Tensor>,
         svc_cfg: ServiceConfig,
     ) -> Result<EvalService> {
         manifest.verify_config(&cfg)?;
+        Ok(Self::spawn(Some(manifest), cfg, host_params, None, svc_cfg))
+    }
+
+    /// Spawn the batcher over a `.swsc` container. Linear requests are
+    /// served from a [`CompressedModel`] built in `svc_cfg.infer_mode` —
+    /// with [`InferMode::Compressed`] the dense weights are never
+    /// materialized for that surface.
+    ///
+    /// `manifest = Some(..)` additionally enables the PJRT eval path; the
+    /// `fwd_eval` executable's contract is dense parameter literals, so
+    /// the container must then cover every model parameter and compressed
+    /// entries are restored host-side for that path only (the
+    /// accelerator-side analog is the L1 `decode_matmul` kernel). With
+    /// `manifest = None` the service is linear-only and needs no
+    /// artifacts.
+    pub fn start_with_swsc(
+        manifest: Option<ArtifactManifest>,
+        cfg: ModelConfig,
+        file: &SwscFile,
+        svc_cfg: ServiceConfig,
+    ) -> Result<EvalService> {
+        let host_params = if let Some(man) = &manifest {
+            man.verify_config(&cfg)?;
+            crate::eval::restore_param_tensors(file, &cfg)?
+        } else {
+            Vec::new()
+        };
+        let model = CompressedModel::from_file(file, svc_cfg.infer_mode);
+        Ok(Self::spawn(manifest, cfg, host_params, Some(model), svc_cfg))
+    }
+
+    fn spawn(
+        manifest: Option<ArtifactManifest>,
+        cfg: ModelConfig,
+        host_params: Vec<Tensor>,
+        model: Option<CompressedModel>,
+        svc_cfg: ServiceConfig,
+    ) -> EvalService {
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::sync_channel::<Job>(svc_cfg.queue_capacity);
         let m = metrics.clone();
         let seq = cfg.seq;
-
         let worker = std::thread::spawn(move || {
-            let engine = match Engine::new(manifest) {
-                Ok(e) => e,
-                Err(err) => {
-                    let msg = format!("engine init failed: {err:#}");
-                    for job in rx {
-                        if let Job::Eval(_, tx) = job {
-                            let _ = tx.send(Err(msg.clone()));
-                        }
-                    }
-                    return;
-                }
-            };
-            batcher_loop(engine, cfg, host_params, rx, svc_cfg, m);
+            batcher_loop(manifest, cfg, host_params, model, rx, svc_cfg, m);
         });
-        Ok(EvalService { tx, worker: Some(worker), metrics, seq })
+        EvalService { tx, worker: Some(worker), metrics, seq }
     }
 
     /// Submit a request; blocks when the queue is full (backpressure).
@@ -125,6 +197,22 @@ impl EvalService {
         rx.recv().context("service dropped response")?.map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// Submit a linear request; blocks when the queue is full.
+    pub fn submit_linear(
+        &self,
+        req: LinearRequest,
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Job::Linear(req, rtx)).context("service stopped")?;
+        Ok(rrx)
+    }
+
+    /// Submit a linear request and wait.
+    pub fn linear_blocking(&self, req: LinearRequest) -> Result<LinearResponse> {
+        let rx = self.submit_linear(req)?;
+        rx.recv().context("service dropped response")?.map_err(|e| anyhow::anyhow!(e))
+    }
+
     /// Graceful shutdown: drain, stop the batcher.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Job::Shutdown);
@@ -143,37 +231,65 @@ impl Drop for EvalService {
     }
 }
 
+/// Lazily initialize the PJRT engine + `fwd_eval` — only ever on the
+/// first eval request, so linear-only services never touch PJRT.
+fn init_fwd_eval(manifest: &Option<ArtifactManifest>) -> Result<Arc<LoadedExec>, String> {
+    let Some(man) = manifest else {
+        return Err(
+            "eval serving disabled: service started without an artifact manifest \
+             (linear requests only)"
+                .to_string(),
+        );
+    };
+    Engine::new(man.clone())
+        .and_then(|e| e.load("fwd_eval"))
+        .map_err(|e| format!("fwd_eval init failed: {e:#}"))
+}
+
+fn serve_linear(
+    model: &Option<CompressedModel>,
+    metrics: &Metrics,
+    req: LinearRequest,
+    tx: mpsc::Sender<Result<LinearResponse, String>>,
+) {
+    metrics.incr("service.linear_requests", 1);
+    let t0 = std::time::Instant::now();
+    let resp = match model {
+        None => Err("no compressed model loaded — start the service with start_with_swsc"
+            .to_string()),
+        Some(m) => m
+            .apply(&req.name, &req.x)
+            .map(|y| LinearResponse { y })
+            .map_err(|e| format!("linear `{}` failed: {e:#}", req.name)),
+    };
+    metrics.record("service.linear_seconds", t0.elapsed().as_secs_f64());
+    let _ = tx.send(resp);
+}
+
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
-    engine: Engine,
+    manifest: Option<ArtifactManifest>,
     cfg: ModelConfig,
-    host_params: Vec<crate::tensor::Tensor>,
+    host_params: Vec<Tensor>,
+    model: Option<CompressedModel>,
     rx: mpsc::Receiver<Job>,
     svc_cfg: ServiceConfig,
     metrics: Arc<Metrics>,
 ) {
-    let exe = match engine.load("fwd_eval") {
-        Ok(e) => e,
-        Err(err) => {
-            // Fail every request that arrives.
-            let msg = format!("fwd_eval load failed: {err:#}");
-            for job in rx {
-                if let Job::Eval(_, tx) = job {
-                    let _ = tx.send(Err(msg.clone()));
-                }
-            }
-            return;
-        }
-    };
-
+    // Lazy `fwd_eval`: Option<Result> caches either the handle or the
+    // init error (replayed to every later eval request).
+    let mut exe: Option<Result<Arc<LoadedExec>, String>> = None;
     let mut pending: Vec<(EvalRequest, mpsc::Sender<Result<EvalResponse, String>>)> = Vec::new();
     let mut shutting_down = false;
     loop {
-        // Fill up to a full batch or until the delay elapses.
+        // Fill up to a full eval batch or until the delay elapses. Linear
+        // requests are served inline — they never wait on the batch clock.
         let deadline = std::time::Instant::now() + svc_cfg.max_batch_delay;
         while pending.len() < cfg.batch && !shutting_down {
             let timeout = deadline.saturating_duration_since(std::time::Instant::now());
             match rx.recv_timeout(timeout) {
                 Ok(Job::Eval(req, tx)) => pending.push((req, tx)),
+                Ok(Job::Linear(req, tx)) => serve_linear(&model, &metrics, req, tx),
                 Ok(Job::Shutdown) => shutting_down = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -195,20 +311,30 @@ fn batcher_loop(
             metrics.incr("service.padded_rows", (cfg.batch - real) as u64);
         }
 
-        let t0 = std::time::Instant::now();
-        let result = run_batch(&exe, &cfg, &host_params, &pending);
-        metrics.record("service.batch_seconds", t0.elapsed().as_secs_f64());
-
-        match result {
-            Ok(responses) => {
-                for ((_, tx), resp) in pending.drain(..).zip(responses) {
-                    let _ = tx.send(Ok(resp));
-                }
-            }
-            Err(err) => {
-                let msg = format!("batch failed: {err:#}");
+        let exe_state = exe.get_or_insert_with(|| init_fwd_eval(&manifest));
+        match exe_state {
+            Err(msg) => {
+                let msg = msg.clone();
                 for (_, tx) in pending.drain(..) {
                     let _ = tx.send(Err(msg.clone()));
+                }
+            }
+            Ok(loaded) => {
+                let t0 = std::time::Instant::now();
+                let result = run_batch(loaded.as_ref(), &cfg, &host_params, &pending);
+                metrics.record("service.batch_seconds", t0.elapsed().as_secs_f64());
+                match result {
+                    Ok(responses) => {
+                        for ((_, tx), resp) in pending.drain(..).zip(responses) {
+                            let _ = tx.send(Ok(resp));
+                        }
+                    }
+                    Err(err) => {
+                        let msg = format!("batch failed: {err:#}");
+                        for (_, tx) in pending.drain(..) {
+                            let _ = tx.send(Err(msg.clone()));
+                        }
+                    }
                 }
             }
         }
@@ -219,9 +345,9 @@ fn batcher_loop(
 }
 
 fn run_batch(
-    exe: &crate::runtime::LoadedExec,
+    exe: &LoadedExec,
     cfg: &ModelConfig,
-    host_params: &[crate::tensor::Tensor],
+    host_params: &[Tensor],
     pending: &[(EvalRequest, mpsc::Sender<Result<EvalResponse, String>>)],
 ) -> Result<Vec<EvalResponse>> {
     let real = pending.len();

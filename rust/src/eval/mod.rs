@@ -5,11 +5,43 @@
 //! `exp(Σ nll / Σ tokens)` over the eval stream — the same quantity the
 //! paper reports on WikiText-2.
 
-use crate::io::Checkpoint;
-use crate::model::{param_specs, ModelConfig};
+use crate::io::{Checkpoint, SwscFile};
+use crate::model::{param_specs, ModelConfig, ParamSpec};
 use crate::runtime::{literal_to_tensor, tensor_to_literal, tokens_to_literal, Engine};
+use crate::tensor::Tensor;
 use crate::text::Dataset;
 use anyhow::{Context, Result};
+
+/// The one place a resolved parameter tensor is checked against its spec —
+/// shared by every param source (checkpoint, `.swsc`) so the error shape
+/// can never drift between surfaces.
+fn ensure_spec_shape(spec: &ParamSpec, t: &Tensor) -> Result<()> {
+    anyhow::ensure!(
+        t.shape() == &spec.shape[..],
+        "param {} shape {:?} != {:?}",
+        spec.name,
+        t.shape(),
+        spec.shape
+    );
+    Ok(())
+}
+
+/// Dense parameter tensors for `cfg`, restored from a `.swsc` container in
+/// canonical [`param_specs`] order with shape validation. Shared by
+/// [`Evaluator::params_from_swsc`] and the serving front's PJRT path
+/// (`coordinator::EvalService::start_with_swsc`).
+pub fn restore_param_tensors(file: &SwscFile, cfg: &ModelConfig) -> Result<Vec<Tensor>> {
+    let mut restored = file.restore_all();
+    let mut out = Vec::new();
+    for spec in param_specs(cfg) {
+        let t = restored
+            .remove(&spec.name)
+            .with_context(|| format!("swsc container missing {}", spec.name))?;
+        ensure_spec_shape(&spec, &t)?;
+        out.push(t);
+    }
+    Ok(out)
+}
 
 /// Perplexity evaluator bound to one engine + model config.
 pub struct Evaluator {
@@ -36,14 +68,10 @@ impl Evaluator {
     pub fn params_from_checkpoint(&self, ck: &Checkpoint) -> Result<Vec<xla::Literal>> {
         let mut out = Vec::new();
         for spec in param_specs(&self.cfg) {
-            let t = ck.get(&spec.name).with_context(|| format!("checkpoint missing {}", spec.name))?;
-            anyhow::ensure!(
-                t.shape() == &spec.shape[..],
-                "param {} shape {:?} != {:?}",
-                spec.name,
-                t.shape(),
-                spec.shape
-            );
+            let t = ck
+                .get(&spec.name)
+                .with_context(|| format!("checkpoint missing {}", spec.name))?;
+            ensure_spec_shape(&spec, t)?;
             out.push(tensor_to_literal(t)?);
         }
         Ok(out)
@@ -78,6 +106,25 @@ impl Evaluator {
     /// Convenience: perplexity straight from a checkpoint.
     pub fn perplexity_of(&self, ck: &Checkpoint, data: &Dataset) -> Result<EvalResult> {
         let params = self.params_from_checkpoint(ck)?;
+        self.perplexity(&params, data)
+    }
+
+    /// Parameter literals straight from a `.swsc` container.
+    ///
+    /// The `fwd_eval` executable's contract is dense parameter literals,
+    /// so compressed entries are restored host-side here (`W' + A·B`,
+    /// via [`restore_param_tensors`]). The compressed-domain serving
+    /// surface — matmuls with no reconstruction, behind the `InferMode`
+    /// flag — lives in [`crate::infer`] and
+    /// `coordinator::EvalService::start_with_swsc`; its accelerator-side
+    /// analog is the L1 `decode_matmul` kernel.
+    pub fn params_from_swsc(&self, file: &SwscFile) -> Result<Vec<xla::Literal>> {
+        restore_param_tensors(file, &self.cfg)?.iter().map(tensor_to_literal).collect()
+    }
+
+    /// Convenience: perplexity straight from a `.swsc` container.
+    pub fn perplexity_of_swsc(&self, file: &SwscFile, data: &Dataset) -> Result<EvalResult> {
+        let params = self.params_from_swsc(file)?;
         self.perplexity(&params, data)
     }
 

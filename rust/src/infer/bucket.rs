@@ -1,0 +1,306 @@
+//! Deterministic bucket sums — the aggregation step of the
+//! compressed-domain matmul.
+//!
+//! For `Y = W·X` with `W ≈ R[labels] + A·B`, the shared-representative
+//! term collapses to `R·S` where `S` is the `k × b` matrix of per-cluster
+//! sums of X's rows: `S[l] = Σ_{j : labels[j] = l} x[j]`. Computing `S`
+//! costs `n·b` adds — it replaces the `m·n·b` multiply-adds the dense path
+//! spends re-multiplying the same representative column once per channel.
+//!
+//! ## Numeric contract (chunk grouping)
+//!
+//! Channels are cut at fixed [`CHANNEL_CHUNK`] boundaries (depending only
+//! on `n`, never on the thread count). Each chunk accumulates its own
+//! `k × b` partial bucket table over its channels in increasing `j`, and
+//! the partial tables are folded elementwise **in chunk order**
+//! ([`crate::exec::fold_chunks`]). Every `(l, c)` cell is therefore the
+//! fixed expression `((0 + p₀) + p₁) + …` with `pᵢ` the chunk-`i` partial
+//! — bit-identical at any `SWSC_THREADS`, same as the PR 1–3 parity
+//! contract. Note this grouping is *not* the same float expression as one
+//! flat accumulator over all of a bucket's channels (addition is not
+//! associative), which is why the per-bucket CSR path below
+//! ([`bucket_sums_indexed`]) reproduces the identical chunk grouping
+//! rather than summing each bucket flat: the two implementations are
+//! bitwise interchangeable, mirroring the blocked-vs-reference Lloyd
+//! assign pair.
+
+use crate::exec::{self, ExecConfig};
+use crate::tensor::Tensor;
+
+/// Fixed chunk size (in channels) for the bucket-sum reduction. Part of
+/// the numeric contract — like `kmeans::POINT_CHUNK`, it must never depend
+/// on the thread count.
+pub const CHANNEL_CHUNK: usize = 128;
+
+/// Below this many elements the bucket sum runs inline serial (pure adds —
+/// memory-bound, same bar as the transpose threshold in `tensor::ops`).
+const MIN_PARALLEL_ELEMS: usize = 1 << 16;
+
+/// Label → bucket index in CSR form: `channels` holds every channel id
+/// sorted by `(label, j)`, `starts[l]..starts[l + 1]` delimits bucket `l`.
+/// Built once per [`super::CompressedLinear`]; drives the per-bucket
+/// bucket-sum path and makes empty clusters explicit.
+#[derive(Debug, Clone)]
+pub struct BucketIndex {
+    starts: Vec<usize>,
+    channels: Vec<u32>,
+}
+
+impl BucketIndex {
+    /// Counting-sort construction — stable, so each bucket's channel list
+    /// is in increasing `j`.
+    pub fn new(labels: &[u32], k: usize) -> BucketIndex {
+        debug_assert!(labels.iter().all(|&l| (l as usize) < k), "label out of range");
+        let mut starts = vec![0usize; k + 1];
+        for &l in labels {
+            starts[l as usize + 1] += 1;
+        }
+        for i in 0..k {
+            starts[i + 1] += starts[i];
+        }
+        let mut cursor = starts.clone();
+        let mut channels = vec![0u32; labels.len()];
+        for (j, &l) in labels.iter().enumerate() {
+            channels[cursor[l as usize]] = j as u32;
+            cursor[l as usize] += 1;
+        }
+        BucketIndex { starts, channels }
+    }
+
+    /// Number of buckets `k`.
+    pub fn k(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Channel ids of bucket `l`, in increasing `j`.
+    pub fn bucket(&self, l: usize) -> &[u32] {
+        &self.channels[self.starts[l]..self.starts[l + 1]]
+    }
+
+    /// How many buckets have no channels (possible after k-means repair on
+    /// adversarial data, and legal in a `.swsc` container).
+    pub fn empty_buckets(&self) -> usize {
+        (0..self.k()).filter(|&l| self.bucket(l).is_empty()).count()
+    }
+}
+
+/// [`bucket_sums_with`] on the process-wide thread config.
+pub fn bucket_sums(x: &Tensor, labels: &[u32], k: usize) -> Tensor {
+    bucket_sums_with(x, labels, k, exec::global())
+}
+
+/// Per-cluster sums of X's rows: `x` is `n × b` (row `j` = channel `j`),
+/// returns the `k × b` matrix `S` with `S[l] = Σ_{j : labels[j] = l} x[j]`.
+///
+/// Parallel over fixed [`CHANNEL_CHUNK`] channel chunks; per-chunk partial
+/// bucket tables are folded in chunk order with bounded memory
+/// ([`exec::fold_chunks`]), so the result is bit-identical at any
+/// `exec.threads` — see the module docs for the exact grouping contract.
+pub fn bucket_sums_with(x: &Tensor, labels: &[u32], k: usize, exec: ExecConfig) -> Tensor {
+    let (n, b) = (x.rows(), x.cols());
+    assert_eq!(labels.len(), n, "one label per channel");
+    debug_assert!(labels.iter().all(|&l| (l as usize) < k), "label out of range");
+    let mut sums = vec![0.0f32; k * b];
+    if n == 0 || b == 0 || k == 0 {
+        return Tensor::from_vec(&[k, b], sums);
+    }
+    let exec = if n * b < MIN_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
+    exec::fold_chunks(
+        exec,
+        n,
+        CHANNEL_CHUNK,
+        |range| {
+            let mut partial = vec![0.0f32; k * b];
+            for j in range {
+                let acc = &mut partial[labels[j] as usize * b..][..b];
+                for (a, &v) in acc.iter_mut().zip(x.row(j)) {
+                    *a += v;
+                }
+            }
+            partial
+        },
+        |partial| {
+            for (a, &v) in sums.iter_mut().zip(&partial) {
+                *a += v;
+            }
+        },
+    );
+    Tensor::from_vec(&[k, b], sums)
+}
+
+/// Per-bucket bucket sums over a prebuilt [`BucketIndex`] — bitwise
+/// identical to [`bucket_sums_with`].
+///
+/// Parallelism here is over *buckets* (each S row is a pre-assigned
+/// disjoint slot; no reduction at all), which wins when `b` is small and
+/// the `k × b` partial tables of the chunked path would dominate — the
+/// matvec path uses it. To stay on the shared numeric contract it
+/// reproduces the chunk grouping exactly: within a bucket, channels are
+/// summed into a fresh accumulator per [`CHANNEL_CHUNK`] span and the span
+/// sums are added in order — the same expression tree as the chunked
+/// fold (skipped spans contribute `+0.0`, which is bitwise inert because
+/// a span partial that starts from `+0.0` can never be `-0.0`).
+pub fn bucket_sums_indexed(x: &Tensor, index: &BucketIndex, exec: ExecConfig) -> Tensor {
+    let (n, b) = (x.rows(), x.cols());
+    let k = index.k();
+    // Hard assert (not debug): a stale index would silently drop channels
+    // in release builds; the chunked sibling fails loudly, so must this.
+    assert_eq!(index.channels.len(), n, "index built for a different channel count");
+    let mut sums = vec![0.0f32; k * b];
+    if n == 0 || b == 0 || k == 0 {
+        return Tensor::from_vec(&[k, b], sums);
+    }
+    let exec = if n * b < MIN_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
+    // One band row per bucket; a modest rows_per_chunk keeps uneven bucket
+    // sizes from serializing on one worker.
+    exec::for_row_bands(exec, &mut sums, k, b, 4, |l0, band| {
+        let mut span = vec![0.0f32; b];
+        for (li, row) in band.chunks_exact_mut(b).enumerate() {
+            let chans = index.bucket(l0 + li);
+            let mut i = 0;
+            while i < chans.len() {
+                let chunk_id = chans[i] as usize / CHANNEL_CHUNK;
+                span.fill(0.0);
+                while i < chans.len() && chans[i] as usize / CHANNEL_CHUNK == chunk_id {
+                    for (a, &v) in span.iter_mut().zip(x.row(chans[i] as usize)) {
+                        *a += v;
+                    }
+                    i += 1;
+                }
+                for (r, &s) in row.iter_mut().zip(&span) {
+                    *r += s;
+                }
+            }
+        }
+    });
+    Tensor::from_vec(&[k, b], sums)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Labels with a configurable number of guaranteed-empty trailing
+    /// buckets.
+    fn labels_for(n: usize, k: usize, empty: usize, rng: &mut Rng) -> Vec<u32> {
+        let live = (k - empty).max(1);
+        (0..n).map(|_| rng.below(live) as u32).collect()
+    }
+
+    #[test]
+    fn index_structure_is_sound() {
+        let labels = vec![2u32, 0, 2, 1, 0, 2];
+        let idx = BucketIndex::new(&labels, 4);
+        assert_eq!(idx.k(), 4);
+        assert_eq!(idx.bucket(0), &[1, 4]);
+        assert_eq!(idx.bucket(1), &[3]);
+        assert_eq!(idx.bucket(2), &[0, 2, 5]);
+        assert_eq!(idx.bucket(3), &[] as &[u32]);
+        assert_eq!(idx.empty_buckets(), 1);
+    }
+
+    #[test]
+    fn sums_match_f64_reference() {
+        let mut rng = Rng::new(700);
+        let (n, b, k) = (3 * CHANNEL_CHUNK + 17, 9, 6);
+        let x = Tensor::randn(&[n, b], &mut rng);
+        let labels = labels_for(n, k, 1, &mut rng);
+        let s = bucket_sums(&x, &labels, k);
+        for l in 0..k {
+            for c in 0..b {
+                let want: f64 = (0..n)
+                    .filter(|&j| labels[j] as usize == l)
+                    .map(|j| x.at(j, c) as f64)
+                    .sum();
+                assert!(
+                    (s.at(l, c) as f64 - want).abs() < 1e-3,
+                    "S[{l}][{c}] = {} vs {want}",
+                    s.at(l, c)
+                );
+            }
+        }
+        // The guaranteed-empty bucket is exactly zero.
+        assert!(s.row(k - 1).iter().all(|&v| v == 0.0));
+    }
+
+    /// The two implementations share one numeric contract: chunked partial
+    /// tables folded in chunk order == per-bucket CSR spans — bitwise,
+    /// including adversarial magnitudes where any grouping drift would
+    /// change low bits.
+    #[test]
+    fn chunked_and_indexed_bitwise_identical() {
+        prop::check(
+            "bucket sums: chunked == CSR",
+            701,
+            24,
+            |r| {
+                let n = 1 + r.below(3 * CHANNEL_CHUNK + 40);
+                let b = 1 + r.below(12);
+                let k = 1 + r.below(9);
+                let empty = r.below(k.min(3));
+                let mut x = Tensor::randn(&[n, b], r);
+                // Mixed magnitudes: cancellation exposes grouping drift.
+                for (i, v) in x.data_mut().iter_mut().enumerate() {
+                    if i % 7 == 0 {
+                        *v *= 1e8;
+                    } else if i % 11 == 0 {
+                        *v *= 1e-8;
+                    }
+                }
+                (x, labels_for(n, k, empty, r), k)
+            },
+            |(x, labels, k)| {
+                let idx = BucketIndex::new(labels, *k);
+                let chunked = bucket_sums_with(x, labels, *k, ExecConfig::serial());
+                let indexed = bucket_sums_indexed(x, &idx, ExecConfig::serial());
+                if bits(&chunked) == bits(&indexed) {
+                    Ok(())
+                } else {
+                    Err("chunked and CSR bucket sums diverge".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn thread_parity_bitwise_both_paths() {
+        let mut rng = Rng::new(702);
+        // Ragged channel count (partial final chunk) and enough elements to
+        // clear the serial-fallback threshold so parallelism actually runs.
+        let (n, b, k) = (5 * CHANNEL_CHUNK + 31, 120, 7);
+        let x = Tensor::randn(&[n, b], &mut rng);
+        let labels = labels_for(n, k, 2, &mut rng);
+        let idx = BucketIndex::new(&labels, k);
+        assert!(n * b >= super::MIN_PARALLEL_ELEMS);
+        let base_c = bits(&bucket_sums_with(&x, &labels, k, ExecConfig::serial()));
+        let base_i = bits(&bucket_sums_indexed(&x, &idx, ExecConfig::serial()));
+        assert_eq!(base_c, base_i);
+        for threads in [2, 4, 8] {
+            let cfg = ExecConfig::with_threads(threads);
+            let chunked = bucket_sums_with(&x, &labels, k, cfg);
+            assert_eq!(bits(&chunked), base_c, "chunked, {threads} threads");
+            let indexed = bucket_sums_indexed(&x, &idx, cfg);
+            assert_eq!(bits(&indexed), base_i, "indexed, {threads} threads");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let empty = Tensor::zeros(&[0, 4]);
+        let s = bucket_sums(&empty, &[], 3);
+        assert_eq!(s.shape(), &[3, 4]);
+        assert!(s.data().iter().all(|&v| v == 0.0));
+        let one = Tensor::from_vec(&[2, 1], vec![1.5, 2.5]);
+        let s1 = bucket_sums(&one, &[0, 0], 1);
+        assert_eq!(s1.shape(), &[1, 1]);
+        assert_eq!(s1.data(), &[4.0]);
+        let wide = Tensor::zeros(&[3, 0]);
+        assert_eq!(bucket_sums(&wide, &[0, 1, 0], 2).shape(), &[2, 0]);
+    }
+}

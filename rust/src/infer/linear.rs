@@ -1,0 +1,420 @@
+//! A compressed weight matrix as a serving-time linear operator.
+
+use super::bucket::{self, BucketIndex};
+use crate::compress::CompressedMatrix;
+use crate::exec::{self, ExecConfig};
+use crate::tensor::gemm::{self, ASrc, PackedA, PackedB};
+use crate::tensor::{gemm_packed_b_into, gemm_prepacked_into, Tensor};
+use std::sync::OnceLock;
+
+/// Below this many elements a gather (row/column copy by label) runs
+/// inline serial — pure copies, same bar as the transpose threshold.
+const MIN_PARALLEL_GATHER_ELEMS: usize = 1 << 16;
+
+/// Row granularity for parallel gathers (matches the GEMM band size).
+const GATHER_BAND: usize = 64;
+
+/// A [`CompressedMatrix`] prepared for compressed-domain products:
+/// `W ≈ R[labels] + A·B` served without ever materializing the dense
+/// `m × n` weight.
+///
+/// Built once per matrix: the label→bucket CSR index is constructed up
+/// front, and each weight-side GEMM panel (R, A, B per orientation) is
+/// packed **lazily on first use, then reused by every later call** — a
+/// serving process that only ever hits one orientation (the service's
+/// `apply` path) holds only that orientation's panels, not all three. A
+/// request therefore pays only its own activation packing, the `O(n·b)`
+/// bucket aggregation (or label gather), and GEMMs whose flops scale with
+/// `k` and `r` instead of `n` — see the cost model in [`crate::infer`]'s
+/// module docs. Panel contents are a pure function of the weights
+/// (packing is thread-invariant), so laziness never affects results.
+pub struct CompressedLinear {
+    shape: (usize, usize),
+    k: usize,
+    rank: usize,
+    labels: Vec<u32>,
+    index: BucketIndex,
+    // The compressed factors themselves (the only payload held eagerly).
+    centroids: Tensor, // R  (m × k)
+    factor_a: Tensor,  // A  (m × r)
+    factor_b: Tensor,  // B  (r × n)
+    // Left-operand (A-side) panels, packed on first use:
+    pa_r: OnceLock<PackedA>,  // R  (m × k)  — Y = R·S      (matmul)
+    pa_rt: OnceLock<PackedA>, // Rᵀ (k × m)  — T = Rᵀ·X     (t_matmul)
+    pa_a: OnceLock<PackedA>,  // A  (m × r)  — Y += A·Z     (matmul)
+    pa_at: OnceLock<PackedA>, // Aᵀ (r × m)  — Z = Aᵀ·X     (t_matmul)
+    pa_bf: OnceLock<PackedA>, // B  (r × n)  — Z = B·X      (matmul)
+    pa_bt: OnceLock<PackedA>, // Bᵀ (n × r)  — Y += Bᵀ·Z    (t_matmul)
+    // Right-operand (B-side) panels for the activation-major `apply`:
+    pb_r: OnceLock<PackedB>, // R — XC = X·R
+    pb_a: OnceLock<PackedB>, // A — XA = X·A
+    pb_b: OnceLock<PackedB>, // B — Y += XA·B
+}
+
+impl CompressedLinear {
+    /// Build the serving form: validate labels, build the CSR label
+    /// index, and take a copy of the factors; GEMM panels pack lazily on
+    /// first use. The operator is identical at any thread count.
+    pub fn from_matrix(c: &CompressedMatrix) -> CompressedLinear {
+        let (m, n) = c.shape;
+        let k = c.k();
+        assert!(
+            c.labels.iter().all(|&l| (l as usize) < k),
+            "compressed matrix has labels out of range (k = {k})"
+        );
+        assert_eq!(c.labels.len(), n, "one label per channel");
+        CompressedLinear {
+            shape: (m, n),
+            k,
+            rank: c.rank(),
+            labels: c.labels.clone(),
+            index: BucketIndex::new(&c.labels, k),
+            centroids: c.centroids.clone(),
+            factor_a: c.factor_a.clone(),
+            factor_b: c.factor_b.clone(),
+            pa_r: OnceLock::new(),
+            pa_rt: OnceLock::new(),
+            pa_a: OnceLock::new(),
+            pa_at: OnceLock::new(),
+            pa_bf: OnceLock::new(),
+            pa_bt: OnceLock::new(),
+            pb_r: OnceLock::new(),
+            pb_a: OnceLock::new(),
+            pb_b: OnceLock::new(),
+        }
+    }
+
+    // Lazy panel accessors. Each packs once (under the first caller's
+    // thread config — contents are thread-invariant) and serves the
+    // cached panels afterwards.
+
+    fn pa_r(&self, exec: ExecConfig) -> &PackedA {
+        let (m, _) = self.shape;
+        self.pa_r.get_or_init(|| {
+            let src = ASrc::Rows { data: self.centroids.data(), k: self.k };
+            gemm::pack_a(src, m, self.k, exec)
+        })
+    }
+
+    fn pa_rt(&self, exec: ExecConfig) -> &PackedA {
+        let (m, _) = self.shape;
+        self.pa_rt.get_or_init(|| {
+            let src = ASrc::Cols { data: self.centroids.data(), ld: self.k };
+            gemm::pack_a(src, self.k, m, exec)
+        })
+    }
+
+    fn pa_a(&self, exec: ExecConfig) -> &PackedA {
+        let (m, _) = self.shape;
+        self.pa_a.get_or_init(|| {
+            let src = ASrc::Rows { data: self.factor_a.data(), k: self.rank };
+            gemm::pack_a(src, m, self.rank, exec)
+        })
+    }
+
+    fn pa_at(&self, exec: ExecConfig) -> &PackedA {
+        let (m, _) = self.shape;
+        self.pa_at.get_or_init(|| {
+            let src = ASrc::Cols { data: self.factor_a.data(), ld: self.rank };
+            gemm::pack_a(src, self.rank, m, exec)
+        })
+    }
+
+    fn pa_bf(&self, exec: ExecConfig) -> &PackedA {
+        let (_, n) = self.shape;
+        self.pa_bf.get_or_init(|| {
+            let src = ASrc::Rows { data: self.factor_b.data(), k: n };
+            gemm::pack_a(src, self.rank, n, exec)
+        })
+    }
+
+    fn pa_bt(&self, exec: ExecConfig) -> &PackedA {
+        let (_, n) = self.shape;
+        self.pa_bt.get_or_init(|| {
+            let src = ASrc::Cols { data: self.factor_b.data(), ld: n };
+            gemm::pack_a(src, n, self.rank, exec)
+        })
+    }
+
+    fn pb_r(&self, exec: ExecConfig) -> &PackedB {
+        let (m, _) = self.shape;
+        self.pb_r.get_or_init(|| gemm::pack_b(self.centroids.data(), m, self.k, exec))
+    }
+
+    fn pb_a(&self, exec: ExecConfig) -> &PackedB {
+        let (m, _) = self.shape;
+        self.pb_a.get_or_init(|| gemm::pack_b(self.factor_a.data(), m, self.rank, exec))
+    }
+
+    fn pb_b(&self, exec: ExecConfig) -> &PackedB {
+        let (_, n) = self.shape;
+        self.pb_b.get_or_init(|| gemm::pack_b(self.factor_b.data(), self.rank, n, exec))
+    }
+
+    /// Original dense shape `(m, n)`.
+    pub fn shape(&self) -> (usize, usize) {
+        self.shape
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The label→bucket CSR index (introspection: bucket sizes, empties).
+    pub fn index(&self) -> &BucketIndex {
+        &self.index
+    }
+
+    /// Multiply-adds of one compressed-domain `W·X` at batch width `b`:
+    /// bucket aggregation + `R·S` + `A·(B·X)`.
+    pub fn compressed_macs(&self, b: usize) -> usize {
+        let (m, n) = self.shape;
+        n * b + m * self.k * b + self.rank * n * b + m * self.rank * b
+    }
+
+    /// Multiply-adds the dense route pays for the same product:
+    /// reconstruct (`m·n·r` for `A·B` plus the gather) + dense `m·n·b`.
+    pub fn dense_macs(&self, b: usize) -> usize {
+        let (m, n) = self.shape;
+        m * n * self.rank + m * n * b
+    }
+
+    /// `Y = W·X` on the process-wide thread config (`x` is `n × b`).
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        self.matmul_with(x, exec::global())
+    }
+
+    /// `Y = W·X` in the compressed domain: `Y = R·S + A·(B·X)` where `S`
+    /// is the bucket-sum matrix ([`bucket::bucket_sums_with`]). Never
+    /// materializes the dense weight; bit-identical at any `exec.threads`.
+    pub fn matmul_with(&self, x: &Tensor, exec: ExecConfig) -> Tensor {
+        let s = bucket::bucket_sums_with(x, &self.labels, self.k, exec);
+        self.matmul_from_sums(&s, x, exec)
+    }
+
+    /// `W·x` for a single activation vector (`x.len() == n`). Routes the
+    /// aggregation through the per-bucket CSR path — cheaper than chunk
+    /// partial tables at width 1, and bitwise identical to
+    /// [`CompressedLinear::matmul`] on the `n × 1` reshape.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        self.matvec_with(x, exec::global())
+    }
+
+    /// [`CompressedLinear::matvec`] with an explicit thread config.
+    pub fn matvec_with(&self, x: &[f32], exec: ExecConfig) -> Vec<f32> {
+        let (_, n) = self.shape;
+        assert_eq!(x.len(), n, "matvec wants {n} activations, got {}", x.len());
+        let xt = Tensor::from_vec(&[n, 1], x.to_vec());
+        let s = bucket::bucket_sums_indexed(&xt, &self.index, exec);
+        self.matmul_from_sums(&s, &xt, exec).into_vec()
+    }
+
+    /// Shared tail of the `W·X` paths: `Y = R·S [+ A·(B·X)]`.
+    fn matmul_from_sums(&self, s: &Tensor, x: &Tensor, exec: ExecConfig) -> Tensor {
+        let (m, n) = self.shape;
+        assert_eq!(x.rows(), n, "matmul wants {n} activation rows, got {}", x.rows());
+        let b = x.cols();
+        let mut out = vec![0.0f32; m * b];
+        if b == 0 {
+            return Tensor::from_vec(&[m, b], out);
+        }
+        let pb_s = gemm::pack_b(s.data(), self.k, b, exec);
+        gemm_prepacked_into(self.pa_r(exec), &pb_s, false, exec, &mut out);
+        if self.rank > 0 {
+            let pb_x = gemm::pack_b(x.data(), n, b, exec);
+            let mut z = vec![0.0f32; self.rank * b];
+            gemm_prepacked_into(self.pa_bf(exec), &pb_x, false, exec, &mut z);
+            let pb_z = gemm::pack_b(&z, self.rank, b, exec);
+            gemm_prepacked_into(self.pa_a(exec), &pb_z, true, exec, &mut out);
+        }
+        Tensor::from_vec(&[m, b], out)
+    }
+
+    /// `Y = Wᵀ·X` on the process-wide thread config (`x` is `m × b`).
+    pub fn t_matmul(&self, x: &Tensor) -> Tensor {
+        self.t_matmul_with(x, exec::global())
+    }
+
+    /// `Y = Wᵀ·X` in the compressed domain: `T = Rᵀ·X`, then row `j` of
+    /// the output is the gathered `T[labels[j]]`, plus `Bᵀ·(Aᵀ·X)`. The
+    /// gather replaces the bucket sum on this side — each output element
+    /// is the same single-accumulator dot the dense path computes, so at
+    /// `r = 0` this is bitwise equal to `reconstruct().t_matmul(x)`.
+    pub fn t_matmul_with(&self, x: &Tensor, exec: ExecConfig) -> Tensor {
+        let (m, n) = self.shape;
+        assert_eq!(x.rows(), m, "t_matmul wants {m} activation rows, got {}", x.rows());
+        let b = x.cols();
+        let mut out = vec![0.0f32; n * b];
+        if b == 0 || n == 0 {
+            return Tensor::from_vec(&[n, b], out);
+        }
+        let pb_x = gemm::pack_b(x.data(), m, b, exec);
+        let mut t = vec![0.0f32; self.k * b];
+        gemm_prepacked_into(self.pa_rt(exec), &pb_x, false, exec, &mut t);
+        let gex = if n * b < MIN_PARALLEL_GATHER_ELEMS { ExecConfig::serial() } else { exec };
+        let labels = &self.labels;
+        exec::for_row_bands(gex, &mut out, n, b, GATHER_BAND, |j0, band| {
+            for (jr, row) in band.chunks_exact_mut(b).enumerate() {
+                row.copy_from_slice(&t[labels[j0 + jr] as usize * b..][..b]);
+            }
+        });
+        if self.rank > 0 {
+            let mut z = vec![0.0f32; self.rank * b];
+            gemm_prepacked_into(self.pa_at(exec), &pb_x, false, exec, &mut z);
+            let pb_z = gemm::pack_b(&z, self.rank, b, exec);
+            gemm_prepacked_into(self.pa_bt(exec), &pb_z, true, exec, &mut out);
+        }
+        Tensor::from_vec(&[n, b], out)
+    }
+
+    /// `Y = X·W` on the process-wide thread config (`x` is `b × m`).
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        self.apply_with(x, exec::global())
+    }
+
+    /// `Y = X·W` for row-major activation batches — the serving shape, and
+    /// the L3 analog of the L1 `decode_matmul` Pallas kernel:
+    /// `Y = (X·R)[:, labels] + (X·A)·B`. The weight-side operands are all
+    /// right operands here, so their pre-packed B panels are reused across
+    /// calls. At `r = 0` this is bitwise equal to
+    /// `x.matmul(&reconstruct())` (same single-accumulator dots, gathered).
+    pub fn apply_with(&self, x: &Tensor, exec: ExecConfig) -> Tensor {
+        let (m, n) = self.shape;
+        assert_eq!(x.cols(), m, "apply wants {m} activation columns, got {}", x.cols());
+        let bsz = x.rows();
+        let mut out = vec![0.0f32; bsz * n];
+        if bsz == 0 || n == 0 {
+            return Tensor::from_vec(&[bsz, n], out);
+        }
+        // The activation matrix is the left operand of both X·R and X·A —
+        // pack its row panels once and reuse them (mirrors `t_matmul_with`
+        // reusing one packed X for Rᵀ·X and Aᵀ·X).
+        let pa_x = gemm::pack_a(ASrc::Rows { data: x.data(), k: m }, bsz, m, exec);
+        let mut xc = vec![0.0f32; bsz * self.k];
+        gemm_prepacked_into(&pa_x, self.pb_r(exec), false, exec, &mut xc);
+        let gex = if bsz * n < MIN_PARALLEL_GATHER_ELEMS { ExecConfig::serial() } else { exec };
+        let (labels, k) = (&self.labels, self.k);
+        exec::for_row_bands(gex, &mut out, bsz, n, GATHER_BAND, |t0, band| {
+            for (tr, orow) in band.chunks_exact_mut(n).enumerate() {
+                let xrow = &xc[(t0 + tr) * k..][..k];
+                for (o, &l) in orow.iter_mut().zip(labels) {
+                    *o = xrow[l as usize];
+                }
+            }
+        });
+        if self.rank > 0 {
+            let mut xa = vec![0.0f32; bsz * self.rank];
+            gemm_prepacked_into(&pa_x, self.pb_a(exec), false, exec, &mut xa);
+            gemm_packed_b_into(
+                ASrc::Rows { data: &xa, k: self.rank },
+                self.pb_b(exec),
+                bsz,
+                true,
+                exec,
+                &mut out,
+            );
+        }
+        Tensor::from_vec(&[bsz, n], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    fn compressed(m: usize, n: usize, k: usize, r: usize, seed: u64) -> CompressedMatrix {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(&[m, n], &mut rng);
+        compress_matrix(&w, &SwscConfig::new(k, r))
+    }
+
+    #[test]
+    fn matmul_matches_dense_route() {
+        let c = compressed(48, 80, 6, 4, 800);
+        let lin = CompressedLinear::from_matrix(&c);
+        let mut rng = Rng::new(801);
+        let x = Tensor::randn(&[80, 10], &mut rng);
+        let want = c.reconstruct().matmul(&x);
+        let got = lin.matmul(&x);
+        assert_eq!(got.shape(), want.shape());
+        assert_close(got.data(), want.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn t_matmul_and_apply_match_dense_route() {
+        let c = compressed(56, 40, 5, 3, 802);
+        let lin = CompressedLinear::from_matrix(&c);
+        let mut rng = Rng::new(803);
+        let w = c.reconstruct();
+        let xt = Tensor::randn(&[56, 7], &mut rng);
+        assert_close(lin.t_matmul(&xt).data(), w.t_matmul(&xt).data(), 1e-3, 1e-3).unwrap();
+        let xa = Tensor::randn(&[9, 56], &mut rng);
+        assert_close(lin.apply(&xa).data(), xa.matmul(&w).data(), 1e-3, 1e-3).unwrap();
+    }
+
+    /// At r = 0 the gather paths preserve the dense accumulation order
+    /// exactly — bitwise equality, not a tolerance (the contract recorded
+    /// in tests/fixtures/README.md).
+    #[test]
+    fn rank_zero_gather_paths_bitwise_equal_dense() {
+        let c = compressed(40, 36, 5, 0, 804);
+        let lin = CompressedLinear::from_matrix(&c);
+        let w = c.reconstruct();
+        let mut rng = Rng::new(805);
+        let xt = Tensor::randn(&[40, 6], &mut rng);
+        assert_eq!(bits(&lin.t_matmul(&xt)), bits(&w.t_matmul(&xt)), "t_matmul r=0");
+        let xa = Tensor::randn(&[5, 40], &mut rng);
+        assert_eq!(bits(&lin.apply(&xa)), bits(&xa.matmul(&w)), "apply r=0");
+    }
+
+    #[test]
+    fn matvec_bitwise_equals_matmul_width_one() {
+        let c = compressed(32, 50, 4, 2, 806);
+        let lin = CompressedLinear::from_matrix(&c);
+        let mut rng = Rng::new(807);
+        let x: Vec<f32> = (0..50).map(|_| rng.normal() as f32).collect();
+        let via_matmul = lin.matmul(&Tensor::from_vec(&[50, 1], x.clone()));
+        let via_matvec = lin.matvec(&x);
+        let b1: Vec<u32> = via_matmul.data().iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = via_matvec.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn zero_width_batches_are_fine() {
+        let c = compressed(16, 20, 3, 2, 808);
+        let lin = CompressedLinear::from_matrix(&c);
+        assert_eq!(lin.matmul(&Tensor::zeros(&[20, 0])).shape(), &[16, 0]);
+        assert_eq!(lin.t_matmul(&Tensor::zeros(&[16, 0])).shape(), &[20, 0]);
+        assert_eq!(lin.apply(&Tensor::zeros(&[0, 16])).shape(), &[0, 20]);
+    }
+
+    #[test]
+    fn cost_model_favors_compressed_in_paper_regime() {
+        // k = n/8, r = 32 at 512² — the gate regime from the bench.
+        let c = CompressedMatrix {
+            shape: (512, 512),
+            labels: (0..512).map(|j| (j % 64) as u32).collect(),
+            centroids: Tensor::zeros(&[512, 64]),
+            factor_a: Tensor::zeros(&[512, 32]),
+            factor_b: Tensor::zeros(&[32, 512]),
+        };
+        let lin = CompressedLinear::from_matrix(&c);
+        assert!(lin.compressed_macs(512) * 2 < lin.dense_macs(512));
+        assert_eq!(lin.k(), 64);
+        assert_eq!(lin.rank(), 32);
+        assert_eq!(lin.shape(), (512, 512));
+        assert_eq!(lin.index().empty_buckets(), 0);
+    }
+}

@@ -1,0 +1,75 @@
+//! Compressed-domain inference: serve products of SWSC-compressed weights
+//! without ever reconstructing the dense matrix.
+//!
+//! Every consumer of a [`crate::compress::CompressedMatrix`] used to call
+//! `reconstruct()` — an `m × n` materialization plus a full dense GEMM per
+//! product. But the paper's storage layout admits a cheaper product
+//! directly, the same operational win DeltaLLM (shared weights + low-rank
+//! deltas) and head-wise weight sharing exploit at inference time.
+//!
+//! ## The compressed-domain product
+//!
+//! With `W ≈ R[labels] + A·B` (`R`: `m × k` representatives as columns,
+//! `A`: `m × r`, `B`: `r × n`, `labels[j] < k` per channel):
+//!
+//! ```text
+//! Y = W·X = R·S + A·(B·X)          S[l] = Σ_{j : labels[j] = l} x[j]
+//! ```
+//!
+//! because every channel in cluster `l` multiplies the *same*
+//! representative column — so the `n` per-channel multiplies collapse to
+//! one multiply against the bucket sum `S` (`k × b`, see
+//! [`bucket_sums_with`]). The transposed orientations replace the bucket
+//! sum with a label *gather*:
+//!
+//! ```text
+//! Wᵀ·X = (Rᵀ·X)[labels] + Bᵀ·(Aᵀ·X)        (rows gathered by label)
+//! X·W  = (X·R)[:, labels] + (X·A)·B        (the L1 decode_matmul form)
+//! ```
+//!
+//! ## Cost model (multiply-adds per product, batch width `b`)
+//!
+//! ```text
+//! dense:       m·n·r (reconstruct A·B)  +  m·n·b (GEMM)  + m·n gather
+//! compressed:  n·b (bucket sums / gather) + m·k·b + r·n·b + m·r·b
+//! ```
+//!
+//! At the paper's operating points (`k ≤ n/8`, `r ≤ 32 ≪ n`) the
+//! compressed product is a 4–8× flop reduction at `b = n = 512` — the
+//! `compressed_vs_dense_*` rows in `benches/hotpath.rs` gate ≥ 1.5×
+//! wall-clock on exactly that regime. [`CompressedLinear`] amortizes
+//! everything reusable: the label→bucket CSR index is built once, and the
+//! packed GEMM panels of `R`/`A`/`B` pack lazily per orientation on first
+//! use and are reused by every later request — so a call pays only its
+//! own activation packing, and a process that serves one orientation
+//! holds one orientation's panels.
+//!
+//! ## Numeric contract
+//!
+//! All three GEMMs ride the shared packed engine (`tensor::gemm`) and the
+//! bucket sums ride the deterministic executor with fixed
+//! [`CHANNEL_CHUNK`] boundaries — every entry point is **bit-identical at
+//! any `SWSC_THREADS`**, extending the PR 1–3 parity contract to serving.
+//! Against the dense `reconstruct()` route the gather orientations are
+//! bitwise equal at `r = 0` (same single-accumulator dots); everywhere
+//! else the accumulation order necessarily differs (cluster-grouped vs
+//! column-order sums) and results agree to the documented ULP bound — the
+//! decision is recorded in `tests/fixtures/README.md` and pinned by
+//! `tests/infer_compressed.rs`.
+//!
+//! [`CompressedModel`] lifts this to a whole `.swsc` file and is wired
+//! into `coordinator::EvalService` behind the [`InferMode`] flag
+//! (`ServiceConfig::infer_mode`): linear requests are served from the
+//! compressed domain, with [`InferMode::Reconstructed`] kept as the
+//! dense oracle/baseline — mirroring `ExecBackend::SpawnPerCall` and
+//! `GemmKernel::Blocked`. (The PJRT `fwd_eval` executable still takes
+//! dense parameter literals, so perplexity evaluation restores host-side;
+//! the accelerator-side analog is the L1 `decode_matmul` Pallas kernel.)
+
+mod bucket;
+mod linear;
+mod model;
+
+pub use bucket::{bucket_sums, bucket_sums_indexed, bucket_sums_with, BucketIndex, CHANNEL_CHUNK};
+pub use linear::CompressedLinear;
+pub use model::{CompressedModel, InferMode};

@@ -1,0 +1,204 @@
+//! Model-level compressed-domain serving: every matrix of an [`SwscFile`]
+//! as a ready-to-serve linear operator.
+
+use super::linear::CompressedLinear;
+use crate::exec::{self, ExecConfig};
+use crate::io::SwscFile;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// How a [`CompressedModel`] serves the compressed entries of its file.
+///
+/// The two modes produce results within the documented ULP bound of each
+/// other (see `tests/fixtures/README.md`); `Reconstructed` is the oracle
+/// and bench baseline, mirroring `ExecBackend::SpawnPerCall` and
+/// `GemmKernel::Blocked`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferMode {
+    /// Serve straight from the compressed factors (`R`, labels, `A`, `B`)
+    /// — no dense `m × n` weight is ever materialized.
+    Compressed,
+    /// Materialize `W = R[labels] + A·B` once at load and serve dense
+    /// GEMMs — what every consumer did before the infer layer existed.
+    Reconstructed,
+}
+
+/// A loaded `.swsc` container in serving form: compressed entries become
+/// [`CompressedLinear`] operators (or dense weights, per [`InferMode`]),
+/// dense entries pass through.
+pub struct CompressedModel {
+    mode: InferMode,
+    linears: BTreeMap<String, CompressedLinear>,
+    dense: BTreeMap<String, Tensor>,
+}
+
+impl CompressedModel {
+    /// Build the serving form of `file`. In [`InferMode::Compressed`] each
+    /// compressed entry becomes a [`CompressedLinear`] (GEMM panels pack
+    /// lazily on first use); in [`InferMode::Reconstructed`] it is
+    /// restored to a dense tensor up front.
+    pub fn from_file(file: &SwscFile, mode: InferMode) -> CompressedModel {
+        let mut linears = BTreeMap::new();
+        let mut dense: BTreeMap<String, Tensor> =
+            file.dense.iter().map(|(n, t)| (n.clone(), t.clone())).collect();
+        match mode {
+            InferMode::Compressed => {
+                for (name, c) in &file.compressed {
+                    linears.insert(name.clone(), CompressedLinear::from_matrix(c));
+                }
+            }
+            InferMode::Reconstructed => {
+                for (name, c) in &file.compressed {
+                    dense.insert(name.clone(), c.reconstruct());
+                }
+            }
+        }
+        CompressedModel { mode, linears, dense }
+    }
+
+    pub fn mode(&self) -> InferMode {
+        self.mode
+    }
+
+    /// Matrices served in the compressed domain (0 in reconstructed mode).
+    pub fn num_compressed(&self) -> usize {
+        self.linears.len()
+    }
+
+    /// Every servable name, in sorted order.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.linears.keys().map(|s| s.as_str()).collect();
+        v.extend(self.dense.keys().map(|s| s.as_str()));
+        v.sort_unstable();
+        v
+    }
+
+    /// `(rows, cols)` of a 2-D entry; `None` if absent or not a matrix.
+    pub fn shape(&self, name: &str) -> Option<(usize, usize)> {
+        if let Some(lin) = self.linears.get(name) {
+            return Some(lin.shape());
+        }
+        let t = self.dense.get(name)?;
+        (t.ndim() == 2).then(|| (t.rows(), t.cols()))
+    }
+
+    /// `Y = X·W[name]` for a row-major activation batch (`x` is `b × m`)
+    /// — the serving entry point. Compressed entries never materialize the
+    /// dense weight; dense entries run a plain GEMM.
+    pub fn apply(&self, name: &str, x: &Tensor) -> Result<Tensor> {
+        self.apply_with(name, x, exec::global())
+    }
+
+    /// [`CompressedModel::apply`] with an explicit thread config.
+    pub fn apply_with(&self, name: &str, x: &Tensor, exec: ExecConfig) -> Result<Tensor> {
+        if let Some(lin) = self.linears.get(name) {
+            let (m, _) = lin.shape();
+            anyhow::ensure!(
+                x.ndim() == 2 && x.cols() == m,
+                "`{name}` wants [b, {m}] activations, got {:?}",
+                x.shape()
+            );
+            return Ok(lin.apply_with(x, exec));
+        }
+        if let Some(w) = self.dense.get(name) {
+            anyhow::ensure!(w.ndim() == 2, "`{name}` is not a matrix");
+            anyhow::ensure!(
+                x.ndim() == 2 && x.cols() == w.rows(),
+                "`{name}` wants [b, {}] activations, got {:?}",
+                w.rows(),
+                x.shape()
+            );
+            return Ok(x.matmul_with(w, exec));
+        }
+        bail!("no tensor named `{name}` in the model");
+    }
+
+    /// `Y = W[name]·X` (`x` is `n × b`) — the bucket-sum orientation.
+    pub fn matmul(&self, name: &str, x: &Tensor) -> Result<Tensor> {
+        self.matmul_with(name, x, exec::global())
+    }
+
+    /// [`CompressedModel::matmul`] with an explicit thread config.
+    pub fn matmul_with(&self, name: &str, x: &Tensor, exec: ExecConfig) -> Result<Tensor> {
+        if let Some(lin) = self.linears.get(name) {
+            let (_, n) = lin.shape();
+            anyhow::ensure!(
+                x.ndim() == 2 && x.rows() == n,
+                "`{name}` wants [{n}, b] activations, got {:?}",
+                x.shape()
+            );
+            return Ok(lin.matmul_with(x, exec));
+        }
+        if let Some(w) = self.dense.get(name) {
+            anyhow::ensure!(w.ndim() == 2, "`{name}` is not a matrix");
+            anyhow::ensure!(
+                x.ndim() == 2 && x.rows() == w.cols(),
+                "`{name}` wants [{}, b] activations, got {:?}",
+                w.cols(),
+                x.shape()
+            );
+            return Ok(w.matmul_with(x, exec));
+        }
+        bail!("no tensor named `{name}` in the model");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn small_file() -> SwscFile {
+        let mut rng = Rng::new(900);
+        let mut file = SwscFile::new();
+        for name in ["layers.0.attn.wq", "layers.0.attn.wk"] {
+            let w = Tensor::randn(&[32, 32], &mut rng);
+            file.compressed.insert(name.into(), compress_matrix(&w, &SwscConfig::new(4, 2)));
+        }
+        file.dense.insert("layers.0.attn.wv".into(), Tensor::randn(&[32, 32], &mut rng));
+        file
+    }
+
+    #[test]
+    fn modes_agree_within_tolerance() {
+        let file = small_file();
+        let comp = CompressedModel::from_file(&file, InferMode::Compressed);
+        let reco = CompressedModel::from_file(&file, InferMode::Reconstructed);
+        assert_eq!(comp.num_compressed(), 2);
+        assert_eq!(reco.num_compressed(), 0);
+        let mut rng = Rng::new(901);
+        let x = Tensor::randn(&[5, 32], &mut rng);
+        for name in comp.names() {
+            let a = comp.apply(name, &x).unwrap();
+            let b = reco.apply(name, &x).unwrap();
+            assert_close(a.data(), b.data(), 1e-3, 1e-3).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn dense_passthrough_is_exact() {
+        let file = small_file();
+        let model = CompressedModel::from_file(&file, InferMode::Compressed);
+        let mut rng = Rng::new(902);
+        let x = Tensor::randn(&[3, 32], &mut rng);
+        let got = model.apply("layers.0.attn.wv", &x).unwrap();
+        let want = x.matmul(&file.dense["layers.0.attn.wv"]);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn unknown_and_misshapen_requests_error() {
+        let file = small_file();
+        let model = CompressedModel::from_file(&file, InferMode::Compressed);
+        let x = Tensor::zeros(&[2, 32]);
+        assert!(model.apply("nope", &x).is_err());
+        assert!(model.apply("layers.0.attn.wq", &Tensor::zeros(&[2, 31])).is_err());
+        assert!(model.matmul("layers.0.attn.wq", &Tensor::zeros(&[31, 2])).is_err());
+        assert_eq!(model.shape("layers.0.attn.wq"), Some((32, 32)));
+        assert_eq!(model.shape("nope"), None);
+        assert_eq!(model.names().len(), 3);
+    }
+}

@@ -124,16 +124,29 @@ impl SwscFile {
             let n = read_u32(&mut cur)? as usize;
             let k = read_u32(&mut cur)? as usize;
             let r = read_u32(&mut cur)? as usize;
-            let packed_len = read_u64(&mut cur)? as usize;
-            let packed = take(&mut cur, packed_len)?;
-            let label_bits = ceil_log2(k).max(1);
-            let labels = bitpack::unpack_u32(packed, n, label_bits);
-            if labels.iter().any(|&l| l as usize >= k.max(1)) {
-                bail!("matrix `{name}`: label out of range");
+            // Header invariants first, so a corrupted header fails with a
+            // clear error instead of a later panic (or absurd allocation)
+            // in reconstruction/inference code that trusts the shapes.
+            if n > 0 && k == 0 {
+                bail!("matrix `{name}`: {n} channels but zero clusters");
             }
-            let centroids = Tensor::from_vec(&[m, k], read_f16(&mut cur, m * k)?);
-            let factor_a = Tensor::from_vec(&[m, r], read_f16(&mut cur, m * r)?);
-            let factor_b = Tensor::from_vec(&[r, n], read_f16(&mut cur, r * n)?);
+            if r > m.min(n) {
+                bail!("matrix `{name}`: rank {r} exceeds min(m, n) = {}", m.min(n));
+            }
+            let label_bits = ceil_log2(k).max(1);
+            let packed_len = read_u64(&mut cur)? as usize;
+            let want_packed = (n * label_bits as usize).div_ceil(8);
+            if packed_len != want_packed {
+                bail!("matrix `{name}`: packed label section {packed_len} B != {want_packed}");
+            }
+            let packed = take(&mut cur, packed_len)?;
+            let labels = bitpack::unpack_u32(packed, n, label_bits);
+            if labels.iter().any(|&l| l as usize >= k) {
+                bail!("matrix `{name}`: label out of range (k = {k})");
+            }
+            let centroids = Tensor::from_vec(&[m, k], read_f16(&mut cur, elems(&name, m, k)?)?);
+            let factor_a = Tensor::from_vec(&[m, r], read_f16(&mut cur, elems(&name, m, r)?)?);
+            let factor_b = Tensor::from_vec(&[r, n], read_f16(&mut cur, elems(&name, r, n)?)?);
             file.compressed.insert(
                 name,
                 CompressedMatrix { shape: (m, n), labels, centroids, factor_a, factor_b },
@@ -144,12 +157,22 @@ impl SwscFile {
         for _ in 0..n_dense {
             let name = read_name(&mut cur)?;
             let ndim = read_u32(&mut cur)? as usize;
+            if ndim > 8 {
+                bail!("tensor `{name}`: implausible rank {ndim}");
+            }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 shape.push(read_u64(&mut cur)? as usize);
             }
-            let count: usize = shape.iter().product();
-            let raw = take(&mut cur, count * 4)?;
+            let count = shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d));
+            let count = match count {
+                Some(c) => c,
+                None => bail!("tensor `{name}`: shape {shape:?} overflows"),
+            };
+            let bytes = count
+                .checked_mul(4)
+                .with_context(|| format!("tensor `{name}`: payload size overflows"))?;
+            let raw = take(&mut cur, bytes)?;
             let mut vals = Vec::with_capacity(count);
             for c in raw.chunks_exact(4) {
                 vals.push(f32::from_le_bytes(c.try_into().unwrap()));
@@ -258,8 +281,15 @@ fn write_f16(out: &mut Vec<u8>, vals: &[f32]) {
 }
 
 fn read_f16(cur: &mut &[u8], count: usize) -> Result<Vec<f32>> {
-    let raw = take(cur, count * 2)?;
+    let bytes = count.checked_mul(2).context("f16 payload size overflows")?;
+    let raw = take(cur, bytes)?;
     Ok(raw.chunks_exact(2).map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()))).collect())
+}
+
+/// Checked element count for a 2-D payload read off the wire — corrupted
+/// headers must surface as `Err`, not as an overflowed allocation.
+fn elems(name: &str, a: usize, b: usize) -> Result<usize> {
+    a.checked_mul(b).with_context(|| format!("matrix `{name}`: payload shape {a}×{b} overflows"))
 }
 
 fn write_name(out: &mut Vec<u8>, name: &str) {
@@ -379,6 +409,134 @@ mod tests {
         let mid = bytes.len() - 10;
         bytes[mid] ^= 1;
         assert!(SwscFile::from_bytes(&bytes).is_err());
+    }
+
+    // --- corrupted-but-CRC-valid payloads (the load-time validation the
+    // CRC cannot provide: a hostile or buggy *writer* produces a
+    // consistent checksum over nonsense) ------------------------------
+
+    /// Recompute the trailer CRC so a surgical corruption reaches the
+    /// semantic validation instead of the checksum gate.
+    fn recrc(bytes: &mut [u8]) {
+        let end = bytes.len() - 4;
+        let crc = crate::io::crc32(&bytes[4..end]);
+        bytes[end..].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    /// One-compressed-entry container with a known layout, k = 5 so the
+    /// 3-bit label field has out-of-range codes (5, 6, 7) available.
+    fn one_entry_bytes() -> (Vec<u8>, usize) {
+        let mut rng = Rng::new(135);
+        let w = Tensor::randn(&[24, 24], &mut rng);
+        let mut file = SwscFile::new();
+        file.compressed.insert("w".into(), compress_matrix(&w, &SwscConfig::new(5, 2)));
+        let bytes = file.to_bytes();
+        // magic(4) version(4) n_comp(4) name_len(4) name(1) → m n k r ...
+        let header_off = 4 + 4 + 4 + 4 + 1;
+        (bytes, header_off)
+    }
+
+    fn patch_u32(bytes: &mut [u8], off: usize, v: u32) {
+        bytes[off..off + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[test]
+    fn valid_one_entry_container_loads() {
+        let (bytes, _) = one_entry_bytes();
+        let f = SwscFile::from_bytes(&bytes).unwrap();
+        assert_eq!(f.compressed["w"].k(), 5);
+    }
+
+    #[test]
+    fn label_out_of_range_rejected_not_panicked() {
+        let (mut bytes, header_off) = one_entry_bytes();
+        // Packed labels start after m,n,k,r (16 B) + packed_len (8 B).
+        let packed_off = header_off + 16 + 8;
+        bytes[packed_off] = 0xFF; // 3-bit codes 7,7,… ≥ k = 5
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("label out of range"), "{err}");
+    }
+
+    #[test]
+    fn zero_clusters_with_channels_rejected() {
+        let (mut bytes, header_off) = one_entry_bytes();
+        patch_u32(&mut bytes, header_off + 8, 0); // k = 0
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("zero clusters"), "{err}");
+    }
+
+    #[test]
+    fn rank_beyond_dims_rejected() {
+        let (mut bytes, header_off) = one_entry_bytes();
+        patch_u32(&mut bytes, header_off + 12, 10_000); // r ≫ min(m, n)
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("rank"), "{err}");
+    }
+
+    #[test]
+    fn label_section_length_mismatch_rejected() {
+        let (mut bytes, header_off) = one_entry_bytes();
+        // k = 4 shrinks label_bits 3 → 2, so the stored packed_len no
+        // longer matches the header — caught before any label decodes.
+        patch_u32(&mut bytes, header_off + 8, 4);
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("packed label section"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let (bytes, _) = one_entry_bytes();
+        // Drop the tail of the centroid payload (and the trailer), then
+        // re-trailer so the CRC is consistent with the truncated body.
+        let mut cut = bytes[..bytes.len() - 40].to_vec();
+        let body_end = cut.len();
+        cut.extend_from_slice(&[0u8; 4]);
+        let crc = crate::io::crc32(&cut[4..body_end]);
+        let end = cut.len() - 4;
+        cut[end..].copy_from_slice(&crc.to_le_bytes());
+        let err = SwscFile::from_bytes(&cut).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn absurd_dense_dims_rejected_without_allocation() {
+        // Hand-build a container whose dense entry claims a shape whose
+        // product overflows usize — must fail via checked arithmetic, not
+        // by attempting the allocation.
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u32.to_le_bytes()); // version
+        body.extend_from_slice(&0u32.to_le_bytes()); // n_compressed
+        body.extend_from_slice(&1u32.to_le_bytes()); // n_dense
+        body.extend_from_slice(&1u32.to_le_bytes()); // name len
+        body.push(b't');
+        body.extend_from_slice(&2u32.to_le_bytes()); // ndim
+        body.extend_from_slice(&u64::MAX.to_le_bytes());
+        body.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SWSC");
+        bytes.extend_from_slice(&body);
+        bytes.extend_from_slice(&crate::io::crc32(&body).to_le_bytes());
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "{err}");
+
+        // Rank > 8 is rejected as implausible before any dim reads.
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.push(b't');
+        body.extend_from_slice(&99u32.to_le_bytes()); // ndim = 99
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SWSC");
+        bytes.extend_from_slice(&body);
+        bytes.extend_from_slice(&crate::io::crc32(&body).to_le_bytes());
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("implausible rank"), "{err}");
     }
 
     #[test]

@@ -33,6 +33,22 @@ pub enum Representative {
     Medoid,
 }
 
+/// Which clustering algorithm runs under [`cluster_channels`].
+///
+/// Both are deterministic given the seed and bit-identical at any thread
+/// count; the planner (`compress::plan`) routes very wide matrices (the
+/// 11008-channel MLP regime) through [`KMeansMethod::Minibatch`], where
+/// full Lloyd's per-iteration `O(n·k·m)` assignment dominates compression
+/// wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KMeansMethod {
+    /// Full Lloyd iterations over every channel (default).
+    Lloyd,
+    /// Mini-batch k-means (Sculley 2010): `steps` steps over sampled
+    /// batches of `batch` channels, then one full assignment pass.
+    Minibatch { batch: usize, steps: usize },
+}
+
 /// K-Means configuration.
 #[derive(Debug, Clone)]
 pub struct KMeansConfig {
@@ -46,6 +62,8 @@ pub struct KMeansConfig {
     pub init: InitMethod,
     /// Cluster representative.
     pub representative: Representative,
+    /// Lloyd vs mini-batch (see [`KMeansMethod`]).
+    pub method: KMeansMethod,
     /// RNG seed (clustering is deterministic given the seed).
     pub seed: u64,
     /// Thread config for the assign/update steps. Results are bit-identical
@@ -61,6 +79,7 @@ impl Default for KMeansConfig {
             tol: 1e-6,
             init: InitMethod::KMeansPlusPlus,
             representative: Representative::Mean,
+            method: KMeansMethod::Lloyd,
             seed: 0,
             exec: exec::global(),
         }
@@ -128,7 +147,23 @@ pub fn cluster_channels(w: &Tensor, cfg: &KMeansConfig) -> KMeansResult {
         InitMethod::KMeansPlusPlus => init_kmeans_pp(&channels, k, &mut rng),
     };
 
-    let res = lloyd_with(&channels, &mut centroids_rows, cfg.max_iters, cfg.tol, &mut rng, cfg.exec);
+    let res = match cfg.method {
+        KMeansMethod::Lloyd => {
+            lloyd_with(&channels, &mut centroids_rows, cfg.max_iters, cfg.tol, &mut rng, cfg.exec)
+        }
+        KMeansMethod::Minibatch { batch, steps } => {
+            let (cent, labels, inertia) = minibatch_kmeans_with(
+                &channels,
+                centroids_rows,
+                batch,
+                steps,
+                &mut rng,
+                cfg.exec,
+            );
+            centroids_rows = cent;
+            AssignResult { labels, inertia, iterations: steps }
+        }
+    };
 
     let centroids_rows = match cfg.representative {
         Representative::Mean => centroids_rows,
@@ -232,6 +267,35 @@ mod tests {
             let found = (0..w.cols()).any(|j| w.col(j) == cen);
             assert!(found, "medoid {c} is not an input channel");
         }
+    }
+
+    #[test]
+    fn minibatch_method_recovers_groups_and_is_deterministic() {
+        let (w, truth) = grouped_matrix(10, 120, 4, 27);
+        let cfg = KMeansConfig {
+            k: 4,
+            method: KMeansMethod::Minibatch { batch: 32, steps: 60 },
+            seed: 5,
+            ..Default::default()
+        };
+        let res = cluster_channels(&w, &cfg);
+        assert_eq!(res.labels.len(), 120);
+        assert_eq!(res.iterations, 60);
+        // Same partition as the truth (well-separated groups).
+        let mut map = std::collections::HashMap::new();
+        for (j, &lab) in res.labels.iter().enumerate() {
+            let entry = map.entry(truth[j]).or_insert(lab);
+            assert_eq!(*entry, lab, "channel {j} split from its true group");
+        }
+        // Deterministic given the seed, including across thread counts.
+        let again = cluster_channels(&w, &cfg);
+        assert_eq!(res.labels, again.labels);
+        assert_eq!(res.centroids, again.centroids);
+        let mut cfg8 = cfg.clone();
+        cfg8.exec = crate::exec::ExecConfig::with_threads(8);
+        let par = cluster_channels(&w, &cfg8);
+        assert_eq!(res.labels, par.labels);
+        assert_eq!(res.centroids, par.centroids);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! (Zeng et al., 2025) as a three-layer rust + JAX + Pallas system:
 //!
 //! - **Layer 3 (this crate)** — the coordinator: per-matrix compression job
-//!   scheduling, a batched evaluation service, training/eval drivers, and
-//!   every substrate the paper depends on (K-Means, SVD, RTN, tokenizer,
+//!   scheduling, a batched evaluation service, a compressed-domain
+//!   inference engine ([`infer`]: forward passes straight from `.swsc`
+//!   factors, no reconstruction), training/eval drivers, and every
+//!   substrate the paper depends on (K-Means, SVD, RTN, tokenizer,
 //!   corpus, checkpoint formats) built from scratch.
 //! - **Layer 2 (`python/compile/model.py`)** — the transformer forward /
 //!   backward and the compressed forward, lowered once to HLO text.
@@ -43,6 +45,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod eval;
 pub mod exec;
+pub mod infer;
 pub mod io;
 pub mod kmeans;
 pub mod linalg;

@@ -66,7 +66,7 @@ fn print_help() {
          \n\
          commands:\n\
            train     --preset small --steps 300 --out runs/default [--artifacts artifacts]\n\
-           compress  --ckpt runs/default/model.swck --proj qk --bits 2 --out model.swsc\n\
+           compress  --ckpt runs/default/model.swck --proj qk|mlp --bits 2 --out model.swsc\n\
            eval      --ckpt model.swck | --swsc model.swsc  [--preset small]\n\
            table1    --ckpt runs/default/model.swck [--bits 3,2] [--out table1.txt]\n\
            table2    [--m 4096]\n\
@@ -178,7 +178,8 @@ fn proj_from_str(s: &str) -> Result<ProjectorSet> {
         "k" => ProjectorSet::K,
         "qk" => ProjectorSet::QAndK,
         "v" => ProjectorSet::V,
-        other => bail!("unknown projector set `{other}` (q|k|qk|v)"),
+        "mlp" => ProjectorSet::Mlp,
+        other => bail!("unknown projector set `{other}` (q|k|qk|v|mlp)"),
     })
 }
 
@@ -213,21 +214,18 @@ fn cmd_eval(opts: &Opts) -> Result<()> {
     let engine = engine_for(opts, &cfg)?;
     let (_tok, _train, eval_data) = corpus_and_data(&cfg, opt(opts, "seed", "42").parse()?);
 
-    let ck = if let Some(p) = opts.get("swsc") {
+    let evaluator = Evaluator::new(engine, cfg)?;
+    let res = if let Some(p) = opts.get("swsc") {
         let file = SwscFile::load(Path::new(p))?;
-        let mut ck = Checkpoint::new();
-        for (name, t) in file.restore_all() {
-            ck.insert(&name, t);
-        }
-        ck
+        // fwd_eval takes dense literals (restored host-side); compressed-
+        // domain serving — no reconstruction — is the `serve` surface in
+        // coordinator::EvalService / examples/serve_compressed.rs.
+        evaluator.perplexity_of_swsc(&file, &eval_data)?
     } else if let Some(p) = opts.get("ckpt") {
-        Checkpoint::load(Path::new(p))?
+        evaluator.perplexity_of(&Checkpoint::load(Path::new(p))?, &eval_data)?
     } else {
         bail!("need --ckpt or --swsc");
     };
-
-    let evaluator = Evaluator::new(engine, cfg)?;
-    let res = evaluator.perplexity_of(&ck, &eval_data)?;
     println!("perplexity {:.4}  (nll/token {:.4}, {} tokens, {} batches)", res.perplexity, res.nll_per_token, res.tokens, res.batches);
     Ok(())
 }

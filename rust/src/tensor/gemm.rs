@@ -158,6 +158,14 @@ impl PackedB {
     fn panel(&self, p: usize) -> &[f32] {
         &self.data[p * self.k * self.nr..(p + 1) * self.k * self.nr]
     }
+
+    pub(crate) fn kdim(&self) -> usize {
+        self.k
+    }
+
+    pub(crate) fn ncols(&self) -> usize {
+        self.n
+    }
 }
 
 /// Pack row-major `k × n` B into [`PackedB`] panels. Disjoint writes into
@@ -334,6 +342,43 @@ fn run_micro(t: Tile, kdim: usize, ap: &[f32], bp: &[f32], out: &mut [f32]) {
     }
 }
 
+/// One packed A panel driven across every B panel: writes (or accumulates
+/// onto) output rows `i0..i0 + take` of the `? × n` band `out`. Shared by
+/// the pack-on-the-fly path ([`gemm_rows`]) and the pre-packed path
+/// ([`gemm_rows_prepacked`]) so both run the identical microkernel calls
+/// and output copies — bitwise interchangeable by construction.
+#[allow(clippy::too_many_arguments)]
+fn emit_panel_rows(
+    t: Tile,
+    kdim: usize,
+    apanel: &[f32],
+    pb: &PackedB,
+    i0: usize,
+    take: usize,
+    out: &mut [f32],
+    add: bool,
+    scratch: &mut [f32],
+) {
+    let nr = t.nr;
+    let n = pb.n;
+    for p in 0..pb.npanels() {
+        run_micro(t, kdim, apanel, pb.panel(p), scratch);
+        let j0 = p * nr;
+        let jtake = nr.min(n - j0);
+        for r in 0..take {
+            let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + jtake];
+            let srow = &scratch[r * nr..r * nr + jtake];
+            if add {
+                for (o, &s) in orow.iter_mut().zip(srow) {
+                    *o += s;
+                }
+            } else {
+                orow.copy_from_slice(srow);
+            }
+        }
+    }
+}
+
 /// Compute `rows` output rows starting at logical row `row0` into the
 /// `rows × pb.n` band `out` (`add = true` accumulates onto existing band
 /// contents in a single per-element add — the fused `W' + A·B` path).
@@ -363,22 +408,88 @@ pub(crate) fn gemm_rows(
     for i0 in (0..rows).step_by(mr) {
         let take = mr.min(rows - i0);
         pack_a_panel(a, row0 + i0, take, mr, kdim, &mut apanel);
-        for p in 0..pb.npanels() {
-            run_micro(t, kdim, &apanel, pb.panel(p), &mut scratch);
-            let j0 = p * nr;
-            let jtake = nr.min(n - j0);
-            for r in 0..take {
-                let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + jtake];
-                let srow = &scratch[r * nr..r * nr + jtake];
-                if add {
-                    for (o, &s) in orow.iter_mut().zip(srow) {
-                        *o += s;
-                    }
-                } else {
-                    orow.copy_from_slice(srow);
-                }
-            }
+        emit_panel_rows(t, kdim, &apanel, pb, i0, take, out, add, &mut scratch);
+    }
+}
+
+/// `A` repacked once into `⌈rows/mr⌉` row panels (column-major within each
+/// panel, zero-padded past row `rows`) — the serving-time counterpart of
+/// [`PackedB`]. A [`crate::infer::CompressedLinear`] packs its R/A/B
+/// factors once at build and reuses the panels for every request, paying
+/// only the per-call B-side packing of the activations.
+pub(crate) struct PackedA {
+    data: Vec<f32>,
+    mr: usize,
+    kdim: usize,
+    rows: usize,
+}
+
+impl PackedA {
+    fn panel(&self, p: usize) -> &[f32] {
+        let len = self.kdim * self.mr;
+        &self.data[p * len..(p + 1) * len]
+    }
+
+    pub(crate) fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub(crate) fn kdim(&self) -> usize {
+        self.kdim
+    }
+}
+
+/// Pack a full `rows × kdim` left operand into [`PackedA`] panels.
+/// Disjoint writes into pre-assigned panel slots — identical at any thread
+/// count, and each panel's contents are exactly what [`gemm_rows`] would
+/// have packed on the fly for the same rows.
+pub(crate) fn pack_a(a: ASrc<'_>, rows: usize, kdim: usize, exec: ExecConfig) -> PackedA {
+    let mr = tile().mr;
+    if rows == 0 || kdim == 0 {
+        return PackedA { data: Vec::new(), mr, kdim, rows };
+    }
+    let np = rows.div_ceil(mr);
+    let mut data = vec![0.0f32; np * kdim * mr];
+    let exec = if rows * kdim < PACK_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
+    let plen = kdim * mr;
+    exec::for_row_bands(exec, &mut data, np, plen, PACK_PANELS_PER_CHUNK, |p0, band| {
+        for (pi, panel) in band.chunks_exact_mut(plen).enumerate() {
+            let row0 = (p0 + pi) * mr;
+            let take = mr.min(rows - row0);
+            pack_a_panel(a, row0, take, mr, kdim, panel);
         }
+    });
+    PackedA { data, mr, kdim, rows }
+}
+
+/// [`gemm_rows`] with the A panels supplied pre-packed. `row0` must start
+/// on an MR panel boundary (the executor's 64-row bands always do — 64 is
+/// a multiple of every supported MR). Bitwise identical to packing the
+/// same rows on the fly: the panels hold the same values and the emit path
+/// is shared code.
+pub(crate) fn gemm_rows_prepacked(
+    pa: &PackedA,
+    row0: usize,
+    rows: usize,
+    pb: &PackedB,
+    out: &mut [f32],
+    add: bool,
+) {
+    let t = tile();
+    let n = pb.n;
+    debug_assert_eq!(pa.mr, t.mr, "PackedA built under a different tile");
+    debug_assert_eq!(pa.kdim, pb.k, "prepacked GEMM inner dims disagree");
+    debug_assert_eq!(out.len(), rows * n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    assert_eq!(row0 % pa.mr, 0, "prepacked band must start on an MR boundary");
+    assert!(row0 + rows <= pa.rows, "prepacked band past packed rows");
+    let mut scratch = vec![0.0f32; pa.mr * t.nr];
+    for i0 in (0..rows).step_by(pa.mr) {
+        let take = pa.mr.min(rows - i0);
+        let panel = pa.panel((row0 + i0) / pa.mr);
+        emit_panel_rows(t, pa.kdim, panel, pb, i0, take, out, add, &mut scratch);
     }
 }
 
@@ -547,6 +658,73 @@ mod tests {
         let mut empty: Vec<f32> = Vec::new();
         gemm_rows(ASrc::Rows { data: &[0.0; 10], k: 5 }, 0, 2, &pb0, &mut empty, false);
         gemm_rows(ASrc::Rows { data: &[], k: 5 }, 0, 0, &pb0, &mut empty, false);
+    }
+
+    /// Pre-packed A panels are bit-for-bit the on-the-fly path: same
+    /// panels, same microkernel calls. Sweeps ragged MR remainders, both
+    /// A sources, and add mode.
+    #[test]
+    fn prepacked_matches_on_the_fly_bitwise() {
+        let mut rng = Rng::new(606);
+        for &(m, k, n) in &[(2 * 64 + 13usize, 45usize, 33usize), (64, 130, 17), (7, 3, 70)] {
+            let a = randv(m * k, &mut rng);
+            let at = randv(k * m, &mut rng); // k × m strided source
+            let b = randv(k * n, &mut rng);
+            let pb = pack_b(&b, k, n, ExecConfig::serial());
+            for add in [false, true] {
+                let prefill = randv(m * n, &mut rng);
+
+                let mut want = prefill.clone();
+                gemm_rows(ASrc::Rows { data: &a, k }, 0, m, &pb, &mut want, add);
+                let pa = pack_a(ASrc::Rows { data: &a, k }, m, k, ExecConfig::serial());
+                let mut got = prefill.clone();
+                gemm_rows_prepacked(&pa, 0, m, &pb, &mut got, add);
+                assert_eq!(bits(&got), bits(&want), "rows m={m} k={k} n={n} add={add}");
+
+                let mut want_t = prefill.clone();
+                gemm_rows(ASrc::Cols { data: &at, ld: m }, 0, m, &pb, &mut want_t, add);
+                let pa_t = pack_a(ASrc::Cols { data: &at, ld: m }, m, k, ExecConfig::serial());
+                let mut got_t = prefill.clone();
+                gemm_rows_prepacked(&pa_t, 0, m, &pb, &mut got_t, add);
+                assert_eq!(bits(&got_t), bits(&want_t), "cols m={m} k={k} n={n} add={add}");
+            }
+        }
+        // Band splits at the executor's 64-row granularity (multiples of
+        // every supported MR) match the full run.
+        let (m, k, n) = (3 * 64 + 9usize, 37usize, 29usize);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let pb = pack_b(&b, k, n, ExecConfig::serial());
+        let pa = pack_a(ASrc::Rows { data: &a, k }, m, k, ExecConfig::serial());
+        let mut full = vec![0.0f32; m * n];
+        gemm_rows_prepacked(&pa, 0, m, &pb, &mut full, false);
+        let mut banded = vec![0.0f32; m * n];
+        let mut row = 0;
+        let mut rest: &mut [f32] = &mut banded;
+        while row < m {
+            let take = 64.min(m - row);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            gemm_rows_prepacked(&pa, row, take, &pb, head, false);
+            rest = tail;
+            row += take;
+        }
+        assert_eq!(bits(&banded), bits(&full), "64-row band split");
+        assert_eq!(pa.rows(), m);
+        assert_eq!(pa.kdim(), k);
+    }
+
+    /// Parallel A packing writes the same panels as serial packing.
+    #[test]
+    fn pack_a_thread_invariant() {
+        let mut rng = Rng::new(607);
+        // Above PACK_PARALLEL_ELEMS so the parallel path actually runs.
+        let (m, k) = (600usize, 130usize);
+        let a = randv(m * k, &mut rng);
+        let base = pack_a(ASrc::Rows { data: &a, k }, m, k, ExecConfig::serial());
+        for threads in [2, 4, 8] {
+            let p = pack_a(ASrc::Rows { data: &a, k }, m, k, ExecConfig::with_threads(threads));
+            assert_eq!(bits(&p.data), bits(&base.data), "{threads} threads");
+        }
     }
 
     /// Parallel B packing writes the same panels as serial packing.

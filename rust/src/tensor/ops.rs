@@ -139,8 +139,56 @@ fn gemm_into(
         // bit-identical, so just fall through.
     }
     let pb = gemm::pack_b(b, k, n, exec);
+    gemm_packed_b_into(a, &pb, m, add, exec, out);
+}
+
+/// Band dispatch over a pre-packed B operand: the tail of [`gemm_into`],
+/// shared with the compressed-inference paths in [`crate::infer`] that
+/// reuse one [`gemm::PackedB`] across many calls (e.g. a weight factor
+/// consumed as the right operand of every request). Always the packed
+/// engine — the blocked kernel is bitwise identical, so the
+/// `SWSC_GEMM_KERNEL` bench knob deliberately does not reach this path.
+pub(crate) fn gemm_packed_b_into(
+    a: gemm::ASrc<'_>,
+    pb: &gemm::PackedB,
+    m: usize,
+    add: bool,
+    exec: ExecConfig,
+    out: &mut [f32],
+) {
+    let (k, n) = (pb.kdim(), pb.ncols());
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let exec = if m * n * k < min_parallel_macs() { ExecConfig::serial() } else { exec };
     exec::for_row_bands(exec, out, m, n, BLOCK, |first_row, band| {
-        gemm::gemm_rows(a, first_row, band.len() / n, &pb, band, add);
+        gemm::gemm_rows(a, first_row, band.len() / n, pb, band, add);
+    });
+}
+
+/// Like [`gemm_packed_b_into`] with the A panels *also* pre-packed — the
+/// compressed-inference hot path: a [`crate::infer::CompressedLinear`]
+/// packs its R/A/B factors once at build and every request pays only the
+/// per-call activation packing. Bitwise identical to packing A on the fly
+/// (the panels hold the same values; [`BLOCK`] bands start on MR panel
+/// boundaries by construction).
+pub(crate) fn gemm_prepacked_into(
+    pa: &gemm::PackedA,
+    pb: &gemm::PackedB,
+    add: bool,
+    exec: ExecConfig,
+    out: &mut [f32],
+) {
+    let (m, n) = (pa.rows(), pb.ncols());
+    debug_assert_eq!(pa.kdim(), pb.kdim(), "prepacked GEMM inner dims disagree");
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let exec = if m * n * pb.kdim() < min_parallel_macs() { ExecConfig::serial() } else { exec };
+    exec::for_row_bands(exec, out, m, n, BLOCK, |first_row, band| {
+        gemm::gemm_rows_prepacked(pa, first_row, band.len() / n, pb, band, add);
     });
 }
 

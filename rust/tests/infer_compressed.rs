@@ -1,0 +1,322 @@
+//! Compressed-domain inference invariants (ISSUE 4).
+//!
+//! Two contracts pinned here, mirroring the PR 1–3 parity discipline:
+//!
+//! 1. **Thread parity, bitwise.** Bucket sums and every
+//!    `CompressedLinear` entry point are bit-identical at
+//!    `SWSC_THREADS`-style thread counts ∈ {1, 2, 4, 8}, including
+//!    remainder cases: channel counts not divisible by `CHANNEL_CHUNK`,
+//!    empty clusters, and `r = 0`.
+//! 2. **Exactness vs the dense route.** Where the compressed-domain
+//!    accumulation order matches the dense `reconstruct()` + GEMM order
+//!    (the gather orientations at `r = 0`), results are **bitwise equal**.
+//!    Where the order must differ (bucket-sum orientation; any `r > 0`
+//!    split into two dots), results agree to the ULP bound recorded in
+//!    `tests/fixtures/README.md` (asserted here as atol/rtol 1e-3 — the
+//!    same bound the packed-vs-naive GEMM tests use).
+//!
+//! Plus the serving surface: `EvalService::start_with_swsc` answers
+//! linear requests from the compressed domain without artifacts (the
+//! PJRT engine is lazily constructed and never touched).
+
+use swsc::compress::{compress_matrix, CompressedMatrix, SwscConfig};
+use swsc::coordinator::{EvalRequest, EvalService, LinearRequest, ServiceConfig};
+use swsc::exec::ExecConfig;
+use swsc::infer::{
+    bucket_sums_indexed, bucket_sums_with, BucketIndex, CompressedLinear, CompressedModel,
+    InferMode, CHANNEL_CHUNK,
+};
+use swsc::io::SwscFile;
+use swsc::model::ModelConfig;
+use swsc::tensor::Tensor;
+use swsc::util::prop::{assert_close, check};
+use swsc::util::rng::Rng;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Synthetic compressed matrix with `empty` guaranteed-empty trailing
+/// clusters (k-means never produces these on sane data, but a `.swsc`
+/// container legally can — the engine must serve them as zero buckets).
+fn synthetic(
+    m: usize,
+    n: usize,
+    k: usize,
+    r: usize,
+    empty: usize,
+    rng: &mut Rng,
+) -> CompressedMatrix {
+    let live = (k - empty).max(1);
+    CompressedMatrix {
+        shape: (m, n),
+        labels: (0..n).map(|_| rng.below(live) as u32).collect(),
+        centroids: Tensor::randn(&[m, k], rng),
+        factor_a: Tensor::randn(&[m, r], rng),
+        factor_b: Tensor::randn(&[r, n], rng),
+    }
+}
+
+/// Weights with clustered channel structure — the regime the paper
+/// targets, so the exactness test runs on a *real* compression output.
+fn structured_weights(m: usize, n: usize, groups: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> =
+        (0..groups).map(|_| (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+    let mut w = Tensor::zeros(&[m, n]);
+    for j in 0..n {
+        let col: Vec<f32> =
+            centers[j % groups].iter().map(|&v| v + rng.normal_f32(0.0, 0.1)).collect();
+        w.set_col(j, &col);
+    }
+    w
+}
+
+/// ISSUE 4 satellite: thread-parity property over bucket sums and every
+/// CompressedLinear entry point, with remainder cases baked into the
+/// generator (ragged n, empty clusters, r = 0).
+#[test]
+fn prop_infer_thread_parity_bitwise() {
+    const THREADS: [usize; 3] = [2, 4, 8];
+    check(
+        "infer threads ∈ {1,2,4,8} are bit-identical",
+        401,
+        8,
+        |r| {
+            let m = 16 + r.below(80);
+            // Ragged around the chunk edge on purpose.
+            let n = CHANNEL_CHUNK - 20 + r.below(2 * CHANNEL_CHUNK + 41);
+            let k = 2 + r.below(10);
+            let empty = r.below(k.min(3));
+            let rank = if r.below(4) == 0 { 0 } else { 1 + r.below(8) };
+            let b = 1 + r.below(40);
+            let c = synthetic(m, n, k, rank, empty, r);
+            (c, Tensor::randn(&[n, b], r), m, b)
+        },
+        |(c, x, m, b)| {
+            let lin = CompressedLinear::from_matrix(c);
+            let idx = BucketIndex::new(&c.labels, c.k());
+            let xt = Tensor::randn(&[*m, *b], &mut Rng::new(402));
+            let xa = Tensor::randn(&[*b, *m], &mut Rng::new(403));
+
+            let s_base = bits(&bucket_sums_with(x, &c.labels, c.k(), ExecConfig::serial()));
+            let mm_base = bits(&lin.matmul_with(x, ExecConfig::serial()));
+            let tm_base = bits(&lin.t_matmul_with(&xt, ExecConfig::serial()));
+            let ap_base = bits(&lin.apply_with(&xa, ExecConfig::serial()));
+            for t in THREADS {
+                let cfg = ExecConfig::with_threads(t);
+                if bits(&bucket_sums_with(x, &c.labels, c.k(), cfg)) != s_base {
+                    return Err(format!("bucket sums differ at {t} threads"));
+                }
+                if bits(&bucket_sums_indexed(x, &idx, cfg)) != s_base {
+                    return Err(format!("CSR bucket sums differ at {t} threads"));
+                }
+                if bits(&lin.matmul_with(x, cfg)) != mm_base {
+                    return Err(format!("matmul differs at {t} threads"));
+                }
+                if bits(&lin.t_matmul_with(&xt, cfg)) != tm_base {
+                    return Err(format!("t_matmul differs at {t} threads"));
+                }
+                if bits(&lin.apply_with(&xa, cfg)) != ap_base {
+                    return Err(format!("apply differs at {t} threads"));
+                }
+            }
+            // Panels pack lazily under the *first* call's config — a fresh
+            // operator whose first use is parallel must match the
+            // serial-first baseline (packing is thread-invariant).
+            let lin2 = CompressedLinear::from_matrix(c);
+            if bits(&lin2.matmul_with(x, ExecConfig::with_threads(8))) != mm_base {
+                return Err("parallel first-use packing differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The exactness contract on a real compression output (structured
+/// weights → k-means → SVD): compressed-domain results vs
+/// `reconstruct()` + GEMM, at the documented bound.
+#[test]
+fn exactness_contract_vs_dense_route() {
+    let w = structured_weights(96, 160, 8, 404);
+    let c = compress_matrix(&w, &SwscConfig::new(8, 6));
+    let lin = CompressedLinear::from_matrix(&c);
+    let dense = c.reconstruct();
+    let mut rng = Rng::new(405);
+
+    let x = Tensor::randn(&[160, 24], &mut rng);
+    assert_close(lin.matmul(&x).data(), dense.matmul(&x).data(), 1e-3, 1e-3).unwrap();
+
+    let xt = Tensor::randn(&[96, 24], &mut rng);
+    assert_close(lin.t_matmul(&xt).data(), dense.t_matmul(&xt).data(), 1e-3, 1e-3).unwrap();
+
+    let xa = Tensor::randn(&[24, 96], &mut rng);
+    assert_close(lin.apply(&xa).data(), xa.matmul(&dense).data(), 1e-3, 1e-3).unwrap();
+
+    // matvec is bitwise the b = 1 matmul (shared numeric contract between
+    // the chunked and CSR bucket-sum paths).
+    let v: Vec<f32> = (0..160).map(|_| rng.normal() as f32).collect();
+    let mv = lin.matvec(&v);
+    let mm = lin.matmul(&Tensor::from_vec(&[160, 1], v.clone()));
+    assert_eq!(
+        mv.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+        mm.data().iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+    );
+}
+
+/// Where no accumulation order changes — the gather orientations at
+/// r = 0 — the compressed domain is bit-for-bit the dense route.
+#[test]
+fn rank_zero_gather_orientations_bitwise_equal_dense() {
+    let w = structured_weights(80, 112, 6, 406);
+    let c = compress_matrix(&w, &SwscConfig::new(6, 0));
+    assert_eq!(c.rank(), 0);
+    let lin = CompressedLinear::from_matrix(&c);
+    let dense = c.reconstruct();
+    let mut rng = Rng::new(407);
+    let xt = Tensor::randn(&[80, 16], &mut rng);
+    assert_eq!(bits(&lin.t_matmul(&xt)), bits(&dense.t_matmul(&xt)), "t_matmul r=0");
+    let xa = Tensor::randn(&[12, 80], &mut rng);
+    assert_eq!(bits(&lin.apply(&xa)), bits(&xa.matmul(&dense)), "apply r=0");
+}
+
+/// Remainder cases called out by the ISSUE: n not divisible by the chunk,
+/// empty clusters, r = 0 — all still correct vs the dense route.
+#[test]
+fn remainder_cases_match_dense_route() {
+    let mut rng = Rng::new(408);
+    for &(n, k, empty, r) in &[
+        (CHANNEL_CHUNK + 37, 5usize, 2usize, 0usize),
+        (3 * CHANNEL_CHUNK + 1, 7, 3, 4),
+        (CHANNEL_CHUNK - 1, 3, 0, 2),
+        (2 * CHANNEL_CHUNK, 4, 1, 0),
+    ] {
+        let c = synthetic(48, n, k, r, empty, &mut rng);
+        let lin = CompressedLinear::from_matrix(&c);
+        assert!(lin.index().empty_buckets() >= empty, "n={n} k={k}");
+        let dense = c.reconstruct();
+        let x = Tensor::randn(&[n, 9], &mut rng);
+        assert_close(lin.matmul(&x).data(), dense.matmul(&x).data(), 1e-2, 1e-2)
+            .unwrap_or_else(|e| panic!("n={n} k={k} empty={empty} r={r}: {e}"));
+        // Empty buckets produce exactly-zero bucket sums.
+        let s = bucket_sums_with(&x, &c.labels, k, ExecConfig::serial());
+        for l in 0..k {
+            if BucketIndex::new(&c.labels, k).bucket(l).is_empty() {
+                assert!(s.row(l).iter().all(|&v| v == 0.0), "bucket {l} not zero");
+            }
+        }
+    }
+}
+
+/// CompressedModel: both modes serve every entry, compressed ≈
+/// reconstructed, dense passthrough exact — through a full
+/// save-to-bytes/load round trip.
+#[test]
+fn compressed_model_round_trips_and_modes_agree() {
+    let mut rng = Rng::new(409);
+    let mut file = SwscFile::new();
+    // Distinct seed per entry: identical weights would let a cross-entry
+    // mixup during the round trip slip through unnoticed.
+    for (i, name) in ["layers.0.attn.wq", "layers.1.attn.wk"].iter().enumerate() {
+        let w = structured_weights(64, 64, 6, 410 + i as u64);
+        file.compressed.insert((*name).into(), compress_matrix(&w, &SwscConfig::new(6, 4)));
+    }
+    file.dense.insert("embed.tok".into(), Tensor::randn(&[32, 64], &mut rng));
+
+    let loaded = SwscFile::from_bytes(&file.to_bytes()).unwrap();
+    let comp = CompressedModel::from_file(&loaded, InferMode::Compressed);
+    let reco = CompressedModel::from_file(&loaded, InferMode::Reconstructed);
+    assert_eq!(comp.num_compressed(), 2);
+    assert_eq!(reco.num_compressed(), 0);
+
+    let x = Tensor::randn(&[7, 64], &mut rng);
+    for name in ["layers.0.attn.wq", "layers.1.attn.wk"] {
+        let a = comp.apply(name, &x).unwrap();
+        let b = reco.apply(name, &x).unwrap();
+        assert_eq!(a.shape(), &[7, 64]);
+        assert_close(a.data(), b.data(), 1e-3, 1e-3).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let xn = Tensor::randn(&[64, 7], &mut rng);
+        let ma = comp.matmul(name, &xn).unwrap();
+        let mb = reco.matmul(name, &xn).unwrap();
+        assert_close(ma.data(), mb.data(), 1e-3, 1e-3).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    let xe = Tensor::randn(&[3, 32], &mut rng);
+    assert_eq!(
+        comp.apply("embed.tok", &xe).unwrap(),
+        xe.matmul(&loaded.dense["embed.tok"])
+    );
+}
+
+/// The serving surface: a linear-only service over a `.swsc` container,
+/// no artifacts anywhere — concurrent clients, every request answered,
+/// responses bitwise equal to a direct CompressedModel::apply, and the
+/// eval surface cleanly reports itself disabled.
+#[test]
+fn service_serves_compressed_domain_linear_requests() {
+    let cfg = ModelConfig::tiny();
+    let mut file = SwscFile::new();
+    let names = ["layers.0.attn.wq", "layers.0.attn.wk", "layers.1.attn.wq"];
+    for (i, name) in names.iter().enumerate() {
+        let w = structured_weights(cfg.d_model, cfg.d_model, 4, 500 + i as u64);
+        file.compressed.insert((*name).into(), compress_matrix(&w, &SwscConfig::new(4, 2)));
+    }
+
+    for mode in [InferMode::Compressed, InferMode::Reconstructed] {
+        let svc_cfg = ServiceConfig { infer_mode: mode, ..Default::default() };
+        let oracle = CompressedModel::from_file(&file, mode);
+        let service = std::sync::Arc::new(
+            EvalService::start_with_swsc(None, cfg.clone(), &file, svc_cfg).unwrap(),
+        );
+
+        let clients = 3;
+        let per_client = 8;
+        let mut handles = Vec::new();
+        for cl in 0..clients {
+            let service = service.clone();
+            let names: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+            let d = cfg.d_model;
+            handles.push(std::thread::spawn(move || -> Vec<(String, Tensor, Tensor)> {
+                let mut rng = Rng::new(600 + cl as u64);
+                let mut out = Vec::new();
+                for i in 0..per_client {
+                    let name = names[(cl + i) % names.len()].clone();
+                    let x = Tensor::randn(&[2, d], &mut rng);
+                    let resp = service
+                        .linear_blocking(LinearRequest { name: name.clone(), x: x.clone() })
+                        .unwrap();
+                    out.push((name, x, resp.y));
+                }
+                out
+            }));
+        }
+        let mut answered = 0;
+        for h in handles {
+            for (name, x, y) in h.join().unwrap() {
+                let want = oracle.apply(&name, &x).unwrap();
+                assert_eq!(bits(&y), bits(&want), "{name} response differs from direct apply");
+                answered += 1;
+            }
+        }
+        assert_eq!(answered, clients * per_client);
+        assert_eq!(
+            service.metrics.counter("service.linear_requests"),
+            (clients * per_client) as u64
+        );
+
+        // Unknown weight → error response, not a hang or a crash.
+        let bad = LinearRequest { name: "nope".into(), x: Tensor::zeros(&[1, cfg.d_model]) };
+        assert!(service.linear_blocking(bad).is_err());
+
+        // Eval surface is disabled (no manifest) but answers cleanly.
+        let eval_err = service.eval_blocking(EvalRequest { tokens: vec![1; cfg.seq + 1] });
+        assert!(eval_err.is_err());
+        assert!(
+            format!("{:#}", eval_err.unwrap_err()).contains("eval serving disabled"),
+            "unexpected eval error"
+        );
+
+        if let Ok(s) = std::sync::Arc::try_unwrap(service) {
+            s.shutdown();
+        }
+    }
+}
