@@ -53,12 +53,29 @@
 //!   `compressed_vs_prebuilt_*` rows add the steady-state comparison
 //!   against a pre-reconstructed dense GEMM (ungated), and a build-cost
 //!   row prices the one-time serving-form construction.
+//!
+//! ISSUE 5 additions:
+//!
+//! - `batched_vs_solo_*` rows: the serve loadgen replays the identical
+//!   seeded request stream through a coalescing `BatchServer` and
+//!   through a solo server (`BatchConfig::solo()` — one `apply` per
+//!   request, the bitwise-identical baseline). Gate: batched ≥ 1.5×
+//!   solo throughput at ≥ 8 rows/request on ops ≥ 512 columns —
+//!   **warn-only until `BENCH_baseline.json` is committed** (the
+//!   baseline's presence at startup marks the bootstrap phase over),
+//!   then hard like the other gates.
+//! - The loadgen rows themselves (`loadgen_*_batched` / `_solo`) land in
+//!   the JSON with the new `p95_us` / `batch_mean` fields.
 
 use std::path::Path;
+use std::sync::Arc;
+use swsc::bench::loadgen::{run_loadgen, LoadgenConfig};
 use swsc::bench::Bench;
 use swsc::compress::{compress_matrix, CompressedMatrix, SwscConfig};
 use swsc::exec::{self, ExecBackend, ExecConfig};
-use swsc::infer::CompressedLinear;
+use swsc::infer::{CompressedLinear, CompressedModel, InferMode};
+use swsc::io::SwscFile;
+use swsc::serve::{BatchConfig, BatchServer, ModelRegistry, DEFAULT_MODEL};
 use swsc::io::{pack_u32, unpack_u32};
 use swsc::kmeans::{assign_blocked_with, assign_gemm_with, assign_with};
 use swsc::linalg::{qr_householder, svd_jacobi, svd_randomized_with};
@@ -470,6 +487,85 @@ fn main() {
         });
     }
 
+    // ISSUE 5: micro-batch coalescing vs solo serving. The loadgen
+    // replays one seeded stream (saturation mode: submit as fast as
+    // admission allows) through a coalescing server and a solo server;
+    // the servers share one Arc'd model, so packed panels are warmed once
+    // up front and neither side pays first-touch packing. Speedup is
+    // wall-clock per request, solo / batched.
+    bench.section("serve: micro-batch coalescing vs solo (loadgen)");
+    let baseline_committed = Path::new("BENCH_baseline.json").exists();
+    for &(n, k, r, rows, requests) in
+        &[(512usize, 64usize, 16usize, 8usize, 96usize), (1024, 128, 32, 8, 48)]
+    {
+        let mut file = SwscFile::new();
+        file.compressed.insert("w".into(), synthetic_compressed(n, n, k, r, &mut rng));
+        let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+        model
+            .apply("w", &Tensor::randn(&[rows, n], &mut rng))
+            .expect("panel warmup apply failed");
+        let lg = LoadgenConfig {
+            seed: 0x5E12,
+            requests,
+            rows_per_request: rows,
+            ragged: false,
+            rate_rps: 0.0,
+            targets: vec![(DEFAULT_MODEL.to_string(), "w".to_string())],
+        };
+        let run_with = |cfg: BatchConfig| {
+            let mut reg = ModelRegistry::new();
+            reg.insert(DEFAULT_MODEL, model.clone());
+            let server = BatchServer::start(Arc::new(reg), cfg);
+            let rep = run_loadgen(&server, &lg).expect("loadgen replay failed");
+            server.shutdown();
+            rep
+        };
+        let measure = || {
+            let batched = run_with(BatchConfig::with_wait_us(256, 200));
+            let solo = run_with(BatchConfig::solo());
+            (batched, solo)
+        };
+        let (mut batched, mut solo) = measure();
+        if solo.wall_seconds / batched.wall_seconds.max(1e-12) < 1.5 {
+            // Retry-once policy, like the other gates: one descheduled
+            // run on a noisy shared runner must not fail CI.
+            let (b2, s2) = measure();
+            if s2.wall_seconds / b2.wall_seconds.max(1e-12)
+                > solo.wall_seconds / batched.wall_seconds.max(1e-12)
+            {
+                (batched, solo) = (b2, s2);
+            }
+        }
+        let op = format!("serve_{n}_k{k}_r{r}_rows{rows}");
+        let threads = exec::global().threads;
+        bench.push_record(batched.to_record(&format!("loadgen_{op}_batched"), n, threads));
+        bench.push_record(solo.to_record(&format!("loadgen_{op}_solo"), n, threads));
+        let speedup = bench.comparison_labeled(
+            "batched_vs_solo",
+            "batched",
+            "solo",
+            &op,
+            n,
+            threads,
+            batched.wall_seconds / requests as f64,
+            solo.wall_seconds / requests as f64,
+        );
+        println!(
+            "  batched: {:.0} req/s, p95 {:.0} µs, mean batch {:.1} rows over {} batches; \
+             solo: {:.0} req/s",
+            batched.rps, batched.p95_us, batched.batch_mean, batched.batches, solo.rps
+        );
+        if n >= 512 && rows >= 8 && speedup < 1.5 {
+            let msg =
+                format!("{op}: batched serving {speedup:.2}x vs solo (< 1.5x throughput floor)");
+            if baseline_committed {
+                regressions.push(msg);
+            } else {
+                println!("  !! {msg} — warn-only until BENCH_baseline.json is committed");
+            }
+        }
+    }
+
     bench.section("label packing");
     let labels: Vec<u32> = (0..4096).map(|i| (i * 7) as u32 % 16).collect();
     bench.case_at("pack_4096_labels_4bit", 4096, 1, || pack_u32(&labels, 4));
@@ -529,9 +625,11 @@ fn main() {
         std::process::exit(1);
     }
     println!(
-        "gates: pool within 10% of spawn, packed GEMM within 10% of blocked, AND \
+        "gates: pool within 10% of spawn, packed GEMM within 10% of blocked, \
          compressed-domain matmul ≥ 1.5x dense reconstruct+matmul (k ≤ n/8, r ≤ 32) \
-         on all ops ≥ 512²"
+         on all ops ≥ 512², AND batched serving ≥ 1.5x solo throughput at ≥ 8 \
+         rows/request on ops ≥ 512 cols (warn-only until BENCH_baseline.json is \
+         committed)"
     );
 
     // Bootstrap a missing baseline only from a gate-clean run (same policy

@@ -1,0 +1,274 @@
+//! Open-loop load generator for the batched serving layer.
+//!
+//! Replays a **seeded arrival stream** against a [`BatchServer`]: the
+//! request sequence (target weight, activation rows, activation values,
+//! inter-arrival gaps) is a pure function of [`LoadgenConfig::seed`], so
+//! two runs — e.g. a coalescing server and a solo server — see the
+//! *identical* workload and their throughput/latency numbers are directly
+//! comparable (`batched_vs_solo_*` rows in `benches/hotpath.rs`).
+//!
+//! Open-loop means arrivals are scheduled by the stream's clock, not by
+//! completions: with `rate_rps > 0` inter-arrival gaps are exponential
+//! (Poisson arrivals) and the generator sleeps to honor them; with
+//! `rate_rps = 0` requests are submitted as fast as admission allows —
+//! the saturation mode, where blocking admission is the backpressure.
+//! Latency is recorded server-side (admission → response) into the
+//! service histograms; the report quotes their p50/p95/p99.
+
+use crate::bench::BenchRecord;
+use crate::serve::{BatchServer, LinearRequest};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Loadgen knobs. The whole stream derives from `seed`.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub seed: u64,
+    /// Total requests to replay.
+    pub requests: usize,
+    /// Activation rows per request; with `ragged` the row count is drawn
+    /// uniformly from `1..=rows_per_request` instead.
+    pub rows_per_request: usize,
+    pub ragged: bool,
+    /// Open-loop arrival rate in requests/s; `0.0` replays at saturation.
+    pub rate_rps: f64,
+    /// `(model, weight)` pairs; each request samples one from the seeded
+    /// stream.
+    pub targets: Vec<(String, String)>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            seed: 0x10AD,
+            requests: 128,
+            rows_per_request: 8,
+            ragged: false,
+            rate_rps: 0.0,
+            targets: Vec::new(),
+        }
+    }
+}
+
+/// What one replay measured.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub requests: usize,
+    /// Total activation rows submitted.
+    pub rows: usize,
+    /// Requests answered with an error (admission failures abort the run
+    /// instead — the bench configs keep the queue deeper than the
+    /// stream).
+    pub errors: usize,
+    /// First submission → last response.
+    pub wall_seconds: f64,
+    pub rps: f64,
+    pub rows_per_second: f64,
+    /// Server-side admission→response latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_latency_us: f64,
+    /// Mean stacked rows per executed micro-batch (1.0 ⇒ no coalescing).
+    pub batch_mean: f64,
+    /// Micro-batches the server executed during the run.
+    pub batches: u64,
+}
+
+impl LoadgenReport {
+    /// One-line human summary.
+    pub fn render(&self) -> String {
+        format!(
+            "{} req ({} rows) in {:.3}s -> {:.0} req/s ({:.0} rows/s), latency p50 {:.0} µs \
+             p95 {:.0} µs p99 {:.0} µs, {} batches (mean {:.1} rows), {} errors",
+            self.requests,
+            self.rows,
+            self.wall_seconds,
+            self.rps,
+            self.rows_per_second,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.batches,
+            self.batch_mean,
+            self.errors,
+        )
+    }
+
+    /// The bench-JSON row for this replay: mean wall-clock per request,
+    /// plus the loadgen-only `p95_us` / `batch_mean` fields.
+    pub fn to_record(&self, op: &str, size: usize, threads: usize) -> BenchRecord {
+        BenchRecord {
+            op: op.to_string(),
+            size,
+            threads,
+            ns_per_iter: self.wall_seconds / self.requests.max(1) as f64 * 1e9,
+            gflops: None,
+            speedup: None,
+            vs: None,
+            p95_us: Some(self.p95_us),
+            batch_mean: Some(self.batch_mean),
+        }
+    }
+}
+
+/// Replay the configured stream against `server` and report
+/// throughput/latency.
+///
+/// Latency percentiles and the batch-size distribution are read from the
+/// server's metrics, so use a freshly started server per replay when
+/// comparing configurations (the bench does).
+pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    anyhow::ensure!(!cfg.targets.is_empty(), "loadgen needs at least one (model, weight) target");
+    anyhow::ensure!(cfg.requests > 0, "loadgen needs at least one request");
+    let mut rng = Rng::new(cfg.seed);
+
+    // Pre-build the stream so generation cost stays out of the timed
+    // window (it's identical across compared runs anyway, but cleaner).
+    let mut stream = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        let (model, weight) = cfg.targets[rng.below(cfg.targets.len())].clone();
+        let in_features = server
+            .registry()
+            .get(&model)
+            .and_then(|m| m.shape(&weight))
+            .map(|(m, _)| m)
+            .ok_or_else(|| anyhow::anyhow!("loadgen target `{model}/{weight}` not servable"))?;
+        let rows = if cfg.ragged {
+            1 + rng.below(cfg.rows_per_request.max(1))
+        } else {
+            cfg.rows_per_request.max(1)
+        };
+        let x = Tensor::randn(&[rows, in_features], &mut rng);
+        let gap = if cfg.rate_rps > 0.0 {
+            // Exponential inter-arrival (Poisson process), seeded.
+            -(rng.uniform().max(1e-12).ln()) / cfg.rate_rps
+        } else {
+            0.0
+        };
+        stream.push((model, weight, x, gap));
+    }
+
+    let batches_before = server.metrics().counter("serve.batches");
+    let t0 = Instant::now();
+    let mut clock = 0.0f64;
+    let mut rows_total = 0usize;
+    let mut receivers = Vec::with_capacity(cfg.requests);
+    for (model, weight, x, gap) in stream {
+        clock += gap;
+        if cfg.rate_rps > 0.0 {
+            let target = Duration::from_secs_f64(clock);
+            let elapsed = t0.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        rows_total += x.rows();
+        let rx = server
+            .submit(&model, LinearRequest { name: weight, x })
+            .map_err(|e| anyhow::anyhow!("loadgen admission failed: {e}"))?;
+        receivers.push(rx);
+    }
+    let mut errors = 0usize;
+    for rx in receivers {
+        match rx.recv() {
+            Ok(Ok(_)) => {}
+            _ => errors += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let m = server.metrics();
+    Ok(LoadgenReport {
+        requests: cfg.requests,
+        rows: rows_total,
+        errors,
+        wall_seconds: wall,
+        rps: cfg.requests as f64 / wall,
+        rows_per_second: rows_total as f64 / wall,
+        p50_us: m.timing_percentile("serve.latency_seconds", 50.0) * 1e6,
+        p95_us: m.timing_percentile("serve.latency_seconds", 95.0) * 1e6,
+        p99_us: m.timing_percentile("serve.latency_seconds", 99.0) * 1e6,
+        mean_latency_us: m.timing_mean("serve.latency_seconds") * 1e6,
+        batch_mean: m.timing_mean("serve.batch_rows"),
+        batches: m.counter("serve.batches") - batches_before,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::infer::InferMode;
+    use crate::io::SwscFile;
+    use crate::serve::{BatchConfig, ModelRegistry, DEFAULT_MODEL};
+    use std::sync::Arc;
+
+    fn server() -> BatchServer {
+        let mut rng = Rng::new(60);
+        let mut file = SwscFile::new();
+        file.compressed.insert(
+            "w".into(),
+            compress_matrix(&Tensor::randn(&[24, 24], &mut rng), &SwscConfig::new(3, 2)),
+        );
+        let mut reg = ModelRegistry::new();
+        reg.insert_file(DEFAULT_MODEL, &file, InferMode::Compressed);
+        BatchServer::start(Arc::new(reg), BatchConfig::default())
+    }
+
+    #[test]
+    fn replays_and_reports() {
+        let server = server();
+        let cfg = LoadgenConfig {
+            requests: 16,
+            rows_per_request: 4,
+            ragged: true,
+            targets: vec![(DEFAULT_MODEL.into(), "w".into())],
+            ..Default::default()
+        };
+        let rep = run_loadgen(&server, &cfg).unwrap();
+        assert_eq!(rep.requests, 16);
+        assert_eq!(rep.errors, 0);
+        assert!(rep.rows >= 16 && rep.rows <= 16 * 4);
+        assert!(rep.rps > 0.0 && rep.rows_per_second > 0.0);
+        assert!(rep.batches >= 1 && rep.batch_mean >= 1.0);
+        assert!(rep.p95_us >= rep.p50_us && rep.p50_us >= 0.0);
+        let rec = rep.to_record("loadgen_unit", 24, 1);
+        assert_eq!(rec.p95_us, Some(rep.p95_us));
+        assert_eq!(rec.batch_mean, Some(rep.batch_mean));
+        assert!(rec.ns_per_iter > 0.0);
+        server.shutdown();
+    }
+
+    /// The stream is a pure function of the seed: two replays submit the
+    /// same rows and targets (observable via total rows).
+    #[test]
+    fn stream_is_seeded() {
+        let server = server();
+        let cfg = LoadgenConfig {
+            requests: 12,
+            rows_per_request: 5,
+            ragged: true,
+            targets: vec![(DEFAULT_MODEL.into(), "w".into())],
+            ..Default::default()
+        };
+        let a = run_loadgen(&server, &cfg).unwrap();
+        let b = run_loadgen(&server, &cfg).unwrap();
+        assert_eq!(a.rows, b.rows, "same seed must replay the same stream");
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_target_is_an_error() {
+        let server = server();
+        let cfg = LoadgenConfig {
+            requests: 2,
+            targets: vec![("ghost".into(), "w".into())],
+            ..Default::default()
+        };
+        assert!(run_loadgen(&server, &cfg).is_err());
+        server.shutdown();
+    }
+}

@@ -8,11 +8,14 @@
 //! Each timed case is also recorded as a machine-readable
 //! [`BenchRecord`]; [`Bench::write_json`] dumps them as a JSON array
 //! (`op`, `size`, `threads`, `ns_per_iter`, plus `gflops` on flop-counted
-//! cases and `speedup`/`vs` on comparison rows) so successive PRs have a
-//! perf trajectory to diff against. [`Bench::compare_against_baseline`]
+//! cases, `speedup`/`vs` on comparison rows, and `p95_us`/`batch_mean` on
+//! the serve-loadgen rows pushed via [`Bench::push_record`]) so
+//! successive PRs have a perf trajectory to diff against. [`Bench::compare_against_baseline`]
 //! reads a committed baseline JSON (`BENCH_baseline.json`, bootstrapped by
 //! the hotpath bench on first run) and prints per-op before/after ratios —
 //! the in-repo trajectory perf PRs cite.
+
+pub mod loadgen;
 
 use crate::util::timer::Stats;
 use std::cell::RefCell;
@@ -39,6 +42,13 @@ pub struct BenchRecord {
     pub speedup: Option<f64>,
     /// What a comparison row is measured against (`"spawn"`, `"blocked"`).
     pub vs: Option<String>,
+    /// Server-side p95 latency in microseconds — set on rows emitted by
+    /// the serve loadgen ([`loadgen::LoadgenReport::to_record`]). `None`
+    /// elsewhere.
+    pub p95_us: Option<f64>,
+    /// Mean coalesced batch size (stacked activation rows per executed
+    /// batch) on loadgen rows. `None` elsewhere.
+    pub batch_mean: Option<f64>,
 }
 
 /// One benchmark group with shared formatting.
@@ -129,8 +139,30 @@ impl Bench {
             gflops,
             speedup: None,
             vs: None,
+            p95_us: None,
+            batch_mean: None,
         });
         mean
+    }
+
+    /// Record an externally measured row. The serve loadgen times its own
+    /// open-loop replay (wall clock over many in-flight requests), so its
+    /// rows can't go through `case`'s iteration loop — they land here,
+    /// carrying the loadgen-only fields (`p95_us`, `batch_mean`).
+    pub fn push_record(&self, r: BenchRecord) {
+        let mut extra = String::new();
+        if let Some(p) = r.p95_us {
+            extra.push_str(&format!("  p95 {:>10}", fmt_secs(p / 1e6)));
+        }
+        if let Some(bm) = r.batch_mean {
+            extra.push_str(&format!("  batch_mean {bm:.1}"));
+        }
+        println!(
+            "bench {:<40} {:>12} /req{extra}",
+            format!("{}/{}", self.name, r.op),
+            fmt_secs(r.ns_per_iter / 1e9),
+        );
+        self.records.borrow_mut().push(r);
     }
 
     /// Record a `pool_vs_spawn` comparison row for one op/size: the op's
@@ -180,6 +212,8 @@ impl Bench {
             gflops: None,
             speedup: Some(speedup),
             vs: Some(base_name.to_string()),
+            p95_us: None,
+            batch_mean: None,
         });
         speedup
     }
@@ -250,6 +284,12 @@ impl Bench {
             }
             if let Some(vs) = &r.vs {
                 s.push_str(&format!(", \"vs\": \"{vs}\""));
+            }
+            if let Some(p) = r.p95_us {
+                s.push_str(&format!(", \"p95_us\": {p:.1}"));
+            }
+            if let Some(bm) = r.batch_mean {
+                s.push_str(&format!(", \"batch_mean\": {bm:.2}"));
             }
             s.push('}');
         }
@@ -369,6 +409,38 @@ mod tests {
         assert!(body.contains("\"vs\": \"spawn\""));
         assert!(body.contains("\"op\": \"packed_vs_blocked_matmul_512\""));
         assert!(body.contains("\"vs\": \"blocked\""));
+    }
+
+    #[test]
+    fn pushed_loadgen_rows_carry_p95_and_batch_mean() {
+        let b = Bench::new("unit").with_iters(1);
+        b.push_record(BenchRecord {
+            op: "loadgen_serve_512_batched".into(),
+            size: 512,
+            threads: 4,
+            ns_per_iter: 123456.0,
+            gflops: None,
+            speedup: None,
+            vs: None,
+            p95_us: Some(987.6),
+            batch_mean: Some(42.25),
+        });
+        let recs = b.records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].p95_us, Some(987.6));
+        assert_eq!(recs[0].batch_mean, Some(42.25));
+
+        let path = std::env::temp_dir().join("swsc_bench_loadgen.json");
+        b.write_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.contains("\"op\": \"loadgen_serve_512_batched\""));
+        assert!(body.contains("\"p95_us\": 987.6"));
+        assert!(body.contains("\"batch_mean\": 42.25"));
+        // And the line still parses with the baseline field scanners.
+        let line = body.lines().find(|l| l.contains("loadgen")).unwrap();
+        assert_eq!(extract_json_num(line, "\"p95_us\": "), Some(987.6));
+        assert_eq!(extract_json_num(line, "\"batch_mean\": "), Some(42.25));
     }
 
     #[test]

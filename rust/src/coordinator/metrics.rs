@@ -1,14 +1,140 @@
-//! Lightweight shared metrics (counters + timing stats).
+//! Lightweight shared metrics: counters + fixed-size value histograms.
+//!
+//! Until the serving layer landed, timings were stored as unbounded
+//! sample `Vec`s (`util::timer::Stats`) — fine for a bench's dozens of
+//! iterations, unbounded growth for a service answering millions of
+//! requests. Distributions are now [`Histogram`]s: a fixed array of
+//! geometric buckets (constant memory per metric, ~±5% relative
+//! resolution) with exact count/sum/min/max on the side, so
+//! `render()` reports p50/p95/p99 tail latency instead of a mean that
+//! hides the tail. The same histogram records unit-less distributions
+//! (e.g. `serve.batch_rows`, the coalescer's batch-size distribution).
 
-use crate::util::timer::Stats;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+
+/// Number of geometric buckets per histogram (fixed at compile time —
+/// this is the entire memory footprint of a metric).
+const HIST_BUCKETS: usize = 256;
+/// Lower edge of the bucketed range. Values at or below land in bucket 0.
+const HIST_LO: f64 = 1e-7;
+/// Upper edge of the bucketed range. Values at or above land in the last
+/// bucket. The range spans 11 decades: 0.1 µs … ~3 h in seconds, or
+/// 1 … 10⁴ for unit-less distributions like batch sizes.
+const HIST_HI: f64 = 1e4;
+
+/// Fixed-size log-bucketed histogram with exact count/sum/min/max.
+///
+/// Percentiles are bucket-midpoint estimates, clamped into the exact
+/// observed `[min, max]`; with 256 buckets over 11 decades the relative
+/// error is ≤ ~5.5% — plenty for serving dashboards, at constant memory.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Box<[u64; HIST_BUCKETS]>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: Box::new([0; HIST_BUCKETS]),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v.is_nan() || v <= HIST_LO {
+            return 0; // ≤ LO (and NaN) collapse into the first bucket
+        }
+        if v >= HIST_HI {
+            return HIST_BUCKETS - 1;
+        }
+        let frac = (v / HIST_LO).ln() / (HIST_HI / HIST_LO).ln();
+        ((frac * HIST_BUCKETS as f64) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — what a percentile reports.
+    fn bucket_mid(i: usize) -> f64 {
+        HIST_LO * ((HIST_HI / HIST_LO).ln() * ((i as f64 + 0.5) / HIST_BUCKETS as f64)).exp()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        // NaN observations are recorded as 0 so the exact min/max/sum
+        // side-stats stay finite: `f64::min(INFINITY, NAN)` would leave
+        // `min > max` after a NaN-only stream, and `percentile`'s clamp
+        // into [min, max] must never be handed an inverted range.
+        let v = if v.is_nan() { 0.0 } else { v };
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean (tracked outside the buckets).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank percentile estimate (`p` in 0..=100), clamped into
+    /// the exact observed range. Empty histograms report 0.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().clamp(1.0, self.count as f64) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max()
+    }
+}
 
 /// Thread-safe metrics registry.
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
-    timings: Mutex<BTreeMap<String, Stats>>,
+    hists: Mutex<BTreeMap<String, Histogram>>,
 }
 
 impl Metrics {
@@ -24,31 +150,46 @@ impl Metrics {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
-    pub fn record(&self, name: &str, seconds: f64) {
-        self.timings.lock().unwrap().entry(name.to_string()).or_default().push(seconds);
+    /// Record one observation into `name`'s histogram. Timings are in
+    /// seconds by convention; unit-less distributions (batch sizes) use
+    /// the same mechanism.
+    pub fn record(&self, name: &str, value: f64) {
+        self.hists.lock().unwrap().entry(name.to_string()).or_default().push(value);
     }
 
     pub fn timing_mean(&self, name: &str) -> f64 {
-        self.timings.lock().unwrap().get(name).map(|s| s.mean()).unwrap_or(0.0)
+        self.hists.lock().unwrap().get(name).map(|h| h.mean()).unwrap_or(0.0)
     }
 
     pub fn timing_count(&self, name: &str) -> usize {
-        self.timings.lock().unwrap().get(name).map(|s| s.count()).unwrap_or(0)
+        self.hists.lock().unwrap().get(name).map(|h| h.count() as usize).unwrap_or(0)
     }
 
-    /// Render all metrics as a report block.
+    /// Percentile estimate of a recorded distribution (0 when absent).
+    pub fn timing_percentile(&self, name: &str, p: f64) -> f64 {
+        self.hists.lock().unwrap().get(name).map(|h| h.percentile(p)).unwrap_or(0.0)
+    }
+
+    pub fn timing_max(&self, name: &str) -> f64 {
+        self.hists.lock().unwrap().get(name).map(|h| h.max()).unwrap_or(0.0)
+    }
+
+    /// Render all metrics as a report block: counters, then every
+    /// histogram with tail percentiles.
     pub fn render(&self) -> String {
         let mut out = String::new();
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("counter {k} = {v}\n"));
         }
-        for (k, s) in self.timings.lock().unwrap().iter() {
+        for (k, h) in self.hists.lock().unwrap().iter() {
             out.push_str(&format!(
-                "timing  {k}: n={} mean={:.6}s p50={:.6}s max={:.6}s\n",
-                s.count(),
-                s.mean(),
-                s.percentile(50.0),
-                s.max()
+                "hist    {k}: n={} mean={:.6} p50={:.6} p95={:.6} p99={:.6} max={:.6}\n",
+                h.count(),
+                h.mean(),
+                h.percentile(50.0),
+                h.percentile(95.0),
+                h.percentile(99.0),
+                h.max()
             ));
         }
         out
@@ -60,7 +201,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn counters_and_timings() {
+    fn counters_and_histograms() {
         let m = Metrics::new();
         m.incr("jobs", 1);
         m.incr("jobs", 2);
@@ -70,9 +211,86 @@ mod tests {
         m.record("svd", 1.5);
         assert_eq!(m.timing_count("svd"), 2);
         assert!((m.timing_mean("svd") - 1.0).abs() < 1e-12);
+        assert_eq!(m.timing_count("absent"), 0);
+        assert_eq!(m.timing_percentile("absent", 95.0), 0.0);
         let r = m.render();
         assert!(r.contains("jobs = 3"));
         assert!(r.contains("svd"));
+        assert!(r.contains("p95="), "render must include tail percentiles: {r}");
+        assert!(r.contains("p99="));
+    }
+
+    /// Percentiles land within the documented bucket resolution on a
+    /// known distribution (1 ms … 1 s, uniform).
+    #[test]
+    fn histogram_percentiles_are_accurate() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.push(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.5005).abs() < 1e-9, "mean is exact");
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 1.0);
+        for (p, want) in
+            [(0.0, 1e-3), (50.0, 0.5), (95.0, 0.95), (99.0, 0.99), (100.0, 1.0)]
+        {
+            let got = h.percentile(p);
+            assert!(
+                (got - want).abs() / want < 0.12,
+                "p{p}: got {got}, want ~{want} (±12%)"
+            );
+        }
+        // Estimates never escape the exact observed range.
+        assert!(h.percentile(100.0) <= h.max() && h.percentile(0.0) >= h.min());
+    }
+
+    /// Out-of-range and degenerate values stay bounded: everything lands
+    /// in a bucket, memory never grows.
+    #[test]
+    fn histogram_handles_extremes() {
+        let mut h = Histogram::new();
+        h.push(0.0);
+        h.push(-3.0);
+        h.push(1e-12);
+        h.push(1e9);
+        h.push(f64::NAN); // recorded as 0 — side-stats stay finite
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), 1e9);
+        assert!(h.percentile(99.0) <= 1e9);
+        assert!(h.mean().is_finite(), "a NaN observation must not poison the mean");
+        let empty = Histogram::new();
+        assert_eq!(empty.percentile(50.0), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.min(), 0.0);
+        assert_eq!(empty.max(), 0.0);
+    }
+
+    /// A NaN-only stream must not panic percentile's clamp into
+    /// [min, max] (min/max would otherwise stay at ±infinity).
+    #[test]
+    fn nan_only_histogram_does_not_panic() {
+        let mut h = Histogram::new();
+        h.push(f64::NAN);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        let m = Metrics::new();
+        m.record("rate", f64::NAN);
+        assert_eq!(m.timing_percentile("rate", 95.0), 0.0);
+        assert!(m.render().contains("rate"));
+    }
+
+    /// A single sample reports itself exactly at every percentile (the
+    /// clamp into [min, max] collapses the bucket estimate).
+    #[test]
+    fn single_sample_is_exact() {
+        let mut h = Histogram::new();
+        h.push(0.125);
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 0.125);
+        }
     }
 
     #[test]
@@ -84,6 +302,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for _ in 0..1000 {
                     m.incr("n", 1);
+                    m.record("t", 0.001);
                 }
             }));
         }
@@ -91,5 +310,6 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(m.counter("n"), 8000);
+        assert_eq!(m.timing_count("t"), 8000);
     }
 }

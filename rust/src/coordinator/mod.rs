@@ -13,15 +13,19 @@
 //!   and returns per-request NLL. Bounded queue = backpressure. Since the
 //!   infer layer it also serves [`LinearRequest`]s straight from a
 //!   `.swsc` container — compressed-domain matmuls with no dense weight
-//!   materialization, behind the `ServiceConfig::infer_mode` flag.
+//!   materialization, behind the `ServiceConfig::infer_mode` flag — and
+//!   since the serving layer ([`crate::serve`]) those route through a
+//!   micro-batch coalescer behind `ServiceConfig::batching` (bitwise
+//!   identical to inline serving; `Disabled` is the oracle).
 //!
-//! [`metrics`] carries counters/timings for both.
+//! [`metrics`] carries counters and fixed-size latency histograms
+//! (p50/p95/p99) for all of it.
 
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
-pub use metrics::Metrics;
+pub use metrics::{Histogram, Metrics};
 pub use scheduler::{compress_model, CompressOutcome};
 pub use service::{
     EvalRequest, EvalResponse, EvalService, LinearRequest, LinearResponse, ServiceConfig,

@@ -15,24 +15,34 @@
 //!   `.swsc` factors, no dense weight ever materialized
 //!   ([`InferMode::Compressed`], the default) — or from weights
 //!   reconstructed once at load ([`InferMode::Reconstructed`], the dense
-//!   oracle/baseline). Linear requests are answered inline as they
-//!   arrive and never wait on the batch *fill clock*; one caveat: the
-//!   single batcher thread serves both kinds, so a linear request that
-//!   lands while an eval batch is executing on PJRT queues behind that
-//!   in-flight execution.
+//!   oracle/baseline). With [`Batching::Enabled`] (the default) linear
+//!   requests route through a [`crate::serve::BatchServer`]: a coalescer
+//!   thread stacks concurrent requests into micro-batches, one `apply`
+//!   per (model, weight) group — bitwise identical to the inline path
+//!   because `apply` is row-independent, and free of the old caveat that
+//!   a linear request could queue behind an in-flight PJRT eval batch.
+//!   [`Batching::Disabled`] keeps the inline path as the bitwise oracle,
+//!   mirroring `ExecBackend::SpawnPerCall` / `GemmKernel::Blocked` /
+//!   `InferMode::Reconstructed`.
 //!
 //! The PJRT engine is constructed lazily on the first eval request, so a
 //! linear-only service (started with [`EvalService::start_with_swsc`] and
 //! no artifact manifest) works without any AOT artifacts — which is also
-//! what `examples/serve_compressed.rs` demonstrates.
+//! what `examples/serve_compressed.rs` and `examples/serve_batched.rs`
+//! demonstrate.
 //!
 //! Invariants:
-//! - every submitted request receives exactly one response;
+//! - every submitted request receives exactly one response — including at
+//!   shutdown: requests still queued behind the shutdown marker are
+//!   answered with an explicit shutdown error, never dropped silently;
 //! - a batch never exceeds the executable's batch size;
-//! - the queue bound enforces backpressure on submitters;
+//! - the queue bound enforces backpressure on submitters (blocking
+//!   `submit_linear`, or explicit `Overloaded` via
+//!   [`EvalService::try_submit_linear`]);
 //! - responses are independent of how requests were interleaved into
 //!   batches (same tokens ⇒ same NLL; linear responses are additionally
-//!   bit-identical at any `SWSC_THREADS` — the `infer` contract).
+//!   bit-identical at any `SWSC_THREADS` *and* at any coalescing — the
+//!   `infer` + `serve` contracts).
 
 use crate::coordinator::metrics::Metrics;
 use crate::infer::{CompressedModel, InferMode};
@@ -40,11 +50,14 @@ use crate::io::SwscFile;
 use crate::model::ModelConfig;
 use crate::runtime::convert::literal_to_tensor;
 use crate::runtime::{tensor_to_literal, tokens_to_literal, ArtifactManifest, Engine, LoadedExec};
+use crate::serve::{AdmissionError, BatchServer, Batching, ModelRegistry, DEFAULT_MODEL};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+pub use crate::serve::{LinearRequest, LinearResponse};
 
 /// One evaluation request: a `seq+1`-token window (input + next-token
 /// targets derive from it).
@@ -62,31 +75,22 @@ pub struct EvalResponse {
     pub tokens: usize,
 }
 
-/// One linear-layer request: apply the named weight to a row-major
-/// activation batch (`x` is `[b, in_features]`).
-#[derive(Debug, Clone)]
-pub struct LinearRequest {
-    pub name: String,
-    pub x: Tensor,
-}
-
-/// Response to a [`LinearRequest`]: `y = x · W[name]`, `[b, out_features]`.
-#[derive(Debug, Clone, PartialEq)]
-pub struct LinearResponse {
-    pub y: Tensor,
-}
-
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Bounded queue capacity (backpressure limit).
+    /// Bounded queue capacity (backpressure limit) — applies to the eval
+    /// batcher queue and, when batching is enabled, to the linear
+    /// admission queue.
     pub queue_capacity: usize,
-    /// Max time the batcher waits to fill a batch before flushing a
+    /// Max time the eval batcher waits to fill a batch before flushing a
     /// partial one.
     pub max_batch_delay: Duration,
     /// How linear requests are served when the service holds a
     /// [`CompressedModel`] (see [`EvalService::start_with_swsc`]).
     pub infer_mode: InferMode,
+    /// Micro-batch coalescing for linear requests: enabled by default,
+    /// [`Batching::Disabled`] is the inline bitwise oracle.
+    pub batching: Batching,
 }
 
 impl Default for ServiceConfig {
@@ -95,6 +99,7 @@ impl Default for ServiceConfig {
             queue_capacity: 256,
             max_batch_delay: Duration::from_millis(10),
             infer_mode: InferMode::Compressed,
+            batching: Batching::default(),
         }
     }
 }
@@ -109,6 +114,7 @@ enum Job {
 pub struct EvalService {
     tx: mpsc::SyncSender<Job>,
     worker: Option<std::thread::JoinHandle<()>>,
+    batch: Option<BatchServer>,
     pub metrics: Arc<Metrics>,
     seq: usize,
 }
@@ -168,13 +174,30 @@ impl EvalService {
         svc_cfg: ServiceConfig,
     ) -> EvalService {
         let metrics = Arc::new(Metrics::new());
+        let model = model.map(Arc::new);
+        // Linear micro-batching front end: a BatchServer over a
+        // single-model registry, sharing the service's metrics (and the
+        // model's lazily packed panels, through the Arc).
+        let batch = match (&model, svc_cfg.batching) {
+            (Some(m), Batching::Enabled(bc)) => {
+                let mut registry = ModelRegistry::new();
+                registry.insert(DEFAULT_MODEL, m.clone());
+                Some(BatchServer::start_with(
+                    Arc::new(registry),
+                    bc,
+                    svc_cfg.queue_capacity,
+                    metrics.clone(),
+                ))
+            }
+            _ => None,
+        };
         let (tx, rx) = mpsc::sync_channel::<Job>(svc_cfg.queue_capacity);
         let m = metrics.clone();
         let seq = cfg.seq;
         let worker = std::thread::spawn(move || {
             batcher_loop(manifest, cfg, host_params, model, rx, svc_cfg, m);
         });
-        EvalService { tx, worker: Some(worker), metrics, seq }
+        EvalService { tx, worker: Some(worker), batch, metrics, seq }
     }
 
     /// Submit a request; blocks when the queue is full (backpressure).
@@ -197,13 +220,48 @@ impl EvalService {
         rx.recv().context("service dropped response")?.map_err(|e| anyhow::anyhow!(e))
     }
 
-    /// Submit a linear request; blocks when the queue is full.
+    /// Submit a linear request; blocks when the queue is full. With
+    /// batching enabled this routes through the coalescer — responses are
+    /// bitwise identical either way.
     pub fn submit_linear(
         &self,
         req: LinearRequest,
     ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Job::Linear(req, rtx)).context("service stopped")?;
+        let rrx = match &self.batch {
+            Some(server) => server
+                .submit(DEFAULT_MODEL, req)
+                .map_err(|e| anyhow::anyhow!("service stopped: {e}"))?,
+            None => {
+                let (rtx, rrx) = mpsc::channel();
+                self.tx.send(Job::Linear(req, rtx)).context("service stopped")?;
+                rrx
+            }
+        };
+        self.metrics.incr("service.linear_requests", 1);
+        Ok(rrx)
+    }
+
+    /// Non-blocking [`EvalService::submit_linear`]: a full queue is an
+    /// explicit [`AdmissionError::Overloaded`] instead of a stall —
+    /// load-shedding backpressure for callers that can retry or reroute.
+    pub fn try_submit_linear(
+        &self,
+        req: LinearRequest,
+    ) -> std::result::Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
+        let rrx = match &self.batch {
+            Some(server) => server.try_submit(DEFAULT_MODEL, req)?,
+            None => {
+                let (rtx, rrx) = mpsc::channel();
+                match self.tx.try_send(Job::Linear(req, rtx)) {
+                    Ok(()) => rrx,
+                    Err(mpsc::TrySendError::Full(_)) => return Err(AdmissionError::Overloaded),
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        return Err(AdmissionError::ShuttingDown)
+                    }
+                }
+            }
+        };
+        self.metrics.incr("service.linear_requests", 1);
         Ok(rrx)
     }
 
@@ -213,8 +271,29 @@ impl EvalService {
         rx.recv().context("service dropped response")?.map_err(|e| anyhow::anyhow!(e))
     }
 
-    /// Graceful shutdown: drain, stop the batcher.
+    /// Signal shutdown without joining: the linear front end stops
+    /// admitting (new submissions get [`AdmissionError::ShuttingDown`])
+    /// and the eval batcher is woken with a shutdown marker. Requests
+    /// already admitted are still served; anything behind the marker gets
+    /// an explicit shutdown error. [`EvalService::shutdown`] (or drop)
+    /// still joins the workers.
+    pub fn begin_shutdown(&self) {
+        if let Some(server) = &self.batch {
+            server.begin_shutdown();
+        }
+        let _ = self.tx.send(Job::Shutdown);
+    }
+
+    /// Graceful shutdown: serve everything admitted, answer everything
+    /// queued behind the marker with an explicit error, join the workers.
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Some(server) = self.batch.take() {
+            server.shutdown();
+        }
         let _ = self.tx.send(Job::Shutdown);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
@@ -224,10 +303,7 @@ impl EvalService {
 
 impl Drop for EvalService {
     fn drop(&mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
@@ -247,12 +323,11 @@ fn init_fwd_eval(manifest: &Option<ArtifactManifest>) -> Result<Arc<LoadedExec>,
 }
 
 fn serve_linear(
-    model: &Option<CompressedModel>,
+    model: &Option<Arc<CompressedModel>>,
     metrics: &Metrics,
     req: LinearRequest,
     tx: mpsc::Sender<Result<LinearResponse, String>>,
 ) {
-    metrics.incr("service.linear_requests", 1);
     let t0 = std::time::Instant::now();
     let resp = match model {
         None => Err("no compressed model loaded — start the service with start_with_swsc"
@@ -266,12 +341,34 @@ fn serve_linear(
     let _ = tx.send(resp);
 }
 
+const SHUTDOWN_MSG: &str =
+    "service shutting down — request was queued behind shutdown and not served";
+
+/// ISSUE 5 satellite: every job still queued when the shutdown marker is
+/// processed gets an explicit error response. Before this, the batcher
+/// simply returned and the queued response senders were dropped silently.
+fn drain_on_shutdown(rx: &mpsc::Receiver<Job>, metrics: &Metrics) {
+    while let Ok(job) = rx.try_recv() {
+        match job {
+            Job::Eval(_, tx) => {
+                metrics.incr("service.drained_on_shutdown", 1);
+                let _ = tx.send(Err(SHUTDOWN_MSG.to_string()));
+            }
+            Job::Linear(_, tx) => {
+                metrics.incr("service.drained_on_shutdown", 1);
+                let _ = tx.send(Err(SHUTDOWN_MSG.to_string()));
+            }
+            Job::Shutdown => {}
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn batcher_loop(
     manifest: Option<ArtifactManifest>,
     cfg: ModelConfig,
     host_params: Vec<Tensor>,
-    model: Option<CompressedModel>,
+    model: Option<Arc<CompressedModel>>,
     rx: mpsc::Receiver<Job>,
     svc_cfg: ServiceConfig,
     metrics: Arc<Metrics>,
@@ -283,7 +380,8 @@ fn batcher_loop(
     let mut shutting_down = false;
     loop {
         // Fill up to a full eval batch or until the delay elapses. Linear
-        // requests are served inline — they never wait on the batch clock.
+        // requests (the batching-disabled path) are served inline — they
+        // never wait on the batch clock.
         let deadline = std::time::Instant::now() + svc_cfg.max_batch_delay;
         while pending.len() < cfg.batch && !shutting_down {
             let timeout = deadline.saturating_duration_since(std::time::Instant::now());
@@ -299,6 +397,7 @@ fn batcher_loop(
         }
         if pending.is_empty() {
             if shutting_down {
+                drain_on_shutdown(&rx, &metrics);
                 return;
             }
             continue;
@@ -339,6 +438,7 @@ fn batcher_loop(
             }
         }
         if shutting_down {
+            drain_on_shutdown(&rx, &metrics);
             return;
         }
     }
@@ -381,3 +481,54 @@ fn run_batch(
 /// Shared lock for tests that need a single service at a time (PJRT CPU
 /// clients are heavy; serializing keeps test memory bounded).
 pub static TEST_SERVICE_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::util::rng::Rng;
+
+    fn tiny_model() -> Arc<CompressedModel> {
+        let mut rng = Rng::new(90);
+        let mut file = SwscFile::new();
+        file.compressed.insert(
+            "w".into(),
+            compress_matrix(&Tensor::randn(&[16, 16], &mut rng), &SwscConfig::new(2, 1)),
+        );
+        Arc::new(CompressedModel::from_file(&file, InferMode::Compressed))
+    }
+
+    /// Deterministic drain-on-shutdown through the batcher loop itself:
+    /// jobs ahead of the marker are served, jobs behind it — a linear
+    /// and an eval request — get the explicit shutdown error. Runs the
+    /// loop on this thread, so there is no race to construct.
+    #[test]
+    fn batcher_drains_queue_on_shutdown_with_explicit_errors() {
+        let cfg = ModelConfig::tiny();
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::sync_channel::<Job>(16);
+        let (t1, r1) = mpsc::channel();
+        let (t2, r2) = mpsc::channel();
+        let (t3, r3) = mpsc::channel();
+        let served = LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) };
+        let queued = LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) };
+        tx.send(Job::Linear(served, t1)).unwrap();
+        tx.send(Job::Shutdown).unwrap();
+        tx.send(Job::Linear(queued, t2)).unwrap();
+        tx.send(Job::Eval(EvalRequest { tokens: vec![1; cfg.seq + 1] }, t3)).unwrap();
+        drop(tx);
+        batcher_loop(
+            None,
+            cfg,
+            Vec::new(),
+            Some(tiny_model()),
+            rx,
+            ServiceConfig::default(),
+            metrics.clone(),
+        );
+        assert!(r1.recv().unwrap().is_ok(), "job ahead of the marker must be served");
+        assert!(r2.recv().unwrap().unwrap_err().contains("shutting down"));
+        assert!(r3.recv().unwrap().unwrap_err().contains("shutting down"));
+        assert_eq!(metrics.counter("service.drained_on_shutdown"), 2);
+    }
+}

@@ -6,7 +6,9 @@
 //! - **Layer 3 (this crate)** — the coordinator: per-matrix compression job
 //!   scheduling, a batched evaluation service, a compressed-domain
 //!   inference engine ([`infer`]: forward passes straight from `.swsc`
-//!   factors, no reconstruction), training/eval drivers, and every
+//!   factors, no reconstruction), a batched serving layer ([`serve`]:
+//!   micro-batch coalescing, multi-model registry, admission-controlled
+//!   backpressure), training/eval drivers, and every
 //!   substrate the paper depends on (K-Means, SVD, RTN, tokenizer,
 //!   corpus, checkpoint formats) built from scratch.
 //! - **Layer 2 (`python/compile/model.py`)** — the transformer forward /
@@ -53,6 +55,7 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod text;
 pub mod train;

@@ -1,0 +1,373 @@
+//! Micro-batch coalescing: drain the admission queue, stack compatible
+//! requests into one activation matrix, run a single `apply` per
+//! (model, weight) group, scatter rows back to the responders.
+//!
+//! ## Scheduling
+//!
+//! The coalescer blocks on the queue while idle (no polling). The first
+//! arrival opens a micro-batch and starts the fill clock: further
+//! arrivals are folded in until the stacked row count reaches
+//! [`BatchConfig::max_batch_rows`] or [`BatchConfig::max_wait`] elapses.
+//! Requests already queued coalesce without waiting — the wait bound only
+//! adds latency when the queue runs dry mid-fill, so under saturation the
+//! batch size is governed by the row bound and under trickle traffic by
+//! the wait bound.
+//!
+//! ## Why batching never changes results
+//!
+//! Every serving path computes each output row from that row's own
+//! activations with single-register increasing-k accumulation (the
+//! crate-wide kernel policy, `tests/fixtures/README.md`) — `apply` is
+//! row-independent. Stacking requests `[x1; x2]` and splitting the result
+//! is therefore bitwise identical to applying `x1` and `x2` alone, at any
+//! `SWSC_THREADS`. Arrival order is preserved purely so the stack/scatter
+//! bookkeeping is trivially auditable — correctness never depends on it.
+
+use super::queue::{Job, JobReceiver, ServeJob};
+use super::registry::ModelRegistry;
+use super::LinearResponse;
+use crate::coordinator::metrics::Metrics;
+use crate::infer::CompressedModel;
+use crate::tensor::Tensor;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Coalescing knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Flush a micro-batch once its stacked activation rows reach this
+    /// bound (a single larger request still forms its own batch).
+    pub max_batch_rows: usize,
+    /// Longest the coalescer waits for further arrivals before flushing a
+    /// partial batch. Only bounds *added* latency: queued requests
+    /// coalesce immediately.
+    pub max_wait: Duration,
+}
+
+impl BatchConfig {
+    /// Construct with `max_wait` in microseconds — the serving-latency
+    /// scale the knob is usually quoted in.
+    pub fn with_wait_us(max_batch_rows: usize, max_wait_us: u64) -> BatchConfig {
+        BatchConfig { max_batch_rows, max_wait: Duration::from_micros(max_wait_us) }
+    }
+
+    /// Serve every request alone: batch bound 1, no fill wait. The solo
+    /// baseline configuration the `batched_vs_solo_*` bench rows compare
+    /// against (one `apply` per request through the same machinery).
+    pub fn solo() -> BatchConfig {
+        BatchConfig { max_batch_rows: 1, max_wait: Duration::ZERO }
+    }
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch_rows: 256, max_wait: Duration::from_micros(200) }
+    }
+}
+
+const SHUTDOWN_MSG: &str = "server shutting down — request drained before it was served";
+
+/// The batching engine: owns nothing but shared handles, driven by
+/// [`Coalescer::run`] on a dedicated thread (see
+/// [`super::BatchServer`]).
+pub struct Coalescer {
+    registry: Arc<ModelRegistry>,
+    cfg: BatchConfig,
+    metrics: Arc<Metrics>,
+}
+
+/// Requests for one (model, weight) pair within a micro-batch, in
+/// arrival order.
+struct Group {
+    model: Arc<CompressedModel>,
+    name: String,
+    in_features: usize,
+    jobs: Vec<ServeJob>,
+}
+
+impl Coalescer {
+    pub fn new(registry: Arc<ModelRegistry>, cfg: BatchConfig, metrics: Arc<Metrics>) -> Coalescer {
+        let cfg = BatchConfig { max_batch_rows: cfg.max_batch_rows.max(1), ..cfg };
+        Coalescer { registry, cfg, metrics }
+    }
+
+    /// Drive the queue until a shutdown marker arrives (or every producer
+    /// is gone). Blocks while idle; never drops a responder — jobs behind
+    /// the shutdown marker get an explicit error.
+    pub fn run(&self, rx: JobReceiver) {
+        loop {
+            let first = match rx.recv() {
+                Ok(Job::Linear(job)) => job,
+                Ok(Job::Shutdown) => {
+                    self.drain(&rx);
+                    return;
+                }
+                Err(_) => return,
+            };
+            let mut shutting_down = false;
+            let mut rows = request_rows(&first);
+            let mut batch = vec![first];
+            let deadline = Instant::now() + self.cfg.max_wait;
+            while rows < self.cfg.max_batch_rows && !shutting_down {
+                let timeout = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(Job::Linear(job)) => {
+                        rows += request_rows(&job);
+                        batch.push(job);
+                    }
+                    Ok(Job::Shutdown) => shutting_down = true,
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+                }
+            }
+            self.execute_batch(batch);
+            if shutting_down {
+                self.drain(&rx);
+                return;
+            }
+        }
+    }
+
+    /// One micro-batch: group by (model, weight), one `apply` per group
+    /// over the stacked activations, scatter rows back in arrival order.
+    fn execute_batch(&self, batch: Vec<ServeJob>) {
+        self.metrics.incr("serve.batches", 1);
+        self.metrics.incr("serve.requests", batch.len() as u64);
+        self.metrics.record("serve.batch_requests", batch.len() as f64);
+        let total_rows: usize = batch.iter().map(request_rows).sum();
+        self.metrics.record("serve.batch_rows", total_rows as f64);
+
+        let mut groups: Vec<Group> = Vec::new();
+        for job in batch {
+            let Some(model) = self.registry.get(&job.model) else {
+                let msg = format!("no model named `{}` in the registry", job.model);
+                self.respond(job, Err(msg));
+                continue;
+            };
+            // Only well-formed requests are stacked; anything else goes
+            // through the model's own `apply` so the error (unknown
+            // weight, shape mismatch, non-matrix) is exactly the solo
+            // path's.
+            let stackable = job.req.x.ndim() == 2
+                && model.shape(&job.req.name).is_some_and(|(m, _)| job.req.x.cols() == m);
+            if !stackable {
+                let res = model
+                    .apply(&job.req.name, &job.req.x)
+                    .map_err(|e| format!("linear `{}` failed: {e:#}", job.req.name));
+                self.respond(job, res);
+                continue;
+            }
+            let found = groups
+                .iter()
+                .position(|g| g.name == job.req.name && Arc::ptr_eq(&g.model, &model));
+            match found {
+                Some(i) => groups[i].jobs.push(job),
+                None => {
+                    let in_features = job.req.x.cols();
+                    let name = job.req.name.clone();
+                    groups.push(Group { model, name, in_features, jobs: vec![job] });
+                }
+            }
+        }
+        for group in groups {
+            self.execute_group(group);
+        }
+    }
+
+    fn execute_group(&self, g: Group) {
+        let rows: usize = g.jobs.iter().map(|j| j.req.x.rows()).sum();
+        let t0 = Instant::now();
+        let result = if let [job] = &g.jobs[..] {
+            // Single request — skip the stack/scatter copies.
+            g.model.apply(&g.name, &job.req.x)
+        } else {
+            let mut data = Vec::with_capacity(rows * g.in_features);
+            for job in &g.jobs {
+                data.extend_from_slice(job.req.x.data());
+            }
+            g.model.apply(&g.name, &Tensor::from_vec(&[rows, g.in_features], data))
+        };
+        self.metrics.record("serve.apply_seconds", t0.elapsed().as_secs_f64());
+        match result {
+            Err(e) => {
+                let msg = format!("linear `{}` failed: {e:#}", g.name);
+                for job in g.jobs {
+                    self.respond(job, Err(msg.clone()));
+                }
+            }
+            Ok(y) if g.jobs.len() == 1 => {
+                let job = g.jobs.into_iter().next().unwrap();
+                self.respond(job, Ok(y));
+            }
+            Ok(y) => {
+                let out_features = y.cols();
+                let mut row0 = 0usize;
+                for job in g.jobs {
+                    let r = job.req.x.rows();
+                    let slab = y.data()[row0 * out_features..(row0 + r) * out_features].to_vec();
+                    row0 += r;
+                    self.respond(job, Ok(Tensor::from_vec(&[r, out_features], slab)));
+                }
+            }
+        }
+    }
+
+    fn respond(&self, job: ServeJob, result: Result<Tensor, String>) {
+        self.metrics.record("serve.latency_seconds", job.enqueued.elapsed().as_secs_f64());
+        if result.is_err() {
+            self.metrics.incr("serve.errors", 1);
+        }
+        let _ = job.tx.send(result.map(|y| LinearResponse { y }));
+    }
+
+    /// Everything behind a shutdown marker gets an explicit error — never
+    /// a silently dropped sender.
+    fn drain(&self, rx: &JobReceiver) {
+        while let Ok(job) = rx.try_recv() {
+            if let Job::Linear(job) = job {
+                self.metrics.incr("serve.drained_on_shutdown", 1);
+                self.respond(job, Err(SHUTDOWN_MSG.to_string()));
+            }
+        }
+    }
+}
+
+/// Row contribution of a request toward the batch bound. Malformed
+/// requests (non-2-D activations) count as one row — they still occupy a
+/// batch slot on their way to an error response.
+fn request_rows(job: &ServeJob) -> usize {
+    if job.req.x.ndim() == 2 {
+        job.req.x.rows()
+    } else {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::infer::InferMode;
+    use crate::io::SwscFile;
+    use crate::serve::queue::AdmissionQueue;
+    use crate::serve::LinearRequest;
+    use crate::util::rng::Rng;
+
+    fn registry() -> Arc<ModelRegistry> {
+        let mut rng = Rng::new(70);
+        let mut file = SwscFile::new();
+        file.compressed.insert(
+            "w".into(),
+            compress_matrix(&Tensor::randn(&[16, 16], &mut rng), &SwscConfig::new(2, 1)),
+        );
+        file.dense.insert("d".into(), Tensor::randn(&[16, 16], &mut rng));
+        let mut reg = ModelRegistry::new();
+        reg.insert_file("m", &file, InferMode::Compressed);
+        Arc::new(reg)
+    }
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Deterministic drain-on-shutdown: the job ahead of the marker is
+    /// served, the job behind it gets the explicit shutdown error.
+    #[test]
+    fn drains_jobs_behind_shutdown_marker() {
+        let reg = registry();
+        let metrics = Arc::new(Metrics::new());
+        let coal = Coalescer::new(reg, BatchConfig::solo(), metrics.clone());
+        let (q, rx) = AdmissionQueue::bounded(8);
+        let r1 = q
+            .try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) })
+            .unwrap();
+        q.begin_shutdown();
+        let r2 = q.submit_behind_shutdown(
+            "m",
+            LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) },
+        );
+        drop(q);
+        coal.run(rx); // runs to completion on this thread — no races
+        assert!(r1.recv().unwrap().is_ok(), "job ahead of the marker must be served");
+        let err = r2.recv().unwrap().unwrap_err();
+        assert!(err.contains("shutting down"), "unexpected drain error: {err}");
+        assert_eq!(metrics.counter("serve.drained_on_shutdown"), 1);
+        assert_eq!(metrics.counter("serve.batches"), 1);
+    }
+
+    /// A single batch holding good requests, an unknown weight, a shape
+    /// mismatch, an unknown model, and a dense-entry request: groups are
+    /// stacked and scattered bitwise-correctly and the error cases are
+    /// isolated per request — they never poison the batch.
+    #[test]
+    fn mixed_batch_groups_scatter_and_isolate_errors() {
+        let reg = registry();
+        let model = reg.get("m").unwrap();
+        let metrics = Arc::new(Metrics::new());
+        // Everything is queued before `run`, so with a generous row bound
+        // the whole stream coalesces into exactly one batch.
+        let coal = Coalescer::new(reg.clone(), BatchConfig::with_wait_us(1024, 0), metrics.clone());
+        let (q, rx) = AdmissionQueue::bounded(16);
+        let mut rng = Rng::new(71);
+        let xs: Vec<Tensor> =
+            (0..4).map(|i| Tensor::randn(&[1 + (i % 3), 16], &mut rng)).collect();
+        let good: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                q.try_submit("m", LinearRequest { name: "w".into(), x: x.clone() }).unwrap()
+            })
+            .collect();
+        let xd = Tensor::randn(&[3, 16], &mut rng);
+        let dense = q.try_submit("m", LinearRequest { name: "d".into(), x: xd.clone() }).unwrap();
+        let bad_weight = q
+            .try_submit("m", LinearRequest { name: "nope".into(), x: Tensor::zeros(&[2, 16]) })
+            .unwrap();
+        let bad_shape = q
+            .try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[2, 15]) })
+            .unwrap();
+        let bad_model = q
+            .try_submit("ghost", LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) })
+            .unwrap();
+        q.begin_shutdown();
+        drop(q);
+        coal.run(rx);
+
+        for (x, r) in xs.iter().zip(good) {
+            let got = r.recv().unwrap().unwrap();
+            let want = model.apply("w", x).unwrap();
+            assert_eq!(bits(&got.y), bits(&want), "batched response differs from solo apply");
+        }
+        let got_dense = dense.recv().unwrap().unwrap();
+        assert_eq!(bits(&got_dense.y), bits(&model.apply("d", &xd).unwrap()));
+        assert!(bad_weight.recv().unwrap().unwrap_err().contains("nope"));
+        assert!(bad_shape.recv().unwrap().unwrap_err().contains("failed"));
+        assert!(bad_model.recv().unwrap().unwrap_err().contains("ghost"));
+        assert_eq!(metrics.counter("serve.batches"), 1, "stream must coalesce into one batch");
+        assert_eq!(metrics.counter("serve.requests"), 8);
+        assert_eq!(metrics.counter("serve.errors"), 3);
+    }
+
+    /// The row bound flushes mid-stream: 3 × 2-row requests against a
+    /// 4-row bound split into two batches at a deterministic boundary.
+    #[test]
+    fn row_bound_flushes_batches() {
+        let reg = registry();
+        let metrics = Arc::new(Metrics::new());
+        let coal = Coalescer::new(reg, BatchConfig::with_wait_us(4, 0), metrics.clone());
+        let (q, rx) = AdmissionQueue::bounded(8);
+        let rxs: Vec<_> = (0..3)
+            .map(|_| {
+                q.try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[2, 16]) })
+                    .unwrap()
+            })
+            .collect();
+        q.begin_shutdown();
+        drop(q);
+        coal.run(rx);
+        for r in rxs {
+            assert!(r.recv().unwrap().is_ok());
+        }
+        assert_eq!(metrics.counter("serve.batches"), 2);
+        assert_eq!(metrics.timing_count("serve.batch_rows"), 2);
+    }
+}

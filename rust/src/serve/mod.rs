@@ -1,0 +1,95 @@
+//! Batched serving: micro-batch coalescing, a multi-model registry, and
+//! admission-controlled backpressure over the compressed-domain engine.
+//!
+//! [`crate::infer`] (PR 4) made a *single* compressed product cheap. This
+//! module makes *concurrent traffic* cheap: the shared-weight
+//! factorization `W ≈ R[labels] + A·B` only compounds at serving time
+//! when many activations amortize one set of packed GEMM panels and one
+//! label-gather pass — the same deployment observation the DeltaLLM and
+//! head-wise weight-sharing lines make (PAPERS.md). Before this layer,
+//! `coordinator::EvalService` answered every linear request inline, one
+//! at a time; every request paid its own dispatch, packing, and
+//! microkernel ramp-up alone.
+//!
+//! Three pieces, composable on their own or assembled by [`BatchServer`]:
+//!
+//! - [`Coalescer`] — drains the request queue into micro-batches
+//!   (bounded by [`BatchConfig::max_batch_rows`] stacked activation rows,
+//!   flushed after [`BatchConfig::max_wait`] when arrivals run dry),
+//!   stacks each (model, weight) group's row-major activations **in
+//!   arrival order** into one batch matrix, runs a single
+//!   [`crate::infer::CompressedModel::apply`] per group on the exec pool,
+//!   and scatters rows back to per-request responders.
+//! - [`ModelRegistry`] — multiple named `.swsc` models behind `Arc`s, so
+//!   one service serves many models and every in-flight request shares
+//!   each model's lazily packed GEMM panels.
+//! - [`AdmissionQueue`] — bounded depth with **explicit**
+//!   [`AdmissionError::Overloaded`] rejection (backpressure, not OOM) and
+//!   drain-on-shutdown: whatever sits behind the shutdown marker is
+//!   answered with an explicit error, never a silently dropped sender.
+//!
+//! ## The bitwise contract
+//!
+//! Batching is *invisible* in the results: every `apply` path (compressed
+//! gather or dense passthrough GEMM) computes each output row as
+//! single-register increasing-k dots over that row's own activations —
+//! row-independent by the crate-wide kernel accumulation policy
+//! (`tests/fixtures/README.md`). Stacking rows changes *which call*
+//! computes a row, never its bits, so batched responses are bitwise
+//! equal to solo responses at any `SWSC_THREADS` — pinned by the
+//! row-independence property test in `tests/serve_batched.rs` and by the
+//! `ServiceConfig::batching` oracle flag ([`Batching::Disabled`] mirrors
+//! `ExecBackend::SpawnPerCall` / `GemmKernel::Blocked` /
+//! `InferMode::Reconstructed`: the old inline path, kept as the bitwise
+//! baseline).
+//!
+//! `benches/hotpath.rs` drives the `bench::loadgen` open-loop generator
+//! through both configurations and emits `batched_vs_solo_*` rows;
+//! `examples/serve_batched.rs` is the artifact-free demo and CI smoke
+//! test.
+
+pub mod coalescer;
+pub mod queue;
+pub mod registry;
+pub mod server;
+
+pub use coalescer::{BatchConfig, Coalescer};
+pub use queue::{AdmissionError, AdmissionQueue, JobReceiver};
+pub use registry::ModelRegistry;
+pub use server::{BatchServer, DEFAULT_MODEL};
+
+use crate::tensor::Tensor;
+
+/// One linear-layer request: apply the named weight of a model to a
+/// row-major activation batch (`x` is `[b, in_features]`).
+#[derive(Debug, Clone)]
+pub struct LinearRequest {
+    pub name: String,
+    pub x: Tensor,
+}
+
+/// Response to a [`LinearRequest`]: `y = x · W[name]`, `[b, out_features]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearResponse {
+    pub y: Tensor,
+}
+
+/// How a serving front end routes linear requests.
+///
+/// The two settings are bitwise identical (row-independent `apply`), so
+/// this is purely a throughput/latency knob — `Disabled` survives as the
+/// solo oracle and bench baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Batching {
+    /// Micro-batch coalescing through a [`BatchServer`] (the default).
+    Enabled(BatchConfig),
+    /// Inline per-request serving — the pre-batching path, kept as the
+    /// bitwise oracle.
+    Disabled,
+}
+
+impl Default for Batching {
+    fn default() -> Self {
+        Batching::Enabled(BatchConfig::default())
+    }
+}

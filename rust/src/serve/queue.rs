@@ -1,0 +1,276 @@
+//! Admission control: a bounded queue in front of the coalescer.
+//!
+//! The queue is the backpressure boundary of the serving layer. Depth is
+//! bounded at construction, so a traffic spike turns into explicit
+//! [`AdmissionError::Overloaded`] rejections (or a stalled submitter, if
+//! the caller prefers [`AdmissionQueue::submit`]'s blocking semantics) —
+//! never into unbounded buffering. Shutdown is a marker in the queue:
+//! everything admitted ahead of it is still served, anything behind it
+//! is answered with an explicit shutdown error by the coalescer's drain
+//! pass, so no responder is ever dropped silently.
+
+use super::{LinearRequest, LinearResponse};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Why a submission was not admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The queue is at capacity. Explicit backpressure: the caller decides
+    /// whether to retry, shed, or fall back — the server never buffers
+    /// unboundedly.
+    Overloaded,
+    /// The server is shutting down (or already gone); no new work is
+    /// admitted.
+    ShuttingDown,
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::Overloaded => write!(f, "server overloaded (admission queue full)"),
+            AdmissionError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Channel a response is delivered on.
+pub(crate) type Responder = mpsc::Sender<Result<LinearResponse, String>>;
+
+/// One admitted request, on its way to the coalescer.
+pub(crate) struct ServeJob {
+    /// Registry key of the target model.
+    pub model: String,
+    pub req: LinearRequest,
+    /// Admission time — the coalescer records queue-to-response latency
+    /// from this.
+    pub enqueued: Instant,
+    pub tx: Responder,
+}
+
+pub(crate) enum Job {
+    Linear(ServeJob),
+    Shutdown,
+}
+
+/// Producer side of the bounded admission queue.
+pub struct AdmissionQueue {
+    tx: mpsc::SyncSender<Job>,
+    depth: Arc<AtomicUsize>,
+    shutting_down: Arc<AtomicBool>,
+    capacity: usize,
+}
+
+/// Consumer side, handed to [`super::Coalescer::run`].
+pub struct JobReceiver {
+    rx: mpsc::Receiver<Job>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl AdmissionQueue {
+    /// Build a queue admitting at most `capacity` waiting requests
+    /// (clamped to ≥ 1). Returns the producer handle and the receiver the
+    /// coalescer drives.
+    pub fn bounded(capacity: usize) -> (AdmissionQueue, JobReceiver) {
+        let capacity = capacity.max(1);
+        let (tx, rx) = mpsc::sync_channel(capacity);
+        let depth = Arc::new(AtomicUsize::new(0));
+        let queue = AdmissionQueue {
+            tx,
+            depth: depth.clone(),
+            shutting_down: Arc::new(AtomicBool::new(false)),
+            capacity,
+        };
+        (queue, JobReceiver { rx, depth })
+    }
+
+    /// The depth bound this queue was built with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests admitted but not yet picked up by the coalescer.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Whether [`AdmissionQueue::begin_shutdown`] has been called.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::SeqCst)
+    }
+
+    /// Non-blocking admission: [`AdmissionError::Overloaded`] when the
+    /// queue is full. On success returns the receiver the response
+    /// arrives on.
+    pub fn try_submit(
+        &self,
+        model: &str,
+        req: LinearRequest,
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
+        if self.is_shutting_down() {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let (job, rrx) = make_job(model, req);
+        // Reserve the depth slot *before* the send: once the job is in
+        // the channel a fast consumer may decrement immediately, and a
+        // post-send increment could wrap depth below zero transiently.
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(Job::Linear(job)) {
+            Ok(()) => Ok(rrx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(AdmissionError::Overloaded)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(AdmissionError::ShuttingDown)
+            }
+        }
+    }
+
+    /// Blocking admission: waits for queue space instead of rejecting —
+    /// backpressure becomes "the submitter stalls", matching
+    /// `EvalService::submit_linear`'s historical contract.
+    pub fn submit(
+        &self,
+        model: &str,
+        req: LinearRequest,
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
+        if self.is_shutting_down() {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let (job, rrx) = make_job(model, req);
+        // Same reserve-then-send ordering as `try_submit`.
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(Job::Linear(job)).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(AdmissionError::ShuttingDown);
+        }
+        Ok(rrx)
+    }
+
+    /// Stop admitting and wake the coalescer with a shutdown marker. The
+    /// coalescer serves everything admitted before the marker, then
+    /// answers anything behind it with an explicit shutdown error.
+    pub fn begin_shutdown(&self) {
+        if !self.shutting_down.swap(true, Ordering::SeqCst) {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+    }
+
+    /// Test hook: enqueue past the shutdown flag, to exercise the drain
+    /// path deterministically (a job *behind* the marker).
+    #[cfg(test)]
+    pub(crate) fn submit_behind_shutdown(
+        &self,
+        model: &str,
+        req: LinearRequest,
+    ) -> mpsc::Receiver<Result<LinearResponse, String>> {
+        let (job, rrx) = make_job(model, req);
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Job::Linear(job)).expect("queue gone");
+        rrx
+    }
+}
+
+fn make_job(
+    model: &str,
+    req: LinearRequest,
+) -> (ServeJob, mpsc::Receiver<Result<LinearResponse, String>>) {
+    let (rtx, rrx) = mpsc::channel();
+    let job =
+        ServeJob { model: model.to_string(), req, enqueued: Instant::now(), tx: rtx };
+    (job, rrx)
+}
+
+impl JobReceiver {
+    fn note(&self, job: &Job) {
+        if matches!(job, Job::Linear(_)) {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn recv(&self) -> Result<Job, mpsc::RecvError> {
+        let job = self.rx.recv()?;
+        self.note(&job);
+        Ok(job)
+    }
+
+    pub(crate) fn recv_timeout(&self, timeout: Duration) -> Result<Job, mpsc::RecvTimeoutError> {
+        let job = self.rx.recv_timeout(timeout)?;
+        self.note(&job);
+        Ok(job)
+    }
+
+    pub(crate) fn try_recv(&self) -> Result<Job, mpsc::TryRecvError> {
+        let job = self.rx.try_recv()?;
+        self.note(&job);
+        Ok(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn req() -> LinearRequest {
+        LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 4]) }
+    }
+
+    /// With no consumer attached, admission beyond capacity is an
+    /// explicit `Overloaded` — fully deterministic backpressure.
+    #[test]
+    fn overload_is_explicit_at_capacity() {
+        let (q, _rx) = AdmissionQueue::bounded(2);
+        assert_eq!(q.capacity(), 2);
+        let _r1 = q.try_submit("m", req()).unwrap();
+        let _r2 = q.try_submit("m", req()).unwrap();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.try_submit("m", req()).unwrap_err(), AdmissionError::Overloaded);
+        // Still overloaded, still explicit — nothing was buffered.
+        assert_eq!(q.try_submit("m", req()).unwrap_err(), AdmissionError::Overloaded);
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_admissions() {
+        let (q, rx) = AdmissionQueue::bounded(4);
+        let _r = q.try_submit("m", req()).unwrap();
+        q.begin_shutdown();
+        assert!(q.is_shutting_down());
+        assert_eq!(q.try_submit("m", req()).unwrap_err(), AdmissionError::ShuttingDown);
+        assert_eq!(q.submit("m", req()).unwrap_err(), AdmissionError::ShuttingDown);
+        // The marker is queued exactly once, behind the admitted job.
+        assert!(matches!(rx.recv().unwrap(), Job::Linear(_)));
+        assert!(matches!(rx.recv().unwrap(), Job::Shutdown));
+        q.begin_shutdown(); // idempotent — no second marker
+        assert!(matches!(rx.try_recv(), Err(mpsc::TryRecvError::Empty)));
+    }
+
+    #[test]
+    fn depth_tracks_consumption() {
+        let (q, rx) = AdmissionQueue::bounded(3);
+        let _r1 = q.try_submit("m", req()).unwrap();
+        let _r2 = q.try_submit("m", req()).unwrap();
+        assert_eq!(q.depth(), 2);
+        let _ = rx.recv().unwrap();
+        assert_eq!(q.depth(), 1);
+        let _ = rx.try_recv().unwrap();
+        assert_eq!(q.depth(), 0);
+        // Capacity freed: admission works again.
+        let _r3 = q.try_submit("m", req()).unwrap();
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn dropped_receiver_reads_as_shutting_down() {
+        let (q, rx) = AdmissionQueue::bounded(2);
+        drop(rx);
+        assert_eq!(q.try_submit("m", req()).unwrap_err(), AdmissionError::ShuttingDown);
+    }
+}

@@ -1,0 +1,89 @@
+//! Multiple named `.swsc` models behind one serving surface.
+
+use crate::infer::{CompressedModel, InferMode};
+use crate::io::SwscFile;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Named [`CompressedModel`]s, `Arc`-shared so every in-flight request —
+/// and every coalesced batch — reuses one set of lazily packed GEMM
+/// panels per model. The registry is assembled up front and then moved
+/// behind an `Arc` into the server; a model's panels pack on the first
+/// request that needs an orientation and are shared by all later
+/// requests, across models' names (two registry names may alias one
+/// `Arc`'d model and the coalescer will still batch them together).
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Arc<CompressedModel>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Load `file` in `mode` and register it under `name` (replacing any
+    /// previous entry of that name). Returns the shared handle.
+    pub fn insert_file(
+        &mut self,
+        name: &str,
+        file: &SwscFile,
+        mode: InferMode,
+    ) -> Arc<CompressedModel> {
+        let model = Arc::new(CompressedModel::from_file(file, mode));
+        self.models.insert(name.to_string(), model.clone());
+        model
+    }
+
+    /// Register an already-built model under `name`.
+    pub fn insert(&mut self, name: &str, model: Arc<CompressedModel>) {
+        self.models.insert(name.to_string(), model);
+    }
+
+    /// The model registered under `name`, if any.
+    pub fn get(&self, name: &str) -> Option<Arc<CompressedModel>> {
+        self.models.get(name).cloned()
+    }
+
+    /// Registered names, in sorted order.
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn insert_get_and_share() {
+        let mut rng = Rng::new(50);
+        let mut file = SwscFile::new();
+        file.compressed
+            .insert("w".into(), compress_matrix(&Tensor::randn(&[8, 8], &mut rng), &SwscConfig::new(2, 1)));
+        let mut reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        let a = reg.insert_file("a", &file, InferMode::Compressed);
+        reg.insert("alias", a.clone());
+        reg.insert_file("b", &file, InferMode::Reconstructed);
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.names(), vec!["a", "alias", "b"]);
+        // `alias` shares `a`'s model (same Arc — shared packed panels).
+        assert!(Arc::ptr_eq(&reg.get("a").unwrap(), &reg.get("alias").unwrap()));
+        assert!(!Arc::ptr_eq(&reg.get("a").unwrap(), &reg.get("b").unwrap()));
+        assert!(reg.get("missing").is_none());
+        assert_eq!(reg.get("a").unwrap().num_compressed(), 1);
+        assert_eq!(reg.get("b").unwrap().num_compressed(), 0);
+    }
+}

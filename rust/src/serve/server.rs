@@ -1,0 +1,128 @@
+//! The assembled serving front end: an admission queue feeding a
+//! coalescer thread over a model registry.
+
+use super::coalescer::{BatchConfig, Coalescer};
+use super::queue::{AdmissionError, AdmissionQueue};
+use super::registry::ModelRegistry;
+use super::{LinearRequest, LinearResponse};
+use crate::coordinator::metrics::Metrics;
+use anyhow::Context;
+use std::sync::{mpsc, Arc};
+
+/// Registry key used when a server fronts exactly one model (the
+/// `coordinator::EvalService` integration registers its `.swsc` model
+/// under this name).
+pub const DEFAULT_MODEL: &str = "default";
+
+/// Default admission-queue depth for [`BatchServer::start`].
+pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
+
+/// A running batched serving instance: submissions go through the bounded
+/// [`AdmissionQueue`], a dedicated coalescer thread stacks them into
+/// micro-batches, and responses come back on per-request channels —
+/// bitwise identical to serving each request alone (see the module docs
+/// of [`crate::serve`]).
+pub struct BatchServer {
+    queue: AdmissionQueue,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchServer {
+    /// Start with a private metrics registry and the default queue depth.
+    pub fn start(registry: Arc<ModelRegistry>, cfg: BatchConfig) -> BatchServer {
+        Self::start_with(registry, cfg, DEFAULT_QUEUE_CAPACITY, Arc::new(Metrics::new()))
+    }
+
+    /// Full-control constructor: explicit admission-queue depth and a
+    /// shared metrics registry (the `EvalService` integration passes its
+    /// own, so one `render()` covers both surfaces).
+    pub fn start_with(
+        registry: Arc<ModelRegistry>,
+        cfg: BatchConfig,
+        queue_capacity: usize,
+        metrics: Arc<Metrics>,
+    ) -> BatchServer {
+        let (queue, rx) = AdmissionQueue::bounded(queue_capacity);
+        let coalescer = Coalescer::new(registry.clone(), cfg, metrics.clone());
+        let worker = std::thread::spawn(move || coalescer.run(rx));
+        BatchServer { queue, registry, metrics, worker: Some(worker) }
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// The admission queue (introspection: `depth()`, `capacity()`).
+    pub fn queue(&self) -> &AdmissionQueue {
+        &self.queue
+    }
+
+    /// Blocking admission: waits for queue space (backpressure stalls the
+    /// submitter). Returns the receiver the response arrives on.
+    pub fn submit(
+        &self,
+        model: &str,
+        req: LinearRequest,
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
+        self.queue.submit(model, req)
+    }
+
+    /// Non-blocking admission: [`AdmissionError::Overloaded`] when the
+    /// queue is at capacity — explicit backpressure instead of buffering.
+    pub fn try_submit(
+        &self,
+        model: &str,
+        req: LinearRequest,
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
+        match self.queue.try_submit(model, req) {
+            Err(AdmissionError::Overloaded) => {
+                self.metrics.incr("serve.rejected_overloaded", 1);
+                Err(AdmissionError::Overloaded)
+            }
+            other => other,
+        }
+    }
+
+    /// Submit and wait — convenience mirroring
+    /// `EvalService::linear_blocking`.
+    pub fn submit_blocking(
+        &self,
+        model: &str,
+        req: LinearRequest,
+    ) -> anyhow::Result<LinearResponse> {
+        let rx = self.submit(model, req).map_err(|e| anyhow::anyhow!("{e}"))?;
+        rx.recv().context("server dropped response")?.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Reject new admissions and wake the coalescer; does not join.
+    /// Everything admitted before this call is still served; anything
+    /// racing in behind the marker gets an explicit shutdown error.
+    pub fn begin_shutdown(&self) {
+        self.queue.begin_shutdown();
+    }
+
+    /// Graceful shutdown: stop admitting, serve what was admitted, answer
+    /// the rest with explicit errors, join the coalescer.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.queue.begin_shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for BatchServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

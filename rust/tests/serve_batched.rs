@@ -1,0 +1,368 @@
+//! Batched-serving invariants (ISSUE 5).
+//!
+//! The load-bearing contract: **coalescing is invisible in the results.**
+//! `apply` is row-independent (each output row is a single-register
+//! increasing-k dot over that row's own activations — the crate-wide
+//! kernel policy), so stacking requests into a micro-batch and splitting
+//! the result is bitwise identical to serving each request alone, at any
+//! `SWSC_THREADS` (the CI tier-1 matrix runs this file under
+//! `SWSC_THREADS ∈ {1, 4}`; the property test additionally sweeps
+//! explicit thread configs). Pinned here:
+//!
+//! 1. the row-independence property itself, at the `CompressedLinear`
+//!    level (arbitrary stacking splits × thread counts, bitwise);
+//! 2. `EvalService` end to end: `batching: Enabled` responses bitwise
+//!    equal `batching: Disabled` responses and the direct
+//!    `CompressedModel::apply` oracle, over a ragged multi-weight stream
+//!    (compressed + dense entries);
+//! 3. multi-model interleaving through one `BatchServer` — grouping by
+//!    (model, weight) never crosses streams;
+//! 4. admission control: explicit `Overloaded` / `ShuttingDown`, and
+//!    drain-on-shutdown answering rather than dropping.
+
+use std::sync::Arc;
+use std::time::Duration;
+use swsc::compress::{compress_matrix, CompressedMatrix, SwscConfig};
+use swsc::coordinator::{EvalService, LinearRequest, ServiceConfig};
+use swsc::exec::ExecConfig;
+use swsc::infer::{CompressedLinear, CompressedModel, InferMode};
+use swsc::io::SwscFile;
+use swsc::model::ModelConfig;
+use swsc::serve::{
+    AdmissionError, BatchConfig, BatchServer, Batching, ModelRegistry, DEFAULT_MODEL,
+};
+use swsc::tensor::Tensor;
+use swsc::util::prop::check;
+use swsc::util::rng::Rng;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+fn synthetic(m: usize, n: usize, k: usize, r: usize, rng: &mut Rng) -> CompressedMatrix {
+    CompressedMatrix {
+        shape: (m, n),
+        labels: (0..n).map(|_| rng.below(k) as u32).collect(),
+        centroids: Tensor::randn(&[m, k], rng),
+        factor_a: Tensor::randn(&[m, r], rng),
+        factor_b: Tensor::randn(&[r, n], rng),
+    }
+}
+
+/// The foundation the coalescer stands on: `apply` on a stacked batch
+/// equals the row-wise concatenation of `apply` on any split of it —
+/// bitwise, at any thread count, including lazily packed panels whose
+/// first touch happens under either path.
+#[test]
+fn prop_apply_is_row_independent_bitwise() {
+    check(
+        "apply(stack(x1..xg)) == concat(apply(x1)..apply(xg)), bitwise",
+        701,
+        12,
+        |r| {
+            let m = 8 + r.below(56);
+            let n = 8 + r.below(56);
+            let k = 2 + r.below(6);
+            let rank = if r.below(3) == 0 { 0 } else { 1 + r.below(6) };
+            let c = synthetic(m, n, k, rank, r);
+            let rows = 1 + r.below(20);
+            let x = Tensor::randn(&[rows, m], r);
+            // Random contiguous split of the batch into request slabs.
+            let mut splits = vec![0];
+            let mut at = 0;
+            loop {
+                at += 1 + r.below(4);
+                if at >= rows {
+                    break;
+                }
+                splits.push(at);
+            }
+            splits.push(rows);
+            (c, x, splits)
+        },
+        |(c, x, splits)| {
+            let lin = CompressedLinear::from_matrix(c);
+            let full = lin.apply_with(x, ExecConfig::serial());
+            let n = full.cols();
+            for t in [1usize, 2, 4] {
+                let cfg = ExecConfig::with_threads(t);
+                if bits(&lin.apply_with(x, cfg)) != bits(&full) {
+                    return Err(format!("stacked apply differs at {t} threads"));
+                }
+                // A fresh operator whose panels first pack under this
+                // thread config must agree too (packing is
+                // value-deterministic).
+                let fresh = CompressedLinear::from_matrix(c);
+                for w in splits.windows(2) {
+                    let (lo, hi) = (w[0], w[1]);
+                    let rows = hi - lo;
+                    let m = x.cols();
+                    let slab = Tensor::from_vec(
+                        &[rows, m],
+                        x.data()[lo * m..hi * m].to_vec(),
+                    );
+                    let solo = fresh.apply_with(&slab, cfg);
+                    let want: Vec<u32> =
+                        full.data()[lo * n..hi * n].iter().map(|v| v.to_bits()).collect();
+                    if bits(&solo) != want {
+                        return Err(format!(
+                            "rows {lo}..{hi} not bitwise equal between solo and stacked \
+                             apply at {t} threads"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Weights with clustered channel structure (the paper's regime), so the
+/// end-to-end tests run on real compression output.
+fn structured_weights(m: usize, n: usize, groups: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> =
+        (0..groups).map(|_| (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+    let mut w = Tensor::zeros(&[m, n]);
+    for j in 0..n {
+        let col: Vec<f32> =
+            centers[j % groups].iter().map(|&v| v + rng.normal_f32(0.0, 0.1)).collect();
+        w.set_col(j, &col);
+    }
+    w
+}
+
+fn service_file(seed: u64, d: usize) -> SwscFile {
+    let mut file = SwscFile::new();
+    for (i, name) in ["attn.wq", "attn.wk", "mlp.w1"].iter().enumerate() {
+        let w = structured_weights(d, d, 4, seed + i as u64);
+        file.compressed.insert((*name).into(), compress_matrix(&w, &SwscConfig::new(4, 2)));
+    }
+    file.dense.insert("attn.wv".into(), Tensor::randn(&[d, d], &mut Rng::new(seed + 9)));
+    file
+}
+
+/// Seeded ragged request stream over every servable entry (compressed
+/// and dense).
+fn request_stream(d: usize, count: usize, seed: u64) -> Vec<LinearRequest> {
+    let names = ["attn.wq", "attn.wk", "mlp.w1", "attn.wv"];
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| LinearRequest {
+            name: names[i % names.len()].to_string(),
+            x: Tensor::randn(&[1 + rng.below(7), d], &mut rng),
+        })
+        .collect()
+}
+
+/// ISSUE 5 satellite: batched responses are bitwise equal to
+/// `batching: Disabled` solo responses (and to the direct oracle) over a
+/// ragged, multi-weight stream — and the serve metrics expose the
+/// latency/batch-size histograms.
+#[test]
+fn batched_service_bitwise_equals_disabled_solo() {
+    let d = 32;
+    let cfg = ModelConfig::tiny();
+    let file = service_file(800, d);
+    let stream = request_stream(d, 40, 801);
+    let oracle = CompressedModel::from_file(&file, InferMode::Compressed);
+
+    // Batched service: submit everything first (a wide fill window +
+    // generous row bound lets the stream coalesce), then collect.
+    let batched_svc = EvalService::start_with_swsc(
+        None,
+        cfg.clone(),
+        &file,
+        ServiceConfig {
+            batching: Batching::Enabled(BatchConfig {
+                max_batch_rows: 128,
+                max_wait: Duration::from_millis(200),
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> =
+        stream.iter().map(|r| batched_svc.submit_linear(r.clone()).unwrap()).collect();
+    let batched: Vec<Tensor> =
+        rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().y).collect();
+    assert_eq!(batched_svc.metrics.counter("serve.requests"), stream.len() as u64);
+    assert_eq!(
+        batched_svc.metrics.counter("service.linear_requests"),
+        stream.len() as u64
+    );
+    // Coalescing actually happened: fewer batches than requests. (The
+    // whole stream is queued within the 200 ms fill window — zero
+    // coalescing would need every window to expire between two
+    // back-to-back submits.)
+    let batches = batched_svc.metrics.counter("serve.batches");
+    assert!(batches < stream.len() as u64, "no coalescing observed ({batches} batches)");
+    // Histogram surface: latency percentiles recorded and rendered.
+    assert!(batched_svc.metrics.timing_percentile("serve.latency_seconds", 95.0) > 0.0);
+    assert!(batched_svc.metrics.render().contains("p95="));
+    batched_svc.shutdown();
+
+    // Solo oracle service: the inline pre-batching path.
+    let solo_svc = EvalService::start_with_swsc(
+        None,
+        cfg,
+        &file,
+        ServiceConfig { batching: Batching::Disabled, ..Default::default() },
+    )
+    .unwrap();
+    for (req, got) in stream.iter().zip(&batched) {
+        let solo = solo_svc.linear_blocking(req.clone()).unwrap();
+        assert_eq!(
+            bits(got),
+            bits(&solo.y),
+            "batched and solo responses differ for `{}`",
+            req.name
+        );
+        let want = oracle.apply(&req.name, &req.x).unwrap();
+        assert_eq!(bits(got), bits(&want), "batched response differs from oracle `{}`", req.name);
+    }
+    solo_svc.shutdown();
+}
+
+/// Multi-model interleaving: two models with identical weight *names*
+/// but different values behind one server — every response must match
+/// its own model's oracle bitwise (a grouping mixup would cross them).
+#[test]
+fn multi_model_interleaving_routes_correctly() {
+    let d = 24;
+    let mut reg = ModelRegistry::new();
+    let file_a = service_file(820, d);
+    let file_b = service_file(830, d);
+    let model_a = reg.insert_file("a", &file_a, InferMode::Compressed);
+    let model_b = reg.insert_file("b", &file_b, InferMode::Compressed);
+    let server = BatchServer::start(
+        Arc::new(reg),
+        BatchConfig { max_batch_rows: 256, max_wait: Duration::from_millis(200) },
+    );
+
+    let mut rng = Rng::new(840);
+    let reqs: Vec<(String, LinearRequest)> = (0..24)
+        .map(|i| {
+            let model = if i % 2 == 0 { "a" } else { "b" };
+            let weight = ["attn.wq", "attn.wk", "mlp.w1"][i % 3];
+            (
+                model.to_string(),
+                LinearRequest {
+                    name: weight.to_string(),
+                    x: Tensor::randn(&[1 + (i % 4), d], &mut rng),
+                },
+            )
+        })
+        .collect();
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(model, req)| server.submit(model, req.clone()).unwrap())
+        .collect();
+    for ((model, req), rx) in reqs.iter().zip(rxs) {
+        let got = rx.recv().unwrap().unwrap();
+        let oracle = if model == "a" { &model_a } else { &model_b };
+        let want = oracle.apply(&req.name, &req.x).unwrap();
+        assert_eq!(
+            bits(&got.y),
+            bits(&want),
+            "response crossed streams: model {model}, weight {}",
+            req.name
+        );
+    }
+    server.shutdown();
+}
+
+/// Admission control end to end: a tiny queue rejects with explicit
+/// `Overloaded` while the coalescer is busy, everything admitted is
+/// served, and `begin_shutdown` deterministically rejects new work.
+#[test]
+fn admission_overload_and_shutdown() {
+    let mut rng = Rng::new(850);
+    let mut file = SwscFile::new();
+    file.compressed.insert("w".into(), synthetic(512, 512, 16, 8, &mut rng));
+    let mut reg = ModelRegistry::new();
+    reg.insert_file(DEFAULT_MODEL, &file, InferMode::Compressed);
+    let server = BatchServer::start_with(
+        Arc::new(reg),
+        BatchConfig::solo(),
+        2,
+        Arc::new(swsc::coordinator::Metrics::new()),
+    );
+    assert_eq!(server.queue().capacity(), 2);
+
+    // A deliberately heavy request occupies the coalescer...
+    let slow = server
+        .submit(DEFAULT_MODEL, LinearRequest { name: "w".into(), x: Tensor::randn(&[8192, 512], &mut rng) })
+        .unwrap();
+    // ...while a burst overfills the depth-2 queue. Whatever the exact
+    // interleaving, the 4th try_submit cannot fit (at most the slow
+    // request has left the queue, leaving capacity for two).
+    let mut accepted = Vec::new();
+    let mut overloaded = 0;
+    for _ in 0..4 {
+        match server
+            .try_submit(DEFAULT_MODEL, LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 512]) })
+        {
+            Ok(rx) => accepted.push(rx),
+            Err(AdmissionError::Overloaded) => overloaded += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    assert!(overloaded >= 1, "depth-2 queue admitted a 4-deep burst");
+    assert!(accepted.len() <= 3);
+    assert!(slow.recv().unwrap().is_ok());
+    for rx in accepted {
+        assert!(rx.recv().unwrap().is_ok(), "admitted request must be served");
+    }
+    assert!(server.metrics().counter("serve.rejected_overloaded") >= 1);
+
+    // Shutdown is deterministic: the flag flips before the marker lands.
+    server.begin_shutdown();
+    let refused = server
+        .try_submit(DEFAULT_MODEL, LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 512]) });
+    assert_eq!(refused.err(), Some(AdmissionError::ShuttingDown));
+    server.shutdown();
+}
+
+/// `EvalService::begin_shutdown` + the batched path: new submissions are
+/// rejected, previously admitted ones are answered (served, or an
+/// explicit shutdown error — never a silent drop).
+#[test]
+fn eval_service_begin_shutdown_answers_everything() {
+    let d = 32;
+    let file = service_file(860, d);
+    let service = EvalService::start_with_swsc(
+        None,
+        ModelConfig::tiny(),
+        &file,
+        ServiceConfig::default(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(861);
+    let rxs: Vec<_> = (0..6)
+        .map(|_| {
+            service
+                .submit_linear(LinearRequest {
+                    name: "attn.wq".into(),
+                    x: Tensor::randn(&[2, d], &mut rng),
+                })
+                .unwrap()
+        })
+        .collect();
+    service.begin_shutdown();
+    match service.try_submit_linear(LinearRequest {
+        name: "attn.wq".into(),
+        x: Tensor::zeros(&[1, d]),
+    }) {
+        Err(AdmissionError::ShuttingDown) => {}
+        Err(e) => panic!("unexpected admission error: {e}"),
+        Ok(_) => panic!("admission after begin_shutdown must be rejected"),
+    }
+    for rx in rxs {
+        // Admitted before the marker ⇒ a real response (these were ahead
+        // of the shutdown marker, so they are served).
+        let resp = rx.recv().expect("responder dropped silently");
+        assert!(resp.is_ok(), "pre-shutdown request failed: {resp:?}");
+    }
+    service.shutdown();
+}
