@@ -66,6 +66,18 @@
 //!   then hard like the other gates.
 //! - The loadgen rows themselves (`loadgen_*_batched` / `_solo`) land in
 //!   the JSON with the new `p95_us` / `batch_mean` fields.
+//!
+//! ISSUE 6 additions:
+//!
+//! - `quantized_vs_f32_*` rows: the serving `apply` orientation through
+//!   `infer::QuantizedLinear` (grouped-int8 panels, dequantize-in-register
+//!   fused GEMM) against `infer::CompressedLinear` (f32 panels) on the
+//!   identical operator, both panel-warmed. Gate: quantized ≥ 1.2× f32 at
+//!   k ≤ n/8 on ops ≥ 512² — warn-only until `BENCH_baseline.json` is
+//!   committed, retry-once like the other gates.
+//! - Each row is annotated with `bytes_per_param` (actual serialized
+//!   quantized `.swsc` bytes ÷ `m·n`), and the quantized payload must be
+//!   ≤ 0.35× of the f32 factor payload — a deterministic storage gate.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -73,7 +85,8 @@ use swsc::bench::loadgen::{run_loadgen, LoadgenConfig};
 use swsc::bench::Bench;
 use swsc::compress::{compress_matrix, CompressedMatrix, SwscConfig};
 use swsc::exec::{self, ExecBackend, ExecConfig};
-use swsc::infer::{CompressedLinear, CompressedModel, InferMode};
+use swsc::infer::{CompressedLinear, CompressedModel, InferMode, QuantizedLinear};
+use swsc::quant::QuantConfig;
 use swsc::io::SwscFile;
 use swsc::serve::{BatchConfig, BatchServer, ModelRegistry, DEFAULT_MODEL};
 use swsc::io::{pack_u32, unpack_u32};
@@ -566,6 +579,70 @@ fn main() {
         }
     }
 
+    // ISSUE 6: quantized serving vs the f32 oracle. Both operators serve
+    // the same compressed matrix through the `apply` orientation with
+    // panels pre-warmed, so the comparison is pure steady-state kernel +
+    // panel-traffic: int8 codes dequantized in-register vs f32 panels.
+    // The storage axis rides along: each row is annotated with the actual
+    // serialized bytes per parameter, and the quantized payload is gated
+    // (deterministically) at ≤ 0.35× of the f32 factor payload.
+    bench.section("infer: quantized (int8 fused-dequant) vs f32 apply");
+    for &(n, k, r, b) in &[(512usize, 64usize, 16usize, 256usize), (1024, 128, 32, 256)] {
+        let c = synthetic_compressed(n, n, k, r, &mut rng);
+        let q = c.quantize(&QuantConfig::default());
+        let qlin = QuantizedLinear::from_matrix(&q);
+        let flin = CompressedLinear::from_matrix(&c);
+        let x = Tensor::randn(&[b, n], &mut rng);
+        let cfg = ExecConfig::with_threads(cmp_t);
+        std::hint::black_box(qlin.apply_with(&x, cfg));
+        std::hint::black_box(flin.apply_with(&x, cfg));
+        let op = format!("apply_{n}_k{k}_r{r}_b{b}");
+        let measure = |tag: &str| {
+            let qt = probe
+                .case_at(&format!("{op}_int8{tag}"), n, cmp_t, || qlin.apply_with(&x, cfg));
+            let ft =
+                probe.case_at(&format!("{op}_f32{tag}"), n, cmp_t, || flin.apply_with(&x, cfg));
+            (qt, ft)
+        };
+        let (mut qt, mut ft) = measure("");
+        if ft / qt.max(1e-12) < 1.2 {
+            // Retry-once policy, like the other gates.
+            let (qt2, ft2) = measure("_retry");
+            if ft2 / qt2.max(1e-12) > ft / qt.max(1e-12) {
+                (qt, ft) = (qt2, ft2);
+            }
+        }
+        let speedup =
+            bench.comparison_labeled("quantized_vs_f32", "int8", "f32", &op, n, cmp_t, qt, ft);
+        // Actual on-disk cost of what just served: one quantized entry,
+        // serialized for real, divided by the original parameter count.
+        let mut qfile = SwscFile::new();
+        qfile.quantized.insert("w".into(), q.clone());
+        let q_bytes = qfile.to_bytes().len() as f64;
+        bench.annotate_bytes_per_param(&format!("quantized_vs_f32_{op}"), q_bytes / (n * n) as f64);
+        let f32_payload = (4 * (n * k + n * r + r * n) + q.labels.len()) as f64;
+        let ratio = q_bytes / f32_payload;
+        println!(
+            "  int8 payload {q_bytes:.0} B = {ratio:.3}x of the f32 factor payload \
+             ({:.3} B/param)",
+            q_bytes / (n * n) as f64
+        );
+        if ratio > 0.35 {
+            regressions.push(format!(
+                "{op}: quantized payload {ratio:.3}x of f32 factors (> 0.35x storage gate)"
+            ));
+        }
+        if n >= 512 && k * 8 <= n && speedup < 1.2 {
+            let msg =
+                format!("{op}: quantized apply {speedup:.2}x vs f32 (< 1.2x throughput floor)");
+            if baseline_committed {
+                regressions.push(msg);
+            } else {
+                println!("  !! {msg} — warn-only until BENCH_baseline.json is committed");
+            }
+        }
+    }
+
     bench.section("label packing");
     let labels: Vec<u32> = (0..4096).map(|i| (i * 7) as u32 % 16).collect();
     bench.case_at("pack_4096_labels_4bit", 4096, 1, || pack_u32(&labels, 4));
@@ -627,9 +704,10 @@ fn main() {
     println!(
         "gates: pool within 10% of spawn, packed GEMM within 10% of blocked, \
          compressed-domain matmul ≥ 1.5x dense reconstruct+matmul (k ≤ n/8, r ≤ 32) \
-         on all ops ≥ 512², AND batched serving ≥ 1.5x solo throughput at ≥ 8 \
-         rows/request on ops ≥ 512 cols (warn-only until BENCH_baseline.json is \
-         committed)"
+         on all ops ≥ 512², batched serving ≥ 1.5x solo throughput at ≥ 8 \
+         rows/request on ops ≥ 512 cols, quantized apply ≥ 1.2x f32 at k ≤ n/8 on \
+         ops ≥ 512² (both warn-only until BENCH_baseline.json is committed), AND \
+         quantized payload ≤ 0.35x of the f32 factor payload"
     );
 
     // Bootstrap a missing baseline only from a gate-clean run (same policy

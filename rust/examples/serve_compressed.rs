@@ -16,9 +16,11 @@
 use std::sync::Arc;
 use swsc::compress::{CompressionPlan, ProjectorSet};
 use swsc::coordinator::{compress_model, EvalService, LinearRequest, ServiceConfig};
-use swsc::infer::{CompressedLinear, CompressedModel, InferMode};
+use swsc::exec::ExecConfig;
+use swsc::infer::{CompressedLinear, CompressedModel, InferMode, Precision, QuantizedLinear};
 use swsc::io::SwscFile;
 use swsc::model::{init_params, ModelConfig};
+use swsc::quant::QuantConfig;
 use swsc::tensor::Tensor;
 use swsc::util::rng::Rng;
 use swsc::util::timer::Stats;
@@ -112,6 +114,70 @@ fn main() -> anyhow::Result<()> {
         if let Ok(s) = Arc::try_unwrap(service) {
             s.shutdown();
         }
+    }
+
+    // Double compression: grouped-int8 factors + bit-packed labels, served
+    // through the fused dequantize-in-register kernel (no dense f32
+    // intermediate). Round-trip the version-2 container, then compare
+    // `Precision::Int8` against the f32 oracle on the same factors.
+    let mut qfile = SwscFile::new();
+    for (name, c) in &file.compressed {
+        qfile.quantized.insert(name.clone(), c.quantize(&QuantConfig::default()));
+    }
+    let qfile = SwscFile::from_bytes(&qfile.to_bytes())?;
+    let (q_bytes, f_bytes) = (qfile.to_bytes().len(), file.to_bytes().len());
+    println!(
+        "\nquantized container: {q_bytes} B vs {f_bytes} B f32-factor ({:.2}x payload)",
+        q_bytes as f64 / f_bytes.max(1) as f64,
+    );
+    if let Some((name, q)) = qfile.quantized.iter().next() {
+        let exec = ExecConfig::serial();
+        let qp = QuantizedLinear::from_matrix(q).apply_panel_bytes(exec);
+        let fp = CompressedLinear::from_matrix(&file.compressed[name]).apply_panel_bytes(exec);
+        println!("panel cache for {name}: {qp} B int8 vs {fp} B f32 ({:.2}x)", qp as f64 / fp as f64);
+    }
+
+    let int8 = CompressedModel::from_file_with(&qfile, InferMode::Compressed, Precision::Int8);
+    let oracle = CompressedModel::from_file_with(&qfile, InferMode::Compressed, Precision::F32);
+    let probe = Tensor::randn(&[batch_rows, cfg.d_model], &mut Rng::new(2));
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for name in &names {
+        let (yq, yf) = (int8.apply(name, &probe)?, oracle.apply(name, &probe)?);
+        for (a, b) in yq.data().iter().zip(yf.data()) {
+            num += f64::from(a - b).powi(2);
+            den += f64::from(*b).powi(2);
+        }
+    }
+    let rel = (num / den.max(1e-30)).sqrt();
+    println!("int8 vs f32 relative error across {} projectors: {rel:.2e}", names.len());
+    anyhow::ensure!(rel < 0.05, "quantized serving drifted from the f32 oracle: {rel:.2e}");
+
+    // Serve the quantized model through the service layer (Arc-shared
+    // int8 panels) and make sure throughput survives the trip.
+    let service = Arc::new(EvalService::start_with_swsc(
+        None,
+        cfg.clone(),
+        &qfile,
+        ServiceConfig {
+            infer_mode: InferMode::Compressed,
+            precision: Precision::Int8,
+            queue_capacity: 64,
+            ..Default::default()
+        },
+    )?);
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(7);
+    let reqs = 64usize;
+    for i in 0..reqs {
+        let name = names[i % names.len()].clone();
+        let x = Tensor::randn(&[batch_rows, cfg.d_model], &mut rng);
+        let resp = service.linear_blocking(LinearRequest { name, x })?;
+        anyhow::ensure!(resp.y.shape() == [batch_rows, cfg.d_model]);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("precision Int8: {reqs} linear requests in {wall:.3}s -> {:.0} req/s", reqs as f64 / wall);
+    if let Ok(s) = Arc::try_unwrap(service) {
+        s.shutdown();
     }
 
     println!("note: perplexity eval still needs `make artifacts` (fwd_eval takes dense params)");

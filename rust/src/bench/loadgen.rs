@@ -110,6 +110,7 @@ impl LoadgenReport {
             vs: None,
             p95_us: Some(self.p95_us),
             batch_mean: Some(self.batch_mean),
+            bytes_per_param: None,
         }
     }
 }

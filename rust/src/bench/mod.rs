@@ -8,8 +8,10 @@
 //! Each timed case is also recorded as a machine-readable
 //! [`BenchRecord`]; [`Bench::write_json`] dumps them as a JSON array
 //! (`op`, `size`, `threads`, `ns_per_iter`, plus `gflops` on flop-counted
-//! cases, `speedup`/`vs` on comparison rows, and `p95_us`/`batch_mean` on
-//! the serve-loadgen rows pushed via [`Bench::push_record`]) so
+//! cases, `speedup`/`vs` on comparison rows, `p95_us`/`batch_mean` on
+//! the serve-loadgen rows pushed via [`Bench::push_record`], and
+//! `bytes_per_param` on rows annotated via
+//! [`Bench::annotate_bytes_per_param`]) so
 //! successive PRs have a perf trajectory to diff against. [`Bench::compare_against_baseline`]
 //! reads a committed baseline JSON (`BENCH_baseline.json`, bootstrapped by
 //! the hotpath bench on first run) and prints per-op before/after ratios —
@@ -49,6 +51,11 @@ pub struct BenchRecord {
     /// Mean coalesced batch size (stacked activation rows per executed
     /// batch) on loadgen rows. `None` elsewhere.
     pub batch_mean: Option<f64>,
+    /// Storage cost of the weights the row served, in **bytes per
+    /// original parameter** (actual file payload ÷ `m·n`) — set on the
+    /// `quantized_vs_f32_*` rows so the perf trajectory carries the
+    /// compression axis next to the throughput axis. `None` elsewhere.
+    pub bytes_per_param: Option<f64>,
 }
 
 /// One benchmark group with shared formatting.
@@ -141,6 +148,7 @@ impl Bench {
             vs: None,
             p95_us: None,
             batch_mean: None,
+            bytes_per_param: None,
         });
         mean
     }
@@ -163,6 +171,17 @@ impl Bench {
             fmt_secs(r.ns_per_iter / 1e9),
         );
         self.records.borrow_mut().push(r);
+    }
+
+    /// Attach a bytes-per-parameter figure to the most recent record
+    /// whose op matches `op` — how the `quantized_vs_f32_*` rows carry
+    /// the storage axis alongside the timing the comparison recorded.
+    pub fn annotate_bytes_per_param(&self, op: &str, bytes: f64) {
+        let mut records = self.records.borrow_mut();
+        if let Some(r) = records.iter_mut().rev().find(|r| r.op == op) {
+            r.bytes_per_param = Some(bytes);
+            println!("bench {:<40} {bytes:.3} B/param", format!("{}/{op}", self.name));
+        }
     }
 
     /// Record a `pool_vs_spawn` comparison row for one op/size: the op's
@@ -214,6 +233,7 @@ impl Bench {
             vs: Some(base_name.to_string()),
             p95_us: None,
             batch_mean: None,
+            bytes_per_param: None,
         });
         speedup
     }
@@ -290,6 +310,9 @@ impl Bench {
             }
             if let Some(bm) = r.batch_mean {
                 s.push_str(&format!(", \"batch_mean\": {bm:.2}"));
+            }
+            if let Some(bp) = r.bytes_per_param {
+                s.push_str(&format!(", \"bytes_per_param\": {bp:.3}"));
             }
             s.push('}');
         }
@@ -424,6 +447,7 @@ mod tests {
             vs: None,
             p95_us: Some(987.6),
             batch_mean: Some(42.25),
+            bytes_per_param: None,
         });
         let recs = b.records();
         assert_eq!(recs.len(), 1);
@@ -441,6 +465,23 @@ mod tests {
         let line = body.lines().find(|l| l.contains("loadgen")).unwrap();
         assert_eq!(extract_json_num(line, "\"p95_us\": "), Some(987.6));
         assert_eq!(extract_json_num(line, "\"batch_mean\": "), Some(42.25));
+    }
+
+    #[test]
+    fn bytes_per_param_annotation_lands_in_json() {
+        let b = Bench::new("unit").with_iters(1);
+        b.comparison_labeled("quantized_vs_f32", "int8", "f32", "apply_64", 64, 1, 1e-3, 2e-3);
+        b.annotate_bytes_per_param("quantized_vs_f32_apply_64", 1.125);
+        b.annotate_bytes_per_param("no_such_op", 9.0); // silently ignored
+        let recs = b.records();
+        assert_eq!(recs[0].bytes_per_param, Some(1.125));
+        let path = std::env::temp_dir().join("swsc_bench_bpp.json");
+        b.write_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.contains("\"bytes_per_param\": 1.125"));
+        let line = body.lines().find(|l| l.contains("quantized_vs_f32")).unwrap();
+        assert_eq!(extract_json_num(line, "\"bytes_per_param\": "), Some(1.125));
     }
 
     #[test]

@@ -13,4 +13,4 @@ pub use plan::{
     kmeans_method_for_width, CompressionPlan, MatrixPlan, ProjectorSet, MINIBATCH_MIN_CHANNELS,
 };
 pub use stats::{matrix_stats, MatrixStats};
-pub use swsc::{compress_matrix, CompressedMatrix, SvdBackend, SwscConfig};
+pub use swsc::{compress_matrix, CompressedMatrix, QuantizedMatrix, SvdBackend, SwscConfig};

@@ -4,7 +4,8 @@
 use crate::exec::{self, ExecConfig};
 use crate::kmeans::{cluster_channels, KMeansConfig, Representative};
 use crate::linalg::{svd_jacobi, svd_randomized_with, truncate, Svd};
-use crate::quant::bits::{swsc_avg_bits, BitsBreakdown};
+use crate::quant::bits::{swsc_avg_bits, swsc_quantized_avg_bits, BitsBreakdown};
+use crate::quant::{QuantConfig, QuantizedTensor};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -131,6 +132,78 @@ impl CompressedMatrix {
         let (m, n) = self.shape;
         let dense_bits = (m * n) as f64 * 16.0;
         dense_bits / self.bits().total_bits as f64
+    }
+
+    /// Double-compress (PR 6): grouped int8 quantization of `R`, `A`, `B`
+    /// with per-(group, column) f32 scale/zero. The labels are shared
+    /// unchanged — quantization touches only the real-valued payloads.
+    pub fn quantize(&self, cfg: &QuantConfig) -> QuantizedMatrix {
+        QuantizedMatrix {
+            shape: self.shape,
+            labels: self.labels.clone(),
+            centroids: QuantizedTensor::quantize(&self.centroids, cfg),
+            factor_a: QuantizedTensor::quantize(&self.factor_a, cfg),
+            factor_b: QuantizedTensor::quantize(&self.factor_b, cfg),
+        }
+    }
+}
+
+/// A [`CompressedMatrix`] with its real-valued payloads stored as grouped
+/// int8 ([`QuantizedTensor`]) — the quantized `.swsc` section's in-memory
+/// form. Serving never dequantizes the full factors: `infer` packs the
+/// codes straight into fused-dequant GEMM panels. [`Self::dequantize`]
+/// is the f32 oracle path (and the `Precision::F32` loading mode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedMatrix {
+    /// Original shape `(m, n)`.
+    pub shape: (usize, usize),
+    /// Per-channel cluster id (`n` entries, each `< k`).
+    pub labels: Vec<u32>,
+    /// Quantized representatives (`m × k`).
+    pub centroids: QuantizedTensor,
+    /// Quantized left factor (`m × r`).
+    pub factor_a: QuantizedTensor,
+    /// Quantized right factor (`r × n`).
+    pub factor_b: QuantizedTensor,
+}
+
+impl QuantizedMatrix {
+    pub fn k(&self) -> usize {
+        self.centroids.cols()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.factor_a.cols()
+    }
+
+    /// Quantization group (identical across the three payloads).
+    pub fn group(&self) -> usize {
+        self.centroids.group()
+    }
+
+    /// Expand back to an f32 [`CompressedMatrix`] — the oracle route. The
+    /// expansion is `k + 2r` columns' worth of payload, never the dense
+    /// `m × n` matrix.
+    pub fn dequantize(&self) -> CompressedMatrix {
+        CompressedMatrix {
+            shape: self.shape,
+            labels: self.labels.clone(),
+            centroids: self.centroids.dequantize(),
+            factor_a: self.factor_a.dequantize(),
+            factor_b: self.factor_b.dequantize(),
+        }
+    }
+
+    /// Actual stored-bits accounting (int8 codes + group metadata +
+    /// packed labels).
+    pub fn bits(&self) -> BitsBreakdown {
+        let (m, n) = self.shape;
+        swsc_quantized_avg_bits(m, n, self.k(), self.rank(), self.group())
+    }
+
+    /// Bits per original weight element as stored.
+    pub fn avg_bits(&self) -> f64 {
+        self.bits().avg_bits
     }
 }
 
@@ -284,6 +357,52 @@ mod tests {
             0.0,
         )
         .unwrap();
+    }
+
+    #[test]
+    fn quantize_round_trip_is_close_and_smaller() {
+        let w = structured_weights(64, 64, 8, 99);
+        let c = compress_matrix(&w, &SwscConfig::new(8, 4));
+        let q = c.quantize(&QuantConfig { group: 16 });
+        assert_eq!((q.k(), q.rank(), q.group()), (8, 4, 16));
+        let back = q.dequantize();
+        assert_eq!(back.labels, c.labels);
+        // Per-element error bounded by each block's grid step.
+        for (t, b) in [
+            (&c.centroids, &back.centroids),
+            (&c.factor_a, &back.factor_a),
+            (&c.factor_b, &back.factor_b),
+        ] {
+            let scale = t.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            prop::assert_close(b.data(), t.data(), (scale / 255.0 * 16.0) as f64 + 1e-6, 0.0)
+                .unwrap();
+        }
+        // Stored bits: int8 + metadata beats the fp16 estimate and sits
+        // well under 0.35x of an f32 payload of the same counts.
+        assert!(q.bits().total_bits < c.bits().total_bits);
+        let f32_payload = 2 * c.bits().total_bits - c.bits().label_bits;
+        assert!(
+            (q.bits().total_bits as f64) < 0.35 * f32_payload as f64,
+            "{} vs 0.35x of {}",
+            q.bits().total_bits,
+            f32_payload
+        );
+        // Dequantized reconstruction still approximates W.
+        let mse = back.reconstruct().mse(&w);
+        let base = c.reconstruct().mse(&w);
+        assert!(mse < base + 0.05, "quantized mse {mse} vs f32 {base}");
+    }
+
+    #[test]
+    fn quantize_rank_zero() {
+        let w = structured_weights(24, 24, 4, 100);
+        let c = compress_matrix(&w, &SwscConfig::new(4, 0));
+        let q = c.quantize(&QuantConfig::default());
+        assert_eq!(q.rank(), 0);
+        let back = q.dequantize();
+        assert_eq!(back.factor_a.shape(), &[24, 0]);
+        assert_eq!(back.factor_b.shape(), &[0, 24]);
+        assert_eq!(back.reconstruct().shape(), w.shape());
     }
 
     #[test]

@@ -45,7 +45,7 @@
 //!   `infer` + `serve` contracts).
 
 use crate::coordinator::metrics::Metrics;
-use crate::infer::{CompressedModel, InferMode};
+use crate::infer::{CompressedModel, InferMode, Precision};
 use crate::io::SwscFile;
 use crate::model::ModelConfig;
 use crate::runtime::convert::literal_to_tensor;
@@ -88,6 +88,9 @@ pub struct ServiceConfig {
     /// How linear requests are served when the service holds a
     /// [`CompressedModel`] (see [`EvalService::start_with_swsc`]).
     pub infer_mode: InferMode,
+    /// Arithmetic for the compressed entries: [`Precision::F32`] (the
+    /// default oracle) or [`Precision::Int8`] fused-dequant serving.
+    pub precision: Precision,
     /// Micro-batch coalescing for linear requests: enabled by default,
     /// [`Batching::Disabled`] is the inline bitwise oracle.
     pub batching: Batching,
@@ -99,6 +102,7 @@ impl Default for ServiceConfig {
             queue_capacity: 256,
             max_batch_delay: Duration::from_millis(10),
             infer_mode: InferMode::Compressed,
+            precision: Precision::default(),
             batching: Batching::default(),
         }
     }
@@ -162,7 +166,7 @@ impl EvalService {
         } else {
             Vec::new()
         };
-        let model = CompressedModel::from_file(file, svc_cfg.infer_mode);
+        let model = CompressedModel::from_file_with(file, svc_cfg.infer_mode, svc_cfg.precision);
         Ok(Self::spawn(manifest, cfg, host_params, Some(model), svc_cfg))
     }
 

@@ -9,10 +9,11 @@ use std::sync::OnceLock;
 
 /// Below this many elements a gather (row/column copy by label) runs
 /// inline serial — pure copies, same bar as the transpose threshold.
-const MIN_PARALLEL_GATHER_ELEMS: usize = 1 << 16;
+/// Shared with the quantized twin so both gathers schedule identically.
+pub(crate) const MIN_PARALLEL_GATHER_ELEMS: usize = 1 << 16;
 
 /// Row granularity for parallel gathers (matches the GEMM band size).
-const GATHER_BAND: usize = 64;
+pub(crate) const GATHER_BAND: usize = 64;
 
 /// A [`CompressedMatrix`] prepared for compressed-domain products:
 /// `W ≈ R[labels] + A·B` served without ever materializing the dense
@@ -167,6 +168,15 @@ impl CompressedLinear {
     /// The label→bucket CSR index (introspection: bucket sizes, empties).
     pub fn index(&self) -> &BucketIndex {
         &self.index
+    }
+
+    /// Bytes held by the `apply`-orientation panel cache (R, A, B as
+    /// packed right operands), packing them first if needed. The f32
+    /// baseline for the quantized panel-footprint comparison.
+    pub fn apply_panel_bytes(&self, exec: ExecConfig) -> usize {
+        self.pb_r(exec).footprint_bytes()
+            + self.pb_a(exec).footprint_bytes()
+            + self.pb_b(exec).footprint_bytes()
     }
 
     /// Multiply-adds of one compressed-domain `W·X` at batch width `b`:

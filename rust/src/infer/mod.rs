@@ -66,10 +66,25 @@
 //! dense parameter literals, so perplexity evaluation restores host-side;
 //! the accelerator-side analog is the L1 `decode_matmul` Pallas kernel.)
 
+//!
+//! ## Precision
+//!
+//! PR 6 adds a second axis: [`Precision::Int8`] serves the `apply`
+//! orientation from grouped-int8 factors through [`QuantizedLinear`],
+//! whose GEMM panels hold the quantization *codes* — dequantization
+//! happens in-register inside the microkernel, so the factors are never
+//! expanded to f32 and the shared panel cache is ≈4× smaller.
+//! [`Precision::F32`] (the default) is the oracle, and the quantized
+//! path is bitwise equal to dequantize-then-f32 at any thread count;
+//! only against the pre-quantization weights is there a (documented,
+//! grid-step) tolerance.
+
 mod bucket;
 mod linear;
 mod model;
+mod quantized;
 
 pub use bucket::{bucket_sums, bucket_sums_indexed, bucket_sums_with, BucketIndex, CHANNEL_CHUNK};
 pub use linear::CompressedLinear;
-pub use model::{CompressedModel, InferMode};
+pub use model::{CompressedModel, InferMode, Precision};
+pub use quantized::QuantizedLinear;

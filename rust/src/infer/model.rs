@@ -2,8 +2,10 @@
 //! as a ready-to-serve linear operator.
 
 use super::linear::CompressedLinear;
+use super::quantized::QuantizedLinear;
 use crate::exec::{self, ExecConfig};
 use crate::io::SwscFile;
+use crate::quant::QuantConfig;
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -24,51 +26,122 @@ pub enum InferMode {
     Reconstructed,
 }
 
+/// Arithmetic the compressed entries are served with.
+///
+/// `F32` is the default and the oracle — the precision every pre-PR-6
+/// consumer got — mirroring `InferMode::Reconstructed`,
+/// `ExecBackend::SpawnPerCall`, `GemmKernel::Blocked`, and
+/// `Batching::Disabled` as the keep-the-old-path-as-baseline flag.
+/// `Int8` serves through [`QuantizedLinear`]'s fused dequantize-in-
+/// register panels: ≈¼ the panel-cache bytes, bitwise-deterministic
+/// within itself, within the documented grid-step bound of `F32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// f32 factors and f32 GEMM panels — the oracle path.
+    #[default]
+    F32,
+    /// Grouped-int8 factors, dequantized in-register inside the GEMM
+    /// microkernel; f32-entry files are quantized at load.
+    Int8,
+}
+
 /// A loaded `.swsc` container in serving form: compressed entries become
-/// [`CompressedLinear`] operators (or dense weights, per [`InferMode`]),
-/// dense entries pass through.
+/// [`CompressedLinear`] or [`QuantizedLinear`] operators (per
+/// [`InferMode`] and [`Precision`]), dense entries pass through.
 pub struct CompressedModel {
     mode: InferMode,
+    precision: Precision,
     linears: BTreeMap<String, CompressedLinear>,
+    quantized: BTreeMap<String, QuantizedLinear>,
     dense: BTreeMap<String, Tensor>,
 }
 
 impl CompressedModel {
-    /// Build the serving form of `file`. In [`InferMode::Compressed`] each
-    /// compressed entry becomes a [`CompressedLinear`] (GEMM panels pack
-    /// lazily on first use); in [`InferMode::Reconstructed`] it is
-    /// restored to a dense tensor up front.
+    /// [`CompressedModel::from_file_with`] at the default
+    /// [`Precision::F32`] — exactly the pre-quantization behavior.
     pub fn from_file(file: &SwscFile, mode: InferMode) -> CompressedModel {
+        Self::from_file_with(file, mode, Precision::F32)
+    }
+
+    /// Build the serving form of `file`.
+    ///
+    /// In [`InferMode::Compressed`] each compressed entry becomes a
+    /// serving operator whose flavor follows `precision`: at `F32`,
+    /// f32 entries stay [`CompressedLinear`] and quantized entries are
+    /// dequantized into one; at `Int8`, quantized entries serve their
+    /// codes directly through [`QuantizedLinear`] and f32 entries are
+    /// quantized at load (default [`QuantConfig`]). In
+    /// [`InferMode::Reconstructed`] everything is restored to a dense
+    /// tensor up front regardless of precision.
+    pub fn from_file_with(
+        file: &SwscFile,
+        mode: InferMode,
+        precision: Precision,
+    ) -> CompressedModel {
         let mut linears = BTreeMap::new();
+        let mut quantized = BTreeMap::new();
         let mut dense: BTreeMap<String, Tensor> =
             file.dense.iter().map(|(n, t)| (n.clone(), t.clone())).collect();
         match mode {
             InferMode::Compressed => {
                 for (name, c) in &file.compressed {
-                    linears.insert(name.clone(), CompressedLinear::from_matrix(c));
+                    match precision {
+                        Precision::F32 => {
+                            linears.insert(name.clone(), CompressedLinear::from_matrix(c));
+                        }
+                        Precision::Int8 => {
+                            let q = c.quantize(&QuantConfig::default());
+                            quantized.insert(name.clone(), QuantizedLinear::from_matrix(&q));
+                        }
+                    }
+                }
+                for (name, q) in &file.quantized {
+                    match precision {
+                        Precision::F32 => {
+                            let c = q.dequantize();
+                            linears.insert(name.clone(), CompressedLinear::from_matrix(&c));
+                        }
+                        Precision::Int8 => {
+                            quantized.insert(name.clone(), QuantizedLinear::from_matrix(q));
+                        }
+                    }
                 }
             }
             InferMode::Reconstructed => {
                 for (name, c) in &file.compressed {
                     dense.insert(name.clone(), c.reconstruct());
                 }
+                for (name, q) in &file.quantized {
+                    dense.insert(name.clone(), q.dequantize().reconstruct());
+                }
             }
         }
-        CompressedModel { mode, linears, dense }
+        CompressedModel { mode, precision, linears, quantized, dense }
     }
 
     pub fn mode(&self) -> InferMode {
         self.mode
     }
 
-    /// Matrices served in the compressed domain (0 in reconstructed mode).
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Matrices served in the compressed domain (0 in reconstructed
+    /// mode) — f32 and quantized operators combined.
     pub fn num_compressed(&self) -> usize {
-        self.linears.len()
+        self.linears.len() + self.quantized.len()
+    }
+
+    /// Matrices served through the fused-dequant quantized path.
+    pub fn num_quantized(&self) -> usize {
+        self.quantized.len()
     }
 
     /// Every servable name, in sorted order.
     pub fn names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.linears.keys().map(|s| s.as_str()).collect();
+        v.extend(self.quantized.keys().map(|s| s.as_str()));
         v.extend(self.dense.keys().map(|s| s.as_str()));
         v.sort_unstable();
         v
@@ -78,6 +151,9 @@ impl CompressedModel {
     pub fn shape(&self, name: &str) -> Option<(usize, usize)> {
         if let Some(lin) = self.linears.get(name) {
             return Some(lin.shape());
+        }
+        if let Some(q) = self.quantized.get(name) {
+            return Some(q.shape());
         }
         let t = self.dense.get(name)?;
         (t.ndim() == 2).then(|| (t.rows(), t.cols()))
@@ -100,6 +176,15 @@ impl CompressedModel {
                 x.shape()
             );
             return Ok(lin.apply_with(x, exec));
+        }
+        if let Some(q) = self.quantized.get(name) {
+            let (m, _) = q.shape();
+            anyhow::ensure!(
+                x.ndim() == 2 && x.cols() == m,
+                "`{name}` wants [b, {m}] activations, got {:?}",
+                x.shape()
+            );
+            return Ok(q.apply_with(x, exec));
         }
         if let Some(w) = self.dense.get(name) {
             anyhow::ensure!(w.ndim() == 2, "`{name}` is not a matrix");
@@ -129,6 +214,15 @@ impl CompressedModel {
                 x.shape()
             );
             return Ok(lin.matmul_with(x, exec));
+        }
+        if let Some(q) = self.quantized.get(name) {
+            let (_, n) = q.shape();
+            anyhow::ensure!(
+                x.ndim() == 2 && x.rows() == n,
+                "`{name}` wants [{n}, b] activations, got {:?}",
+                x.shape()
+            );
+            return Ok(q.matmul_with(x, exec));
         }
         if let Some(w) = self.dense.get(name) {
             anyhow::ensure!(w.ndim() == 2, "`{name}` is not a matrix");
@@ -187,6 +281,55 @@ mod tests {
         let got = model.apply("layers.0.attn.wv", &x).unwrap();
         let want = x.matmul(&file.dense["layers.0.attn.wv"]);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn int8_precision_serves_all_entries_quantized() {
+        let mut file = small_file();
+        // One entry arrives already quantized in the file, the rest are
+        // f32 and get quantized at load.
+        let pre = file.compressed.remove("layers.0.attn.wk").unwrap();
+        file.quantized.insert("layers.0.attn.wk".into(), pre.quantize(&QuantConfig::default()));
+        let int8 = CompressedModel::from_file_with(&file, InferMode::Compressed, Precision::Int8);
+        assert_eq!(int8.precision(), Precision::Int8);
+        assert_eq!(int8.num_quantized(), 2);
+        assert_eq!(int8.num_compressed(), 2);
+        assert_eq!(int8.names().len(), 3);
+        assert_eq!(int8.shape("layers.0.attn.wk"), Some((32, 32)));
+        let f32m = CompressedModel::from_file_with(&file, InferMode::Compressed, Precision::F32);
+        assert_eq!(f32m.num_quantized(), 0);
+        let mut rng = Rng::new(903);
+        let x = Tensor::randn(&[5, 32], &mut rng);
+        for name in int8.names() {
+            let a = int8.apply(name, &x).unwrap();
+            let b = f32m.apply(name, &x).unwrap();
+            // Int8 vs the F32 oracle: within the quantization grid-step
+            // bound — loose tolerance here; the tight per-element bound
+            // is pinned in infer::quantized's tests.
+            assert_close(a.data(), b.data(), 0.35, 0.35).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        let xn = Tensor::randn(&[32, 4], &mut rng);
+        assert!(int8.matmul("layers.0.attn.wk", &xn).is_ok());
+    }
+
+    #[test]
+    fn reconstructed_mode_restores_quantized_entries_dense() {
+        let mut file = small_file();
+        let pre = file.compressed.remove("layers.0.attn.wk").unwrap();
+        file.quantized.insert("layers.0.attn.wk".into(), pre.quantize(&QuantConfig::default()));
+        for precision in [Precision::F32, Precision::Int8] {
+            let m = CompressedModel::from_file_with(&file, InferMode::Reconstructed, precision);
+            assert_eq!(m.num_compressed(), 0);
+            assert_eq!(m.names().len(), 3);
+            assert_eq!(m.shape("layers.0.attn.wk"), Some((32, 32)));
+        }
+    }
+
+    #[test]
+    fn from_file_defaults_to_f32_precision() {
+        let model = CompressedModel::from_file(&small_file(), InferMode::Compressed);
+        assert_eq!(model.precision(), Precision::F32);
+        assert_eq!(model.num_quantized(), 0);
     }
 
     #[test]

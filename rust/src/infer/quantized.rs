@@ -1,0 +1,319 @@
+//! A double-compressed (grouped-int8) weight matrix as a serving-time
+//! linear operator — the quantized twin of [`CompressedLinear`].
+//!
+//! The serving orientation `Y = X·W = (X·R)[:, labels] + (X·A)·B` puts
+//! every weight factor on the **right** of its GEMM, so the factors live
+//! as [`PackedBQ`] panels: int8 codes plus per-group scale/zero lanes,
+//! dequantized in-register inside the microkernel
+//! ([`crate::tensor::gemm`]'s fused variant). No dense f32 copy of `R`,
+//! `A`, or `B` — let alone of `W` — is ever materialized on this path,
+//! and the panel cache holds roughly a quarter of the f32 panels' bytes.
+//!
+//! The other orientations (`matmul`, `t_matmul`, `matvec`) appear rarely
+//! in serving; they route through a lazily built f32
+//! [`CompressedLinear`] twin over the dequantized factors (`m·k + m·r +
+//! r·n` floats — still never the dense `m × n` weight). The fused
+//! kernel's dequantization is the same [`crate::quant::dequant_u8`]
+//! expression the twin's factors are built from, so `apply` here is
+//! **bitwise equal** to the twin's `apply` at any thread count.
+
+use super::linear::{CompressedLinear, GATHER_BAND, MIN_PARALLEL_GATHER_ELEMS};
+use crate::compress::QuantizedMatrix;
+use crate::exec::{self, ExecConfig};
+use crate::quant::QuantizedTensor;
+use crate::tensor::gemm::{self, ASrc, PackedBQ};
+use crate::tensor::{gemm_packed_bq_into, gemm_prepacked_bq_into, Tensor};
+use std::sync::OnceLock;
+
+/// A [`QuantizedMatrix`] prepared for fused-dequant compressed-domain
+/// products. Built once per matrix; the quantized panels pack lazily on
+/// first `apply` and are then shared by every later call (and, through
+/// `serve::ModelRegistry`'s `Arc`, by every model alias).
+pub struct QuantizedLinear {
+    matrix: QuantizedMatrix,
+    k: usize,
+    rank: usize,
+    // Right-operand panels for the activation-major `apply`:
+    pbq_r: OnceLock<PackedBQ>, // R — XC = X·R
+    pbq_a: OnceLock<PackedBQ>, // A — XA = X·A
+    pbq_b: OnceLock<PackedBQ>, // B — Y += XA·B
+    // f32 oracle for the non-`apply` orientations, built on first use.
+    twin: OnceLock<CompressedLinear>,
+}
+
+impl QuantizedLinear {
+    /// Build the serving form: validate labels and take a copy of the
+    /// quantized factors. Panels pack lazily; the operator is identical
+    /// at any thread count.
+    pub fn from_matrix(q: &QuantizedMatrix) -> QuantizedLinear {
+        let (_, n) = q.shape;
+        let k = q.k();
+        assert!(
+            q.labels.iter().all(|&l| (l as usize) < k),
+            "quantized matrix has labels out of range (k = {k})"
+        );
+        assert_eq!(q.labels.len(), n, "one label per channel");
+        QuantizedLinear {
+            k,
+            rank: q.rank(),
+            matrix: q.clone(),
+            pbq_r: OnceLock::new(),
+            pbq_a: OnceLock::new(),
+            pbq_b: OnceLock::new(),
+            twin: OnceLock::new(),
+        }
+    }
+
+    fn pack(qt: &QuantizedTensor, exec: ExecConfig) -> PackedBQ {
+        gemm::pack_bq(
+            qt.data(),
+            qt.scales(),
+            qt.zeros(),
+            qt.rows(),
+            qt.cols(),
+            qt.group(),
+            exec,
+        )
+    }
+
+    fn pbq_r(&self, exec: ExecConfig) -> &PackedBQ {
+        self.pbq_r.get_or_init(|| Self::pack(&self.matrix.centroids, exec))
+    }
+
+    fn pbq_a(&self, exec: ExecConfig) -> &PackedBQ {
+        self.pbq_a.get_or_init(|| Self::pack(&self.matrix.factor_a, exec))
+    }
+
+    fn pbq_b(&self, exec: ExecConfig) -> &PackedBQ {
+        self.pbq_b.get_or_init(|| Self::pack(&self.matrix.factor_b, exec))
+    }
+
+    /// The f32 [`CompressedLinear`] over the dequantized factors — the
+    /// oracle, and the route for the non-`apply` orientations.
+    pub fn f32_twin(&self) -> &CompressedLinear {
+        self.twin.get_or_init(|| CompressedLinear::from_matrix(&self.matrix.dequantize()))
+    }
+
+    /// Original dense shape `(m, n)`.
+    pub fn shape(&self) -> (usize, usize) {
+        self.matrix.shape
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Quantization group length (rows per scale/zero block).
+    pub fn group(&self) -> usize {
+        self.matrix.centroids.group()
+    }
+
+    /// Bytes held by the `apply`-orientation panel cache (int8 codes +
+    /// f32 scale/zero lanes), packing the panels first if needed.
+    /// Compare with [`CompressedLinear::apply_panel_bytes`].
+    pub fn apply_panel_bytes(&self, exec: ExecConfig) -> usize {
+        self.pbq_r(exec).footprint_bytes()
+            + self.pbq_a(exec).footprint_bytes()
+            + self.pbq_b(exec).footprint_bytes()
+    }
+
+    /// `Y = X·W` on the process-wide thread config (`x` is `b × m`).
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        self.apply_with(x, exec::global())
+    }
+
+    /// `Y = (X·R)[:, labels] + (X·A)·B` with `R`, `A`, `B` consumed as
+    /// quantized panels — dequantization happens in-register inside the
+    /// microkernel; no dense f32 intermediate of any factor exists.
+    /// Bitwise equal to `f32_twin().apply_with(x, exec)` at any
+    /// `exec.threads` (the fused kernel's contract).
+    pub fn apply_with(&self, x: &Tensor, exec: ExecConfig) -> Tensor {
+        let (m, n) = self.shape();
+        assert_eq!(x.cols(), m, "apply wants {m} activation columns, got {}", x.cols());
+        let bsz = x.rows();
+        let mut out = vec![0.0f32; bsz * n];
+        if bsz == 0 || n == 0 {
+            return Tensor::from_vec(&[bsz, n], out);
+        }
+        // Activation row panels packed once, reused for X·R and X·A —
+        // the same structure as `CompressedLinear::apply_with`.
+        let pa_x = gemm::pack_a(ASrc::Rows { data: x.data(), k: m }, bsz, m, exec);
+        let mut xc = vec![0.0f32; bsz * self.k];
+        gemm_prepacked_bq_into(&pa_x, self.pbq_r(exec), false, exec, &mut xc);
+        let gex = if bsz * n < MIN_PARALLEL_GATHER_ELEMS { ExecConfig::serial() } else { exec };
+        let (labels, k) = (&self.matrix.labels, self.k);
+        exec::for_row_bands(gex, &mut out, bsz, n, GATHER_BAND, |t0, band| {
+            for (tr, orow) in band.chunks_exact_mut(n).enumerate() {
+                let xrow = &xc[(t0 + tr) * k..][..k];
+                for (o, &l) in orow.iter_mut().zip(labels) {
+                    *o = xrow[l as usize];
+                }
+            }
+        });
+        if self.rank > 0 {
+            let mut xa = vec![0.0f32; bsz * self.rank];
+            gemm_prepacked_bq_into(&pa_x, self.pbq_a(exec), false, exec, &mut xa);
+            gemm_packed_bq_into(
+                ASrc::Rows { data: &xa, k: self.rank },
+                self.pbq_b(exec),
+                bsz,
+                true,
+                exec,
+                &mut out,
+            );
+        }
+        Tensor::from_vec(&[bsz, n], out)
+    }
+
+    /// `Y = W·X` (`x` is `n × b`) via the f32 twin's bucket-sum path.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        self.f32_twin().matmul(x)
+    }
+
+    /// [`QuantizedLinear::matmul`] with an explicit thread config.
+    pub fn matmul_with(&self, x: &Tensor, exec: ExecConfig) -> Tensor {
+        self.f32_twin().matmul_with(x, exec)
+    }
+
+    /// `Y = Wᵀ·X` (`x` is `m × b`) via the f32 twin's gather path.
+    pub fn t_matmul(&self, x: &Tensor) -> Tensor {
+        self.f32_twin().t_matmul(x)
+    }
+
+    /// [`QuantizedLinear::t_matmul`] with an explicit thread config.
+    pub fn t_matmul_with(&self, x: &Tensor, exec: ExecConfig) -> Tensor {
+        self.f32_twin().t_matmul_with(x, exec)
+    }
+
+    /// `W·x` for a single activation vector, via the f32 twin.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        self.f32_twin().matvec(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, CompressedMatrix, SwscConfig};
+    use crate::quant::QuantConfig;
+    use crate::util::rng::Rng;
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    fn quantized(m: usize, n: usize, k: usize, r: usize, group: usize, seed: u64) -> QuantizedMatrix {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(&[m, n], &mut rng);
+        compress_matrix(&w, &SwscConfig::new(k, r)).quantize(&QuantConfig { group })
+    }
+
+    #[test]
+    fn fused_apply_bitwise_equals_f32_twin() {
+        // The core contract: the fused-dequant path and the
+        // dequantize-then-f32 path agree to the bit, including at ragged
+        // group/tile remainders.
+        for (m, n, k, r, group) in
+            [(48, 80, 6, 4, 16), (33, 41, 5, 3, 7), (24, 24, 4, 0, 64), (64, 96, 8, 5, 100)]
+        {
+            let q = quantized(m, n, k, r, group, 810);
+            let lin = QuantizedLinear::from_matrix(&q);
+            let mut rng = Rng::new(811);
+            let x = Tensor::randn(&[9, m], &mut rng);
+            let fused = lin.apply(&x);
+            let oracle = lin.f32_twin().apply(&x);
+            assert_eq!(bits(&fused), bits(&oracle), "{m}x{n} k={k} r={r} g={group}");
+        }
+    }
+
+    #[test]
+    fn apply_is_thread_invariant_bitwise() {
+        let q = quantized(56, 72, 6, 4, 16, 812);
+        let lin = QuantizedLinear::from_matrix(&q);
+        let mut rng = Rng::new(813);
+        let x = Tensor::randn(&[11, 56], &mut rng);
+        let base = lin.apply_with(&x, ExecConfig::serial());
+        for threads in [2, 4, 8] {
+            let got = lin.apply_with(&x, ExecConfig::with_threads(threads));
+            assert_eq!(bits(&got), bits(&base), "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn other_orientations_route_through_twin() {
+        let q = quantized(40, 36, 5, 3, 8, 814);
+        let lin = QuantizedLinear::from_matrix(&q);
+        let mut rng = Rng::new(815);
+        let xn = Tensor::randn(&[36, 6], &mut rng);
+        assert_eq!(bits(&lin.matmul(&xn)), bits(&lin.f32_twin().matmul(&xn)));
+        let xm = Tensor::randn(&[40, 6], &mut rng);
+        assert_eq!(bits(&lin.t_matmul(&xm)), bits(&lin.f32_twin().t_matmul(&xm)));
+        let v: Vec<f32> = (0..36).map(|_| rng.normal() as f32).collect();
+        assert_eq!(lin.matvec(&v), lin.f32_twin().matvec(&v));
+    }
+
+    #[test]
+    fn quantized_panels_hold_about_a_quarter_of_f32_bytes() {
+        let q = quantized(128, 160, 16, 8, 64, 816);
+        let lin = QuantizedLinear::from_matrix(&q);
+        let f32_lin = CompressedLinear::from_matrix(&q.dequantize());
+        let exec = ExecConfig::serial();
+        let (qb, fb) = (lin.apply_panel_bytes(exec), f32_lin.apply_panel_bytes(exec));
+        let ratio = qb as f64 / fb as f64;
+        assert!(ratio < 0.32, "quantized panels {qb} B vs f32 {fb} B (ratio {ratio:.3})");
+    }
+
+    #[test]
+    fn zero_width_and_rank_zero_are_fine() {
+        let q = quantized(16, 20, 3, 0, 4, 817);
+        let lin = QuantizedLinear::from_matrix(&q);
+        assert_eq!(lin.apply(&Tensor::zeros(&[0, 16])).shape(), &[0, 20]);
+        assert_eq!(lin.rank(), 0);
+        assert_eq!(lin.group(), 4);
+        let mut rng = Rng::new(818);
+        let x = Tensor::randn(&[3, 16], &mut rng);
+        assert_eq!(bits(&lin.apply(&x)), bits(&lin.f32_twin().apply(&x)));
+    }
+
+    /// The fused path vs the ORIGINAL (pre-quantization) weights obeys
+    /// the documented per-element bound: each dequantized factor entry
+    /// sits within its block's grid step of the f32 value, so
+    /// `|Y_q − Y_f32| ≤ Σ_i |x_i| · step_i` accumulated along each dot.
+    #[test]
+    fn error_vs_f32_oracle_within_accumulated_step_bound() {
+        let mut rng = Rng::new(819);
+        let w = Tensor::randn(&[48, 64], &mut rng);
+        let c = compress_matrix(&w, &SwscConfig::new(6, 4));
+        let q = c.quantize(&QuantConfig { group: 16 });
+        let lin = QuantizedLinear::from_matrix(&q);
+        let f32_lin = CompressedLinear::from_matrix(&c);
+        let x = Tensor::randn(&[5, 48], &mut rng);
+        let got = lin.apply(&x);
+        let want = f32_lin.apply(&x);
+        // Loose closed-form bound: every factor's worst grid step times
+        // the activation L1 mass, once per serving term (R gather + A·B).
+        let step = |t: &crate::quant::QuantizedTensor| {
+            let mut s = 0.0f32;
+            for g in 0..t.rows().div_ceil(t.group()) {
+                for j in 0..t.cols() {
+                    s = s.max(t.step(g * t.group(), j).abs());
+                }
+            }
+            s
+        };
+        let smax = step(&q.centroids).max(step(&q.factor_a)).max(step(&q.factor_b));
+        let amax = x.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let bmax = c.factor_b.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let amat = c.factor_a.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        // R term: ≤ 48·|x|·step. A·B term: X·εA·B + X·A·εB + X·εA·εB,
+        // each ≤ 48·|x|·step · 4·(|B| or |A| or step) at rank 4.
+        let bound = 48.0 * amax * smax * (1.0 + 4.0 * (bmax + amat + smax)) + 1e-3;
+        for (g, w) in got.data().iter().zip(want.data()) {
+            assert!((g - w).abs() <= bound, "{g} vs {w} (bound {bound})");
+        }
+    }
+}

@@ -15,13 +15,26 @@
 //!              | centroids fp16 (m·k) | A fp16 (m·r) | B fp16 (r·n)
 //! u32 n_dense
 //!   per entry: name | u32 ndim | u64 dims... | f32 payload
+//! u32 n_quantized                                   (version ≥ 2)
+//!   per entry: name | u32 m | u32 n | u32 k | u32 r | u32 group
+//!              | packed labels (ceil(log2 k) bits each)
+//!              | per payload R (m×k), A (m×r), B (r×n):
+//!                  u8 codes | f32 scales (⌈rows/group⌉·cols)
+//!                           | f32 zeros  (⌈rows/group⌉·cols)
 //! trailer crc32
 //! ```
 //! fp16 here is real IEEE half-precision encode/decode (not just
-//! accounting), so the on-disk size *is* the avg-bits story.
+//! accounting), so the on-disk size *is* the avg-bits story. The
+//! version-2 quantized section (PR 6) stores double-compressed entries:
+//! grouped int8 payloads that the serving engine packs straight into
+//! fused-dequant GEMM panels, never expanding to f32. Version-1 files
+//! simply lack the section; files declaring a version newer than
+//! [`VERSION`] are rejected with a "needs a newer reader" error rather
+//! than a confusing parse failure further in.
 
-use crate::compress::CompressedMatrix;
+use crate::compress::{CompressedMatrix, QuantizedMatrix};
 use crate::io::{bitpack, crc32};
+use crate::quant::QuantizedTensor;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -29,13 +42,16 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SWSC";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// A compressed model file: compressed matrices + dense passthrough.
+/// A compressed model file: compressed matrices, dense passthrough, and
+/// (version ≥ 2) double-compressed quantized matrices. A name should
+/// appear in only one of the three maps.
 #[derive(Debug, Clone, Default)]
 pub struct SwscFile {
     pub compressed: BTreeMap<String, CompressedMatrix>,
     pub dense: BTreeMap<String, Tensor>,
+    pub quantized: BTreeMap<String, QuantizedMatrix>,
 }
 
 impl SwscFile {
@@ -44,11 +60,15 @@ impl SwscFile {
     }
 
     /// Restore a full named-tensor map: compressed entries are
-    /// reconstructed (`W' + A·B`), dense entries pass through.
+    /// reconstructed (`W' + A·B`), quantized entries dequantize then
+    /// reconstruct, dense entries pass through.
     pub fn restore_all(&self) -> BTreeMap<String, Tensor> {
         let mut out = BTreeMap::new();
         for (name, c) in &self.compressed {
             out.insert(name.clone(), c.reconstruct());
+        }
+        for (name, q) in &self.quantized {
+            out.insert(name.clone(), q.dequantize().reconstruct());
         }
         for (name, t) in &self.dense {
             out.insert(name.clone(), t.clone());
@@ -59,6 +79,12 @@ impl SwscFile {
     /// Total on-disk payload bytes of the compressed entries.
     pub fn compressed_payload_bytes(&self) -> usize {
         self.compressed.values().map(|c| (c.bits().total_bits as usize).div_ceil(8)).sum()
+    }
+
+    /// Total on-disk payload bytes of the quantized entries (int8 codes,
+    /// group metadata, packed labels).
+    pub fn quantized_payload_bytes(&self) -> usize {
+        self.quantized.values().map(|q| (q.bits().total_bits as usize).div_ceil(8)).sum()
     }
 
     pub fn to_bytes(&self) -> Vec<u8> {
@@ -94,6 +120,29 @@ impl SwscFile {
             }
         }
 
+        body.extend_from_slice(&(self.quantized.len() as u32).to_le_bytes());
+        for (name, q) in &self.quantized {
+            write_name(&mut body, name);
+            let (m, n) = q.shape;
+            let (k, r) = (q.k(), q.rank());
+            for v in [m as u32, n as u32, k as u32, r as u32, q.group() as u32] {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            let label_bits = ceil_log2(k).max(1);
+            let packed = bitpack::pack_u32(&q.labels, label_bits);
+            body.extend_from_slice(&(packed.len() as u64).to_le_bytes());
+            body.extend_from_slice(&packed);
+            for qt in [&q.centroids, &q.factor_a, &q.factor_b] {
+                body.extend_from_slice(qt.data());
+                for &s in qt.scales() {
+                    body.extend_from_slice(&s.to_le_bytes());
+                }
+                for &z in qt.zeros() {
+                    body.extend_from_slice(&z.to_le_bytes());
+                }
+            }
+        }
+
         let mut out = Vec::with_capacity(body.len() + 8);
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&body);
@@ -112,8 +161,14 @@ impl SwscFile {
         }
         let mut cur = body;
         let version = read_u32(&mut cur)?;
-        if version != VERSION {
-            bail!("unsupported SWSC version {version}");
+        if version > VERSION {
+            bail!(
+                "SWSC container declares version {version} but this reader supports up to \
+                 {VERSION} — the file needs a newer reader"
+            );
+        }
+        if version == 0 {
+            bail!("unsupported SWSC version 0");
         }
 
         let mut file = SwscFile::new();
@@ -178,6 +233,46 @@ impl SwscFile {
                 vals.push(f32::from_le_bytes(c.try_into().unwrap()));
             }
             file.dense.insert(name, Tensor::from_vec(&shape, vals));
+        }
+
+        // Version ≥ 2: the double-compressed (grouped int8) section.
+        if version >= 2 {
+            let n_quant = read_u32(&mut cur)? as usize;
+            for _ in 0..n_quant {
+                let name = read_name(&mut cur)?;
+                let m = read_u32(&mut cur)? as usize;
+                let n = read_u32(&mut cur)? as usize;
+                let k = read_u32(&mut cur)? as usize;
+                let r = read_u32(&mut cur)? as usize;
+                let group = read_u32(&mut cur)? as usize;
+                if n > 0 && k == 0 {
+                    bail!("matrix `{name}`: {n} channels but zero clusters");
+                }
+                if r > m.min(n) {
+                    bail!("matrix `{name}`: rank {r} exceeds min(m, n) = {}", m.min(n));
+                }
+                if group == 0 {
+                    bail!("matrix `{name}`: quantization group must be positive");
+                }
+                let label_bits = ceil_log2(k).max(1);
+                let packed_len = read_u64(&mut cur)? as usize;
+                let want_packed = (n * label_bits as usize).div_ceil(8);
+                if packed_len != want_packed {
+                    bail!("matrix `{name}`: packed label section {packed_len} B != {want_packed}");
+                }
+                let packed = take(&mut cur, packed_len)?;
+                let labels = bitpack::unpack_u32(packed, n, label_bits);
+                if labels.iter().any(|&l| l as usize >= k) {
+                    bail!("matrix `{name}`: label out of range (k = {k})");
+                }
+                let centroids = read_quantized(&mut cur, &name, m, k, group)?;
+                let factor_a = read_quantized(&mut cur, &name, m, r, group)?;
+                let factor_b = read_quantized(&mut cur, &name, r, n, group)?;
+                file.quantized.insert(
+                    name,
+                    QuantizedMatrix { shape: (m, n), labels, centroids, factor_a, factor_b },
+                );
+            }
         }
         Ok(file)
     }
@@ -290,6 +385,31 @@ fn read_f16(cur: &mut &[u8], count: usize) -> Result<Vec<f32>> {
 /// headers must surface as `Err`, not as an overflowed allocation.
 fn elems(name: &str, a: usize, b: usize) -> Result<usize> {
     a.checked_mul(b).with_context(|| format!("matrix `{name}`: payload shape {a}×{b} overflows"))
+}
+
+fn read_f32s(cur: &mut &[u8], count: usize) -> Result<Vec<f32>> {
+    let bytes = count.checked_mul(4).context("f32 payload size overflows")?;
+    let raw = take(cur, bytes)?;
+    Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// One grouped-int8 payload off the wire: u8 codes, then f32 scales and
+/// zeros (`⌈rows/group⌉ × cols` each). Geometry re-validated by
+/// [`QuantizedTensor::from_parts`] — `Err`, never a panic.
+fn read_quantized(
+    cur: &mut &[u8],
+    name: &str,
+    rows: usize,
+    cols: usize,
+    group: usize,
+) -> Result<QuantizedTensor> {
+    let count = elems(name, rows, cols)?;
+    let codes = take(cur, count)?.to_vec();
+    let mcount = elems(name, rows.div_ceil(group), cols)?;
+    let scales = read_f32s(cur, mcount)?;
+    let zeros = read_f32s(cur, mcount)?;
+    QuantizedTensor::from_parts(rows, cols, group, codes, scales, zeros)
+        .with_context(|| format!("matrix `{name}`: quantized payload"))
 }
 
 fn write_name(out: &mut Vec<u8>, name: &str) {
@@ -550,5 +670,135 @@ mod tests {
         assert_eq!(all.len(), 2);
         assert_eq!(all["wv"], w);
         assert_eq!(all["wq"].shape(), w.shape());
+    }
+
+    // --- version-2 quantized section ----------------------------------
+
+    use crate::quant::QuantConfig;
+
+    fn quantized_file(group: usize) -> SwscFile {
+        let mut rng = Rng::new(136);
+        let w = Tensor::randn(&[24, 24], &mut rng);
+        let c = compress_matrix(&w, &SwscConfig::new(5, 2));
+        let mut file = SwscFile::new();
+        file.quantized.insert("w".into(), c.quantize(&QuantConfig { group }));
+        file
+    }
+
+    #[test]
+    fn quantized_round_trip_is_bitwise() {
+        for group in [1usize, 7, 24, 64] {
+            let file = quantized_file(group);
+            let restored = SwscFile::from_bytes(&file.to_bytes()).unwrap();
+            assert_eq!(restored.quantized.len(), 1);
+            let (orig, back) = (&file.quantized["w"], &restored.quantized["w"]);
+            // u8 codes and f32 LE metadata are exact on the wire: the
+            // round trip is bit-identical, so the fused serving path
+            // computes identical results before and after save/load.
+            assert_eq!(back, orig, "group {group}");
+            assert_eq!(back.group(), group);
+        }
+    }
+
+    #[test]
+    fn quantized_restore_all_reconstructs() {
+        let file = quantized_file(8);
+        let all = file.restore_all();
+        assert_eq!(all["w"].shape(), &[24, 24]);
+        let payload = file.quantized_payload_bytes();
+        assert!(payload > 0);
+        // int8 + metadata at group 8 ≈ 9 + 8/... bits/elem — below fp16.
+        let fp16 = file.quantized["w"].dequantize().bits().total_bits as usize / 8;
+        assert!(payload < fp16, "quantized {payload} B !< fp16 {fp16} B");
+    }
+
+    #[test]
+    fn newer_version_needs_newer_reader() {
+        let file = quantized_file(8);
+        let mut bytes = file.to_bytes();
+        patch_u32(&mut bytes, 4, VERSION + 1);
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("needs a newer reader"), "{err}");
+        assert!(err.contains(&format!("version {}", VERSION + 1)), "{err}");
+
+        // Version 0 is still plain unsupported, not "newer".
+        let mut bytes = file.to_bytes();
+        patch_u32(&mut bytes, 4, 0);
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unsupported SWSC version 0"), "{err}");
+    }
+
+    #[test]
+    fn version_1_files_without_quantized_section_load() {
+        // A v1 container is today's layout minus the trailing
+        // n_quantized word: strip it, stamp version 1, re-trailer.
+        let mut rng = Rng::new(137);
+        let w = Tensor::randn(&[16, 16], &mut rng);
+        let mut file = SwscFile::new();
+        file.compressed.insert("wq".into(), compress_matrix(&w, &SwscConfig::new(4, 2)));
+        let v2 = file.to_bytes();
+        let mut v1 = v2[..v2.len() - 8].to_vec(); // drop n_quantized + crc
+        patch_u32(&mut v1, 4, 1);
+        let crc = crate::io::crc32(&v1[4..]);
+        v1.extend_from_slice(&crc.to_le_bytes());
+        let restored = SwscFile::from_bytes(&v1).unwrap();
+        assert_eq!(restored.compressed.len(), 1);
+        assert!(restored.quantized.is_empty());
+    }
+
+    /// One-quantized-entry container offsets: magic(4) version(4)
+    /// n_comp(4) n_dense(4) n_quant(4) name_len(4) name(1) → m n k r group.
+    fn one_quantized_entry_bytes() -> (Vec<u8>, usize) {
+        let bytes = quantized_file(8).to_bytes();
+        (bytes, 4 + 4 + 4 + 4 + 4 + 4 + 1)
+    }
+
+    #[test]
+    fn quantized_zero_group_rejected() {
+        let (mut bytes, header_off) = one_quantized_entry_bytes();
+        patch_u32(&mut bytes, header_off + 16, 0); // group = 0
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("quantization group"), "{err}");
+    }
+
+    #[test]
+    fn quantized_label_out_of_range_rejected() {
+        let (mut bytes, header_off) = one_quantized_entry_bytes();
+        // Packed labels start after m,n,k,r,group (20 B) + packed_len (8 B).
+        bytes[header_off + 28] = 0xFF; // 3-bit codes 7,7,… ≥ k = 5
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("label out of range"), "{err}");
+    }
+
+    #[test]
+    fn quantized_rank_and_cluster_headers_validated() {
+        let (mut bytes, header_off) = one_quantized_entry_bytes();
+        patch_u32(&mut bytes, header_off + 12, 10_000); // r ≫ min(m, n)
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("rank"), "{err}");
+
+        let (mut bytes, header_off) = one_quantized_entry_bytes();
+        patch_u32(&mut bytes, header_off + 8, 0); // k = 0 with n > 0
+        recrc(&mut bytes);
+        let err = SwscFile::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("zero clusters"), "{err}");
+    }
+
+    #[test]
+    fn quantized_truncated_payload_rejected() {
+        let (bytes, _) = one_quantized_entry_bytes();
+        let mut cut = bytes[..bytes.len() - 20].to_vec();
+        let body_end = cut.len();
+        cut.extend_from_slice(&[0u8; 4]);
+        let crc = crate::io::crc32(&cut[4..body_end]);
+        let end = cut.len() - 4;
+        cut[end..].copy_from_slice(&crc.to_le_bytes());
+        let err = SwscFile::from_bytes(&cut).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
     }
 }

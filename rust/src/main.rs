@@ -21,8 +21,8 @@ use swsc::coordinator::compress_model;
 use swsc::eval::Evaluator;
 use swsc::io::{Checkpoint, SwscFile};
 use swsc::model::{init_params, ModelConfig};
-use swsc::quant::{rtn_quantize, RtnConfig};
-use swsc::report::{render_table1, render_table2, Table1Row};
+use swsc::quant::{rtn_quantize, QuantConfig, RtnConfig};
+use swsc::report::{render_storage, render_table1, render_table2, StorageRow, Table1Row};
 use swsc::runtime::{ArtifactManifest, Engine};
 use swsc::text::{BpeTokenizer, CorpusConfig, Dataset, SyntheticCorpus};
 use swsc::train::{LrSchedule, Trainer};
@@ -67,6 +67,7 @@ fn print_help() {
          commands:\n\
            train     --preset small --steps 300 --out runs/default [--artifacts artifacts]\n\
            compress  --ckpt runs/default/model.swck --proj qk|mlp --bits 2 --out model.swsc\n\
+                     [--precision f32|int8 --group 64]  (int8 = grouped-int8 factors)\n\
            eval      --ckpt model.swck | --swsc model.swsc  [--preset small]\n\
            table1    --ckpt runs/default/model.swck [--bits 3,2] [--out table1.txt]\n\
            table2    [--m 4096]\n\
@@ -190,6 +191,12 @@ fn cmd_compress(opts: &Opts) -> Result<()> {
     let out = PathBuf::from(opt(opts, "out", "model.swsc"));
     let workers: usize = opt(opts, "workers", "8").parse()?;
     let seed: u64 = opt(opts, "seed", "42").parse()?;
+    let precision = opt(opts, "precision", "f32");
+    let group: usize = opt(opts, "group", "64").parse()?;
+    anyhow::ensure!(
+        matches!(precision, "f32" | "int8"),
+        "unknown --precision `{precision}` (f32|int8)"
+    );
 
     let ck = Checkpoint::load(&ckpt)?;
     let plan = CompressionPlan::for_target_bits(&ck.shapes(), proj, bits, 0.5, seed);
@@ -199,13 +206,51 @@ fn cmd_compress(opts: &Opts) -> Result<()> {
     for s in &outcome.stats {
         println!("  {s}");
     }
-    outcome.file.save(&out)?;
+    let mut file = outcome.file;
+    if precision == "int8" {
+        // Double compression: re-store the factors as grouped int8. The
+        // serving path consumes the codes directly (fused dequant GEMM).
+        let names: Vec<String> = file.compressed.keys().cloned().collect();
+        for name in names {
+            let c = file.compressed.remove(&name).expect("listed name present");
+            file.quantized.insert(name, c.quantize(&QuantConfig { group }));
+        }
+    }
+    file.save(&out)?;
+    let file_bytes = std::fs::metadata(&out)?.len() as usize;
     println!(
         "wrote {} ({}) in {:.2}s",
         out.display(),
-        swsc::util::human_bytes(std::fs::metadata(&out)?.len() as usize),
+        swsc::util::human_bytes(file_bytes),
         outcome.wall_seconds
     );
+
+    // Storage accounting: per-entry avg-bits estimates, then the actual
+    // bytes-per-parameter of the file just written.
+    let mut rows: Vec<StorageRow> = Vec::new();
+    let mut total_params = 0usize;
+    for (name, c) in &file.compressed {
+        rows.push(StorageRow {
+            name: name.clone(),
+            shape: c.shape,
+            k: c.k(),
+            rank: c.rank(),
+            group: None,
+        });
+        total_params += c.shape.0 * c.shape.1;
+    }
+    for (name, q) in &file.quantized {
+        rows.push(StorageRow {
+            name: name.clone(),
+            shape: q.shape,
+            k: q.k(),
+            rank: q.rank(),
+            group: Some(q.group()),
+        });
+        total_params += q.shape.0 * q.shape.1;
+    }
+    total_params += file.dense.values().map(|t| t.len()).sum::<usize>();
+    print!("{}", render_storage(&rows, file_bytes, total_params));
     Ok(())
 }
 

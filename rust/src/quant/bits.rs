@@ -44,6 +44,29 @@ pub fn rtn_avg_bits(m: usize, _n: usize, b: u32) -> f64 {
     b as f64 + 32.0 / m as f64
 }
 
+/// Actual stored bits for a *quantized* `.swsc` entry (PR 6): int8 codes
+/// for `R` (`m × k`), `A` (`m × r`), `B` (`r × n`) plus one f32
+/// scale + zero per `group`-row column block of each factor, and labels
+/// bit-packed to `⌈log2 k⌉` bits. This is what the container serializes —
+/// compare against [`swsc_avg_bits`]'s fp16 estimate.
+pub fn swsc_quantized_avg_bits(
+    m: usize,
+    n: usize,
+    k: usize,
+    r: usize,
+    group: usize,
+) -> BitsBreakdown {
+    let group = group.max(1);
+    // 64 bits of scale+zero metadata per (group, column) block.
+    let meta = |rows: usize, cols: usize| (rows.div_ceil(group) * cols) as u64 * 64;
+    let centroid_bits = (m * k) as u64 * 8 + meta(m, k);
+    let label_bits = n as u64 * ceil_log2(k) as u64;
+    let factor_bits = ((m + n) * r) as u64 * 8 + meta(m, r) + meta(r, n);
+    let total_bits = centroid_bits + label_bits + factor_bits;
+    let avg_bits = total_bits as f64 / (m as f64 * n as f64).max(1.0);
+    BitsBreakdown { centroid_bits, label_bits, factor_bits, total_bits, avg_bits }
+}
+
 /// Choose `(k, r)` for a target average-bits budget on an `m × n` matrix,
 /// splitting the budget between clusters and rank according to
 /// `rank_share ∈ [0, 1]` (the paper's Table II uses an even split:
@@ -129,6 +152,30 @@ mod tests {
         assert_eq!(ceil_log2(3), 2);
         assert_eq!(ceil_log2(256), 8);
         assert_eq!(ceil_log2(257), 9);
+    }
+
+    #[test]
+    fn quantized_bits_vs_fp16_estimate() {
+        // int8 codes + 64/group metadata ≈ 9 bits/elem at group 64, vs 16
+        // for the fp16 estimate: well under the 0.35x-of-f32 acceptance
+        // bound (9/32 ≈ 0.28) and a ~1.7x shrink vs fp16.
+        let q = swsc_quantized_avg_bits(4096, 4096, 256, 128, 64);
+        let e = swsc_avg_bits(4096, 4096, 256, 128);
+        assert_eq!(q.label_bits, e.label_bits);
+        let ratio = q.total_bits as f64 / e.total_bits as f64;
+        assert!(ratio > 0.5 && ratio < 0.6, "int8/fp16 ratio {ratio}");
+        // Payload share vs f32 (32 bits/elem-equivalent of the same counts).
+        let f32_bits = 2.0 * e.total_bits as f64 - e.label_bits as f64;
+        assert!(q.total_bits as f64 / f32_bits < 0.35, "vs f32: {}", q.total_bits as f64 / f32_bits);
+    }
+
+    #[test]
+    fn quantized_bits_ragged_groups() {
+        // 10-row factors at group 4 -> 3 groups per column.
+        let q = swsc_quantized_avg_bits(10, 6, 4, 2, 4);
+        assert_eq!(q.centroid_bits, (10 * 4 * 8 + 3 * 4 * 64) as u64);
+        assert_eq!(q.factor_bits, ((10 + 6) * 2 * 8 + 3 * 2 * 64 + 6 * 64) as u64);
+        assert_eq!(q.label_bits, 6 * 2);
     }
 
     #[test]

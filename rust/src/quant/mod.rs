@@ -1,9 +1,13 @@
-//! Quantization: the RTN baseline the paper compares against, plus the
+//! Quantization: the RTN baseline the paper compares against, the
 //! average-bits accounting used by Table II and by the Table-I budget
-//! matching (SWSC and RTN are compared *at equal storage*).
+//! matching (SWSC and RTN are compared *at equal storage*), and the
+//! grouped int8 storage layer ([`QuantizedTensor`]) behind the quantized
+//! `.swsc` section and its fused dequantize-in-register serving path.
 
 pub mod bits;
 pub mod rtn;
 
-pub use bits::{rtn_avg_bits, swsc_avg_bits, swsc_avg_bits_paper, BitsBreakdown};
-pub use rtn::{rtn_quantize, RtnConfig, RtnMode};
+pub use bits::{
+    rtn_avg_bits, swsc_avg_bits, swsc_avg_bits_paper, swsc_quantized_avg_bits, BitsBreakdown,
+};
+pub use rtn::{dequant_u8, rtn_quantize, QuantConfig, QuantizedTensor, RtnConfig, RtnMode};

@@ -1,12 +1,22 @@
-//! Round-to-nearest (RTN) quantization — the paper's baseline.
+//! Round-to-nearest (RTN) quantization — the paper's baseline, plus the
+//! grouped int8 storage path the quantized `.swsc` section uses.
 //!
 //! Per-channel (per-column) affine quantization to `bits` levels: each
 //! channel stores its own scale/zero-point (fp16-equivalent in the bit
 //! accounting) and every weight is rounded to the nearest level. This is
 //! the standard weight-only PTQ baseline; at 2 bits it collapses exactly as
 //! the paper's Table I shows.
+//!
+//! [`QuantizedTensor`] is the *storage* variant: u8 codes with one f32
+//! scale/zero per (`group` rows × one column) block, the representation
+//! the fused dequantize-in-register GEMM (`tensor::gemm::PackedBQ`)
+//! serves directly. Groups run down each column — the GEMM inner
+//! dimension when the factor is a right operand — so a microkernel
+//! panel crosses group boundaries only along k, never along the SIMD
+//! lanes.
 
 use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
 
 /// Symmetric (zero-point fixed at mid-range of signed levels) vs asymmetric
 /// (min/max affine) RTN.
@@ -47,6 +57,174 @@ pub fn rtn_quantize(w: &Tensor, cfg: &RtnConfig) -> Tensor {
         out.set_col(j, &deq_col);
     }
     out
+}
+
+/// Grouped int8 quantization settings for the quantized `.swsc` section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantConfig {
+    /// Rows per quantization group (per column); each group stores one
+    /// f32 scale and one f32 zero-point. Smaller groups track outliers
+    /// tighter at higher metadata cost: stored bits per element are
+    /// `8 + 64/group` (9.0 at the default 64).
+    pub group: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig { group: 64 }
+    }
+}
+
+/// The one dequantization expression. `dequantize`, the fused GEMM
+/// panels (`tensor::gemm::PackedBQ`), and the round-trip tests all call
+/// this exact function, so every quantized path produces bitwise
+/// identical f32 values from the same codes.
+#[inline(always)]
+pub fn dequant_u8(code: u8, scale: f32, zero: f32) -> f32 {
+    (code as f32 - zero) * scale
+}
+
+/// Row-major matrix stored as u8 codes with per-(group, column) f32
+/// affine parameters: `value ≈ (code − zero) · scale`. Group `g` of
+/// column `j` covers rows `g·group .. min((g+1)·group, rows)` — the last
+/// group of each column may be ragged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedTensor {
+    rows: usize,
+    cols: usize,
+    group: usize,
+    /// u8 codes, row-major `rows × cols`.
+    data: Vec<u8>,
+    /// Per-group scales, row-major `ngroups × cols`.
+    scales: Vec<f32>,
+    /// Per-group zero-points, row-major `ngroups × cols`.
+    zeros: Vec<f32>,
+}
+
+impl QuantizedTensor {
+    /// Quantize `t` with asymmetric 256-level affine grids, one grid per
+    /// (group, column) block. Constant blocks encode *exactly* (code 0,
+    /// `scale = 1`, `zero = −v`); non-finite inputs are not preserved.
+    pub fn quantize(t: &Tensor, cfg: &QuantConfig) -> QuantizedTensor {
+        assert!(cfg.group > 0, "quantization group must be positive");
+        let (rows, cols) = (t.rows(), t.cols());
+        let ngroups = rows.div_ceil(cfg.group.max(1));
+        let mut data = vec![0u8; rows * cols];
+        let mut scales = vec![0.0f32; ngroups * cols];
+        let mut zeros = vec![0.0f32; ngroups * cols];
+        let d = t.data();
+        for g in 0..ngroups {
+            let r0 = g * cfg.group;
+            let r1 = (r0 + cfg.group).min(rows);
+            for j in 0..cols {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for i in r0..r1 {
+                    let v = d[i * cols + j];
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let (scale, zero);
+                if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+                    // Constant (or degenerate) block: `(0 − zero)·scale = v`
+                    // reproduces the value exactly — codes stay 0.
+                    let v = if lo.is_finite() { lo } else { 0.0 };
+                    scale = 1.0;
+                    zero = -v;
+                } else {
+                    scale = (hi - lo) / 255.0;
+                    zero = (-lo / scale).round();
+                    for i in r0..r1 {
+                        let v = d[i * cols + j];
+                        data[i * cols + j] = (v / scale + zero).round().clamp(0.0, 255.0) as u8;
+                    }
+                }
+                scales[g * cols + j] = scale;
+                zeros[g * cols + j] = zero;
+            }
+        }
+        QuantizedTensor { rows, cols, group: cfg.group, data, scales, zeros }
+    }
+
+    /// Rebuild from raw parts (the `.swsc` reader); validates the
+    /// geometry with `Err`, never panics.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        group: usize,
+        data: Vec<u8>,
+        scales: Vec<f32>,
+        zeros: Vec<f32>,
+    ) -> Result<QuantizedTensor> {
+        ensure!(group > 0, "quantization group must be positive, got 0");
+        let ngroups = rows.div_ceil(group);
+        ensure!(
+            data.len() == rows * cols,
+            "quantized data holds {} codes for a {rows}x{cols} matrix",
+            data.len()
+        );
+        ensure!(
+            scales.len() == ngroups * cols && zeros.len() == ngroups * cols,
+            "quantized metadata holds {} scales / {} zeros, want {} ({} groups x {cols} cols)",
+            scales.len(),
+            zeros.len(),
+            ngroups * cols,
+            ngroups
+        );
+        Ok(QuantizedTensor { rows, cols, group, data, scales, zeros })
+    }
+
+    /// Dequantize into a dense f32 tensor via [`dequant_u8`].
+    pub fn dequantize(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        let o = out.data_mut();
+        for i in 0..self.rows {
+            let g = i / self.group;
+            for j in 0..self.cols {
+                let scale = self.scales[g * self.cols + j];
+                let zero = self.zeros[g * self.cols + j];
+                o[i * self.cols + j] = dequant_u8(self.data[i * self.cols + j], scale, zero);
+            }
+        }
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Groups per column: `ceil(rows / group)`.
+    pub fn ngroups(&self) -> usize {
+        self.rows.div_ceil(self.group)
+    }
+
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    pub fn zeros(&self) -> &[f32] {
+        &self.zeros
+    }
+
+    /// Per-element worst-case absolute reconstruction error for the block
+    /// holding `(row, col)`: one affine step, plus clamp slack at the grid
+    /// edges — `scale` bounds both (constant blocks are exact).
+    pub fn step(&self, row: usize, col: usize) -> f32 {
+        let g = row / self.group;
+        self.scales[g * self.cols + col].abs()
+    }
 }
 
 fn quantize_channel_asym(col: &[f32], levels: f32) -> (Vec<f32>, f32, f32) {
@@ -159,5 +337,81 @@ mod tests {
         let w = Tensor::from_vec(&[4, 1], vec![-1.0, 0.0, 0.5, 1.0]);
         let q = rtn_quantize(&w, &RtnConfig { bits: 4, mode: RtnMode::Symmetric });
         assert_eq!(q.data()[1], 0.0);
+    }
+
+    #[test]
+    fn grouped_round_trip_within_per_block_step() {
+        // Ragged shapes and group sizes, incl. group > rows and group 1.
+        prop::check(
+            "grouped int8 round trip",
+            91,
+            48,
+            |r| {
+                let rows = 1 + r.below(40);
+                let cols = 1 + r.below(9);
+                let group = 1 + r.below(rows + 8);
+                let mut rng = Rng::new(r.next_u64());
+                (Tensor::randn(&[rows, cols], &mut rng), group)
+            },
+            |(w, group)| {
+                let q = QuantizedTensor::quantize(w, &QuantConfig { group: *group });
+                let back = q.dequantize();
+                for i in 0..w.rows() {
+                    for j in 0..w.cols() {
+                        let err = (w.at(i, j) - back.at(i, j)).abs();
+                        let bound = q.step(i, j) + 1e-5 + 1e-6 * w.at(i, j).abs();
+                        if err > bound {
+                            return Err(format!(
+                                "({i},{j}): |{} - {}| = {err} > step {bound}",
+                                w.at(i, j),
+                                back.at(i, j)
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn grouped_constant_blocks_are_exact() {
+        let w = Tensor::full(&[13, 3], -7.5);
+        let q = QuantizedTensor::quantize(&w, &QuantConfig { group: 4 });
+        assert_eq!(q.dequantize(), w);
+        assert_eq!(q.ngroups(), 4); // 13 rows / group 4, ragged tail of 1
+        assert_eq!(q.step(0, 0), 1.0); // constant fallback grid
+    }
+
+    #[test]
+    fn grouped_parts_round_trip_and_validation() {
+        let mut rng = Rng::new(85);
+        let w = Tensor::randn(&[10, 3], &mut rng);
+        let q = QuantizedTensor::quantize(&w, &QuantConfig { group: 4 });
+        let rebuilt = QuantizedTensor::from_parts(
+            q.rows(),
+            q.cols(),
+            q.group(),
+            q.data().to_vec(),
+            q.scales().to_vec(),
+            q.zeros().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt, q);
+        assert!(QuantizedTensor::from_parts(10, 3, 0, vec![], vec![], vec![]).is_err());
+        assert!(QuantizedTensor::from_parts(10, 3, 4, vec![0; 29], vec![0.0; 9], vec![0.0; 9])
+            .is_err());
+        assert!(QuantizedTensor::from_parts(10, 3, 4, vec![0; 30], vec![0.0; 8], vec![0.0; 9])
+            .is_err());
+    }
+
+    #[test]
+    fn grouped_empty_factor_dims() {
+        // r = 0 factors: m x 0 and 0 x n both quantize to empty payloads.
+        let a = QuantizedTensor::quantize(&Tensor::zeros(&[6, 0]), &QuantConfig::default());
+        assert_eq!((a.rows(), a.cols(), a.data().len(), a.scales().len()), (6, 0, 0, 0));
+        let b = QuantizedTensor::quantize(&Tensor::zeros(&[0, 6]), &QuantConfig::default());
+        assert_eq!((b.rows(), b.cols(), b.ngroups(), b.scales().len()), (0, 6, 0, 0));
+        assert_eq!(b.dequantize().shape(), &[0, 6]);
     }
 }

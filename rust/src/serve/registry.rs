@@ -1,6 +1,6 @@
 //! Multiple named `.swsc` models behind one serving surface.
 
-use crate::infer::{CompressedModel, InferMode};
+use crate::infer::{CompressedModel, InferMode, Precision};
 use crate::io::SwscFile;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -30,7 +30,21 @@ impl ModelRegistry {
         file: &SwscFile,
         mode: InferMode,
     ) -> Arc<CompressedModel> {
-        let model = Arc::new(CompressedModel::from_file(file, mode));
+        self.insert_file_with(name, file, mode, Precision::default())
+    }
+
+    /// [`ModelRegistry::insert_file`] with an explicit serving
+    /// [`Precision`]. At [`Precision::Int8`] the `Arc`-shared panels are
+    /// the *quantized* panels — every alias and in-flight request reuses
+    /// the ≈4×-smaller panel cache, not an f32 expansion.
+    pub fn insert_file_with(
+        &mut self,
+        name: &str,
+        file: &SwscFile,
+        mode: InferMode,
+        precision: Precision,
+    ) -> Arc<CompressedModel> {
+        let model = Arc::new(CompressedModel::from_file_with(file, mode, precision));
         self.models.insert(name.to_string(), model.clone());
         model
     }
@@ -85,5 +99,29 @@ mod tests {
         assert!(reg.get("missing").is_none());
         assert_eq!(reg.get("a").unwrap().num_compressed(), 1);
         assert_eq!(reg.get("b").unwrap().num_compressed(), 0);
+    }
+
+    #[test]
+    fn insert_file_with_precision_serves_quantized() {
+        let mut rng = Rng::new(51);
+        let mut file = SwscFile::new();
+        let w = Tensor::randn(&[16, 16], &mut rng);
+        file.compressed.insert("w".into(), compress_matrix(&w, &SwscConfig::new(4, 2)));
+        let mut reg = ModelRegistry::new();
+        let q = reg.insert_file_with("q", &file, InferMode::Compressed, Precision::Int8);
+        assert_eq!(q.precision(), Precision::Int8);
+        assert_eq!(q.num_quantized(), 1);
+        // The default-precision path stays f32 — the oracle is untouched.
+        let f = reg.insert_file("f", &file, InferMode::Compressed);
+        assert_eq!(f.precision(), Precision::F32);
+        assert_eq!(f.num_quantized(), 0);
+        let x = Tensor::randn(&[2, 16], &mut rng);
+        let (a, b) = (q.apply("w", &x).unwrap(), f.apply("w", &x).unwrap());
+        let worst = a
+            .data()
+            .iter()
+            .zip(b.data())
+            .fold(0.0f32, |m, (p, q)| m.max((p - q).abs()));
+        assert!(worst < 0.5, "int8 vs f32 diverged: {worst}");
     }
 }

@@ -46,7 +46,26 @@
 //! cross-check oracle for `packed_vs_blocked_*` rows in
 //! `benches/hotpath.rs`.
 
+//! ## The quantized panel variant (PR 6)
+//!
+//! [`PackedBQ`] is [`PackedB`] with the f32 lanes replaced by u8 codes
+//! plus per-(group, lane) f32 scale/zero rows: the panels are packed
+//! directly from a grouped int8 quantized right operand
+//! ([`crate::quant::QuantizedTensor`]) and the microkernel dequantizes
+//! each k-row **in registers** ([`crate::quant::dequant_u8`]) before the
+//! usual mul+add — no dense f32 copy of the operand ever exists. Because
+//! the dequantized value is a pure per-element function of
+//! `(code, scale, zero)` and the accumulation is the identical
+//! single-register increasing-k sum, the fused path is **bitwise equal**
+//! to dequantize-then-f32-GEMM at any tile size, band split, or thread
+//! count; only against the *original* (pre-quantization) weights is
+//! there a tolerance, bounded per element by the group's grid step (see
+//! `tests/fixtures/README.md`). The panels are ~4× smaller than their
+//! f32 twins (`footprint_bytes`), which is the point: serving is
+//! memory-bandwidth-bound.
+
 use crate::exec::{self, ExecConfig};
+use crate::quant::dequant_u8;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
@@ -165,6 +184,11 @@ impl PackedB {
 
     pub(crate) fn ncols(&self) -> usize {
         self.n
+    }
+
+    /// Bytes the packed panels occupy — the panel-cache footprint.
+    pub(crate) fn footprint_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
     }
 }
 
@@ -493,6 +517,405 @@ pub(crate) fn gemm_rows_prepacked(
     }
 }
 
+/// A grouped-int8 right operand repacked into `⌈n/nr⌉` column panels:
+/// u8 codes laid out exactly like [`PackedB`]'s f32 lanes (`k × nr` per
+/// panel, code 0 past column `n`) plus per-panel `ngroups × nr` f32
+/// scale/zero rows (0.0 in pad lanes — the dequantized pad value is
+/// `(0 − 0)·0 = 0` and is never copied out anyway). Weight-side only:
+/// packed once per model (lazily, like the f32 weight panels) and
+/// Arc-shared across requests at ~¼ the footprint.
+pub(crate) struct PackedBQ {
+    codes: Vec<u8>,
+    /// Per-panel per-group scale lanes, `npanels × ngroups × nr`.
+    scales: Vec<f32>,
+    /// Per-panel per-group zero-point lanes, same layout.
+    zeros: Vec<f32>,
+    k: usize,
+    n: usize,
+    nr: usize,
+    group: usize,
+}
+
+impl PackedBQ {
+    fn npanels(&self) -> usize {
+        self.n.div_ceil(self.nr)
+    }
+
+    fn ngroups(&self) -> usize {
+        self.k.div_ceil(self.group)
+    }
+
+    fn panel_codes(&self, p: usize) -> &[u8] {
+        &self.codes[p * self.k * self.nr..(p + 1) * self.k * self.nr]
+    }
+
+    fn panel_scales(&self, p: usize) -> &[f32] {
+        let len = self.ngroups() * self.nr;
+        &self.scales[p * len..(p + 1) * len]
+    }
+
+    fn panel_zeros(&self, p: usize) -> &[f32] {
+        let len = self.ngroups() * self.nr;
+        &self.zeros[p * len..(p + 1) * len]
+    }
+
+    pub(crate) fn kdim(&self) -> usize {
+        self.k
+    }
+
+    pub(crate) fn ncols(&self) -> usize {
+        self.n
+    }
+
+    /// Bytes the packed panels occupy (codes + scale/zero metadata) —
+    /// compare with the f32 twin's [`PackedB::footprint_bytes`].
+    pub(crate) fn footprint_bytes(&self) -> usize {
+        self.codes.len() + (self.scales.len() + self.zeros.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Pack a grouped-int8 `k × n` right operand (row-major u8 `codes`,
+/// row-major `⌈k/group⌉ × n` `scales`/`zeros` — the
+/// [`crate::quant::QuantizedTensor`] layout) into [`PackedBQ`] panels.
+/// Disjoint writes into pre-assigned panel slots — identical at any
+/// thread count. The scale/zero lanes are packed serially: they are
+/// `group×` smaller than the codes and this runs once per model.
+pub(crate) fn pack_bq(
+    codes: &[u8],
+    scales: &[f32],
+    zeros: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    exec: ExecConfig,
+) -> PackedBQ {
+    assert!(group > 0, "quantization group must be positive");
+    let nr = tile().nr;
+    if k == 0 || n == 0 {
+        let (codes, scales, zeros) = (Vec::new(), Vec::new(), Vec::new());
+        return PackedBQ { codes, scales, zeros, k, n, nr, group };
+    }
+    let np = n.div_ceil(nr);
+    let ng = k.div_ceil(group);
+    debug_assert_eq!(codes.len(), k * n);
+    debug_assert_eq!(scales.len(), ng * n);
+    debug_assert_eq!(zeros.len(), ng * n);
+    let mut cdata = vec![0u8; np * k * nr];
+    let exec = if k * n < PACK_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
+    exec::for_row_bands(exec, &mut cdata, np, k * nr, PACK_PANELS_PER_CHUNK, |p0, band| {
+        let pcount = band.len() / (k * nr);
+        for pi in 0..pcount {
+            let p = p0 + pi;
+            let j0 = p * nr;
+            let jtake = nr.min(n - j0);
+            let panel = &mut band[pi * k * nr..(pi + 1) * k * nr];
+            for kk in 0..k {
+                let src = &codes[kk * n + j0..kk * n + j0 + jtake];
+                panel[kk * nr..kk * nr + jtake].copy_from_slice(src);
+            }
+        }
+    });
+    let mut sdata = vec![0.0f32; np * ng * nr];
+    let mut zdata = vec![0.0f32; np * ng * nr];
+    for p in 0..np {
+        let j0 = p * nr;
+        let jtake = nr.min(n - j0);
+        for g in 0..ng {
+            let dst = p * ng * nr + g * nr;
+            sdata[dst..dst + jtake].copy_from_slice(&scales[g * n + j0..g * n + j0 + jtake]);
+            zdata[dst..dst + jtake].copy_from_slice(&zeros[g * n + j0..g * n + j0 + jtake]);
+        }
+    }
+    PackedBQ { codes: cdata, scales: sdata, zeros: zdata, k, n, nr, group }
+}
+
+/// The fused dequantize-in-register microkernel. Identical accumulation
+/// to [`micro_body`] — one scalar accumulator per element over strictly
+/// increasing `kk`, mul then add — with the B row materialized in a local
+/// `[f32; NR]` from the u8 codes via [`dequant_u8`] first. The scale and
+/// zero lanes are hoisted per group block, so the inner loop touches one
+/// u8 row where the f32 kernel touched four bytes per lane.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_body_q<const MR: usize, const NR: usize>(
+    kdim: usize,
+    group: usize,
+    ap: &[f32],
+    qp: &[u8],
+    sp: &[f32],
+    zp: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert!(ap.len() >= kdim * MR);
+    debug_assert!(qp.len() >= kdim * NR);
+    debug_assert!(sp.len() >= kdim.div_ceil(group) * NR);
+    debug_assert!(out.len() >= MR * NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    let mut kk = 0usize;
+    let mut g = 0usize;
+    while kk < kdim {
+        // Group boundaries are multiples of `group`, so `kk` enters each
+        // block aligned and the scale/zero lanes hold for `kend - kk` rows.
+        let kend = (kk + group).min(kdim);
+        let srow: &[f32; NR] = (&sp[g * NR..g * NR + NR]).try_into().unwrap();
+        let zrow: &[f32; NR] = (&zp[g * NR..g * NR + NR]).try_into().unwrap();
+        while kk < kend {
+            let arow: &[f32; MR] = (&ap[kk * MR..kk * MR + MR]).try_into().unwrap();
+            let qrow: &[u8; NR] = (&qp[kk * NR..kk * NR + NR]).try_into().unwrap();
+            let mut brow = [0.0f32; NR];
+            for j in 0..NR {
+                brow[j] = dequant_u8(qrow[j], srow[j], zrow[j]);
+            }
+            for i in 0..MR {
+                let aik = arow[i];
+                for j in 0..NR {
+                    acc[i][j] += aik * brow[j];
+                }
+            }
+            kk += 1;
+        }
+        g += 1;
+    }
+    for i in 0..MR {
+        for j in 0..NR {
+            out[i * NR + j] = acc[i][j];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod simd_q {
+    use super::micro_body_q;
+    use std::sync::OnceLock;
+
+    fn avx2() -> bool {
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+    }
+
+    // Same wrapper scheme as `simd`: the generic fused body inlines into
+    // an AVX2-codegen function so the dequant + j loops vectorize (u8 →
+    // f32 widening is a vpmovzxbd + vcvtdq2ps pair at ymm width). No
+    // fast-math — arithmetic is bit-identical to the fallback body.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn body_q_8x8(
+        kdim: usize,
+        group: usize,
+        ap: &[f32],
+        qp: &[u8],
+        sp: &[f32],
+        zp: &[f32],
+        out: &mut [f32],
+    ) {
+        micro_body_q::<8, 8>(kdim, group, ap, qp, sp, zp, out)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn body_q_4x16(
+        kdim: usize,
+        group: usize,
+        ap: &[f32],
+        qp: &[u8],
+        sp: &[f32],
+        zp: &[f32],
+        out: &mut [f32],
+    ) {
+        micro_body_q::<4, 16>(kdim, group, ap, qp, sp, zp, out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn micro_q_8x8(
+        kdim: usize,
+        group: usize,
+        ap: &[f32],
+        qp: &[u8],
+        sp: &[f32],
+        zp: &[f32],
+        out: &mut [f32],
+    ) -> bool {
+        if !avx2() {
+            return false;
+        }
+        // SAFETY: AVX2 support verified at runtime above.
+        unsafe { body_q_8x8(kdim, group, ap, qp, sp, zp, out) };
+        true
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn micro_q_4x16(
+        kdim: usize,
+        group: usize,
+        ap: &[f32],
+        qp: &[u8],
+        sp: &[f32],
+        zp: &[f32],
+        out: &mut [f32],
+    ) -> bool {
+        if !avx2() {
+            return false;
+        }
+        // SAFETY: AVX2 support verified at runtime above.
+        unsafe { body_q_4x16(kdim, group, ap, qp, sp, zp, out) };
+        true
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+mod simd_q {
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn micro_q_8x8(
+        _: usize,
+        _: usize,
+        _: &[f32],
+        _: &[u8],
+        _: &[f32],
+        _: &[f32],
+        _: &mut [f32],
+    ) -> bool {
+        false
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn micro_q_4x16(
+        _: usize,
+        _: usize,
+        _: &[f32],
+        _: &[u8],
+        _: &[f32],
+        _: &[f32],
+        _: &mut [f32],
+    ) -> bool {
+        false
+    }
+}
+
+fn run_micro_q(
+    t: Tile,
+    kdim: usize,
+    group: usize,
+    ap: &[f32],
+    qp: &[u8],
+    sp: &[f32],
+    zp: &[f32],
+    out: &mut [f32],
+) {
+    match (t.mr, t.nr) {
+        (8, 8) => {
+            if !simd_q::micro_q_8x8(kdim, group, ap, qp, sp, zp, out) {
+                micro_body_q::<8, 8>(kdim, group, ap, qp, sp, zp, out);
+            }
+        }
+        (4, 16) => {
+            if !simd_q::micro_q_4x16(kdim, group, ap, qp, sp, zp, out) {
+                micro_body_q::<4, 16>(kdim, group, ap, qp, sp, zp, out);
+            }
+        }
+        _ => unreachable!("unsupported GEMM tile {t:?}"),
+    }
+}
+
+/// [`emit_panel_rows`] for quantized B panels: one packed A panel driven
+/// across every [`PackedBQ`] panel through the fused microkernel. Same
+/// output copy/accumulate tail, so banding and add-mode semantics are
+/// identical to the f32 path.
+#[allow(clippy::too_many_arguments)]
+fn emit_panel_rows_q(
+    t: Tile,
+    apanel: &[f32],
+    pbq: &PackedBQ,
+    i0: usize,
+    take: usize,
+    out: &mut [f32],
+    add: bool,
+    scratch: &mut [f32],
+) {
+    let nr = t.nr;
+    let n = pbq.n;
+    for p in 0..pbq.npanels() {
+        run_micro_q(
+            t,
+            pbq.k,
+            pbq.group,
+            apanel,
+            pbq.panel_codes(p),
+            pbq.panel_scales(p),
+            pbq.panel_zeros(p),
+            scratch,
+        );
+        let j0 = p * nr;
+        let jtake = nr.min(n - j0);
+        for r in 0..take {
+            let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + jtake];
+            let srow = &scratch[r * nr..r * nr + jtake];
+            if add {
+                for (o, &s) in orow.iter_mut().zip(srow) {
+                    *o += s;
+                }
+            } else {
+                orow.copy_from_slice(srow);
+            }
+        }
+    }
+}
+
+/// [`gemm_rows`] against a quantized right operand: packs A panels on
+/// the fly and serves them through the fused dequantize microkernel.
+/// Bitwise equal to dequantizing the operand and calling [`gemm_rows`].
+pub(crate) fn gemm_rows_q(
+    a: ASrc<'_>,
+    row0: usize,
+    rows: usize,
+    pbq: &PackedBQ,
+    out: &mut [f32],
+    add: bool,
+) {
+    let t = tile();
+    let (mr, nr) = (t.mr, t.nr);
+    let n = pbq.n;
+    let kdim = pbq.k;
+    debug_assert_eq!(out.len(), rows * n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    let mut apanel = vec![0.0f32; kdim * mr];
+    let mut scratch = vec![0.0f32; mr * nr];
+    for i0 in (0..rows).step_by(mr) {
+        let take = mr.min(rows - i0);
+        pack_a_panel(a, row0 + i0, take, mr, kdim, &mut apanel);
+        emit_panel_rows_q(t, &apanel, pbq, i0, take, out, add, &mut scratch);
+    }
+}
+
+/// [`gemm_rows_prepacked`] against a quantized right operand. `row0`
+/// must start on an MR panel boundary, as in the f32 twin.
+pub(crate) fn gemm_rows_q_prepacked(
+    pa: &PackedA,
+    row0: usize,
+    rows: usize,
+    pbq: &PackedBQ,
+    out: &mut [f32],
+    add: bool,
+) {
+    let t = tile();
+    let n = pbq.n;
+    debug_assert_eq!(pa.mr, t.mr, "PackedA built under a different tile");
+    debug_assert_eq!(pa.kdim, pbq.k, "prepacked GEMM inner dims disagree");
+    debug_assert_eq!(out.len(), rows * n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    assert_eq!(row0 % pa.mr, 0, "prepacked band must start on an MR boundary");
+    assert!(row0 + rows <= pa.rows, "prepacked band past packed rows");
+    let mut scratch = vec![0.0f32; pa.mr * t.nr];
+    for i0 in (0..rows).step_by(pa.mr) {
+        let take = pa.mr.min(rows - i0);
+        let panel = pa.panel((row0 + i0) / pa.mr);
+        emit_panel_rows_q(t, panel, pbq, i0, take, out, add, &mut scratch);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -739,5 +1162,133 @@ mod tests {
             let p = pack_b(&b, k, n, ExecConfig::with_threads(threads));
             assert_eq!(bits(&p.data), bits(&base.data), "{threads} threads");
         }
+    }
+
+    use crate::quant::{QuantConfig, QuantizedTensor};
+    use crate::tensor::Tensor;
+
+    /// Quantize a k × n right operand and return (panels, dequantized f32
+    /// oracle operand) — the pair every fused-path test compares.
+    fn quantized_b(k: usize, n: usize, group: usize, rng: &mut Rng) -> (PackedBQ, Vec<f32>) {
+        let b = Tensor::randn(&[k, n], rng);
+        let q = QuantizedTensor::quantize(&b, &QuantConfig { group });
+        let pbq =
+            pack_bq(q.data(), q.scales(), q.zeros(), k, n, group, ExecConfig::serial());
+        (pbq, q.dequantize().into_vec())
+    }
+
+    /// The PR 6 kernel contract: the fused dequantize-in-register path is
+    /// **bitwise** equal to dequantizing the operand and running the f32
+    /// packed GEMM — over every MR/NR remainder and ragged group sizes
+    /// (group 1, non-divisor groups, group > k).
+    #[test]
+    fn fused_q_matches_dequant_then_f32_bitwise_all_remainders() {
+        let mut rng = Rng::new(608);
+        let t = tile();
+        for m in 1..=(2 * t.mr + 1) {
+            for n in 1..=(2 * t.nr + 1) {
+                for &k in &[1usize, 3, 64] {
+                    for &group in &[1usize, 5, 64, 100] {
+                        let a = randv(m * k, &mut rng);
+                        let (pbq, bde) = quantized_b(k, n, group, &mut rng);
+                        let mut got = vec![0.0f32; m * n];
+                        gemm_rows_q(ASrc::Rows { data: &a, k }, 0, m, &pbq, &mut got, false);
+                        assert_eq!(
+                            bits(&got),
+                            bits(&packed(&a, &bde, m, k, n)),
+                            "m={m} n={n} k={k} group={group}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Prepacked-A fused GEMM, band splits, add mode, and the strided-A
+    /// source all match the on-the-fly fused run bitwise.
+    #[test]
+    fn fused_q_prepacked_bands_and_add_match_bitwise() {
+        let mut rng = Rng::new(609);
+        let (m, k, n) = (2 * 64 + 13usize, 45usize, 33usize);
+        let a = randv(m * k, &mut rng);
+        let at = randv(k * m, &mut rng);
+        let (pbq, _) = quantized_b(k, n, 7, &mut rng);
+        for add in [false, true] {
+            let prefill = randv(m * n, &mut rng);
+
+            let mut want = prefill.clone();
+            gemm_rows_q(ASrc::Rows { data: &a, k }, 0, m, &pbq, &mut want, add);
+            let pa = pack_a(ASrc::Rows { data: &a, k }, m, k, ExecConfig::serial());
+            let mut got = prefill.clone();
+            gemm_rows_q_prepacked(&pa, 0, m, &pbq, &mut got, add);
+            assert_eq!(bits(&got), bits(&want), "rows add={add}");
+
+            let mut want_t = prefill.clone();
+            gemm_rows_q(ASrc::Cols { data: &at, ld: m }, 0, m, &pbq, &mut want_t, add);
+            let pa_t = pack_a(ASrc::Cols { data: &at, ld: m }, m, k, ExecConfig::serial());
+            let mut got_t = prefill.clone();
+            gemm_rows_q_prepacked(&pa_t, 0, m, &pbq, &mut got_t, add);
+            assert_eq!(bits(&got_t), bits(&want_t), "cols add={add}");
+        }
+        // 64-row band splits (the executor's granularity) match a full run.
+        let pa = pack_a(ASrc::Rows { data: &a, k }, m, k, ExecConfig::serial());
+        let mut full = vec![0.0f32; m * n];
+        gemm_rows_q_prepacked(&pa, 0, m, &pbq, &mut full, false);
+        let mut banded = vec![0.0f32; m * n];
+        let mut row = 0;
+        let mut rest: &mut [f32] = &mut banded;
+        while row < m {
+            let take = 64.min(m - row);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            gemm_rows_q_prepacked(&pa, row, take, &pbq, head, false);
+            rest = tail;
+            row += take;
+        }
+        assert_eq!(bits(&banded), bits(&full), "64-row band split");
+    }
+
+    #[test]
+    fn fused_q_degenerate_shapes() {
+        // k = 0 product is all zeros; n = 0 / rows = 0 are no-ops.
+        let pbq = pack_bq(&[], &[], &[], 0, 7, 64, ExecConfig::serial());
+        let mut out = vec![1.0f32; 3 * 7];
+        gemm_rows_q(ASrc::Rows { data: &[], k: 0 }, 0, 3, &pbq, &mut out, false);
+        assert!(out.iter().all(|&v| v == 0.0));
+        let pbq0 = pack_bq(&[], &[], &[], 5, 0, 64, ExecConfig::serial());
+        assert_eq!(pbq0.ncols(), 0);
+        let mut empty: Vec<f32> = Vec::new();
+        gemm_rows_q(ASrc::Rows { data: &[0.0; 10], k: 5 }, 0, 2, &pbq0, &mut empty, false);
+    }
+
+    /// Parallel code-panel packing writes the same panels as serial.
+    #[test]
+    fn pack_bq_thread_invariant() {
+        let mut rng = Rng::new(610);
+        // Above PACK_PARALLEL_ELEMS so the parallel path actually runs.
+        let (k, n, group) = (300usize, 260usize, 32usize);
+        let b = Tensor::randn(&[k, n], &mut rng);
+        let q = QuantizedTensor::quantize(&b, &QuantConfig { group });
+        let base = pack_bq(q.data(), q.scales(), q.zeros(), k, n, group, ExecConfig::serial());
+        for threads in [2, 4, 8] {
+            let p =
+                pack_bq(q.data(), q.scales(), q.zeros(), k, n, group, ExecConfig::with_threads(threads));
+            assert_eq!(p.codes, base.codes, "{threads} threads");
+            assert_eq!(bits(&p.scales), bits(&base.scales), "{threads} threads");
+            assert_eq!(bits(&p.zeros), bits(&base.zeros), "{threads} threads");
+        }
+    }
+
+    /// The point of the exercise: quantized panels are ~¼ the f32 panel
+    /// footprint (codes are 1 byte vs 4, metadata amortized over `group`).
+    #[test]
+    fn quantized_panels_are_about_4x_smaller() {
+        let mut rng = Rng::new(611);
+        let (k, n, group) = (512usize, 512usize, 64usize);
+        let b = Tensor::randn(&[k, n], &mut rng);
+        let q = QuantizedTensor::quantize(&b, &QuantConfig { group });
+        let pbq = pack_bq(q.data(), q.scales(), q.zeros(), k, n, group, ExecConfig::serial());
+        let pb = pack_b(b.data(), k, n, ExecConfig::serial());
+        let ratio = pbq.footprint_bytes() as f64 / pb.footprint_bytes() as f64;
+        assert!(ratio < 0.3, "quantized/f32 panel footprint {ratio}");
     }
 }

@@ -10,7 +10,10 @@
 pub mod gemm;
 mod ops;
 
-pub(crate) use ops::{gemm_packed_b_into, gemm_prepacked_into, matmul_band};
+pub(crate) use ops::{
+    gemm_packed_b_into, gemm_packed_bq_into, gemm_prepacked_bq_into, gemm_prepacked_into,
+    matmul_band,
+};
 
 use crate::util::rng::Rng;
 

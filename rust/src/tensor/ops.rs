@@ -192,6 +192,52 @@ pub(crate) fn gemm_prepacked_into(
     });
 }
 
+/// [`gemm_packed_b_into`] against a quantized right operand
+/// ([`gemm::PackedBQ`]): same band dispatch and serial-downgrade
+/// threshold, with the fused dequantize-in-register kernel inside.
+/// Bitwise equal to dequantizing the operand and calling the f32 twin,
+/// at any thread count.
+pub(crate) fn gemm_packed_bq_into(
+    a: gemm::ASrc<'_>,
+    pbq: &gemm::PackedBQ,
+    m: usize,
+    add: bool,
+    exec: ExecConfig,
+    out: &mut [f32],
+) {
+    let (k, n) = (pbq.kdim(), pbq.ncols());
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let exec = if m * n * k < min_parallel_macs() { ExecConfig::serial() } else { exec };
+    exec::for_row_bands(exec, out, m, n, BLOCK, |first_row, band| {
+        gemm::gemm_rows_q(a, first_row, band.len() / n, pbq, band, add);
+    });
+}
+
+/// [`gemm_prepacked_into`] against a quantized right operand — the
+/// quantized serving hot path: activations prepacked once per request,
+/// weight codes + scales streamed through the fused microkernel.
+pub(crate) fn gemm_prepacked_bq_into(
+    pa: &gemm::PackedA,
+    pbq: &gemm::PackedBQ,
+    add: bool,
+    exec: ExecConfig,
+    out: &mut [f32],
+) {
+    let (m, n) = (pa.rows(), pbq.ncols());
+    debug_assert_eq!(pa.kdim(), pbq.kdim(), "prepacked GEMM inner dims disagree");
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let exec = if m * n * pbq.kdim() < min_parallel_macs() { ExecConfig::serial() } else { exec };
+    exec::for_row_bands(exec, out, m, n, BLOCK, |first_row, band| {
+        gemm::gemm_rows_q_prepacked(pa, first_row, band.len() / n, pbq, band, add);
+    });
+}
+
 impl Tensor {
     /// Matrix product `self · other` for 2-D tensors, parallelized over row
     /// bands with the process-wide [`exec::global`] config.

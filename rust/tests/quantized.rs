@@ -1,0 +1,205 @@
+//! Quantized-serving invariants (ISSUE 6).
+//!
+//! Contracts pinned here, extending the PR 1–5 parity discipline to the
+//! double-compressed (grouped-int8) path:
+//!
+//! 1. **Fused == dequantize-then-f32, bitwise.** The fused
+//!    dequantize-in-register `apply` is bit-identical to serving the
+//!    dequantized factors through the f32 `CompressedLinear` — at thread
+//!    counts ∈ {1, 2, 4, 8}, over random shapes covering all MR/NR
+//!    microkernel remainders and ragged quantization groups. The fused
+//!    kernel and `QuantizedTensor::dequantize` share one `dequant_u8`
+//!    expression, which is what makes this an equality, not a tolerance.
+//! 2. **Documented error bound vs the pre-quantization f32 weights.**
+//!    Each dequantized factor entry sits within its block's grid step of
+//!    the original value, so the serving product differs from the f32
+//!    oracle by at most the accumulated `Σ |x|·step` terms — asserted
+//!    per element against a bound computed from the *actual* dequant
+//!    error matrices (see `tests/fixtures/README.md`).
+//! 3. **Round trip through the container.** A version-2 `.swsc` file
+//!    serializes the codes exactly (u8 + f32 LE), so save → load →
+//!    `CompressedModel::apply` at `Precision::Int8` is bitwise equal to
+//!    serving the in-memory original.
+
+use swsc::compress::{compress_matrix, CompressedMatrix, SwscConfig};
+use swsc::exec::ExecConfig;
+use swsc::infer::{CompressedLinear, CompressedModel, InferMode, Precision, QuantizedLinear};
+use swsc::io::SwscFile;
+use swsc::quant::QuantConfig;
+use swsc::tensor::Tensor;
+use swsc::util::prop::{check, default_cases};
+use swsc::util::rng::Rng;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Random compressed matrix built directly in the storage layout (cluster
+/// quality is irrelevant to these invariants; skipping the real k-means +
+/// SVD keeps the property loop fast).
+fn synthetic(m: usize, n: usize, k: usize, r: usize, rng: &mut Rng) -> CompressedMatrix {
+    CompressedMatrix {
+        shape: (m, n),
+        labels: (0..n).map(|_| rng.below(k) as u32).collect(),
+        centroids: Tensor::randn(&[m, k], rng),
+        factor_a: Tensor::randn(&[m, r], rng),
+        factor_b: Tensor::randn(&[r, n], rng),
+    }
+}
+
+#[derive(Debug)]
+struct Case {
+    m: usize,
+    n: usize,
+    k: usize,
+    r: usize,
+    group: usize,
+    bsz: usize,
+    seed: u64,
+}
+
+/// Contract 1: fused apply is bitwise the dequantize-then-f32 oracle, at
+/// every thread count, over shapes hitting all microkernel remainders
+/// (m, n, bsz not tile-aligned) and ragged groups (group ∤ rows, group >
+/// rows, group = 1).
+#[test]
+fn prop_fused_apply_bitwise_matches_dequant_oracle_across_threads() {
+    check(
+        "fused_apply_bitwise",
+        0x5106,
+        default_cases().min(40),
+        |rng| Case {
+            m: 1 + rng.below(40),
+            n: 1 + rng.below(40),
+            k: 1 + rng.below(8),
+            r: rng.below(6),
+            group: 1 + rng.below(24),
+            bsz: rng.below(10),
+            seed: rng.below(1 << 30) as u64,
+        },
+        |c| {
+            let mut rng = Rng::new(c.seed);
+            let q = synthetic(c.m, c.n, c.k, c.r, &mut rng).quantize(&QuantConfig { group: c.group });
+            let lin = QuantizedLinear::from_matrix(&q);
+            let oracle = CompressedLinear::from_matrix(&q.dequantize());
+            let x = Tensor::randn(&[c.bsz, c.m], &mut rng);
+            let want = bits(&oracle.apply_with(&x, ExecConfig::serial()));
+            for threads in [1usize, 2, 4, 8] {
+                let got = bits(&lin.apply_with(&x, ExecConfig::with_threads(threads)));
+                if got != want {
+                    return Err(format!("fused != oracle at {threads} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Contract 2: per-element error vs the pre-quantization f32 weights is
+/// bounded by the accumulated grid steps. The bound is computed from the
+/// actual dequantization error matrices `e_R`, `e_A`, `e_B`:
+///
+/// ```text
+/// Y_q − Y = (X·e_R)[:, labels] + (X·e_A)·B_q + (X·A)·e_B
+/// |Y_q − Y| ≤ (|X|·|e_R|)[:, labels] + (|X|·|e_A|)·|B_q| + (|X|·|A|)·|e_B|
+/// ```
+///
+/// plus a small float-rounding slack for the differing accumulation
+/// orders. This is the numeric contract recorded in
+/// `tests/fixtures/README.md` for the quantized serving path.
+#[test]
+fn quantized_apply_error_bounded_by_grid_steps() {
+    let mut rng = Rng::new(0x5107);
+    let w = Tensor::randn(&[48, 64], &mut rng);
+    let c = compress_matrix(&w, &SwscConfig::new(6, 4));
+    for group in [4usize, 16, 64] {
+        let q = c.quantize(&QuantConfig { group });
+        let lin = QuantizedLinear::from_matrix(&q);
+        let f32_lin = CompressedLinear::from_matrix(&c);
+        let x = Tensor::randn(&[7, 48], &mut rng);
+        let got = lin.apply(&x);
+        let want = f32_lin.apply(&x);
+
+        let abs = |t: &Tensor| Tensor::from_vec(t.shape(), t.data().iter().map(|v| v.abs()).collect());
+        let diff = |a: &Tensor, b: &Tensor| {
+            Tensor::from_vec(
+                a.shape(),
+                a.data().iter().zip(b.data()).map(|(p, q)| (p - q).abs()).collect(),
+            )
+        };
+        let dq = q.dequantize();
+        let (e_r, e_a, e_b) = (
+            diff(&dq.centroids, &c.centroids),
+            diff(&dq.factor_a, &c.factor_a),
+            diff(&dq.factor_b, &c.factor_b),
+        );
+        let ax = abs(&x);
+        // (|X|·|e_R|)[:, labels]
+        let xer = ax.matmul(&e_r);
+        // (|X|·|e_A|)·|B_q| + (|X|·|A|)·|e_B|
+        let low_rank = {
+            let t1 = ax.matmul(&e_a).matmul(&abs(&dq.factor_b));
+            let t2 = ax.matmul(&abs(&c.factor_a)).matmul(&e_b);
+            Tensor::from_vec(
+                t1.shape(),
+                t1.data().iter().zip(t2.data()).map(|(p, q)| p + q).collect(),
+            )
+        };
+        for t in 0..got.rows() {
+            for (j, &label) in q.labels.iter().enumerate() {
+                let bound = xer.at(t, label as usize)
+                    + low_rank.at(t, j)
+                    + 1e-4 * (1.0 + want.at(t, j).abs());
+                let err = (got.at(t, j) - want.at(t, j)).abs();
+                assert!(
+                    err <= bound,
+                    "group {group} [{t},{j}]: err {err} > bound {bound}"
+                );
+            }
+        }
+    }
+}
+
+/// Contract 3: save → load → serve is bitwise the in-memory quantized
+/// path, and `Precision::F32` on the same file is the dequantized oracle.
+#[test]
+fn v2_container_round_trips_through_compressed_model_apply() {
+    let mut rng = Rng::new(0x5108);
+    let w = Tensor::randn(&[40, 56], &mut rng);
+    let c = compress_matrix(&w, &SwscConfig::new(5, 3));
+    let mut file = SwscFile::new();
+    file.quantized.insert("w".into(), c.quantize(&QuantConfig { group: 16 }));
+    file.dense.insert("d".into(), Tensor::randn(&[8, 8], &mut rng));
+
+    let restored = SwscFile::from_bytes(&file.to_bytes()).expect("v2 round trip");
+    assert_eq!(restored.quantized["w"], file.quantized["w"]);
+
+    let before = CompressedModel::from_file_with(&file, InferMode::Compressed, Precision::Int8);
+    let after = CompressedModel::from_file_with(&restored, InferMode::Compressed, Precision::Int8);
+    assert_eq!(after.num_quantized(), 1);
+    let x = Tensor::randn(&[6, 40], &mut rng);
+    let (a, b) = (before.apply("w", &x).unwrap(), after.apply("w", &x).unwrap());
+    assert_eq!(bits(&a), bits(&b), "serve after save/load is bitwise");
+
+    // F32 on the same file = the dequantized oracle: identical to the
+    // fused path by contract 1.
+    let oracle = CompressedModel::from_file_with(&restored, InferMode::Compressed, Precision::F32);
+    assert_eq!(oracle.num_quantized(), 0);
+    assert_eq!(bits(&oracle.apply("w", &x).unwrap()), bits(&a));
+}
+
+/// The serving path is thread-invariant end to end through the model
+/// surface (the bitwise contract the service relies on).
+#[test]
+fn model_int8_apply_thread_invariant() {
+    let mut rng = Rng::new(0x5109);
+    let mut file = SwscFile::new();
+    file.compressed.insert("w".into(), synthetic(64, 80, 8, 5, &mut rng));
+    let model = CompressedModel::from_file_with(&file, InferMode::Compressed, Precision::Int8);
+    let x = Tensor::randn(&[9, 64], &mut rng);
+    let base = bits(&model.apply_with("w", &x, ExecConfig::serial()).unwrap());
+    for threads in [2usize, 4, 8] {
+        let got = bits(&model.apply_with("w", &x, ExecConfig::with_threads(threads)).unwrap());
+        assert_eq!(got, base, "{threads} threads");
+    }
+}
