@@ -78,17 +78,30 @@
 //! - Each row is annotated with `bytes_per_param` (actual serialized
 //!   quantized `.swsc` bytes ÷ `m·n`), and the quantized payload must be
 //!   ≤ 0.35× of the f32 factor payload — a deterministic storage gate.
+//!
+//! ISSUE 7 additions:
+//!
+//! - `forward_batched_vs_flush_*` rows: the forward loadgen replays the
+//!   identical seeded **mixed-length** whole-model request stream through
+//!   a continuous-batched server (requests join/leave the in-flight batch
+//!   at layer boundaries) and a flush-the-batch server (every batch
+//!   member waits out the longest member). Gate: continuous p95 latency
+//!   ≤ flush p95 — **warn-only until `BENCH_baseline.json` is
+//!   committed**, retry-once like the other gates. Both schedulers are
+//!   bitwise identical to solo serving (see `tests/serve_forward.rs`),
+//!   so this row is purely a latency comparison.
 
 use std::path::Path;
 use std::sync::Arc;
-use swsc::bench::loadgen::{run_loadgen, LoadgenConfig};
+use swsc::bench::loadgen::{run_forward_loadgen, run_loadgen, ForwardLoadgenConfig, LoadgenConfig};
 use swsc::bench::Bench;
 use swsc::compress::{compress_matrix, CompressedMatrix, SwscConfig};
 use swsc::exec::{self, ExecBackend, ExecConfig};
-use swsc::infer::{CompressedLinear, CompressedModel, InferMode, QuantizedLinear};
+use swsc::infer::{CompressedForward, CompressedLinear, CompressedModel, InferMode, QuantizedLinear};
+use swsc::model::{init_params, param_specs, ModelConfig};
 use swsc::quant::QuantConfig;
 use swsc::io::SwscFile;
-use swsc::serve::{BatchConfig, BatchServer, ModelRegistry, DEFAULT_MODEL};
+use swsc::serve::{BatchConfig, BatchServer, ForwardScheduling, ModelRegistry, DEFAULT_MODEL};
 use swsc::io::{pack_u32, unpack_u32};
 use swsc::kmeans::{assign_blocked_with, assign_gemm_with, assign_with};
 use swsc::linalg::{qr_householder, svd_jacobi, svd_randomized_with};
@@ -643,6 +656,100 @@ fn main() {
         }
     }
 
+    // ISSUE 7: continuous batching vs flush-the-batch on whole-model
+    // forwards. One tiny compressed forward (panels warmed by a solo
+    // forward up front) is shared by both servers via its Arc; the
+    // loadgen then replays the identical seeded mixed-length token
+    // stream through each. The workload is convoy-prone by construction
+    // — window lengths drawn uniformly from 1..=seq — so a flush server
+    // makes every short request wait out the longest member of its
+    // batch, while the continuous server lets requests exit (and join)
+    // at layer boundaries. Both schedulers are bitwise identical to solo
+    // serving, so the only axis compared here is p95 latency.
+    bench.section("serve: continuous batching vs flush (forward loadgen)");
+    {
+        let mcfg = ModelConfig::tiny();
+        let ck = init_params(&mcfg, 7);
+        let mut file = SwscFile::new();
+        for spec in param_specs(&mcfg) {
+            let t = ck.get(&spec.name).unwrap().clone();
+            if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+                file.compressed
+                    .insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+            } else {
+                file.dense.insert(spec.name.clone(), t);
+            }
+        }
+        let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+        let fwd = Arc::new(
+            CompressedForward::new(model, mcfg.clone()).expect("forward build failed"),
+        );
+        let warm: Vec<u32> = (0..mcfg.seq).map(|i| (i % mcfg.vocab) as u32).collect();
+        fwd.forward(&warm).expect("panel warmup forward failed");
+        let lg = ForwardLoadgenConfig {
+            seed: 0xF0F7,
+            requests: 48,
+            max_tokens: mcfg.seq,
+            mixed: true,
+            rate_rps: 0.0,
+            models: vec![DEFAULT_MODEL.to_string()],
+        };
+        let run_with = |scheduling: ForwardScheduling| {
+            let mut reg = ModelRegistry::new();
+            reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+            let server = BatchServer::start(
+                Arc::new(reg),
+                BatchConfig::default().with_forward_scheduling(scheduling),
+            );
+            let rep = run_forward_loadgen(&server, &lg).expect("forward loadgen replay failed");
+            server.shutdown();
+            rep
+        };
+        let measure = || {
+            let cont = run_with(ForwardScheduling::Continuous);
+            let flush = run_with(ForwardScheduling::Flush);
+            (cont, flush)
+        };
+        let (mut cont, mut flush) = measure();
+        if flush.p95_us / cont.p95_us.max(1e-12) < 1.0 {
+            // Retry-once policy, like the other gates.
+            let (c2, f2) = measure();
+            if f2.p95_us / c2.p95_us.max(1e-12) > flush.p95_us / cont.p95_us.max(1e-12) {
+                (cont, flush) = (c2, f2);
+            }
+        }
+        let size = mcfg.d_model;
+        let threads = exec::global().threads;
+        let op = format!("forward_tiny_d{}_l{}_seq{}", mcfg.d_model, mcfg.n_layers, mcfg.seq);
+        bench.push_record(cont.to_record(&format!("loadgen_{op}_continuous"), size, threads));
+        bench.push_record(flush.to_record(&format!("loadgen_{op}_flush"), size, threads));
+        let speedup = bench.comparison_labeled(
+            "forward_batched_vs_flush",
+            "continuous",
+            "flush",
+            &op,
+            size,
+            threads,
+            cont.p95_us * 1e-6,
+            flush.p95_us * 1e-6,
+        );
+        println!(
+            "  continuous: p95 {:.0} µs, {:.0} req/s, {} layer steps (mean {:.1} rows); \
+             flush: p95 {:.0} µs, {:.0} req/s",
+            cont.p95_us, cont.rps, cont.batches, cont.batch_mean, flush.p95_us, flush.rps
+        );
+        if speedup < 1.0 {
+            let msg = format!(
+                "{op}: continuous batching p95 {speedup:.2}x vs flush (< 1.0x latency floor)"
+            );
+            if baseline_committed {
+                regressions.push(msg);
+            } else {
+                println!("  !! {msg} — warn-only until BENCH_baseline.json is committed");
+            }
+        }
+    }
+
     bench.section("label packing");
     let labels: Vec<u32> = (0..4096).map(|i| (i * 7) as u32 % 16).collect();
     bench.case_at("pack_4096_labels_4bit", 4096, 1, || pack_u32(&labels, 4));
@@ -652,7 +759,6 @@ fn main() {
     // PJRT round trip (needs artifacts).
     let dir = Path::new("artifacts");
     if dir.join("manifest.txt").exists() {
-        use swsc::model::{init_params, param_specs, ModelConfig};
         use swsc::runtime::{tensor_to_literal, tokens_to_literal, ArtifactManifest, Engine};
 
         bench.section("PJRT runtime (tiny preset)");
@@ -706,7 +812,8 @@ fn main() {
          compressed-domain matmul ≥ 1.5x dense reconstruct+matmul (k ≤ n/8, r ≤ 32) \
          on all ops ≥ 512², batched serving ≥ 1.5x solo throughput at ≥ 8 \
          rows/request on ops ≥ 512 cols, quantized apply ≥ 1.2x f32 at k ≤ n/8 on \
-         ops ≥ 512² (both warn-only until BENCH_baseline.json is committed), AND \
+         ops ≥ 512², continuous forward batching p95 ≤ flush p95 on the mixed-length \
+         stream (all three warn-only until BENCH_baseline.json is committed), AND \
          quantized payload ≤ 0.35x of the f32 factor payload"
     );
 

@@ -1,0 +1,184 @@
+//! Compressed-domain forward serving demo — the whole transformer stack
+//! served from a `.swsc` container with continuous batching. No
+//! artifacts required (nothing here touches PJRT); CI runs this as a
+//! smoke test.
+//!
+//! What it shows:
+//!
+//! 1. A [`CompressedForward`] built from a tiny-config `.swsc` container
+//!    and registered behind a [`BatchServer`].
+//! 2. The seeded forward loadgen replaying the identical mixed-length
+//!    token stream through a continuous-batched server (requests join
+//!    and leave the in-flight batch at layer boundaries) and a
+//!    flush-the-batch server (the scheduling oracle).
+//! 3. The bitwise contract: responses under either scheduler equal the
+//!    solo `CompressedForward::forward` logits bit for bit.
+//! 4. The `EvalService` forward surface: `forward_blocking` with
+//!    batching enabled vs disabled (both bitwise equal to solo), and the
+//!    explicit error when the container doesn't cover the full model.
+//! 5. Compressed-domain perplexity: `eval::perplexity_swsc_compressed`
+//!    scores a token stream with no PJRT engine and no reconstruction.
+
+use std::sync::Arc;
+use swsc::bench::loadgen::{run_forward_loadgen, ForwardLoadgenConfig};
+use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::coordinator::{EvalService, ServiceConfig};
+use swsc::infer::{CompressedForward, CompressedModel, InferMode};
+use swsc::io::SwscFile;
+use swsc::model::{init_params, param_specs, ModelConfig};
+use swsc::serve::{
+    BatchConfig, BatchServer, Batching, ForwardRequest, ForwardScheduling, ModelRegistry,
+    DEFAULT_MODEL,
+};
+use swsc::text::Dataset;
+use swsc::util::rng::Rng;
+
+/// A tiny-config `.swsc` container covering every model parameter:
+/// 2-D weights wide enough to cluster are SWSC-compressed, the rest
+/// (embeddings aside, biases, layernorm gains) ride along dense.
+fn demo_file(cfg: &ModelConfig, seed: u64) -> SwscFile {
+    let ck = init_params(cfg, seed);
+    let mut file = SwscFile::new();
+    for spec in param_specs(cfg) {
+        let t = ck.get(&spec.name).unwrap().clone();
+        if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+            file.compressed.insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+        } else {
+            file.dense.insert(spec.name.clone(), t);
+        }
+    }
+    file
+}
+
+fn main() -> anyhow::Result<()> {
+    // 1. One tiny model, compressed, behind a forward-serving registry.
+    let cfg = ModelConfig::tiny();
+    println!(
+        "compressing tiny model (vocab {}, d_model {}, {} layers) into a .swsc container...",
+        cfg.vocab, cfg.d_model, cfg.n_layers
+    );
+    let file = demo_file(&cfg, 17);
+    let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+    let fwd = Arc::new(CompressedForward::new(model, cfg.clone())?);
+    let start_server = |scheduling: ForwardScheduling| {
+        let mut reg = ModelRegistry::new();
+        reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+        BatchServer::start(
+            Arc::new(reg),
+            BatchConfig::default().with_forward_scheduling(scheduling),
+        )
+    };
+
+    // 2. The same seeded mixed-length stream, continuous vs flush. Window
+    // lengths are drawn uniformly from 1..=seq, the convoy-prone shape:
+    // under flush scheduling every short request waits out the longest
+    // member of its batch; under continuous scheduling it exits at its
+    // own final layer boundary while new arrivals join at layer 0.
+    let lg = ForwardLoadgenConfig {
+        seed: 0xF0F7,
+        requests: 64,
+        max_tokens: cfg.seq,
+        mixed: true,
+        rate_rps: 0.0, // saturation
+        models: vec![DEFAULT_MODEL.to_string()],
+    };
+    let replay = |scheduling: ForwardScheduling| -> anyhow::Result<_> {
+        let server = start_server(scheduling);
+        let rep = run_forward_loadgen(&server, &lg)?;
+        server.shutdown();
+        Ok(rep)
+    };
+    let cont = replay(ForwardScheduling::Continuous)?;
+    let flush = replay(ForwardScheduling::Flush)?;
+    println!("\ncontinuous: {}", cont.render());
+    println!("flush:      {}", flush.render());
+    println!(
+        "p95 latency: continuous {:.0} µs vs flush {:.0} µs ({:.2}x); mean {:.1} stacked \
+         rows/layer-step over {} steps",
+        cont.p95_us,
+        flush.p95_us,
+        flush.p95_us / cont.p95_us.max(1e-12),
+        cont.batch_mean,
+        cont.batches,
+    );
+    anyhow::ensure!(cont.errors == 0 && flush.errors == 0, "loadgen saw error responses");
+
+    // 3. Bitwise parity: under either scheduler, served logits equal the
+    // solo forward bit for bit — layer-boundary re-forming is pure
+    // scheduling, never arithmetic.
+    let mut rng = Rng::new(42);
+    let windows: Vec<Vec<u32>> = (0..6)
+        .map(|_| {
+            let t = 1 + rng.below(cfg.seq);
+            (0..t).map(|_| rng.below(cfg.vocab) as u32).collect()
+        })
+        .collect();
+    for scheduling in [ForwardScheduling::Continuous, ForwardScheduling::Flush] {
+        let server = start_server(scheduling);
+        for tokens in &windows {
+            let got = server
+                .submit_forward_blocking(DEFAULT_MODEL, ForwardRequest { tokens: tokens.clone() })?;
+            let want = fwd.forward(tokens)?;
+            anyhow::ensure!(
+                got.logits == want,
+                "{scheduling:?} response diverged from solo forward ({} tokens)",
+                tokens.len()
+            );
+        }
+        server.shutdown();
+    }
+    println!("\nbitwise parity vs solo forward: OK ({} windows x 2 schedulers)", windows.len());
+
+    // 4. EvalService forward surface: batching Enabled routes through the
+    // continuous coalescer, Disabled serves inline — both bitwise equal
+    // to the solo oracle.
+    for (label, batching) in [("enabled", Batching::default()), ("disabled", Batching::Disabled)] {
+        let svc_cfg = ServiceConfig { batching, ..Default::default() };
+        let service = EvalService::start_with_swsc(None, cfg.clone(), &file, svc_cfg)?;
+        anyhow::ensure!(service.has_forward(), "full container must enable forward serving");
+        let resp = service.forward_blocking(ForwardRequest { tokens: windows[0].clone() })?;
+        let want = fwd.forward(&windows[0])?;
+        anyhow::ensure!(
+            resp.logits == want,
+            "EvalService forward (batching {label}) diverged from solo"
+        );
+        service.shutdown();
+    }
+    println!("EvalService forward surface: OK (batching enabled + disabled, both bitwise)");
+
+    // A container that misses parameters serves linears only; the
+    // forward surface refuses with an explicit error instead of
+    // panicking mid-request.
+    let mut partial = SwscFile::new();
+    let mut prng = Rng::new(5);
+    partial.dense.insert(
+        "lonely.weight".into(),
+        swsc::tensor::Tensor::randn(&[cfg.d_model, cfg.d_model], &mut prng),
+    );
+    let partial_svc = EvalService::start_with_swsc(None, cfg.clone(), &partial, ServiceConfig::default())?;
+    anyhow::ensure!(!partial_svc.has_forward(), "partial container must not enable forward");
+    let err = partial_svc.forward_blocking(ForwardRequest { tokens: vec![1, 2, 3] });
+    anyhow::ensure!(err.is_err(), "partial container must refuse forward requests");
+    println!("partial container: forward refused with `{}`", err.unwrap_err());
+    partial_svc.shutdown();
+
+    // 5. Compressed-domain perplexity: the same chained forward scores a
+    // token stream — no PJRT engine, no artifacts, no reconstruction.
+    let len = cfg.batch * cfg.seq + 1;
+    let ids: Vec<i32> = (0..len).map(|i| (i * 7 % cfg.vocab) as i32).collect();
+    let data = Dataset::from_ids(ids, cfg.batch, cfg.seq);
+    let result = swsc::eval::perplexity_swsc_compressed(
+        &file,
+        &cfg,
+        InferMode::Compressed,
+        &data,
+        swsc::exec::global(),
+    )?;
+    println!(
+        "\ncompressed-domain perplexity: {:.2} over {} tokens ({} batches) — fresh init, \
+         so ~= vocab {}",
+        result.perplexity, result.tokens, result.batches, cfg.vocab
+    );
+    anyhow::ensure!(result.perplexity.is_finite(), "perplexity must be finite");
+    Ok(())
+}

@@ -14,9 +14,14 @@
 //! the saturation mode, where blocking admission is the backpressure.
 //! Latency is recorded server-side (admission → response) into the
 //! service histograms; the report quotes their p50/p95/p99.
+//!
+//! [`run_forward_loadgen`] (PR 7) replays whole-model forward requests
+//! with seeded **mixed-length** token windows — the convoy-prone
+//! workload that separates continuous batching from flush-the-batch
+//! scheduling (`forward_batched_vs_flush_*` rows).
 
 use crate::bench::BenchRecord;
-use crate::serve::{BatchServer, LinearRequest};
+use crate::serve::{BatchServer, ForwardRequest, LinearRequest};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -119,8 +124,9 @@ impl LoadgenReport {
 /// throughput/latency.
 ///
 /// Latency percentiles and the batch-size distribution are read from the
-/// server's metrics, so use a freshly started server per replay when
-/// comparing configurations (the bench does).
+/// server's metrics as **deltas against a pre-run snapshot**, so replays
+/// on a shared long-lived server report their own samples — earlier
+/// traffic (including earlier replays) never leaks into the numbers.
 pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(!cfg.targets.is_empty(), "loadgen needs at least one (model, weight) target");
     anyhow::ensure!(cfg.requests > 0, "loadgen needs at least one request");
@@ -152,7 +158,14 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
         stream.push((model, weight, x, gap));
     }
 
+    // Snapshot the cumulative server metrics so the report covers THIS
+    // replay only. The histograms live for the server's lifetime; quoting
+    // them raw would mix every earlier run's samples into this report
+    // (the second replay of `stream_is_seeded` used to inherit the
+    // first's latency distribution).
     let batches_before = server.metrics().counter("serve.batches");
+    let latency_before = server.metrics().hist_snapshot("serve.latency_seconds");
+    let batch_rows_before = server.metrics().hist_snapshot("serve.batch_rows");
     let t0 = Instant::now();
     let mut clock = 0.0f64;
     let mut rows_total = 0usize;
@@ -182,6 +195,8 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
 
     let m = server.metrics();
+    let latency = m.hist_since("serve.latency_seconds", &latency_before);
+    let batch_rows = m.hist_since("serve.batch_rows", &batch_rows_before);
     Ok(LoadgenReport {
         requests: cfg.requests,
         rows: rows_total,
@@ -189,12 +204,134 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
         wall_seconds: wall,
         rps: cfg.requests as f64 / wall,
         rows_per_second: rows_total as f64 / wall,
-        p50_us: m.timing_percentile("serve.latency_seconds", 50.0) * 1e6,
-        p95_us: m.timing_percentile("serve.latency_seconds", 95.0) * 1e6,
-        p99_us: m.timing_percentile("serve.latency_seconds", 99.0) * 1e6,
-        mean_latency_us: m.timing_mean("serve.latency_seconds") * 1e6,
-        batch_mean: m.timing_mean("serve.batch_rows"),
+        p50_us: latency.percentile(50.0) * 1e6,
+        p95_us: latency.percentile(95.0) * 1e6,
+        p99_us: latency.percentile(99.0) * 1e6,
+        mean_latency_us: latency.mean() * 1e6,
+        batch_mean: batch_rows.mean(),
         batches: m.counter("serve.batches") - batches_before,
+    })
+}
+
+/// Forward-stream loadgen knobs (PR 7): whole-model requests with
+/// **mixed-length** token windows — the convoy-prone workload continuous
+/// batching exists for. The whole stream derives from `seed`, so a
+/// continuous-scheduled server and a flush-scheduled server replay the
+/// identical workload (`forward_batched_vs_flush_*` rows in
+/// `benches/hotpath.rs`).
+#[derive(Debug, Clone)]
+pub struct ForwardLoadgenConfig {
+    pub seed: u64,
+    /// Total forward requests to replay.
+    pub requests: usize,
+    /// Longest token window; with `mixed` each request draws its length
+    /// uniformly from `1..=max_tokens` (clamped to the model's `seq`),
+    /// otherwise every request is `max_tokens` long.
+    pub max_tokens: usize,
+    pub mixed: bool,
+    /// Open-loop arrival rate in requests/s; `0.0` replays at saturation.
+    pub rate_rps: f64,
+    /// Registered forward names; each request samples one.
+    pub models: Vec<String>,
+}
+
+impl Default for ForwardLoadgenConfig {
+    fn default() -> Self {
+        ForwardLoadgenConfig {
+            seed: 0xF02D,
+            requests: 64,
+            max_tokens: 16,
+            mixed: true,
+            rate_rps: 0.0,
+            models: Vec::new(),
+        }
+    }
+}
+
+/// Replay a seeded mixed-length forward stream against `server`.
+///
+/// The returned [`LoadgenReport`] reuses the linear report's shape with
+/// forward semantics: `rows` counts submitted *tokens*, `batches` counts
+/// grouped **layer steps**, `batch_mean` is the mean stacked token rows
+/// per layer step (1.0 ⇒ no cross-request grouping ever happened), and
+/// the latency percentiles come from `serve.forward_latency_seconds` —
+/// all as deltas against a pre-run snapshot, like [`run_loadgen`].
+pub fn run_forward_loadgen(
+    server: &BatchServer,
+    cfg: &ForwardLoadgenConfig,
+) -> Result<LoadgenReport> {
+    anyhow::ensure!(!cfg.models.is_empty(), "forward loadgen needs at least one model");
+    anyhow::ensure!(cfg.requests > 0, "forward loadgen needs at least one request");
+    anyhow::ensure!(cfg.max_tokens > 0, "forward loadgen needs max_tokens >= 1");
+    let mut rng = Rng::new(cfg.seed);
+
+    // Pre-build the stream (identical across compared runs).
+    let mut stream = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        let model = cfg.models[rng.below(cfg.models.len())].clone();
+        let fwd = server
+            .registry()
+            .forward(&model)
+            .ok_or_else(|| anyhow::anyhow!("forward loadgen target `{model}` not registered"))?;
+        let cap = cfg.max_tokens.min(fwd.config().seq);
+        let t = if cfg.mixed { 1 + rng.below(cap) } else { cap };
+        let vocab = fwd.config().vocab;
+        let tokens: Vec<u32> = (0..t).map(|_| rng.below(vocab) as u32).collect();
+        let gap = if cfg.rate_rps > 0.0 {
+            -(rng.uniform().max(1e-12).ln()) / cfg.rate_rps
+        } else {
+            0.0
+        };
+        stream.push((model, tokens, gap));
+    }
+
+    let steps_before = server.metrics().counter("serve.forward_steps");
+    let latency_before = server.metrics().hist_snapshot("serve.forward_latency_seconds");
+    let step_rows_before = server.metrics().hist_snapshot("serve.forward_step_rows");
+    let t0 = Instant::now();
+    let mut clock = 0.0f64;
+    let mut tokens_total = 0usize;
+    let mut receivers = Vec::with_capacity(cfg.requests);
+    for (model, tokens, gap) in stream {
+        clock += gap;
+        if cfg.rate_rps > 0.0 {
+            let target = Duration::from_secs_f64(clock);
+            let elapsed = t0.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        tokens_total += tokens.len();
+        let rx = server
+            .submit_forward(&model, ForwardRequest { tokens })
+            .map_err(|e| anyhow::anyhow!("forward loadgen admission failed: {e}"))?;
+        receivers.push(rx);
+    }
+    let mut errors = 0usize;
+    for rx in receivers {
+        match rx.recv() {
+            Ok(Ok(_)) => {}
+            _ => errors += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let m = server.metrics();
+    let latency = m.hist_since("serve.forward_latency_seconds", &latency_before);
+    let step_rows = m.hist_since("serve.forward_step_rows", &step_rows_before);
+    Ok(LoadgenReport {
+        requests: cfg.requests,
+        rows: tokens_total,
+        errors,
+        wall_seconds: wall,
+        rps: cfg.requests as f64 / wall,
+        rows_per_second: tokens_total as f64 / wall,
+        p50_us: latency.percentile(50.0) * 1e6,
+        p95_us: latency.percentile(95.0) * 1e6,
+        p99_us: latency.percentile(99.0) * 1e6,
+        mean_latency_us: latency.mean() * 1e6,
+        batch_mean: step_rows.mean(),
+        batches: m.counter("serve.forward_steps") - steps_before,
     })
 }
 
@@ -204,7 +341,7 @@ mod tests {
     use crate::compress::{compress_matrix, SwscConfig};
     use crate::infer::InferMode;
     use crate::io::SwscFile;
-    use crate::serve::{BatchConfig, ModelRegistry, DEFAULT_MODEL};
+    use crate::serve::{BatchConfig, ForwardScheduling, ModelRegistry, DEFAULT_MODEL};
     use std::sync::Arc;
 
     fn server() -> BatchServer {
@@ -261,6 +398,50 @@ mod tests {
         server.shutdown();
     }
 
+    /// Regression (ISSUE 7): sequential replays on one server report
+    /// *independent* latency stats. A poison sample planted between the
+    /// runs must not surface in the second report — the old code read
+    /// the cumulative histograms, so a 1000 s outlier (or simply the
+    /// first replay's samples) leaked into every later report's p99.
+    #[test]
+    fn sequential_replays_report_independent_stats() {
+        let server = server();
+        let cfg = LoadgenConfig {
+            requests: 12,
+            rows_per_request: 5,
+            ragged: true,
+            targets: vec![(DEFAULT_MODEL.into(), "w".into())],
+            ..Default::default()
+        };
+        let a = run_loadgen(&server, &cfg).unwrap();
+        // Poison the cumulative histograms with an absurd outlier and a
+        // giant fake batch, as if earlier traffic had been pathological.
+        server.metrics().record("serve.latency_seconds", 1000.0);
+        server.metrics().record("serve.batch_rows", 1e6);
+        let b = run_loadgen(&server, &cfg).unwrap();
+        // With 12 requests, a cumulative read would put the 1000 s
+        // outlier at p99 (nearest-rank of 13+ samples = max) — 1e9 µs.
+        assert!(
+            b.p99_us < 1e8,
+            "second replay's p99 ({} µs) saw pre-run samples",
+            b.p99_us
+        );
+        assert!(
+            b.mean_latency_us < 1e8,
+            "second replay's mean ({} µs) saw pre-run samples",
+            b.mean_latency_us
+        );
+        assert!(
+            b.batch_mean <= (12 * 5) as f64,
+            "second replay's batch_mean ({}) saw pre-run samples",
+            b.batch_mean
+        );
+        // Both replays' own stats are sane and self-consistent.
+        assert!(a.p95_us >= a.p50_us && b.p95_us >= b.p50_us);
+        assert!(a.batches >= 1 && b.batches >= 1);
+        server.shutdown();
+    }
+
     #[test]
     fn unknown_target_is_an_error() {
         let server = server();
@@ -270,6 +451,85 @@ mod tests {
             ..Default::default()
         };
         assert!(run_loadgen(&server, &cfg).is_err());
+        server.shutdown();
+    }
+
+    fn forward_server(scheduling: ForwardScheduling) -> BatchServer {
+        use crate::model::{init_params, param_specs, ModelConfig};
+        let cfg = ModelConfig::tiny();
+        let ck = init_params(&cfg, 61);
+        let mut file = SwscFile::new();
+        for spec in param_specs(&cfg) {
+            let t = ck.get(&spec.name).unwrap().clone();
+            if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+                file.compressed
+                    .insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+            } else {
+                file.dense.insert(spec.name.clone(), t);
+            }
+        }
+        let mut reg = ModelRegistry::new();
+        reg.insert_forward_file(DEFAULT_MODEL, &file, cfg, InferMode::Compressed).unwrap();
+        BatchServer::start(
+            Arc::new(reg),
+            BatchConfig::default().with_forward_scheduling(scheduling),
+        )
+    }
+
+    /// The forward loadgen replays a mixed-length stream and reports
+    /// forward-specific semantics: rows = tokens, batches = layer steps,
+    /// batch_mean = stacked token rows per step — under both schedulers.
+    #[test]
+    fn forward_replays_and_reports() {
+        for scheduling in [ForwardScheduling::Continuous, ForwardScheduling::Flush] {
+            let server = forward_server(scheduling);
+            let cfg = ForwardLoadgenConfig {
+                requests: 8,
+                max_tokens: 6,
+                models: vec![DEFAULT_MODEL.into()],
+                ..Default::default()
+            };
+            let rep = run_forward_loadgen(&server, &cfg).unwrap();
+            assert_eq!(rep.requests, 8);
+            assert_eq!(rep.errors, 0, "{scheduling:?}");
+            assert!(rep.rows >= 8 && rep.rows <= 8 * 6);
+            // Every request crosses n_layers = 2 layer boundaries; steps
+            // can be shared (grouping) but never skipped.
+            assert!(rep.batches >= 2, "{scheduling:?}: {} steps", rep.batches);
+            assert!(rep.batch_mean >= 1.0);
+            assert!(rep.p95_us >= rep.p50_us && rep.p50_us > 0.0);
+            server.shutdown();
+        }
+    }
+
+    /// Same seed ⇒ same token stream, and (satellite 1 applies here too)
+    /// a second replay's latency stats are its own.
+    #[test]
+    fn forward_stream_is_seeded_and_stats_are_independent() {
+        let server = forward_server(ForwardScheduling::Continuous);
+        let cfg = ForwardLoadgenConfig {
+            requests: 6,
+            max_tokens: 5,
+            models: vec![DEFAULT_MODEL.into()],
+            ..Default::default()
+        };
+        let a = run_forward_loadgen(&server, &cfg).unwrap();
+        server.metrics().record("serve.forward_latency_seconds", 1000.0);
+        let b = run_forward_loadgen(&server, &cfg).unwrap();
+        assert_eq!(a.rows, b.rows, "same seed must replay the same stream");
+        assert!(b.p99_us < 1e8, "second replay's p99 ({} µs) saw pre-run samples", b.p99_us);
+        server.shutdown();
+    }
+
+    #[test]
+    fn forward_unknown_model_is_an_error() {
+        let server = forward_server(ForwardScheduling::Continuous);
+        let cfg = ForwardLoadgenConfig {
+            requests: 2,
+            models: vec!["ghost".into()],
+            ..Default::default()
+        };
+        assert!(run_forward_loadgen(&server, &cfg).is_err());
         server.shutdown();
     }
 }

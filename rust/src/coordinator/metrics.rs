@@ -70,6 +70,55 @@ impl Histogram {
         HIST_LO * ((HIST_HI / HIST_LO).ln() * ((i as f64 + 0.5) / HIST_BUCKETS as f64)).exp()
     }
 
+    /// Lower edge of bucket `i` (bucket 0 absorbs everything ≤ `HIST_LO`,
+    /// so its lower edge is reported as 0).
+    fn bucket_lo(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            HIST_LO * ((HIST_HI / HIST_LO).ln() * (i as f64 / HIST_BUCKETS as f64)).exp()
+        }
+    }
+
+    /// Upper edge of bucket `i`.
+    fn bucket_hi(i: usize) -> f64 {
+        HIST_LO * ((HIST_HI / HIST_LO).ln() * ((i as f64 + 1.0) / HIST_BUCKETS as f64)).exp()
+    }
+
+    /// The observations recorded into `self` after `earlier` was cloned
+    /// from it — i.e. snapshot a long-lived histogram before a run, then
+    /// report the run's *own* samples instead of the cumulative stream.
+    ///
+    /// Bucket counts, `count`, and `sum` are exact deltas. `min`/`max`
+    /// are exact whenever the window moved the cumulative extreme;
+    /// otherwise they are bucket-edge estimates clamped into the
+    /// cumulative `[min, max]` (same ≤ ~5.5% resolution as percentiles).
+    pub fn since(&self, earlier: &Histogram) -> Histogram {
+        let mut out = Histogram::new();
+        let count = self.count.saturating_sub(earlier.count);
+        if count == 0 {
+            return out; // canonical empty (min/max sentinels intact)
+        }
+        for i in 0..HIST_BUCKETS {
+            out.buckets[i] = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        out.count = count;
+        out.sum = self.sum - earlier.sum;
+        let first = out.buckets.iter().position(|&c| c > 0).unwrap_or(0);
+        let last = out.buckets.iter().rposition(|&c| c > 0).unwrap_or(HIST_BUCKETS - 1);
+        out.min = if self.min < earlier.min {
+            self.min
+        } else {
+            Self::bucket_lo(first).clamp(self.min, self.max)
+        };
+        out.max = if self.max > earlier.max {
+            self.max
+        } else {
+            Self::bucket_hi(last).clamp(self.min, self.max)
+        };
+        out
+    }
+
     pub fn push(&mut self, v: f64) {
         // NaN observations are recorded as 0 so the exact min/max/sum
         // side-stats stay finite: `f64::min(INFINITY, NAN)` would leave
@@ -172,6 +221,19 @@ impl Metrics {
 
     pub fn timing_max(&self, name: &str) -> f64 {
         self.hists.lock().unwrap().get(name).map(|h| h.max()).unwrap_or(0.0)
+    }
+
+    /// Clone `name`'s current histogram (empty when absent). Pair with
+    /// [`Metrics::hist_since`] to report one run's own distribution on a
+    /// long-lived server whose histograms are cumulative.
+    pub fn hist_snapshot(&self, name: &str) -> Histogram {
+        self.hists.lock().unwrap().get(name).cloned().unwrap_or_default()
+    }
+
+    /// The observations recorded into `name` since `earlier` was
+    /// snapshotted (see [`Histogram::since`]).
+    pub fn hist_since(&self, name: &str, earlier: &Histogram) -> Histogram {
+        self.hist_snapshot(name).since(earlier)
     }
 
     /// Render all metrics as a report block: counters, then every
@@ -291,6 +353,36 @@ mod tests {
         for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
             assert_eq!(h.percentile(p), 0.125);
         }
+    }
+
+    /// Snapshot-and-delta: a second window's stats are its own, not the
+    /// cumulative stream's (the loadgen double-replay bug).
+    #[test]
+    fn since_reports_only_the_window() {
+        let m = Metrics::new();
+        // First window: a slow regime.
+        for _ in 0..100 {
+            m.record("lat", 1.0);
+        }
+        let snap = m.hist_snapshot("lat");
+        // Second window: fast. Cumulative p99 would still say ~1 s.
+        for _ in 0..100 {
+            m.record("lat", 1e-3);
+        }
+        let delta = m.hist_since("lat", &snap);
+        assert_eq!(delta.count(), 100);
+        assert!((delta.mean() - 1e-3).abs() / 1e-3 < 0.01, "sum delta is exact");
+        assert!(delta.percentile(99.0) < 0.01, "p99 must not see the first window");
+        assert!(delta.max() < 0.01, "max estimate must stay inside the window's bucket");
+        // min moved the cumulative extreme in the window → exact.
+        assert_eq!(delta.min(), 1e-3);
+        // Empty window against a fresh snapshot reports the empty shape.
+        let snap2 = m.hist_snapshot("lat");
+        let none = m.hist_since("lat", &snap2);
+        assert_eq!(none.count(), 0);
+        assert_eq!(none.percentile(50.0), 0.0);
+        // Absent histogram: snapshot and delta are both empty.
+        assert_eq!(m.hist_snapshot("missing").count(), 0);
     }
 
     #[test]

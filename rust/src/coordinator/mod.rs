@@ -16,7 +16,12 @@
 //!   materialization, behind the `ServiceConfig::infer_mode` flag — and
 //!   since the serving layer ([`crate::serve`]) those route through a
 //!   micro-batch coalescer behind `ServiceConfig::batching` (bitwise
-//!   identical to inline serving; `Disabled` is the oracle).
+//!   identical to inline serving; `Disabled` is the oracle). Since PR 7
+//!   it also serves whole-model [`service::ForwardRequest`]s from a
+//!   [`crate::infer::CompressedForward`] — the full transformer stack in
+//!   the compressed domain, continuous-batched at layer boundaries when
+//!   batching is enabled, with the inline solo path as the bitwise
+//!   oracle.
 //!
 //! [`metrics`] carries counters and fixed-size latency histograms
 //! (p50/p95/p99) for all of it.
@@ -28,5 +33,6 @@ pub mod service;
 pub use metrics::{Histogram, Metrics};
 pub use scheduler::{compress_model, CompressOutcome};
 pub use service::{
-    EvalRequest, EvalResponse, EvalService, LinearRequest, LinearResponse, ServiceConfig,
+    EvalRequest, EvalResponse, EvalService, ForwardRequest, ForwardResponse, LinearRequest,
+    LinearResponse, ServiceConfig,
 };

@@ -24,6 +24,13 @@
 //!   [`Batching::Disabled`] keeps the inline path as the bitwise oracle,
 //!   mirroring `ExecBackend::SpawnPerCall` / `GemmKernel::Blocked` /
 //!   `InferMode::Reconstructed`.
+//! - [`ForwardRequest`] (a token window) → `[tokens, vocab]` logits from
+//!   the **whole transformer stack in the compressed domain** (PR 7): a
+//!   [`CompressedForward`] chains every attention/MLP linear through the
+//!   factored form with no reconstruction. With batching enabled these
+//!   ride the coalescer's continuous-batching scheduler (requests
+//!   join/leave the in-flight batch at layer boundaries); disabled, the
+//!   batcher thread runs each solo — bitwise identical either way.
 //!
 //! The PJRT engine is constructed lazily on the first eval request, so a
 //! linear-only service (started with [`EvalService::start_with_swsc`] and
@@ -45,7 +52,7 @@
 //!   `infer` + `serve` contracts).
 
 use crate::coordinator::metrics::Metrics;
-use crate::infer::{CompressedModel, InferMode, Precision};
+use crate::infer::{CompressedForward, CompressedModel, InferMode, Precision};
 use crate::io::SwscFile;
 use crate::model::ModelConfig;
 use crate::runtime::convert::literal_to_tensor;
@@ -57,7 +64,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-pub use crate::serve::{LinearRequest, LinearResponse};
+pub use crate::serve::{ForwardRequest, ForwardResponse, LinearRequest, LinearResponse};
 
 /// One evaluation request: a `seq+1`-token window (input + next-token
 /// targets derive from it).
@@ -111,6 +118,7 @@ impl Default for ServiceConfig {
 enum Job {
     Eval(EvalRequest, mpsc::Sender<Result<EvalResponse, String>>),
     Linear(LinearRequest, mpsc::Sender<Result<LinearResponse, String>>),
+    Forward(ForwardRequest, mpsc::Sender<Result<ForwardResponse, String>>),
     Shutdown,
 }
 
@@ -119,6 +127,11 @@ pub struct EvalService {
     tx: mpsc::SyncSender<Job>,
     worker: Option<std::thread::JoinHandle<()>>,
     batch: Option<BatchServer>,
+    /// The whole-model compressed forward (PR 7), when the `.swsc`
+    /// container covers every parameter of the config. `None` on
+    /// partial (linear-only) containers — forward requests then get an
+    /// explicit error instead of a mid-request shape panic.
+    forward: Option<Arc<CompressedForward>>,
     pub metrics: Arc<Metrics>,
     seq: usize,
 }
@@ -179,13 +192,26 @@ impl EvalService {
     ) -> EvalService {
         let metrics = Arc::new(Metrics::new());
         let model = model.map(Arc::new);
+        // Whole-model forward surface (PR 7): best-effort — a container
+        // covering every parameter serves ForwardRequests; a partial
+        // (linear-only) container leaves this None and forward
+        // submissions get an explicit error.
+        let forward = model
+            .as_ref()
+            .and_then(|m| CompressedForward::new(m.clone(), cfg.clone()).ok())
+            .map(Arc::new);
         // Linear micro-batching front end: a BatchServer over a
         // single-model registry, sharing the service's metrics (and the
-        // model's lazily packed panels, through the Arc).
+        // model's lazily packed panels, through the Arc). When the
+        // forward exists it is registered under the same name, so the
+        // coalescer's continuous-batching scheduler serves it too.
         let batch = match (&model, svc_cfg.batching) {
             (Some(m), Batching::Enabled(bc)) => {
                 let mut registry = ModelRegistry::new();
-                registry.insert(DEFAULT_MODEL, m.clone());
+                match &forward {
+                    Some(f) => registry.insert_forward(DEFAULT_MODEL, f.clone()),
+                    None => registry.insert(DEFAULT_MODEL, m.clone()),
+                }
                 Some(BatchServer::start_with(
                     Arc::new(registry),
                     bc,
@@ -198,10 +224,11 @@ impl EvalService {
         let (tx, rx) = mpsc::sync_channel::<Job>(svc_cfg.queue_capacity);
         let m = metrics.clone();
         let seq = cfg.seq;
+        let fwd_inline = forward.clone();
         let worker = std::thread::spawn(move || {
-            batcher_loop(manifest, cfg, host_params, model, rx, svc_cfg, m);
+            batcher_loop(manifest, cfg, host_params, model, fwd_inline, rx, svc_cfg, m);
         });
-        EvalService { tx, worker: Some(worker), batch, metrics, seq }
+        EvalService { tx, worker: Some(worker), batch, forward, metrics, seq }
     }
 
     /// Submit a request; blocks when the queue is full (backpressure).
@@ -275,6 +302,72 @@ impl EvalService {
         rx.recv().context("service dropped response")?.map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// Whether the service can answer [`ForwardRequest`]s (the `.swsc`
+    /// container covered every parameter of the model config).
+    pub fn has_forward(&self) -> bool {
+        self.forward.is_some()
+    }
+
+    /// Submit a whole-model forward request (PR 7); blocks when the
+    /// queue is full. With batching enabled this routes through the
+    /// coalescer's continuous-batching scheduler — responses are bitwise
+    /// identical to the inline solo path either way (layer-boundary
+    /// re-forming is pure scheduling; see `crate::infer::CompressedForward`).
+    pub fn submit_forward(
+        &self,
+        req: ForwardRequest,
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>> {
+        anyhow::ensure!(
+            self.forward.is_some(),
+            "forward serving disabled: the .swsc container does not cover every model \
+             parameter (linear requests only)"
+        );
+        let rrx = match &self.batch {
+            Some(server) => server
+                .submit_forward(DEFAULT_MODEL, req)
+                .map_err(|e| anyhow::anyhow!("service stopped: {e}"))?,
+            None => {
+                let (rtx, rrx) = mpsc::channel();
+                self.tx.send(Job::Forward(req, rtx)).context("service stopped")?;
+                rrx
+            }
+        };
+        self.metrics.incr("service.forward_requests", 1);
+        Ok(rrx)
+    }
+
+    /// Non-blocking [`EvalService::submit_forward`]: a full queue is an
+    /// explicit [`AdmissionError::Overloaded`].
+    pub fn try_submit_forward(
+        &self,
+        req: ForwardRequest,
+    ) -> std::result::Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
+        if self.forward.is_none() {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let rrx = match &self.batch {
+            Some(server) => server.try_submit_forward(DEFAULT_MODEL, req)?,
+            None => {
+                let (rtx, rrx) = mpsc::channel();
+                match self.tx.try_send(Job::Forward(req, rtx)) {
+                    Ok(()) => rrx,
+                    Err(mpsc::TrySendError::Full(_)) => return Err(AdmissionError::Overloaded),
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        return Err(AdmissionError::ShuttingDown)
+                    }
+                }
+            }
+        };
+        self.metrics.incr("service.forward_requests", 1);
+        Ok(rrx)
+    }
+
+    /// Submit a forward request and wait for its `[tokens, vocab]` logits.
+    pub fn forward_blocking(&self, req: ForwardRequest) -> Result<ForwardResponse> {
+        let rx = self.submit_forward(req)?;
+        rx.recv().context("service dropped response")?.map_err(|e| anyhow::anyhow!(e))
+    }
+
     /// Signal shutdown without joining: the linear front end stops
     /// admitting (new submissions get [`AdmissionError::ShuttingDown`])
     /// and the eval batcher is woken with a shutdown marker. Requests
@@ -345,6 +438,28 @@ fn serve_linear(
     let _ = tx.send(resp);
 }
 
+/// The inline (batching-disabled) forward path — the solo bitwise oracle
+/// the coalescer's continuous-batching scheduler is measured against.
+fn serve_forward(
+    forward: &Option<Arc<CompressedForward>>,
+    metrics: &Metrics,
+    req: ForwardRequest,
+    tx: mpsc::Sender<Result<ForwardResponse, String>>,
+) {
+    let t0 = std::time::Instant::now();
+    let resp = match forward {
+        None => Err("forward serving disabled: the .swsc container does not cover every \
+                     model parameter (linear requests only)"
+            .to_string()),
+        Some(f) => f
+            .forward(&req.tokens)
+            .map(|logits| ForwardResponse { logits })
+            .map_err(|e| format!("forward failed: {e:#}")),
+    };
+    metrics.record("service.forward_seconds", t0.elapsed().as_secs_f64());
+    let _ = tx.send(resp);
+}
+
 const SHUTDOWN_MSG: &str =
     "service shutting down — request was queued behind shutdown and not served";
 
@@ -362,6 +477,10 @@ fn drain_on_shutdown(rx: &mpsc::Receiver<Job>, metrics: &Metrics) {
                 metrics.incr("service.drained_on_shutdown", 1);
                 let _ = tx.send(Err(SHUTDOWN_MSG.to_string()));
             }
+            Job::Forward(_, tx) => {
+                metrics.incr("service.drained_on_shutdown", 1);
+                let _ = tx.send(Err(SHUTDOWN_MSG.to_string()));
+            }
             Job::Shutdown => {}
         }
     }
@@ -373,6 +492,7 @@ fn batcher_loop(
     cfg: ModelConfig,
     host_params: Vec<Tensor>,
     model: Option<Arc<CompressedModel>>,
+    forward: Option<Arc<CompressedForward>>,
     rx: mpsc::Receiver<Job>,
     svc_cfg: ServiceConfig,
     metrics: Arc<Metrics>,
@@ -392,6 +512,7 @@ fn batcher_loop(
             match rx.recv_timeout(timeout) {
                 Ok(Job::Eval(req, tx)) => pending.push((req, tx)),
                 Ok(Job::Linear(req, tx)) => serve_linear(&model, &metrics, req, tx),
+                Ok(Job::Forward(req, tx)) => serve_forward(&forward, &metrics, req, tx),
                 Ok(Job::Shutdown) => shutting_down = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -514,18 +635,21 @@ mod tests {
         let (t1, r1) = mpsc::channel();
         let (t2, r2) = mpsc::channel();
         let (t3, r3) = mpsc::channel();
+        let (t4, r4) = mpsc::channel();
         let served = LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) };
         let queued = LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) };
         tx.send(Job::Linear(served, t1)).unwrap();
         tx.send(Job::Shutdown).unwrap();
         tx.send(Job::Linear(queued, t2)).unwrap();
         tx.send(Job::Eval(EvalRequest { tokens: vec![1; cfg.seq + 1] }, t3)).unwrap();
+        tx.send(Job::Forward(ForwardRequest { tokens: vec![1, 2] }, t4)).unwrap();
         drop(tx);
         batcher_loop(
             None,
             cfg,
             Vec::new(),
             Some(tiny_model()),
+            None,
             rx,
             ServiceConfig::default(),
             metrics.clone(),
@@ -533,6 +657,7 @@ mod tests {
         assert!(r1.recv().unwrap().is_ok(), "job ahead of the marker must be served");
         assert!(r2.recv().unwrap().unwrap_err().contains("shutting down"));
         assert!(r3.recv().unwrap().unwrap_err().contains("shutting down"));
-        assert_eq!(metrics.counter("service.drained_on_shutdown"), 2);
+        assert!(r4.recv().unwrap().unwrap_err().contains("shutting down"));
+        assert_eq!(metrics.counter("service.drained_on_shutdown"), 3);
     }
 }

@@ -1,0 +1,558 @@
+//! Compressed-domain transformer forward pass.
+//!
+//! [`CompressedForward`] chains [`CompressedModel::apply_with`] through
+//! the GPT-style decoder blocks of [`crate::model::param_specs`] —
+//! attention (wq/wk/wv/wo) and MLP (w1/w2) all served straight from the
+//! factored form `R[labels] + A·B` (or its int8 double-compressed twin),
+//! with **no weight matrix ever reconstructed**. Embedding lookups
+//! reconstruct single rows on demand ([`CompressedLinear::row_into`]);
+//! the tied LM head reuses `embed.tok` through the bucket-sum `matmul`
+//! orientation. Layer norms, biases, GELU, softmax, and the causal
+//! attention mixing are per-token / per-request scalar f32 loops.
+//!
+//! ## The layer-boundary batching contract
+//!
+//! The pass is exposed as an explicit state machine so a scheduler can
+//! re-form batches **between layers** (continuous batching,
+//! `serve::Coalescer`):
+//!
+//! - [`CompressedForward::start`] embeds one request's tokens into a
+//!   [`ForwardState`] (`[t, d_model]` activations, layer counter 0);
+//! - [`CompressedForward::step_group`] advances any set of states that
+//!   sit at the *same* layer by exactly one decoder block, stacking
+//!   their token rows into one activation matrix per linear op;
+//! - [`CompressedForward::finish`] turns a fully stepped state into
+//!   `[t, vocab]` logits.
+//!
+//! Batched equals solo **bitwise**, at any `SWSC_THREADS` and any group
+//! composition, because every cross-request op is an `apply` — and
+//! `apply` is row-independent: each output row is a single-register
+//! increasing-k dot over that row's own activations (the crate-wide
+//! kernel policy, pinned by
+//! `tests/serve_batched.rs::prop_apply_is_row_independent_bitwise`).
+//! Everything between the applies touches one token row (layer norm,
+//! bias, GELU) or one request's own rows (attention), so which requests
+//! share a group — and when they join or leave — is pure scheduling,
+//! like `SWSC_THREADS`. `tests/serve_forward.rs` pins this end to end.
+//!
+//! [`CompressedLinear::row_into`]: super::CompressedLinear::row_into
+
+use super::model::CompressedModel;
+use crate::exec::{self, ExecConfig};
+use crate::model::{param_specs, ModelConfig};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// One in-flight request's activations plus its layer cursor.
+///
+/// Created by [`CompressedForward::start`], advanced by
+/// [`CompressedForward::step_group`], consumed by
+/// [`CompressedForward::finish`].
+pub struct ForwardState {
+    /// `[t, d_model]` activations, one row per token position.
+    x: Tensor,
+    /// Next decoder block to run; `n_layers` ⇒ ready to finish.
+    layer: usize,
+}
+
+impl ForwardState {
+    /// Next decoder block this state will run.
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    /// Token positions (activation rows) in this request.
+    pub fn tokens(&self) -> usize {
+        self.x.rows()
+    }
+}
+
+/// A whole transformer served from compressed weights — see the module
+/// docs for the state-machine surface and the batching contract.
+pub struct CompressedForward {
+    model: Arc<CompressedModel>,
+    cfg: ModelConfig,
+}
+
+impl CompressedForward {
+    /// Bind a model to a config, validating up front that every
+    /// parameter the pass will touch exists with its canonical shape
+    /// (matrices servable through `apply`/`gather_row`, 1-D params
+    /// dense) — so a missing or misshapen weight fails at build time,
+    /// not mid-request.
+    pub fn new(model: Arc<CompressedModel>, cfg: ModelConfig) -> Result<CompressedForward> {
+        cfg.validate()?;
+        for spec in param_specs(&cfg) {
+            if spec.shape.len() == 2 {
+                let got = model
+                    .shape(&spec.name)
+                    .with_context(|| format!("forward needs matrix `{}`", spec.name))?;
+                anyhow::ensure!(
+                    got == (spec.shape[0], spec.shape[1]),
+                    "`{}` is {:?}, config wants {:?}",
+                    spec.name,
+                    got,
+                    spec.shape
+                );
+            } else {
+                let t = model
+                    .dense_entry(&spec.name)
+                    .with_context(|| format!("forward needs dense param `{}`", spec.name))?;
+                anyhow::ensure!(
+                    t.shape() == &spec.shape[..],
+                    "`{}` is {:?}, config wants {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(CompressedForward { model, cfg })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn model(&self) -> &Arc<CompressedModel> {
+        &self.model
+    }
+
+    /// Decoder blocks a state must step through before `finish`.
+    pub fn n_layers(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    fn vec1(&self, name: &str) -> Result<&[f32]> {
+        Ok(self
+            .model
+            .dense_entry(name)
+            .with_context(|| format!("dense param `{name}` missing"))?
+            .data())
+    }
+
+    /// Embed one request: `x[p] = embed.tok[tokens[p]] + embed.pos[p]`.
+    /// Both tables go through `gather_row`, so either may itself be
+    /// compressed. Per-request and serial — batch-composition free.
+    pub fn start(&self, tokens: &[u32]) -> Result<ForwardState> {
+        anyhow::ensure!(!tokens.is_empty(), "forward needs at least one token");
+        anyhow::ensure!(
+            tokens.len() <= self.cfg.seq,
+            "request is {} tokens, model seq is {}",
+            tokens.len(),
+            self.cfg.seq
+        );
+        let d = self.cfg.d_model;
+        let mut x = vec![0.0f32; tokens.len() * d];
+        let mut pos = vec![0.0f32; d];
+        for (p, &tok) in tokens.iter().enumerate() {
+            anyhow::ensure!(
+                (tok as usize) < self.cfg.vocab,
+                "token {tok} out of range (vocab {})",
+                self.cfg.vocab
+            );
+            let row = &mut x[p * d..(p + 1) * d];
+            self.model.gather_row("embed.tok", tok as usize, row)?;
+            self.model.gather_row("embed.pos", p, &mut pos)?;
+            for (xv, &pv) in row.iter_mut().zip(&pos) {
+                *xv += pv;
+            }
+        }
+        Ok(ForwardState { x: Tensor::from_vec(&[tokens.len(), d], x), layer: 0 })
+    }
+
+    /// Advance every state in `states` — all at the **same** layer — by
+    /// one decoder block. The six linear ops run once over the stacked
+    /// token rows of the whole group; everything else is per-row or
+    /// per-request. Group composition is invisible in the results (see
+    /// module docs).
+    pub fn step_group(&self, states: &mut [&mut ForwardState], exec: ExecConfig) -> Result<()> {
+        let Some(first) = states.first() else { return Ok(()) };
+        let layer = first.layer;
+        anyhow::ensure!(
+            states.iter().all(|s| s.layer == layer),
+            "step_group states must share a layer"
+        );
+        anyhow::ensure!(
+            layer < self.cfg.n_layers,
+            "state already stepped past the last layer ({layer})"
+        );
+        let d = self.cfg.d_model;
+        let total: usize = states.iter().map(|s| s.x.rows()).sum();
+        let p = format!("layers.{layer}");
+
+        // Attention half: h = ln1(x); q,k,v = h·W; per-request causal
+        // mix; x += (mix)·Wo.
+        let h = self.stacked_layernorm(states, total, &format!("{p}.ln1"))?;
+        let q = self.model.apply_with(&format!("{p}.attn.wq"), &h, exec)?;
+        let k = self.model.apply_with(&format!("{p}.attn.wk"), &h, exec)?;
+        let v = self.model.apply_with(&format!("{p}.attn.wv"), &h, exec)?;
+        let mut mixed = vec![0.0f32; total * d];
+        let mut off = 0usize;
+        for s in states.iter() {
+            let t = s.x.rows();
+            let span = off * d..(off + t) * d;
+            attention_causal(
+                &q.data()[span.clone()],
+                &k.data()[span.clone()],
+                &v.data()[span.clone()],
+                t,
+                self.cfg.n_heads,
+                d,
+                &mut mixed[span],
+            );
+            off += t;
+        }
+        let o = self
+            .model
+            .apply_with(&format!("{p}.attn.wo"), &Tensor::from_vec(&[total, d], mixed), exec)?;
+        Self::residual_add(states, o.data(), d);
+
+        // MLP half: h = ln2(x); x += gelu(h·W1 + b1)·W2 + b2.
+        let h = self.stacked_layernorm(states, total, &format!("{p}.ln2"))?;
+        let mut f = self.model.apply_with(&format!("{p}.mlp.w1"), &h, exec)?;
+        let b1 = self.vec1(&format!("{p}.mlp.b1"))?;
+        let d_ff = self.cfg.d_ff;
+        for row in f.data_mut().chunks_exact_mut(d_ff) {
+            for (fv, &bv) in row.iter_mut().zip(b1) {
+                *fv = gelu(*fv + bv);
+            }
+        }
+        let mut y = self.model.apply_with(&format!("{p}.mlp.w2"), &f, exec)?;
+        let b2 = self.vec1(&format!("{p}.mlp.b2"))?;
+        for row in y.data_mut().chunks_exact_mut(d) {
+            for (yv, &bv) in row.iter_mut().zip(b2) {
+                *yv += bv;
+            }
+        }
+        Self::residual_add(states, y.data(), d);
+
+        for s in states.iter_mut() {
+            s.layer += 1;
+        }
+        Ok(())
+    }
+
+    /// Stack `layernorm(x_row)` of every state's rows into one
+    /// `[total, d]` activation matrix, in state order.
+    fn stacked_layernorm(
+        &self,
+        states: &[&mut ForwardState],
+        total: usize,
+        prefix: &str,
+    ) -> Result<Tensor> {
+        let d = self.cfg.d_model;
+        let g = self.vec1(&format!("{prefix}.g"))?;
+        let b = self.vec1(&format!("{prefix}.b"))?;
+        let mut h = vec![0.0f32; total * d];
+        let mut off = 0usize;
+        for s in states.iter() {
+            for t in 0..s.x.rows() {
+                layernorm_row(s.x.row(t), g, b, &mut h[off * d..(off + 1) * d]);
+                off += 1;
+            }
+        }
+        Ok(Tensor::from_vec(&[total, d], h))
+    }
+
+    /// `state.x += delta` for each state's slice of the stacked rows.
+    fn residual_add(states: &mut [&mut ForwardState], delta: &[f32], d: usize) {
+        let mut off = 0usize;
+        for s in states.iter_mut() {
+            for t in 0..s.x.rows() {
+                for (xv, &dv) in s.x.row_mut(t).iter_mut().zip(&delta[off * d..(off + 1) * d]) {
+                    *xv += dv;
+                }
+                off += 1;
+            }
+        }
+    }
+
+    /// Final layer norm + tied LM head: `[t, vocab]` logits. Per-request
+    /// — never batched across requests, so group composition cannot
+    /// touch it. The tied head reuses `embed.tok` through the bucket-sum
+    /// `matmul` orientation (logitsᵀ = `embed.tok · hᵀ`).
+    pub fn finish(&self, state: &ForwardState, exec: ExecConfig) -> Result<Tensor> {
+        anyhow::ensure!(
+            state.layer == self.cfg.n_layers,
+            "finish at layer {} of {}",
+            state.layer,
+            self.cfg.n_layers
+        );
+        let d = self.cfg.d_model;
+        let t = state.x.rows();
+        let g = self.vec1("final_ln.g")?;
+        let b = self.vec1("final_ln.b")?;
+        let mut h = vec![0.0f32; t * d];
+        for i in 0..t {
+            layernorm_row(state.x.row(i), g, b, &mut h[i * d..(i + 1) * d]);
+        }
+        let ht = Tensor::from_vec(&[t, d], h).transpose_with(exec);
+        let logits_t = self.model.matmul_with("embed.tok", &ht, exec)?;
+        Ok(logits_t.transpose_with(exec))
+    }
+
+    /// Whole pass for one request on the process-wide thread config.
+    pub fn forward(&self, tokens: &[u32]) -> Result<Tensor> {
+        self.forward_with(tokens, exec::global())
+    }
+
+    /// Whole pass for one request — the solo oracle the batched
+    /// scheduler is measured against (bitwise).
+    pub fn forward_with(&self, tokens: &[u32], exec: ExecConfig) -> Result<Tensor> {
+        let mut state = self.start(tokens)?;
+        while state.layer < self.cfg.n_layers {
+            self.step_group(&mut [&mut state], exec)?;
+        }
+        self.finish(&state, exec)
+    }
+
+    /// Summed negative log-likelihood of `targets` under the compressed
+    /// forward of `inputs`, plus the token count — the perplexity
+    /// building block (`exp(Σ nll / Σ tokens)`). Log-sum-exp in f64.
+    pub fn nll_window(
+        &self,
+        inputs: &[u32],
+        targets: &[u32],
+        exec: ExecConfig,
+    ) -> Result<(f64, usize)> {
+        anyhow::ensure!(
+            inputs.len() == targets.len(),
+            "inputs ({}) and targets ({}) must align",
+            inputs.len(),
+            targets.len()
+        );
+        let logits = self.forward_with(inputs, exec)?;
+        let mut nll = 0.0f64;
+        for (i, &tgt) in targets.iter().enumerate() {
+            anyhow::ensure!(
+                (tgt as usize) < self.cfg.vocab,
+                "target {tgt} out of range (vocab {})",
+                self.cfg.vocab
+            );
+            let row = logits.row(i);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v)) as f64;
+            let sum: f64 = row.iter().map(|&v| (v as f64 - mx).exp()).sum();
+            nll += mx + sum.ln() - row[tgt as usize] as f64;
+        }
+        Ok((nll, targets.len()))
+    }
+}
+
+/// `out = (x - mean) / sqrt(var + 1e-5) * g + b` over one token row.
+/// Plain serial f32 — per-row, so batching can never reorder it.
+fn layernorm_row(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    let mut mean = 0.0f32;
+    for &v in x {
+        mean += v;
+    }
+    let mean = mean / n as f32;
+    let mut var = 0.0f32;
+    for &v in x {
+        let dv = v - mean;
+        var += dv * dv;
+    }
+    let inv = 1.0 / (var / n as f32 + 1e-5).sqrt();
+    for i in 0..n {
+        out[i] = (x[i] - mean) * inv * g[i] + b[i];
+    }
+}
+
+/// GELU, tanh approximation (the GPT-2 convention).
+fn gelu(v: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/π)
+    0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh())
+}
+
+/// Causal multi-head self-attention over one request's `t` rows of
+/// stacked `q`/`k`/`v` (`t × d` each, row-major). Scores are
+/// `q·k / sqrt(head_dim)` accumulated in increasing channel order,
+/// softmax is max-subtracted, and the value mix accumulates in
+/// increasing position order — all single-register serial f32, touching
+/// only this request's rows.
+fn attention_causal(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    n_heads: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut w = vec![0.0f32; t];
+    for h in 0..n_heads {
+        let ho = h * hd;
+        for i in 0..t {
+            for (j, wj) in w.iter_mut().enumerate().take(i + 1) {
+                let mut dot = 0.0f32;
+                for dd in 0..hd {
+                    dot += q[i * d + ho + dd] * k[j * d + ho + dd];
+                }
+                *wj = dot * scale;
+            }
+            let mut mx = w[0];
+            for &wj in &w[1..=i] {
+                if wj > mx {
+                    mx = wj;
+                }
+            }
+            let mut sum = 0.0f32;
+            for wj in w.iter_mut().take(i + 1) {
+                *wj = (*wj - mx).exp();
+                sum += *wj;
+            }
+            let inv = 1.0 / sum;
+            for dd in 0..hd {
+                let mut acc = 0.0f32;
+                for (j, &wj) in w.iter().enumerate().take(i + 1) {
+                    acc += wj * inv * v[j * d + ho + dd];
+                }
+                out[i * d + ho + dd] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_matrix, SwscConfig};
+    use crate::infer::InferMode;
+    use crate::io::SwscFile;
+    use crate::model::init_params;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Compress a tiny model's checkpoint into a servable file: 2-D
+    /// params with ≥ 16 columns become compressed entries, the rest pass
+    /// through dense.
+    fn tiny_file(seed: u64) -> (SwscFile, ModelConfig) {
+        let cfg = ModelConfig::tiny();
+        let ck = init_params(&cfg, seed);
+        let mut file = SwscFile::new();
+        for spec in param_specs(&cfg) {
+            let t = ck.get(&spec.name).unwrap().clone();
+            if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+                file.compressed
+                    .insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+            } else {
+                file.dense.insert(spec.name.clone(), t);
+            }
+        }
+        (file, cfg)
+    }
+
+    fn forward(seed: u64, mode: InferMode) -> CompressedForward {
+        let (file, cfg) = tiny_file(seed);
+        let model = Arc::new(CompressedModel::from_file(&file, mode));
+        CompressedForward::new(model, cfg).unwrap()
+    }
+
+    #[test]
+    fn shapes_and_validation() {
+        let fwd = forward(40, InferMode::Compressed);
+        let logits = fwd.forward(&[1, 2, 3]).unwrap();
+        assert_eq!(logits.shape(), &[3, fwd.config().vocab]);
+        assert!(fwd.forward(&[]).is_err(), "empty request");
+        assert!(fwd.forward(&[9999]).is_err(), "token out of vocab");
+        assert!(fwd.forward(&vec![0; fwd.config().seq + 1]).is_err(), "over seq");
+        // A file missing a weight fails at build, not mid-request.
+        let (mut file, cfg) = tiny_file(40);
+        file.dense.remove("final_ln.g");
+        let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+        assert!(CompressedForward::new(model, cfg).is_err());
+    }
+
+    /// Compressed vs the reconstructed-dense oracle: same forward code,
+    /// same *effective* weights (`Reconstructed` materializes
+    /// `R[labels] + A·B` from the identical factors) — so the logits
+    /// agree to accumulation-order rounding (the bucket-sum LM head and
+    /// `r > 0` products regroup sums; see tests/fixtures/README.md),
+    /// NOT to some loose compression tolerance.
+    #[test]
+    fn compressed_tracks_reconstructed_oracle() {
+        let comp = forward(41, InferMode::Compressed);
+        let reco = forward(41, InferMode::Reconstructed);
+        let toks = [3u32, 1, 4, 1, 5, 9, 2, 6];
+        let a = comp.forward(&toks).unwrap();
+        let b = reco.forward(&toks).unwrap();
+        assert_eq!(a.shape(), b.shape());
+        assert_close(a.data(), b.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    /// The layer-boundary batching contract at the state-machine level:
+    /// stepping requests as one group is bitwise equal to stepping each
+    /// alone, at every thread config.
+    #[test]
+    fn step_group_bitwise_equals_solo() {
+        let fwd = forward(42, InferMode::Compressed);
+        let reqs: Vec<Vec<u32>> = vec![vec![7, 8, 9], vec![1], vec![2, 3, 4, 5, 6, 7, 8]];
+        let solo: Vec<Tensor> =
+            reqs.iter().map(|t| fwd.forward_with(t, ExecConfig::serial()).unwrap()).collect();
+        for threads in [1usize, 2, 4] {
+            let exec = ExecConfig::with_threads(threads);
+            let mut states: Vec<ForwardState> =
+                reqs.iter().map(|t| fwd.start(t).unwrap()).collect();
+            for _ in 0..fwd.n_layers() {
+                let mut group: Vec<&mut ForwardState> = states.iter_mut().collect();
+                fwd.step_group(&mut group, exec).unwrap();
+            }
+            for (st, want) in states.iter().zip(&solo) {
+                let got = fwd.finish(st, exec).unwrap();
+                assert_eq!(bits(&got), bits(want), "grouped != solo at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn step_group_rejects_mixed_layers() {
+        let fwd = forward(43, InferMode::Compressed);
+        let mut a = fwd.start(&[1, 2]).unwrap();
+        let mut b = fwd.start(&[3]).unwrap();
+        fwd.step_group(&mut [&mut a], ExecConfig::serial()).unwrap();
+        assert_eq!(a.layer(), 1);
+        assert!(fwd.step_group(&mut [&mut a, &mut b], ExecConfig::serial()).is_err());
+        assert!(fwd.finish(&b, ExecConfig::serial()).is_err(), "finish before last layer");
+    }
+
+    /// NLL is finite, positive, and near uniform for a fresh init (the
+    /// logits are near zero ⇒ nll/token ≈ ln(vocab)).
+    #[test]
+    fn nll_window_is_sane() {
+        let fwd = forward(44, InferMode::Compressed);
+        let inputs = [1u32, 2, 3, 4];
+        let targets = [2u32, 3, 4, 5];
+        let (nll, n) = fwd.nll_window(&inputs, &targets, ExecConfig::serial()).unwrap();
+        assert_eq!(n, 4);
+        let per_tok = nll / n as f64;
+        let uniform = (fwd.config().vocab as f64).ln();
+        assert!(
+            (per_tok - uniform).abs() < 1.0,
+            "fresh-init nll/token {per_tok} should be near ln(vocab) = {uniform}"
+        );
+        assert!(fwd.nll_window(&[1, 2], &[1], ExecConfig::serial()).is_err());
+    }
+
+    /// The scalar helpers behave: layernorm normalizes, gelu brackets.
+    #[test]
+    fn scalar_helpers() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let g = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        layernorm_row(&x, &g, &b, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5 && (var - 1.0).abs() < 1e-3);
+        assert!(gelu(0.0) == 0.0 && gelu(10.0) > 9.99 && gelu(-10.0).abs() < 1e-3);
+        assert_close(&[gelu(1.0)], &[0.841_192], 1e-4, 1e-4).unwrap();
+    }
+}

@@ -193,6 +193,29 @@ impl CompressedLinear {
         m * n * self.rank + m * n * b
     }
 
+    /// Reconstruct one row of `W` into `out` (`out.len() == n`) without
+    /// materializing the matrix:
+    /// `out[j] = R[i][labels[j]] + Σᵣ A[i][r]·B[r][j]`, the rank term
+    /// added in increasing `r`. This is the embedding-lookup primitive
+    /// for the compressed forward pass — `O(n·r)` per token, serial by
+    /// construction, so trivially identical at any thread count.
+    pub fn row_into(&self, i: usize, out: &mut [f32]) {
+        let (m, n) = self.shape;
+        assert!(i < m, "row {i} out of range for {m}×{n}");
+        assert_eq!(out.len(), n, "row_into wants an n = {n} buffer");
+        let crow = self.centroids.row(i);
+        for (o, &l) in out.iter_mut().zip(&self.labels) {
+            *o = crow[l as usize];
+        }
+        for ri in 0..self.rank {
+            let a = self.factor_a.row(i)[ri];
+            let brow = &self.factor_b.data()[ri * n..][..n];
+            for (o, &b) in out.iter_mut().zip(brow) {
+                *o += a * b;
+            }
+        }
+    }
+
     /// `Y = W·X` on the process-wide thread config (`x` is `n × b`).
     pub fn matmul(&self, x: &Tensor) -> Tensor {
         self.matmul_with(x, exec::global())
@@ -386,6 +409,23 @@ mod tests {
         assert_eq!(bits(&lin.t_matmul(&xt)), bits(&w.t_matmul(&xt)), "t_matmul r=0");
         let xa = Tensor::randn(&[5, 40], &mut rng);
         assert_eq!(bits(&lin.apply(&xa)), bits(&xa.matmul(&w)), "apply r=0");
+    }
+
+    /// `row_into` reconstructs exactly the rows `reconstruct()` builds
+    /// (same gather + increasing-r accumulation per element).
+    #[test]
+    fn row_into_matches_reconstruct_rows() {
+        for (m, n, k, r, seed) in [(24, 30, 4, 3, 810), (16, 20, 3, 0, 811)] {
+            let c = compressed(m, n, k, r, seed);
+            let lin = CompressedLinear::from_matrix(&c);
+            let w = c.reconstruct();
+            let mut row = vec![0.0f32; n];
+            for i in 0..m {
+                lin.row_into(i, &mut row);
+                assert_close(&row, w.row(i), 1e-5, 1e-5)
+                    .unwrap_or_else(|e| panic!("row {i}: {e}"));
+            }
+        }
     }
 
     #[test]

@@ -79,12 +79,26 @@
 //! only against the pre-quantization weights is there a (documented,
 //! grid-step) tolerance.
 
+//!
+//! ## The whole model (PR 7)
+//!
+//! [`CompressedForward`] chains these operators through the GPT-style
+//! decoder end to end — attention, MLP, embeddings, tied LM head — so a
+//! forward pass never materializes a weight matrix, closing the PR 4
+//! headroom note above. It is exposed as a start/step/finish state
+//! machine at **layer granularity**, which is what lets the serving
+//! layer re-form batches between layers (continuous batching) while
+//! staying bitwise equal to solo execution — see `forward.rs`'s module
+//! docs for the argument and `tests/serve_forward.rs` for the pins.
+
 mod bucket;
+mod forward;
 mod linear;
 mod model;
 mod quantized;
 
 pub use bucket::{bucket_sums, bucket_sums_indexed, bucket_sums_with, BucketIndex, CHANNEL_CHUNK};
+pub use forward::{CompressedForward, ForwardState};
 pub use linear::CompressedLinear;
 pub use model::{CompressedModel, InferMode, Precision};
 pub use quantized::QuantizedLinear;

@@ -159,6 +159,32 @@ impl CompressedModel {
         (t.ndim() == 2).then(|| (t.rows(), t.cols()))
     }
 
+    /// A dense (uncompressed) entry, any rank — layer-norm gains, biases,
+    /// and position embeddings stay dense in a `.swsc` file, and the
+    /// compressed forward reads them through this.
+    pub fn dense_entry(&self, name: &str) -> Option<&Tensor> {
+        self.dense.get(name)
+    }
+
+    /// Copy row `i` of the 2-D entry `name` into `out` — the embedding
+    /// lookup of the compressed forward. Compressed entries reconstruct
+    /// just that row (`O(n·r)`, never the matrix); dense entries copy.
+    pub fn gather_row(&self, name: &str, i: usize, out: &mut [f32]) -> Result<()> {
+        let (m, n) = self
+            .shape(name)
+            .ok_or_else(|| anyhow::anyhow!("no matrix named `{name}` in the model"))?;
+        anyhow::ensure!(i < m, "row {i} out of range for `{name}` ({m}×{n})");
+        anyhow::ensure!(out.len() == n, "`{name}` rows are {n} wide, buffer is {}", out.len());
+        if let Some(lin) = self.linears.get(name) {
+            lin.row_into(i, out);
+        } else if let Some(q) = self.quantized.get(name) {
+            q.row_into(i, out);
+        } else {
+            out.copy_from_slice(self.dense[name].row(i));
+        }
+        Ok(())
+    }
+
     /// `Y = X·W[name]` for a row-major activation batch (`x` is `b × m`)
     /// — the serving entry point. Compressed entries never materialize the
     /// dense weight; dense entries run a plain GEMM.

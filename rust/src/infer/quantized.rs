@@ -121,6 +121,14 @@ impl QuantizedLinear {
             + self.pbq_b(exec).footprint_bytes()
     }
 
+    /// Reconstruct one row of `W` into `out` — the embedding-lookup
+    /// primitive for the compressed forward pass. Routes through the
+    /// f32 twin (row lookups are rare and serial; the fused panels only
+    /// pay off on batched GEMMs).
+    pub fn row_into(&self, i: usize, out: &mut [f32]) {
+        self.f32_twin().row_into(i, out)
+    }
+
     /// `Y = X·W` on the process-wide thread config (`x` is `b × m`).
     pub fn apply(&self, x: &Tensor) -> Tensor {
         self.apply_with(x, exec::global())

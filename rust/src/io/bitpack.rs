@@ -12,8 +12,11 @@ pub fn pack_u32(values: &[u32], bits: u32) -> Vec<u8> {
     let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
     let mut bitpos = 0usize;
     for &v in values {
-        debug_assert!(v <= mask, "value {v} does not fit in {bits} bits");
-        let v = (v & mask) as u64;
+        // Unconditional: a release build that silently masked an
+        // oversized label would round-trip it as a *different valid
+        // label* — a wrong cluster served with no error anywhere.
+        assert!(v <= mask, "value {v} does not fit in {bits} bits");
+        let v = v as u64;
         let byte = bitpos / 8;
         let off = bitpos % 8;
         let span = (v << off) as u128;
@@ -63,7 +66,10 @@ mod tests {
             111,
             64,
             |r| {
-                let bits = 1 + r.below(16) as u32;
+                // Full width range, including the bits == 32 mask edge
+                // (where `1u32 << bits` would overflow — the mask must
+                // come from the u64 domain or the MAX special case).
+                let bits = 1 + r.below(32) as u32;
                 let n = r.below(200);
                 let mask = (1u64 << bits) - 1;
                 let vals: Vec<u32> = (0..n).map(|_| (r.next_u64() & mask) as u32).collect();
@@ -75,6 +81,24 @@ mod tests {
                 if &got == vals { Ok(()) } else { Err(format!("{got:?} != {vals:?}")) }
             },
         );
+    }
+
+    /// The out-of-range guard is unconditional (not `debug_assert!`):
+    /// in release builds a masked oversized value would round-trip as a
+    /// different valid label, serving the wrong cluster silently.
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn oversized_value_panics_in_all_builds() {
+        pack_u32(&[16], 4);
+    }
+
+    /// Full-width edge: 32-bit values round-trip with no masking at all.
+    #[test]
+    fn bits_32_round_trips_max_values() {
+        let vals = vec![u32::MAX, 0, 0x8000_0001, 0xDEAD_BEEF];
+        let packed = pack_u32(&vals, 32);
+        assert_eq!(packed.len(), 16);
+        assert_eq!(unpack_u32(&packed, vals.len(), 32), vals);
     }
 
     #[test]

@@ -69,6 +69,8 @@ fn print_help() {
            compress  --ckpt runs/default/model.swck --proj qk|mlp --bits 2 --out model.swsc\n\
                      [--precision f32|int8 --group 64]  (int8 = grouped-int8 factors)\n\
            eval      --ckpt model.swck | --swsc model.swsc  [--preset small]\n\
+                     [--engine pjrt|compressed]  (compressed = whole forward from\n\
+                     the .swsc factors, no artifacts/PJRT/reconstruction)\n\
            table1    --ckpt runs/default/model.swck [--bits 3,2] [--out table1.txt]\n\
            table2    [--m 4096]\n\
            pipeline  --steps 300 --out runs/pipeline\n\
@@ -256,20 +258,40 @@ fn cmd_compress(opts: &Opts) -> Result<()> {
 
 fn cmd_eval(opts: &Opts) -> Result<()> {
     let cfg = ModelConfig::by_name(opt(opts, "preset", "small"))?;
-    let engine = engine_for(opts, &cfg)?;
     let (_tok, _train, eval_data) = corpus_and_data(&cfg, opt(opts, "seed", "42").parse()?);
 
-    let evaluator = Evaluator::new(engine, cfg)?;
-    let res = if let Some(p) = opts.get("swsc") {
-        let file = SwscFile::load(Path::new(p))?;
-        // fwd_eval takes dense literals (restored host-side); compressed-
-        // domain serving — no reconstruction — is the `serve` surface in
-        // coordinator::EvalService / examples/serve_compressed.rs.
-        evaluator.perplexity_of_swsc(&file, &eval_data)?
-    } else if let Some(p) = opts.get("ckpt") {
-        evaluator.perplexity_of(&Checkpoint::load(Path::new(p))?, &eval_data)?
-    } else {
-        bail!("need --ckpt or --swsc");
+    let res = match opt(opts, "engine", "pjrt") {
+        // PR 7: the whole forward in the compressed domain — no PJRT,
+        // no artifacts, no reconstructed weights. Only `.swsc` input
+        // makes sense here (a checkpoint has nothing compressed to serve).
+        "compressed" => {
+            let p = opts
+                .get("swsc")
+                .context("--engine compressed evaluates a container: need --swsc")?;
+            let file = SwscFile::load(Path::new(p))?;
+            swsc::eval::perplexity_swsc_compressed(
+                &file,
+                &cfg,
+                swsc::infer::InferMode::Compressed,
+                &eval_data,
+                swsc::exec::global(),
+            )?
+        }
+        "pjrt" => {
+            let engine = engine_for(opts, &cfg)?;
+            let evaluator = Evaluator::new(engine, cfg)?;
+            if let Some(p) = opts.get("swsc") {
+                let file = SwscFile::load(Path::new(p))?;
+                // fwd_eval takes dense literals (restored host-side); the
+                // no-reconstruction route is `--engine compressed` above.
+                evaluator.perplexity_of_swsc(&file, &eval_data)?
+            } else if let Some(p) = opts.get("ckpt") {
+                evaluator.perplexity_of(&Checkpoint::load(Path::new(p))?, &eval_data)?
+            } else {
+                bail!("need --ckpt or --swsc");
+            }
+        }
+        other => bail!("unknown eval engine `{other}` (pjrt|compressed)"),
     };
     println!("perplexity {:.4}  (nll/token {:.4}, {} tokens, {} batches)", res.perplexity, res.nll_per_token, res.tokens, res.batches);
     Ok(())

@@ -13,6 +13,25 @@
 //! batch size is governed by the row bound and under trickle traffic by
 //! the wait bound.
 //!
+//! ## Continuous batching for whole-model forwards (PR 7)
+//!
+//! Forward requests are a different shape of work: a request is not one
+//! `apply` but a *sequence* of layer steps through a
+//! [`crate::infer::CompressedForward`] state machine. Flushing them like
+//! linear batches would convoy short requests behind long ones and make
+//! arrivals wait out the entire in-flight cohort. Instead the scheduler
+//! keeps an **in-flight set** and re-forms it at every layer boundary:
+//! arrivals are admitted (at their layer 0) whenever the stacked token
+//! rows fit [`BatchConfig::max_batch_rows`], requests that clear the last
+//! layer `finish` and respond immediately, and each scheduler iteration
+//! steps every `(forward, layer)` cohort one layer as a single grouped
+//! call. [`ForwardScheduling::Flush`] keeps the old flush-the-batch model
+//! as the in-tree scheduling oracle. Both are bitwise identical to solo
+//! execution — group composition is pure scheduling, because every
+//! cross-request op inside a layer step is a row-independent `apply`
+//! (the fill clock never runs while forwards are in flight; it would
+//! stall the layer clock for no batching gain).
+//!
 //! ## Why batching never changes results
 //!
 //! Every serving path computes each output row from that row's own
@@ -23,45 +42,74 @@
 //! `SWSC_THREADS`. Arrival order is preserved purely so the stack/scatter
 //! bookkeeping is trivially auditable — correctness never depends on it.
 
-use super::queue::{Job, JobReceiver, ServeJob};
+use super::queue::{ForwardJob, Job, JobReceiver, ServeJob};
 use super::registry::ModelRegistry;
-use super::LinearResponse;
+use super::{ForwardResponse, LinearResponse};
 use crate::coordinator::metrics::Metrics;
-use crate::infer::CompressedModel;
+use crate::exec;
+use crate::infer::{CompressedForward, CompressedModel, ForwardState};
 use crate::tensor::Tensor;
+use std::collections::VecDeque;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+/// How whole-model forward requests are scheduled across layer steps.
+/// Purely a latency/throughput knob: both modes are bitwise identical to
+/// solo execution (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ForwardScheduling {
+    /// Re-form the in-flight set at every layer boundary: arrivals join
+    /// mid-flight, finished requests leave immediately (the default).
+    #[default]
+    Continuous,
+    /// Flush-the-batch: admit a cohort only when the previous one has run
+    /// to completion. The scheduling oracle the
+    /// `forward_batched_vs_flush_*` bench rows compare against.
+    Flush,
+}
 
 /// Coalescing knobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatchConfig {
     /// Flush a micro-batch once its stacked activation rows reach this
-    /// bound (a single larger request still forms its own batch).
+    /// bound (a single larger request still forms its own batch). Also
+    /// bounds the stacked token rows of the in-flight forward set.
     pub max_batch_rows: usize,
     /// Longest the coalescer waits for further arrivals before flushing a
     /// partial batch. Only bounds *added* latency: queued requests
     /// coalesce immediately.
     pub max_wait: Duration,
+    /// Layer-step scheduling for whole-model forward requests.
+    pub forward_scheduling: ForwardScheduling,
 }
 
 impl BatchConfig {
     /// Construct with `max_wait` in microseconds — the serving-latency
     /// scale the knob is usually quoted in.
     pub fn with_wait_us(max_batch_rows: usize, max_wait_us: u64) -> BatchConfig {
-        BatchConfig { max_batch_rows, max_wait: Duration::from_micros(max_wait_us) }
+        BatchConfig {
+            max_batch_rows,
+            max_wait: Duration::from_micros(max_wait_us),
+            forward_scheduling: ForwardScheduling::default(),
+        }
     }
 
     /// Serve every request alone: batch bound 1, no fill wait. The solo
     /// baseline configuration the `batched_vs_solo_*` bench rows compare
     /// against (one `apply` per request through the same machinery).
     pub fn solo() -> BatchConfig {
-        BatchConfig { max_batch_rows: 1, max_wait: Duration::ZERO }
+        BatchConfig::with_wait_us(1, 0)
+    }
+
+    /// This configuration with the given forward scheduling.
+    pub fn with_forward_scheduling(self, forward_scheduling: ForwardScheduling) -> BatchConfig {
+        BatchConfig { forward_scheduling, ..self }
     }
 }
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        BatchConfig { max_batch_rows: 256, max_wait: Duration::from_micros(200) }
+        BatchConfig::with_wait_us(256, 200)
     }
 }
 
@@ -85,6 +133,17 @@ struct Group {
     jobs: Vec<ServeJob>,
 }
 
+/// One admitted forward request mid-stack: its per-request activation
+/// state, re-formed into `(forward, layer)` cohorts at every boundary.
+struct InflightForward {
+    job: ForwardJob,
+    fwd: Arc<CompressedForward>,
+    state: ForwardState,
+    /// Set when a grouped layer step fails — the request is answered with
+    /// this error at the next finish pass instead of stepping further.
+    error: Option<String>,
+}
+
 impl Coalescer {
     pub fn new(registry: Arc<ModelRegistry>, cfg: BatchConfig, metrics: Arc<Metrics>) -> Coalescer {
         let cfg = BatchConfig { max_batch_rows: cfg.max_batch_rows.max(1), ..cfg };
@@ -93,37 +152,190 @@ impl Coalescer {
 
     /// Drive the queue until a shutdown marker arrives (or every producer
     /// is gone). Blocks while idle; never drops a responder — jobs behind
-    /// the shutdown marker get an explicit error.
+    /// the shutdown marker get an explicit error, and forwards admitted
+    /// *before* the marker are still served to completion.
     pub fn run(&self, rx: JobReceiver) {
+        let mut shutting_down = false;
+        let mut pending: VecDeque<ForwardJob> = VecDeque::new();
+        let mut inflight: Vec<InflightForward> = Vec::new();
         loop {
-            let first = match rx.recv() {
-                Ok(Job::Linear(job)) => job,
-                Ok(Job::Shutdown) => {
-                    self.drain(&rx);
-                    return;
-                }
-                Err(_) => return,
-            };
-            let mut shutting_down = false;
-            let mut rows = request_rows(&first);
-            let mut batch = vec![first];
-            let deadline = Instant::now() + self.cfg.max_wait;
-            while rows < self.cfg.max_batch_rows && !shutting_down {
-                let timeout = deadline.saturating_duration_since(Instant::now());
-                match rx.recv_timeout(timeout) {
-                    Ok(Job::Linear(job)) => {
-                        rows += request_rows(&job);
-                        batch.push(job);
+            let mut batch: Vec<ServeJob> = Vec::new();
+            let mut rows = 0usize;
+            // Fully idle: block for the first arrival (no polling).
+            if !shutting_down && pending.is_empty() && inflight.is_empty() {
+                match rx.recv() {
+                    Ok(job) => {
+                        self.intake(job, &mut batch, &mut rows, &mut pending, &mut shutting_down)
                     }
-                    Ok(Job::Shutdown) => shutting_down = true,
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+                    Err(_) => shutting_down = true,
                 }
             }
-            self.execute_batch(batch);
-            if shutting_down {
+            if !shutting_down {
+                if !batch.is_empty() && pending.is_empty() && inflight.is_empty() {
+                    // A pure-linear micro-batch is forming: run the fill
+                    // clock exactly as before PR 7.
+                    let deadline = Instant::now() + self.cfg.max_wait;
+                    while rows < self.cfg.max_batch_rows && !shutting_down {
+                        let timeout = deadline.saturating_duration_since(Instant::now());
+                        match rx.recv_timeout(timeout) {
+                            Ok(job) => self.intake(
+                                job,
+                                &mut batch,
+                                &mut rows,
+                                &mut pending,
+                                &mut shutting_down,
+                            ),
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+                        }
+                    }
+                } else {
+                    // Forward work is outstanding: fold in whatever is
+                    // already queued without stalling the layer clock
+                    // behind a fill window.
+                    while rows < self.cfg.max_batch_rows && !shutting_down {
+                        match rx.try_recv() {
+                            Ok(job) => self.intake(
+                                job,
+                                &mut batch,
+                                &mut rows,
+                                &mut pending,
+                                &mut shutting_down,
+                            ),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => shutting_down = true,
+                        }
+                    }
+                }
+            }
+            if !batch.is_empty() {
+                self.execute_batch(batch);
+            }
+            self.admit(&mut pending, &mut inflight);
+            self.step_inflight(&mut inflight);
+            if shutting_down && pending.is_empty() && inflight.is_empty() {
                 self.drain(&rx);
                 return;
+            }
+        }
+    }
+
+    fn intake(
+        &self,
+        job: Job,
+        batch: &mut Vec<ServeJob>,
+        rows: &mut usize,
+        pending: &mut VecDeque<ForwardJob>,
+        shutting_down: &mut bool,
+    ) {
+        match job {
+            Job::Linear(job) => {
+                *rows += request_rows(&job);
+                batch.push(job);
+            }
+            Job::Forward(job) => {
+                self.metrics.incr("serve.forward_requests", 1);
+                pending.push_back(job);
+            }
+            Job::Shutdown => *shutting_down = true,
+        }
+    }
+
+    /// Admit pending forwards into the in-flight set at their layer 0.
+    /// [`ForwardScheduling::Continuous`] admits at every layer boundary
+    /// while the stacked token rows fit `max_batch_rows` (the first
+    /// admission always goes through, like a single oversized linear
+    /// request); [`ForwardScheduling::Flush`] admits only into an empty
+    /// set, so each cohort runs to completion before the next forms.
+    fn admit(&self, pending: &mut VecDeque<ForwardJob>, inflight: &mut Vec<InflightForward>) {
+        // Flush only forms a new cohort once the previous one is gone —
+        // but within one formation it still fills up to the row bound.
+        if self.cfg.forward_scheduling == ForwardScheduling::Flush && !inflight.is_empty() {
+            return;
+        }
+        while let Some(next) = pending.front() {
+            if !inflight.is_empty() {
+                let rows: usize = inflight.iter().map(|f| f.state.tokens()).sum();
+                if rows + next.req.tokens.len().max(1) > self.cfg.max_batch_rows {
+                    break;
+                }
+            }
+            let job = pending.pop_front().expect("front() was Some");
+            let Some(fwd) = self.registry.forward(&job.model) else {
+                let msg = format!("no forward named `{}` in the registry", job.model);
+                self.respond_forward(job, Err(msg));
+                continue;
+            };
+            match fwd.start(&job.req.tokens) {
+                Ok(state) => inflight.push(InflightForward { job, fwd, state, error: None }),
+                Err(e) => {
+                    let msg = format!("forward start failed: {e:#}");
+                    self.respond_forward(job, Err(msg));
+                }
+            }
+        }
+    }
+
+    /// Step every `(forward, layer)` cohort one layer as a single grouped
+    /// call, then finish and respond to requests that cleared the stack.
+    fn step_inflight(&self, inflight: &mut Vec<InflightForward>) {
+        if inflight.is_empty() {
+            return;
+        }
+        // Cohort keys are collected up front so arrivals admitted this
+        // iteration (layer 0) step alongside older requests deeper in the
+        // stack — one step per cohort per iteration keeps progress fair.
+        let mut keys: Vec<(*const CompressedForward, usize)> = Vec::new();
+        for f in inflight.iter() {
+            let key = (Arc::as_ptr(&f.fwd), f.state.layer());
+            if !keys.contains(&key) {
+                keys.push(key);
+            }
+        }
+        for (ptr, layer) in keys {
+            let mut members: Vec<&mut InflightForward> = inflight
+                .iter_mut()
+                .filter(|f| {
+                    Arc::as_ptr(&f.fwd) == ptr && f.state.layer() == layer && f.error.is_none()
+                })
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let fwd = members[0].fwd.clone();
+            let step_rows: usize = members.iter().map(|m| m.state.tokens()).sum();
+            self.metrics.incr("serve.forward_steps", 1);
+            self.metrics.record("serve.forward_step_rows", step_rows as f64);
+            let t0 = Instant::now();
+            let mut states: Vec<&mut ForwardState> =
+                members.iter_mut().map(|m| &mut m.state).collect();
+            let result = fwd.step_group(&mut states, exec::global());
+            self.metrics.record("serve.apply_seconds", t0.elapsed().as_secs_f64());
+            if let Err(e) = result {
+                let msg = format!("forward step failed: {e:#}");
+                for m in members {
+                    m.error = Some(msg.clone());
+                }
+            }
+        }
+        let mut i = 0;
+        while i < inflight.len() {
+            let done = inflight[i].error.is_some()
+                || inflight[i].state.layer() == inflight[i].fwd.n_layers();
+            if !done {
+                i += 1;
+                continue;
+            }
+            let f = inflight.remove(i);
+            match f.error {
+                Some(msg) => self.respond_forward(f.job, Err(msg)),
+                None => {
+                    let res = f
+                        .fwd
+                        .finish(&f.state, exec::global())
+                        .map_err(|e| format!("forward finish failed: {e:#}"));
+                    self.respond_forward(f.job, res);
+                }
             }
         }
     }
@@ -144,6 +356,17 @@ impl Coalescer {
                 self.respond(job, Err(msg));
                 continue;
             };
+            // A well-formed zero-row request has nothing to compute:
+            // answer the empty `[0, out]` immediately instead of routing
+            // it into the stack.
+            if job.req.x.ndim() == 2 && job.req.x.rows() == 0 {
+                if let Some((m, n)) = model.shape(&job.req.name) {
+                    if job.req.x.cols() == m {
+                        self.respond(job, Ok(Tensor::zeros(&[0, n])));
+                        continue;
+                    }
+                }
+            }
             // Only well-formed requests are stacked; anything else goes
             // through the model's own `apply` so the error (unknown
             // weight, shape mismatch, non-matrix) is exactly the solo
@@ -220,24 +443,44 @@ impl Coalescer {
         let _ = job.tx.send(result.map(|y| LinearResponse { y }));
     }
 
+    fn respond_forward(&self, job: ForwardJob, result: Result<Tensor, String>) {
+        self.metrics
+            .record("serve.forward_latency_seconds", job.enqueued.elapsed().as_secs_f64());
+        if result.is_err() {
+            self.metrics.incr("serve.errors", 1);
+        }
+        let _ = job.tx.send(result.map(|logits| ForwardResponse { logits }));
+    }
+
     /// Everything behind a shutdown marker gets an explicit error — never
     /// a silently dropped sender.
     fn drain(&self, rx: &JobReceiver) {
         while let Ok(job) = rx.try_recv() {
-            if let Job::Linear(job) = job {
-                self.metrics.incr("serve.drained_on_shutdown", 1);
-                self.respond(job, Err(SHUTDOWN_MSG.to_string()));
+            match job {
+                Job::Linear(job) => {
+                    self.metrics.incr("serve.drained_on_shutdown", 1);
+                    self.respond(job, Err(SHUTDOWN_MSG.to_string()));
+                }
+                Job::Forward(job) => {
+                    self.metrics.incr("serve.drained_on_shutdown", 1);
+                    self.respond_forward(job, Err(SHUTDOWN_MSG.to_string()));
+                }
+                Job::Shutdown => {}
             }
         }
     }
 }
 
-/// Row contribution of a request toward the batch bound. Malformed
-/// requests (non-2-D activations) count as one row — they still occupy a
-/// batch slot on their way to an error response.
+/// Row contribution of a request toward the batch bound. Every request
+/// occupies at least one slot: malformed (non-2-D) requests count one on
+/// their way to an error response, and well-formed zero-row (`[0, m]`)
+/// requests count one too. Before PR 7 zero-row requests counted zero —
+/// a stream of them never advanced the row bound, so each paid the full
+/// `max_wait` fill window despite being answerable immediately, while
+/// malformed requests (which do even less work) counted one.
 fn request_rows(job: &ServeJob) -> usize {
     if job.req.x.ndim() == 2 {
-        job.req.x.rows()
+        job.req.x.rows().max(1)
     } else {
         1
     }
@@ -249,9 +492,30 @@ mod tests {
     use crate::compress::{compress_matrix, SwscConfig};
     use crate::infer::InferMode;
     use crate::io::SwscFile;
+    use crate::model::{init_params, param_specs, ModelConfig};
     use crate::serve::queue::AdmissionQueue;
-    use crate::serve::LinearRequest;
+    use crate::serve::{ForwardRequest, LinearRequest};
     use crate::util::rng::Rng;
+
+    /// Registry with a tiny whole-model forward under "m": 2-D params
+    /// with ≥ 16 columns compressed, the rest dense.
+    fn forward_registry(seed: u64) -> (Arc<ModelRegistry>, Arc<CompressedForward>) {
+        let cfg = ModelConfig::tiny();
+        let ck = init_params(&cfg, seed);
+        let mut file = SwscFile::new();
+        for spec in param_specs(&cfg) {
+            let t = ck.get(&spec.name).unwrap().clone();
+            if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+                file.compressed
+                    .insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+            } else {
+                file.dense.insert(spec.name.clone(), t);
+            }
+        }
+        let mut reg = ModelRegistry::new();
+        let fwd = reg.insert_forward_file("m", &file, cfg, InferMode::Compressed).unwrap();
+        (Arc::new(reg), fwd)
+    }
 
     fn registry() -> Arc<ModelRegistry> {
         let mut rng = Rng::new(70);
@@ -345,6 +609,59 @@ mod tests {
         assert_eq!(metrics.counter("serve.batches"), 1, "stream must coalesce into one batch");
         assert_eq!(metrics.counter("serve.requests"), 8);
         assert_eq!(metrics.counter("serve.errors"), 3);
+    }
+
+    /// Satellite 2 (PR 7): well-formed zero-row `[0, m]` requests advance
+    /// the row bound like any other request and are answered with an
+    /// empty `[0, out]` tensor without entering the stack. Before the
+    /// fix they counted zero rows — a stream of them never flushed on the
+    /// bound, so each paid the full `max_wait` fill window.
+    #[test]
+    fn zero_row_requests_count_and_answer_empty() {
+        let reg = registry();
+        let metrics = Arc::new(Metrics::new());
+        let coal = Coalescer::new(reg, BatchConfig::with_wait_us(2, 0), metrics.clone());
+        let (q, rx) = AdmissionQueue::bounded(8);
+        let rxs: Vec<_> = (0..3)
+            .map(|_| {
+                q.try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[0, 16]) })
+                    .unwrap()
+            })
+            .collect();
+        q.begin_shutdown();
+        drop(q);
+        coal.run(rx);
+        for r in rxs {
+            let y = r.recv().unwrap().unwrap().y;
+            assert_eq!(y.shape(), &[0, 16]);
+        }
+        // One row each against a bound of 2: the stream splits 2 + 1. The
+        // old zero-count behavior coalesced all three into one batch.
+        assert_eq!(metrics.counter("serve.batches"), 2);
+        assert_eq!(metrics.counter("serve.errors"), 0);
+    }
+
+    /// The other half of satellite 2: malformed (non-2-D) requests keep
+    /// counting one row toward the bound on their way to an error.
+    #[test]
+    fn malformed_requests_count_one_row() {
+        let reg = registry();
+        let metrics = Arc::new(Metrics::new());
+        let coal = Coalescer::new(reg, BatchConfig::with_wait_us(2, 0), metrics.clone());
+        let (q, rx) = AdmissionQueue::bounded(8);
+        let rxs: Vec<_> = (0..3)
+            .map(|_| {
+                q.try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[16]) })
+                    .unwrap()
+            })
+            .collect();
+        q.begin_shutdown();
+        drop(q);
+        coal.run(rx);
+        for r in rxs {
+            assert!(r.recv().unwrap().is_err(), "non-2-D request must error");
+        }
+        assert_eq!(metrics.counter("serve.batches"), 2);
     }
 
     /// The row bound flushes mid-stream: 3 × 2-row requests against a

@@ -47,13 +47,29 @@
 //! through both configurations and emits `batched_vs_solo_*` rows;
 //! `examples/serve_batched.rs` is the artifact-free demo and CI smoke
 //! test.
+//!
+//! ## Whole-model serving and continuous batching (PR 7)
+//!
+//! [`ForwardRequest`] serves an entire transformer forward pass from a
+//! registered [`crate::infer::CompressedForward`] — not one linear op.
+//! Because the forward is a start/step/finish state machine at layer
+//! granularity, the coalescer runs it with **continuous batching**: the
+//! in-flight request set is re-formed at every layer boundary, so
+//! arrivals join mid-flight (at their layer 0) and short requests finish
+//! and respond without convoying behind long ones. The flush-the-batch
+//! model survives as [`coalescer::ForwardScheduling::Flush`], the
+//! scheduling oracle — both modes, and solo execution, are **bitwise
+//! identical** because every cross-request op is a row-independent
+//! `apply` (see [`crate::infer::CompressedForward`]'s module docs; the
+//! end-to-end pins live in `tests/serve_forward.rs`, and
+//! `forward_batched_vs_flush_*` bench rows quantify the latency win).
 
 pub mod coalescer;
 pub mod queue;
 pub mod registry;
 pub mod server;
 
-pub use coalescer::{BatchConfig, Coalescer};
+pub use coalescer::{BatchConfig, Coalescer, ForwardScheduling};
 pub use queue::{AdmissionError, AdmissionQueue, JobReceiver};
 pub use registry::ModelRegistry;
 pub use server::{BatchServer, DEFAULT_MODEL};
@@ -72,6 +88,19 @@ pub struct LinearRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinearResponse {
     pub y: Tensor,
+}
+
+/// One whole-model request: run the registered compressed forward pass
+/// over a token window (`tokens.len() ≤ seq`, values `< vocab`).
+#[derive(Debug, Clone)]
+pub struct ForwardRequest {
+    pub tokens: Vec<u32>,
+}
+
+/// Response to a [`ForwardRequest`]: `[tokens, vocab]` logits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForwardResponse {
+    pub logits: Tensor,
 }
 
 /// How a serving front end routes linear requests.

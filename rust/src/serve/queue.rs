@@ -9,7 +9,7 @@
 //! is answered with an explicit shutdown error by the coalescer's drain
 //! pass, so no responder is ever dropped silently.
 
-use super::{LinearRequest, LinearResponse};
+use super::{ForwardRequest, ForwardResponse, LinearRequest, LinearResponse};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -52,8 +52,22 @@ pub(crate) struct ServeJob {
     pub tx: Responder,
 }
 
+/// Channel a forward response is delivered on.
+pub(crate) type ForwardResponder = mpsc::Sender<Result<ForwardResponse, String>>;
+
+/// One admitted whole-model request (PR 7), on its way to the
+/// coalescer's continuous-batching scheduler.
+pub(crate) struct ForwardJob {
+    /// Registry key of the target forward.
+    pub model: String,
+    pub req: ForwardRequest,
+    pub enqueued: Instant,
+    pub tx: ForwardResponder,
+}
+
 pub(crate) enum Job {
     Linear(ServeJob),
+    Forward(ForwardJob),
     Shutdown,
 }
 
@@ -153,6 +167,52 @@ impl AdmissionQueue {
         Ok(rrx)
     }
 
+    /// Non-blocking admission of a whole-model forward request. Same
+    /// backpressure contract as [`AdmissionQueue::try_submit`]: a forward
+    /// occupies one queue slot regardless of its token count — token-level
+    /// bounds are the scheduler's job ([`super::BatchConfig`]).
+    pub fn try_submit_forward(
+        &self,
+        model: &str,
+        req: ForwardRequest,
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
+        if self.is_shutting_down() {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let (job, rrx) = make_forward_job(model, req);
+        // Reserve-then-send, exactly as `try_submit`.
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(Job::Forward(job)) {
+            Ok(()) => Ok(rrx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(AdmissionError::Overloaded)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(AdmissionError::ShuttingDown)
+            }
+        }
+    }
+
+    /// Blocking admission of a whole-model forward request.
+    pub fn submit_forward(
+        &self,
+        model: &str,
+        req: ForwardRequest,
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
+        if self.is_shutting_down() {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let (job, rrx) = make_forward_job(model, req);
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(Job::Forward(job)).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(AdmissionError::ShuttingDown);
+        }
+        Ok(rrx)
+    }
+
     /// Stop admitting and wake the coalescer with a shutdown marker. The
     /// coalescer serves everything admitted before the marker, then
     /// answers anything behind it with an explicit shutdown error.
@@ -175,6 +235,20 @@ impl AdmissionQueue {
         self.tx.send(Job::Linear(job)).expect("queue gone");
         rrx
     }
+
+    /// Test hook: enqueue a forward past the shutdown flag (the drain
+    /// path must answer it, never drop its responder).
+    #[cfg(test)]
+    pub(crate) fn submit_forward_behind_shutdown(
+        &self,
+        model: &str,
+        req: ForwardRequest,
+    ) -> mpsc::Receiver<Result<ForwardResponse, String>> {
+        let (job, rrx) = make_forward_job(model, req);
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Job::Forward(job)).expect("queue gone");
+        rrx
+    }
 }
 
 fn make_job(
@@ -187,9 +261,19 @@ fn make_job(
     (job, rrx)
 }
 
+fn make_forward_job(
+    model: &str,
+    req: ForwardRequest,
+) -> (ForwardJob, mpsc::Receiver<Result<ForwardResponse, String>>) {
+    let (rtx, rrx) = mpsc::channel();
+    let job =
+        ForwardJob { model: model.to_string(), req, enqueued: Instant::now(), tx: rtx };
+    (job, rrx)
+}
+
 impl JobReceiver {
     fn note(&self, job: &Job) {
-        if matches!(job, Job::Linear(_)) {
+        if matches!(job, Job::Linear(_) | Job::Forward(_)) {
             self.depth.fetch_sub(1, Ordering::Relaxed);
         }
     }
@@ -265,6 +349,27 @@ mod tests {
         // Capacity freed: admission works again.
         let _r3 = q.try_submit("m", req()).unwrap();
         assert_eq!(q.depth(), 1);
+    }
+
+    /// Forward jobs ride the same bounded channel: they count toward the
+    /// depth bound and decrement it on consumption, exactly like linears.
+    #[test]
+    fn forward_jobs_share_the_depth_bound() {
+        let (q, rx) = AdmissionQueue::bounded(2);
+        let _r1 = q.try_submit_forward("m", ForwardRequest { tokens: vec![1, 2] }).unwrap();
+        let _r2 = q.try_submit("m", req()).unwrap();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(
+            q.try_submit_forward("m", ForwardRequest { tokens: vec![3] }).unwrap_err(),
+            AdmissionError::Overloaded
+        );
+        assert!(matches!(rx.recv().unwrap(), Job::Forward(_)));
+        assert_eq!(q.depth(), 1);
+        q.begin_shutdown();
+        assert_eq!(
+            q.submit_forward("m", ForwardRequest { tokens: vec![0] }).unwrap_err(),
+            AdmissionError::ShuttingDown
+        );
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Multiple named `.swsc` models behind one serving surface.
 
-use crate::infer::{CompressedModel, InferMode, Precision};
+use crate::infer::{CompressedForward, CompressedModel, InferMode, Precision};
 use crate::io::SwscFile;
+use crate::model::ModelConfig;
+use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -15,6 +17,7 @@ use std::sync::Arc;
 #[derive(Default)]
 pub struct ModelRegistry {
     models: BTreeMap<String, Arc<CompressedModel>>,
+    forwards: BTreeMap<String, Arc<CompressedForward>>,
 }
 
 impl ModelRegistry {
@@ -54,9 +57,39 @@ impl ModelRegistry {
         self.models.insert(name.to_string(), model);
     }
 
+    /// Register a whole-model forward pass under `name` (PR 7). The
+    /// forward's underlying [`CompressedModel`] is registered under the
+    /// same name, so one name answers both [`super::LinearRequest`]s
+    /// (individual weights) and [`super::ForwardRequest`]s (the full
+    /// stack) from one set of shared packed panels.
+    pub fn insert_forward(&mut self, name: &str, fwd: Arc<CompressedForward>) {
+        self.models.insert(name.to_string(), fwd.model().clone());
+        self.forwards.insert(name.to_string(), fwd);
+    }
+
+    /// Build a [`CompressedForward`] from `file` (validating that every
+    /// parameter `cfg` requires is present) and register it under `name`.
+    pub fn insert_forward_file(
+        &mut self,
+        name: &str,
+        file: &SwscFile,
+        cfg: ModelConfig,
+        mode: InferMode,
+    ) -> Result<Arc<CompressedForward>> {
+        let model = Arc::new(CompressedModel::from_file(file, mode));
+        let fwd = Arc::new(CompressedForward::new(model, cfg)?);
+        self.insert_forward(name, fwd.clone());
+        Ok(fwd)
+    }
+
     /// The model registered under `name`, if any.
     pub fn get(&self, name: &str) -> Option<Arc<CompressedModel>> {
         self.models.get(name).cloned()
+    }
+
+    /// The whole-model forward registered under `name`, if any.
+    pub fn forward(&self, name: &str) -> Option<Arc<CompressedForward>> {
+        self.forwards.get(name).cloned()
     }
 
     /// Registered names, in sorted order.

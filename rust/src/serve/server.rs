@@ -4,7 +4,7 @@
 use super::coalescer::{BatchConfig, Coalescer};
 use super::queue::{AdmissionError, AdmissionQueue};
 use super::registry::ModelRegistry;
-use super::{LinearRequest, LinearResponse};
+use super::{ForwardRequest, ForwardResponse, LinearRequest, LinearResponse};
 use crate::coordinator::metrics::Metrics;
 use anyhow::Context;
 use std::sync::{mpsc, Arc};
@@ -87,6 +87,45 @@ impl BatchServer {
             }
             other => other,
         }
+    }
+
+    /// Blocking admission of a whole-model forward request (PR 7): the
+    /// coalescer's continuous-batching scheduler steps it through the
+    /// registered [`crate::infer::CompressedForward`] layer by layer,
+    /// re-forming the in-flight batch at every layer boundary — bitwise
+    /// identical to solo execution at any scheduling.
+    pub fn submit_forward(
+        &self,
+        model: &str,
+        req: ForwardRequest,
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
+        self.queue.submit_forward(model, req)
+    }
+
+    /// Non-blocking [`BatchServer::submit_forward`]: a full admission
+    /// queue is an explicit [`AdmissionError::Overloaded`].
+    pub fn try_submit_forward(
+        &self,
+        model: &str,
+        req: ForwardRequest,
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
+        match self.queue.try_submit_forward(model, req) {
+            Err(AdmissionError::Overloaded) => {
+                self.metrics.incr("serve.rejected_overloaded", 1);
+                Err(AdmissionError::Overloaded)
+            }
+            other => other,
+        }
+    }
+
+    /// Submit a forward request and wait for its logits.
+    pub fn submit_forward_blocking(
+        &self,
+        model: &str,
+        req: ForwardRequest,
+    ) -> anyhow::Result<ForwardResponse> {
+        let rx = self.submit_forward(model, req).map_err(|e| anyhow::anyhow!("{e}"))?;
+        rx.recv().context("server dropped response")?.map_err(|e| anyhow::anyhow!(e))
     }
 
     /// Submit and wait — convenience mirroring

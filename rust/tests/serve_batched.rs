@@ -177,6 +177,7 @@ fn batched_service_bitwise_equals_disabled_solo() {
             batching: Batching::Enabled(BatchConfig {
                 max_batch_rows: 128,
                 max_wait: Duration::from_millis(200),
+                ..Default::default()
             }),
             ..Default::default()
         },
@@ -237,7 +238,11 @@ fn multi_model_interleaving_routes_correctly() {
     let model_b = reg.insert_file("b", &file_b, InferMode::Compressed);
     let server = BatchServer::start(
         Arc::new(reg),
-        BatchConfig { max_batch_rows: 256, max_wait: Duration::from_millis(200) },
+        BatchConfig {
+            max_batch_rows: 256,
+            max_wait: Duration::from_millis(200),
+            ..Default::default()
+        },
     );
 
     let mut rng = Rng::new(840);

@@ -1,0 +1,308 @@
+//! Forward-serving invariants (ISSUE 7).
+//!
+//! The load-bearing contract: **continuous batching is invisible in the
+//! results.** Every cross-request op in [`CompressedForward::step_group`]
+//! is a row-independent `apply` over the stacked token rows (the
+//! crate-wide single-register increasing-k kernel policy); embedding,
+//! attention mixing, and the LM head are strictly per-request. So the
+//! composition of the in-flight set at any layer boundary — who joined,
+//! who left, how the cohort was partitioned — changes *which call*
+//! computes a row, never its bits. Pinned here:
+//!
+//! 1. the property itself, at the state-machine level: **arbitrary
+//!    arrival interleavings** (random arrival rounds, random cohort
+//!    partitions re-formed at every layer boundary) produce logits
+//!    bitwise equal to solo execution, swept over explicit thread
+//!    configs {1, 2, 4} (satellite 4);
+//! 2. `BatchServer` end to end: `ForwardScheduling::Continuous` and
+//!    `::Flush` responses both bitwise equal the solo
+//!    `CompressedForward::forward` oracle over a concurrent
+//!    mixed-length stream;
+//! 3. the `EvalService` forward surface: batching Enabled vs Disabled
+//!    bitwise parity, and the explicit refusal (never a mid-request
+//!    panic) when the `.swsc` container doesn't cover the full model.
+
+use std::sync::Arc;
+use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::coordinator::{EvalService, ServiceConfig};
+use swsc::exec::ExecConfig;
+use swsc::infer::{CompressedForward, CompressedModel, ForwardState, InferMode};
+use swsc::io::SwscFile;
+use swsc::model::{init_params, param_specs, ModelConfig};
+use swsc::serve::{
+    AdmissionError, BatchConfig, BatchServer, Batching, ForwardRequest, ForwardScheduling,
+    ModelRegistry, DEFAULT_MODEL,
+};
+use swsc::tensor::Tensor;
+use swsc::util::prop::check;
+use swsc::util::rng::Rng;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// A tiny-config container covering every model parameter (2-D weights
+/// wide enough to cluster are SWSC-compressed, the rest dense).
+fn tiny_file(cfg: &ModelConfig, seed: u64) -> SwscFile {
+    let ck = init_params(cfg, seed);
+    let mut file = SwscFile::new();
+    for spec in param_specs(cfg) {
+        let t = ck.get(&spec.name).unwrap().clone();
+        if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+            file.compressed.insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+        } else {
+            file.dense.insert(spec.name.clone(), t);
+        }
+    }
+    file
+}
+
+fn tiny_forward(seed: u64) -> (ModelConfig, SwscFile, Arc<CompressedForward>) {
+    let cfg = ModelConfig::tiny();
+    let file = tiny_file(&cfg, seed);
+    let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+    let fwd = Arc::new(CompressedForward::new(model, cfg.clone()).unwrap());
+    (cfg, file, fwd)
+}
+
+/// One continuous-batching replay at the state-machine level: requests
+/// arrive at their configured round, join the in-flight set at layer 0,
+/// and at every layer boundary the same-layer population is re-shuffled
+/// and re-partitioned into random cohorts (`schedule_seed` makes the
+/// partition sequence reproducible across thread sweeps). Finished
+/// states `finish` immediately and leave. Returns per-request logits.
+fn replay_continuous(
+    fwd: &CompressedForward,
+    windows: &[Vec<u32>],
+    arrivals: &[usize],
+    schedule_seed: u64,
+    exec: ExecConfig,
+) -> Result<Vec<Tensor>, String> {
+    let n_layers = fwd.n_layers();
+    let mut sched = Rng::new(schedule_seed);
+    let mut started = vec![false; windows.len()];
+    let mut logits: Vec<Option<Tensor>> = (0..windows.len()).map(|_| None).collect();
+    let mut inflight: Vec<(usize, ForwardState)> = Vec::new();
+    let mut round = 0usize;
+    while started.iter().any(|s| !s) || !inflight.is_empty() {
+        // Admit everything whose arrival round has come (joins at layer 0,
+        // mid-flight relative to earlier arrivals).
+        for (i, &due) in arrivals.iter().enumerate() {
+            if due <= round && !started[i] {
+                started[i] = true;
+                inflight.push((i, fwd.start(&windows[i]).map_err(|e| e.to_string())?));
+            }
+        }
+        // Re-form cohorts at each layer boundary present this round.
+        let layers: std::collections::BTreeSet<usize> =
+            inflight.iter().map(|(_, s)| s.layer()).collect();
+        for layer in layers {
+            let (mut pool, rest): (Vec<_>, Vec<_>) =
+                inflight.into_iter().partition(|(_, s)| s.layer() == layer);
+            inflight = rest;
+            // Random shuffle + random contiguous split = an arbitrary
+            // cohort composition for this boundary.
+            for i in (1..pool.len()).rev() {
+                pool.swap(i, sched.below(i + 1));
+            }
+            let mut at = 0;
+            while at < pool.len() {
+                let take = 1 + sched.below(pool.len() - at);
+                let chunk = &mut pool[at..at + take];
+                let mut refs: Vec<&mut ForwardState> =
+                    chunk.iter_mut().map(|(_, s)| s).collect();
+                fwd.step_group(&mut refs, exec).map_err(|e| e.to_string())?;
+                at += take;
+            }
+            for (i, s) in pool {
+                if s.layer() == n_layers {
+                    logits[i] = Some(fwd.finish(&s, exec).map_err(|e| e.to_string())?);
+                } else {
+                    inflight.push((i, s));
+                }
+            }
+        }
+        round += 1;
+    }
+    Ok(logits.into_iter().map(|l| l.unwrap()).collect())
+}
+
+/// Satellite 4: arbitrary arrival interleavings × thread configs
+/// {1, 2, 4} are bitwise equal to solo execution.
+#[test]
+fn prop_continuous_batching_is_bitwise_invisible() {
+    let (cfg, _file, fwd) = tiny_forward(901);
+    let (seq, vocab) = (cfg.seq, cfg.vocab);
+    check(
+        "continuous-batched logits == solo logits, bitwise, any interleaving x threads",
+        902,
+        10,
+        |r| {
+            let g = 1 + r.below(5);
+            let windows: Vec<Vec<u32>> = (0..g)
+                .map(|_| {
+                    let t = 1 + r.below(seq.min(10));
+                    (0..t).map(|_| r.below(vocab) as u32).collect()
+                })
+                .collect();
+            let arrivals: Vec<usize> = (0..g).map(|_| r.below(4)).collect();
+            (windows, arrivals, r.next_u64())
+        },
+        |(windows, arrivals, schedule_seed)| {
+            let solo: Vec<Tensor> = windows
+                .iter()
+                .map(|w| fwd.forward_with(w, ExecConfig::serial()).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+            for t in [1usize, 2, 4] {
+                let exec = ExecConfig::with_threads(t);
+                let got = replay_continuous(&fwd, windows, arrivals, *schedule_seed, exec)?;
+                for (i, (g, s)) in got.iter().zip(&solo).enumerate() {
+                    if bits(g) != bits(s) {
+                        return Err(format!(
+                            "request {i} ({} tokens, arrival round {}) not bitwise equal \
+                             to solo at {t} threads",
+                            windows[i].len(),
+                            arrivals[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// End to end through the server: a concurrent mixed-length stream under
+/// both schedulers, every response bitwise equal to the solo oracle.
+#[test]
+fn server_scheduling_bitwise_equals_solo() {
+    let (cfg, _file, fwd) = tiny_forward(910);
+    let mut rng = Rng::new(911);
+    let streams: Vec<Vec<u32>> = (0..16)
+        .map(|_| {
+            let t = 1 + rng.below(cfg.seq);
+            (0..t).map(|_| rng.below(cfg.vocab) as u32).collect()
+        })
+        .collect();
+    let oracle: Vec<Tensor> = streams.iter().map(|w| fwd.forward(w).unwrap()).collect();
+    for scheduling in [ForwardScheduling::Continuous, ForwardScheduling::Flush] {
+        let mut reg = ModelRegistry::new();
+        reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+        let server = BatchServer::start(
+            Arc::new(reg),
+            BatchConfig::default().with_forward_scheduling(scheduling),
+        );
+        // Submit the whole stream before collecting, so requests overlap
+        // and the scheduler actually has an in-flight set to re-form.
+        let rxs: Vec<_> = streams
+            .iter()
+            .map(|w| {
+                server.submit_forward(DEFAULT_MODEL, ForwardRequest { tokens: w.clone() }).unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(
+                bits(&got.logits),
+                bits(&oracle[i]),
+                "{scheduling:?}: request {i} ({} tokens) diverged from solo",
+                streams[i].len()
+            );
+        }
+        assert!(
+            server.metrics().counter("serve.forward_requests") >= streams.len() as u64,
+            "{scheduling:?}: forward requests not accounted"
+        );
+        assert!(
+            server.metrics().counter("serve.forward_steps") >= cfg.n_layers as u64,
+            "{scheduling:?}: layer steps not accounted"
+        );
+        server.shutdown();
+    }
+}
+
+/// The `EvalService` forward surface: batching Enabled routes through the
+/// continuous scheduler, Disabled serves inline — both bitwise equal the
+/// solo oracle, and `service.forward_requests` is accounted.
+#[test]
+fn eval_service_forward_enabled_bitwise_equals_disabled() {
+    let (cfg, file, fwd) = tiny_forward(920);
+    let mut rng = Rng::new(921);
+    let windows: Vec<Vec<u32>> = (0..6)
+        .map(|_| {
+            let t = 1 + rng.below(cfg.seq);
+            (0..t).map(|_| rng.below(cfg.vocab) as u32).collect()
+        })
+        .collect();
+    for batching in [Batching::default(), Batching::Disabled] {
+        let service = EvalService::start_with_swsc(
+            None,
+            cfg.clone(),
+            &file,
+            ServiceConfig { batching, ..Default::default() },
+        )
+        .unwrap();
+        assert!(service.has_forward(), "full container must enable forward serving");
+        for w in &windows {
+            let got = service.forward_blocking(ForwardRequest { tokens: w.clone() }).unwrap();
+            let want = fwd.forward(w).unwrap();
+            assert_eq!(
+                bits(&got.logits),
+                bits(&want),
+                "{batching:?}: {} tokens diverged from solo",
+                w.len()
+            );
+        }
+        assert_eq!(
+            service.metrics.counter("service.forward_requests"),
+            windows.len() as u64
+        );
+        service.shutdown();
+    }
+}
+
+/// A container that doesn't cover the full model keeps serving linears
+/// but refuses forwards with an explicit error up front — never a
+/// mid-request panic — under both submission paths.
+#[test]
+fn partial_container_refuses_forwards_explicitly() {
+    let cfg = ModelConfig::tiny();
+    let mut rng = Rng::new(930);
+    let mut file = SwscFile::new();
+    file.compressed.insert(
+        "attn.wq".into(),
+        compress_matrix(&Tensor::randn(&[cfg.d_model, cfg.d_model], &mut rng), &SwscConfig::new(4, 2)),
+    );
+    for batching in [Batching::default(), Batching::Disabled] {
+        let service = EvalService::start_with_swsc(
+            None,
+            cfg.clone(),
+            &file,
+            ServiceConfig { batching, ..Default::default() },
+        )
+        .unwrap();
+        assert!(!service.has_forward(), "partial container must not enable forward");
+        let err = service
+            .submit_forward(ForwardRequest { tokens: vec![1, 2, 3] })
+            .err()
+            .expect("partial container must refuse forward submissions");
+        assert!(
+            err.to_string().contains("forward serving disabled"),
+            "unexpected refusal: {err}"
+        );
+        assert_eq!(
+            service.try_submit_forward(ForwardRequest { tokens: vec![1] }).err(),
+            Some(AdmissionError::ShuttingDown),
+            "{batching:?}"
+        );
+        // Linear serving is untouched.
+        let resp = service
+            .linear_blocking(swsc::coordinator::LinearRequest {
+                name: "attn.wq".into(),
+                x: Tensor::randn(&[2, cfg.d_model], &mut rng),
+            })
+            .unwrap();
+        assert_eq!(resp.y.rows(), 2);
+        service.shutdown();
+    }
+}
