@@ -537,9 +537,10 @@ fn main() {
             ragged: false,
             rate_rps: 0.0,
             targets: vec![(DEFAULT_MODEL.to_string(), "w".to_string())],
+            deadline: None,
         };
         let run_with = |cfg: BatchConfig| {
-            let mut reg = ModelRegistry::new();
+            let reg = ModelRegistry::new();
             reg.insert(DEFAULT_MODEL, model.clone());
             let server = BatchServer::start(Arc::new(reg), cfg);
             let rep = run_loadgen(&server, &lg).expect("loadgen replay failed");
@@ -693,9 +694,10 @@ fn main() {
             mixed: true,
             rate_rps: 0.0,
             models: vec![DEFAULT_MODEL.to_string()],
+            deadline: None,
         };
         let run_with = |scheduling: ForwardScheduling| {
-            let mut reg = ModelRegistry::new();
+            let reg = ModelRegistry::new();
             reg.insert_forward(DEFAULT_MODEL, fwd.clone());
             let server = BatchServer::start(
                 Arc::new(reg),

@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     // 1. Two models, one registry, one server.
     println!("compressing two demo models ({D}x{D} Q/K at k=8, r=4)...");
     let files = [("prod", demo_file(21)), ("canary", demo_file(22))];
-    let mut registry = ModelRegistry::new();
+    let registry = ModelRegistry::new();
     for (name, file) in &files {
         registry.insert_file(name, file, InferMode::Compressed);
     }
@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         ragged: true,
         rate_rps: 0.0, // saturation
         targets: targets.clone(),
+        deadline: None,
     };
     let run = |cfg: BatchConfig| -> anyhow::Result<LoadgenReport> {
         let server = BatchServer::start(registry.clone(), cfg);
@@ -101,7 +102,7 @@ fn main() -> anyhow::Result<()> {
         let (m, _) = model.shape(weight).unwrap();
         let x = Tensor::randn(&[3, m], &mut rng);
         let got = server
-            .submit_blocking(model_name, LinearRequest { name: weight.clone(), x: x.clone() })?;
+            .submit_blocking(model_name, LinearRequest::new(weight.clone(), x.clone()))?;
         let want = model.apply(weight, &x)?;
         anyhow::ensure!(
             got.y == want,
@@ -119,13 +120,13 @@ fn main() -> anyhow::Result<()> {
         Arc::new(swsc::coordinator::Metrics::new()),
     );
     let big = Tensor::randn(&[16384, D], &mut rng);
-    let slow = tiny.submit("prod", LinearRequest { name: "attn.wq".into(), x: big })
+    let slow = tiny
+        .submit("prod", LinearRequest::new("attn.wq", big))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut overloaded = 0;
     let mut accepted = Vec::new();
     for _ in 0..4 {
-        match tiny.try_submit("prod", LinearRequest { name: "attn.wq".into(), x: Tensor::zeros(&[1, D]) })
-        {
+        match tiny.try_submit("prod", LinearRequest::new("attn.wq", Tensor::zeros(&[1, D]))) {
             Ok(rx) => accepted.push(rx),
             Err(AdmissionError::Overloaded) => overloaded += 1,
             Err(e) => anyhow::bail!("unexpected admission error: {e}"),
@@ -142,10 +143,7 @@ fn main() -> anyhow::Result<()> {
         anyhow::ensure!(rx.recv()?.is_ok(), "accepted request failed");
     }
     tiny.begin_shutdown();
-    let refused = tiny.try_submit(
-        "prod",
-        LinearRequest { name: "attn.wq".into(), x: Tensor::zeros(&[1, D]) },
-    );
+    let refused = tiny.try_submit("prod", LinearRequest::new("attn.wq", Tensor::zeros(&[1, D])));
     anyhow::ensure!(
         refused.err() == Some(AdmissionError::ShuttingDown),
         "post-shutdown admission must be rejected"
@@ -164,8 +162,7 @@ fn main() -> anyhow::Result<()> {
         ServiceConfig::default(), // batching: Enabled
     )?;
     let x = Tensor::randn(&[4, D], &mut rng);
-    let resp =
-        service.linear_blocking(LinearRequest { name: "attn.wq".into(), x: x.clone() })?;
+    let resp = service.linear_blocking(LinearRequest::new("attn.wq", x.clone()))?;
     let want = registry.get("prod").unwrap().apply("attn.wq", &x)?;
     anyhow::ensure!(resp.y == want, "EvalService batched path diverged");
     println!("\nEvalService (batching enabled) metrics:\n{}", service.metrics.render());

@@ -91,7 +91,7 @@ fn main() -> anyhow::Result<()> {
                     let name = names[(cl + i) % names.len()].clone();
                     let x = Tensor::randn(&[batch_rows, d], &mut rng);
                     let t = std::time::Instant::now();
-                    let resp = service.linear_blocking(LinearRequest { name, x })?;
+                    let resp = service.linear_blocking(LinearRequest::new(name, x))?;
                     lat.push(t.elapsed().as_secs_f64());
                     anyhow::ensure!(resp.y.shape() == [batch_rows, d]);
                 }
@@ -171,7 +171,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..reqs {
         let name = names[i % names.len()].clone();
         let x = Tensor::randn(&[batch_rows, cfg.d_model], &mut rng);
-        let resp = service.linear_blocking(LinearRequest { name, x })?;
+        let resp = service.linear_blocking(LinearRequest::new(name, x))?;
         anyhow::ensure!(resp.y.shape() == [batch_rows, cfg.d_model]);
     }
     let wall = t0.elapsed().as_secs_f64();

@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
     let fwd = Arc::new(CompressedForward::new(model, cfg.clone())?);
     let start_server = |scheduling: ForwardScheduling| {
-        let mut reg = ModelRegistry::new();
+        let reg = ModelRegistry::new();
         reg.insert_forward(DEFAULT_MODEL, fwd.clone());
         BatchServer::start(
             Arc::new(reg),
@@ -81,6 +81,7 @@ fn main() -> anyhow::Result<()> {
         mixed: true,
         rate_rps: 0.0, // saturation
         models: vec![DEFAULT_MODEL.to_string()],
+        deadline: None,
     };
     let replay = |scheduling: ForwardScheduling| -> anyhow::Result<_> {
         let server = start_server(scheduling);
@@ -117,7 +118,7 @@ fn main() -> anyhow::Result<()> {
         let server = start_server(scheduling);
         for tokens in &windows {
             let got = server
-                .submit_forward_blocking(DEFAULT_MODEL, ForwardRequest { tokens: tokens.clone() })?;
+                .submit_forward_blocking(DEFAULT_MODEL, ForwardRequest::new(tokens.clone()))?;
             let want = fwd.forward(tokens)?;
             anyhow::ensure!(
                 got.logits == want,
@@ -136,7 +137,7 @@ fn main() -> anyhow::Result<()> {
         let svc_cfg = ServiceConfig { batching, ..Default::default() };
         let service = EvalService::start_with_swsc(None, cfg.clone(), &file, svc_cfg)?;
         anyhow::ensure!(service.has_forward(), "full container must enable forward serving");
-        let resp = service.forward_blocking(ForwardRequest { tokens: windows[0].clone() })?;
+        let resp = service.forward_blocking(ForwardRequest::new(windows[0].clone()))?;
         let want = fwd.forward(&windows[0])?;
         anyhow::ensure!(
             resp.logits == want,
@@ -157,7 +158,7 @@ fn main() -> anyhow::Result<()> {
     );
     let partial_svc = EvalService::start_with_swsc(None, cfg.clone(), &partial, ServiceConfig::default())?;
     anyhow::ensure!(!partial_svc.has_forward(), "partial container must not enable forward");
-    let err = partial_svc.forward_blocking(ForwardRequest { tokens: vec![1, 2, 3] });
+    let err = partial_svc.forward_blocking(ForwardRequest::new(vec![1, 2, 3]));
     anyhow::ensure!(err.is_err(), "partial container must refuse forward requests");
     println!("partial container: forward refused with `{}`", err.unwrap_err());
     partial_svc.shutdown();

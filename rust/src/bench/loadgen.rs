@@ -21,7 +21,7 @@
 //! scheduling (`forward_batched_vs_flush_*` rows).
 
 use crate::bench::BenchRecord;
-use crate::serve::{BatchServer, ForwardRequest, LinearRequest};
+use crate::serve::{AdmissionError, BatchServer, ForwardRequest, LinearRequest, ServeError};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -42,6 +42,9 @@ pub struct LoadgenConfig {
     /// `(model, weight)` pairs; each request samples one from the seeded
     /// stream.
     pub targets: Vec<(String, String)>,
+    /// Per-request deadline (from submission), PR 8. `None` = no
+    /// deadlines; late responses then never miss.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for LoadgenConfig {
@@ -53,6 +56,7 @@ impl Default for LoadgenConfig {
             ragged: false,
             rate_rps: 0.0,
             targets: Vec::new(),
+            deadline: None,
         }
     }
 }
@@ -63,10 +67,17 @@ pub struct LoadgenReport {
     pub requests: usize,
     /// Total activation rows submitted.
     pub rows: usize,
-    /// Requests answered with an error (admission failures abort the run
-    /// instead — the bench configs keep the queue deeper than the
-    /// stream).
+    /// Requests answered with an error response (all kinds, including
+    /// the typed breakdowns below).
     pub errors: usize,
+    /// Requests shed at admission (`Overloaded` / `QuotaExceeded`,
+    /// including injected rejections) — the loadgen counts them and moves
+    /// on; only `ShuttingDown` aborts a replay (PR 8).
+    pub rejected: usize,
+    /// Requests answered with [`ServeError::Panicked`].
+    pub panicked: usize,
+    /// Requests answered with [`ServeError::DeadlineExceeded`].
+    pub deadline_missed: usize,
     /// First submission → last response.
     pub wall_seconds: f64,
     pub rps: f64,
@@ -83,11 +94,19 @@ pub struct LoadgenReport {
 }
 
 impl LoadgenReport {
+    /// Fraction of the stream that did not get a successful response:
+    /// shed at admission, or answered with any error (panic, deadline
+    /// miss, failure, drain). `0.0` on an all-clear replay.
+    pub fn error_rate(&self) -> f64 {
+        (self.errors + self.rejected) as f64 / self.requests.max(1) as f64
+    }
+
     /// One-line human summary.
     pub fn render(&self) -> String {
         format!(
             "{} req ({} rows) in {:.3}s -> {:.0} req/s ({:.0} rows/s), latency p50 {:.0} µs \
-             p95 {:.0} µs p99 {:.0} µs, {} batches (mean {:.1} rows), {} errors",
+             p95 {:.0} µs p99 {:.0} µs, {} batches (mean {:.1} rows), {} errors \
+             ({} panicked, {} deadline-missed), {} rejected, error rate {:.1}%",
             self.requests,
             self.rows,
             self.wall_seconds,
@@ -99,6 +118,10 @@ impl LoadgenReport {
             self.batches,
             self.batch_mean,
             self.errors,
+            self.panicked,
+            self.deadline_missed,
+            self.rejected,
+            self.error_rate() * 100.0,
         )
     }
 
@@ -169,6 +192,7 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
     let t0 = Instant::now();
     let mut clock = 0.0f64;
     let mut rows_total = 0usize;
+    let mut rejected = 0usize;
     let mut receivers = Vec::with_capacity(cfg.requests);
     for (model, weight, x, gap) in stream {
         clock += gap;
@@ -180,18 +204,22 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
             }
         }
         rows_total += x.rows();
-        let rx = server
-            .submit(&model, LinearRequest { name: weight, x })
-            .map_err(|e| anyhow::anyhow!("loadgen admission failed: {e}"))?;
-        receivers.push(rx);
-    }
-    let mut errors = 0usize;
-    for rx in receivers {
-        match rx.recv() {
-            Ok(Ok(_)) => {}
-            _ => errors += 1,
+        let mut req = LinearRequest::new(weight, x);
+        if let Some(d) = cfg.deadline {
+            req = req.with_timeout(d);
+        }
+        // Shed-and-continue (PR 8): only a shutting-down server aborts
+        // the replay; overload and quota rejections are an expected
+        // outcome under chaos and are reported, not fatal.
+        match server.submit(&model, req) {
+            Ok(rx) => receivers.push(rx),
+            Err(AdmissionError::ShuttingDown) => {
+                anyhow::bail!("loadgen admission failed: server shutting down")
+            }
+            Err(_) => rejected += 1,
         }
     }
+    let (errors, panicked, deadline_missed) = collect_outcomes(receivers);
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
 
     let m = server.metrics();
@@ -201,6 +229,9 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
         requests: cfg.requests,
         rows: rows_total,
         errors,
+        rejected,
+        panicked,
+        deadline_missed,
         wall_seconds: wall,
         rps: cfg.requests as f64 / wall,
         rows_per_second: rows_total as f64 / wall,
@@ -211,6 +242,31 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
         batch_mean: batch_rows.mean(),
         batches: m.counter("serve.batches") - batches_before,
     })
+}
+
+/// Wait for every admitted request's response and classify the outcomes:
+/// `(errors, panicked, deadline_missed)`. A dropped responder (the server
+/// died without answering — should never happen under containment) counts
+/// as a plain error.
+fn collect_outcomes<T>(
+    receivers: Vec<std::sync::mpsc::Receiver<std::result::Result<T, ServeError>>>,
+) -> (usize, usize, usize) {
+    let (mut errors, mut panicked, mut deadline_missed) = (0usize, 0usize, 0usize);
+    for rx in receivers {
+        match rx.recv() {
+            Ok(Ok(_)) => {}
+            Ok(Err(e)) => {
+                errors += 1;
+                match e {
+                    ServeError::Panicked { .. } => panicked += 1,
+                    ServeError::DeadlineExceeded => deadline_missed += 1,
+                    _ => {}
+                }
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    (errors, panicked, deadline_missed)
 }
 
 /// Forward-stream loadgen knobs (PR 7): whole-model requests with
@@ -233,6 +289,9 @@ pub struct ForwardLoadgenConfig {
     pub rate_rps: f64,
     /// Registered forward names; each request samples one.
     pub models: Vec<String>,
+    /// Per-request deadline (from submission), PR 8. `None` = no
+    /// deadlines; late responses then never miss.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ForwardLoadgenConfig {
@@ -244,6 +303,7 @@ impl Default for ForwardLoadgenConfig {
             mixed: true,
             rate_rps: 0.0,
             models: Vec::new(),
+            deadline: None,
         }
     }
 }
@@ -291,6 +351,7 @@ pub fn run_forward_loadgen(
     let t0 = Instant::now();
     let mut clock = 0.0f64;
     let mut tokens_total = 0usize;
+    let mut rejected = 0usize;
     let mut receivers = Vec::with_capacity(cfg.requests);
     for (model, tokens, gap) in stream {
         clock += gap;
@@ -302,18 +363,19 @@ pub fn run_forward_loadgen(
             }
         }
         tokens_total += tokens.len();
-        let rx = server
-            .submit_forward(&model, ForwardRequest { tokens })
-            .map_err(|e| anyhow::anyhow!("forward loadgen admission failed: {e}"))?;
-        receivers.push(rx);
-    }
-    let mut errors = 0usize;
-    for rx in receivers {
-        match rx.recv() {
-            Ok(Ok(_)) => {}
-            _ => errors += 1,
+        let mut req = ForwardRequest::new(tokens);
+        if let Some(d) = cfg.deadline {
+            req = req.with_timeout(d);
+        }
+        match server.submit_forward(&model, req) {
+            Ok(rx) => receivers.push(rx),
+            Err(AdmissionError::ShuttingDown) => {
+                anyhow::bail!("forward loadgen admission failed: server shutting down")
+            }
+            Err(_) => rejected += 1,
         }
     }
+    let (errors, panicked, deadline_missed) = collect_outcomes(receivers);
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
 
     let m = server.metrics();
@@ -323,6 +385,9 @@ pub fn run_forward_loadgen(
         requests: cfg.requests,
         rows: tokens_total,
         errors,
+        rejected,
+        panicked,
+        deadline_missed,
         wall_seconds: wall,
         rps: cfg.requests as f64 / wall,
         rows_per_second: tokens_total as f64 / wall,
@@ -351,7 +416,7 @@ mod tests {
             "w".into(),
             compress_matrix(&Tensor::randn(&[24, 24], &mut rng), &SwscConfig::new(3, 2)),
         );
-        let mut reg = ModelRegistry::new();
+        let reg = ModelRegistry::new();
         reg.insert_file(DEFAULT_MODEL, &file, InferMode::Compressed);
         BatchServer::start(Arc::new(reg), BatchConfig::default())
     }
@@ -468,7 +533,7 @@ mod tests {
                 file.dense.insert(spec.name.clone(), t);
             }
         }
-        let mut reg = ModelRegistry::new();
+        let reg = ModelRegistry::new();
         reg.insert_forward_file(DEFAULT_MODEL, &file, cfg, InferMode::Compressed).unwrap();
         BatchServer::start(
             Arc::new(reg),
@@ -530,6 +595,78 @@ mod tests {
             ..Default::default()
         };
         assert!(run_forward_loadgen(&server, &cfg).is_err());
+        server.shutdown();
+    }
+
+    /// Chaos mode (PR 8): against a fault-injecting server the loadgen
+    /// sheds injected admission rejections, classifies panicked responses,
+    /// and reports a consistent error rate — and with a zero-duration
+    /// deadline every served request is a deadline miss.
+    #[test]
+    fn chaos_replay_classifies_outcomes() {
+        use crate::serve::{FaultConfig, FaultInjector, ServerOptions};
+        let n = 64u64;
+        // The fault schedule is a pure function of (seed, request id) and
+        // this fresh server assigns ids 0..n to the replay in order — so
+        // an oracle injector *predicts* the report exactly. Scan for a
+        // seed that mixes rejections, panics, and clean requests.
+        let base = FaultConfig { panic_rate: 0.3, reject_rate: 0.2, ..FaultConfig::default() };
+        let seed = (0..1000)
+            .find(|&s| {
+                let probe = FaultInjector::new(FaultConfig { seed: s, ..base.clone() });
+                let rejects = (0..n).filter(|&id| probe.injects_rejection(id)).count() as u64;
+                let panics = (0..n)
+                    .filter(|&id| !probe.injects_rejection(id) && probe.injects_panic(id))
+                    .count() as u64;
+                rejects > 0 && panics > 0 && rejects + panics < n
+            })
+            .expect("some seed under 1000 must mix outcomes");
+        let cfg_faults = FaultConfig { seed, ..base };
+        let oracle = FaultInjector::new(cfg_faults.clone());
+        let want_rejected =
+            (0..n).filter(|&id| oracle.injects_rejection(id)).count();
+        let want_panicked = (0..n)
+            .filter(|&id| !oracle.injects_rejection(id) && oracle.injects_panic(id))
+            .count();
+
+        let mut rng = Rng::new(62);
+        let mut file = SwscFile::new();
+        file.compressed.insert(
+            "w".into(),
+            compress_matrix(&Tensor::randn(&[24, 24], &mut rng), &SwscConfig::new(3, 2)),
+        );
+        let reg = ModelRegistry::new();
+        reg.insert_file(DEFAULT_MODEL, &file, InferMode::Compressed);
+        let server = BatchServer::start_with_opts(
+            Arc::new(reg),
+            BatchConfig::default(),
+            ServerOptions { faults: Some(cfg_faults), ..ServerOptions::default() },
+        );
+        let cfg = LoadgenConfig {
+            requests: n as usize,
+            rows_per_request: 2,
+            targets: vec![(DEFAULT_MODEL.into(), "w".into())],
+            ..Default::default()
+        };
+        let rep = run_loadgen(&server, &cfg).unwrap();
+        assert_eq!(rep.requests, n as usize);
+        assert_eq!(rep.rejected, want_rejected, "rejections must match the seeded schedule");
+        assert_eq!(rep.panicked, want_panicked, "panics must match the seeded schedule");
+        assert_eq!(rep.deadline_missed, 0);
+        assert_eq!(rep.errors, want_panicked, "all errors here are injected panics");
+        assert!(rep.error_rate() > 0.0 && rep.error_rate() < 1.0);
+        assert!(rep.render().contains("error rate"));
+
+        // Zero-duration deadlines: every non-rejected request misses at
+        // admission — it never occupies a queue slot or panics.
+        let rep2 = run_loadgen(
+            &server,
+            &LoadgenConfig { deadline: Some(Duration::ZERO), ..cfg.clone() },
+        )
+        .unwrap();
+        assert_eq!(rep2.deadline_missed + rep2.rejected, rep2.requests);
+        assert_eq!(rep2.errors + rep2.rejected, rep2.requests);
+        assert_eq!(rep2.panicked, 0);
         server.shutdown();
     }
 }

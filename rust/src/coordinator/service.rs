@@ -57,9 +57,13 @@ use crate::io::SwscFile;
 use crate::model::ModelConfig;
 use crate::runtime::convert::literal_to_tensor;
 use crate::runtime::{tensor_to_literal, tokens_to_literal, ArtifactManifest, Engine, LoadedExec};
-use crate::serve::{AdmissionError, BatchServer, Batching, ModelRegistry, DEFAULT_MODEL};
+use crate::serve::{
+    AdmissionError, BatchServer, Batching, FaultConfig, ModelRegistry, QuotaConfig, ServeError,
+    ServerOptions, DEFAULT_MODEL,
+};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -101,6 +105,12 @@ pub struct ServiceConfig {
     /// Micro-batch coalescing for linear requests: enabled by default,
     /// [`Batching::Disabled`] is the inline bitwise oracle.
     pub batching: Batching,
+    /// Per-model admission quotas for the batched front end (PR 8).
+    /// Empty (the default) means unlimited.
+    pub quotas: QuotaConfig,
+    /// Seeded fault injection (PR 8). Defaults to the `SWSC_FAULT_*`
+    /// environment: unset means `None` — injection fully off.
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -111,14 +121,16 @@ impl Default for ServiceConfig {
             infer_mode: InferMode::Compressed,
             precision: Precision::default(),
             batching: Batching::default(),
+            quotas: QuotaConfig::default(),
+            faults: FaultConfig::from_env(),
         }
     }
 }
 
 enum Job {
     Eval(EvalRequest, mpsc::Sender<Result<EvalResponse, String>>),
-    Linear(LinearRequest, mpsc::Sender<Result<LinearResponse, String>>),
-    Forward(ForwardRequest, mpsc::Sender<Result<ForwardResponse, String>>),
+    Linear(LinearRequest, mpsc::Sender<Result<LinearResponse, ServeError>>),
+    Forward(ForwardRequest, mpsc::Sender<Result<ForwardResponse, ServeError>>),
     Shutdown,
 }
 
@@ -207,16 +219,20 @@ impl EvalService {
         // coalescer's continuous-batching scheduler serves it too.
         let batch = match (&model, svc_cfg.batching) {
             (Some(m), Batching::Enabled(bc)) => {
-                let mut registry = ModelRegistry::new();
+                let registry = ModelRegistry::new();
                 match &forward {
                     Some(f) => registry.insert_forward(DEFAULT_MODEL, f.clone()),
                     None => registry.insert(DEFAULT_MODEL, m.clone()),
                 }
-                Some(BatchServer::start_with(
+                Some(BatchServer::start_with_opts(
                     Arc::new(registry),
                     bc,
-                    svc_cfg.queue_capacity,
-                    metrics.clone(),
+                    ServerOptions {
+                        queue_capacity: svc_cfg.queue_capacity,
+                        metrics: metrics.clone(),
+                        quotas: svc_cfg.quotas.clone(),
+                        faults: svc_cfg.faults.clone(),
+                    },
                 ))
             }
             _ => None,
@@ -257,7 +273,7 @@ impl EvalService {
     pub fn submit_linear(
         &self,
         req: LinearRequest,
-    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>> {
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>> {
         let rrx = match &self.batch {
             Some(server) => server
                 .submit(DEFAULT_MODEL, req)
@@ -278,7 +294,7 @@ impl EvalService {
     pub fn try_submit_linear(
         &self,
         req: LinearRequest,
-    ) -> std::result::Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
+    ) -> std::result::Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
         let rrx = match &self.batch {
             Some(server) => server.try_submit(DEFAULT_MODEL, req)?,
             None => {
@@ -316,7 +332,7 @@ impl EvalService {
     pub fn submit_forward(
         &self,
         req: ForwardRequest,
-    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>> {
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>> {
         anyhow::ensure!(
             self.forward.is_some(),
             "forward serving disabled: the .swsc container does not cover every model \
@@ -341,7 +357,7 @@ impl EvalService {
     pub fn try_submit_forward(
         &self,
         req: ForwardRequest,
-    ) -> std::result::Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
+    ) -> std::result::Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
         if self.forward.is_none() {
             return Err(AdmissionError::ShuttingDown);
         }
@@ -419,21 +435,56 @@ fn init_fwd_eval(manifest: &Option<ArtifactManifest>) -> Result<Arc<LoadedExec>,
         .map_err(|e| format!("fwd_eval init failed: {e:#}"))
 }
 
+/// Run `f` with the same panic containment the coalescer applies: a
+/// panic becomes [`ServeError::Panicked`] (message preserved for
+/// `&str`/`String` payloads), an ordinary error [`ServeError::Failed`].
+fn contain_inline<T>(what: &str, f: impl FnOnce() -> Result<T>) -> std::result::Result<T, ServeError> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(ServeError::Failed(format!("{what} failed: {e:#}"))),
+        Err(payload) => Err(ServeError::Panicked {
+            message: crate::exec::panic_message(payload.as_ref())
+                .unwrap_or("opaque panic payload")
+                .to_string(),
+        }),
+    }
+}
+
+/// Mirror the coalescer's error accounting on the inline paths, so the
+/// `serve.*` counters mean the same thing in both batching modes.
+fn note_serve_error(metrics: &Metrics, err: &ServeError) {
+    metrics.incr("serve.errors", 1);
+    match err {
+        ServeError::Panicked { .. } => metrics.incr("serve.panics", 1),
+        ServeError::DeadlineExceeded => metrics.incr("serve.deadline_miss", 1),
+        _ => {}
+    }
+}
+
 fn serve_linear(
     model: &Option<Arc<CompressedModel>>,
     metrics: &Metrics,
     req: LinearRequest,
-    tx: mpsc::Sender<Result<LinearResponse, String>>,
+    tx: mpsc::Sender<Result<LinearResponse, ServeError>>,
 ) {
     let t0 = std::time::Instant::now();
-    let resp = match model {
-        None => Err("no compressed model loaded — start the service with start_with_swsc"
-            .to_string()),
-        Some(m) => m
-            .apply(&req.name, &req.x)
-            .map(|y| LinearResponse { y })
-            .map_err(|e| format!("linear `{}` failed: {e:#}", req.name)),
+    let resp = if req.expired() {
+        Err(ServeError::DeadlineExceeded)
+    } else {
+        match model {
+            None => Err(ServeError::Failed(
+                "no compressed model loaded — start the service with start_with_swsc".to_string(),
+            )),
+            Some(m) => {
+                let what = format!("linear `{}`", req.name);
+                contain_inline(&what, || m.apply(&req.name, &req.x))
+                    .map(|y| LinearResponse { y })
+            }
+        }
     };
+    if let Err(e) = &resp {
+        note_serve_error(metrics, e);
+    }
     metrics.record("service.linear_seconds", t0.elapsed().as_secs_f64());
     let _ = tx.send(resp);
 }
@@ -444,18 +495,25 @@ fn serve_forward(
     forward: &Option<Arc<CompressedForward>>,
     metrics: &Metrics,
     req: ForwardRequest,
-    tx: mpsc::Sender<Result<ForwardResponse, String>>,
+    tx: mpsc::Sender<Result<ForwardResponse, ServeError>>,
 ) {
     let t0 = std::time::Instant::now();
-    let resp = match forward {
-        None => Err("forward serving disabled: the .swsc container does not cover every \
-                     model parameter (linear requests only)"
-            .to_string()),
-        Some(f) => f
-            .forward(&req.tokens)
-            .map(|logits| ForwardResponse { logits })
-            .map_err(|e| format!("forward failed: {e:#}")),
+    let resp = if req.expired() {
+        Err(ServeError::DeadlineExceeded)
+    } else {
+        match forward {
+            None => Err(ServeError::Failed(
+                "forward serving disabled: the .swsc container does not cover every \
+                 model parameter (linear requests only)"
+                    .to_string(),
+            )),
+            Some(f) => contain_inline("forward", || f.forward(&req.tokens))
+                .map(|logits| ForwardResponse { logits }),
+        }
     };
+    if let Err(e) = &resp {
+        note_serve_error(metrics, e);
+    }
     metrics.record("service.forward_seconds", t0.elapsed().as_secs_f64());
     let _ = tx.send(resp);
 }
@@ -475,11 +533,11 @@ fn drain_on_shutdown(rx: &mpsc::Receiver<Job>, metrics: &Metrics) {
             }
             Job::Linear(_, tx) => {
                 metrics.incr("service.drained_on_shutdown", 1);
-                let _ = tx.send(Err(SHUTDOWN_MSG.to_string()));
+                let _ = tx.send(Err(ServeError::ShuttingDown));
             }
             Job::Forward(_, tx) => {
                 metrics.incr("service.drained_on_shutdown", 1);
-                let _ = tx.send(Err(SHUTDOWN_MSG.to_string()));
+                let _ = tx.send(Err(ServeError::ShuttingDown));
             }
             Job::Shutdown => {}
         }
@@ -636,13 +694,13 @@ mod tests {
         let (t2, r2) = mpsc::channel();
         let (t3, r3) = mpsc::channel();
         let (t4, r4) = mpsc::channel();
-        let served = LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) };
-        let queued = LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) };
+        let served = LinearRequest::new("w", Tensor::zeros(&[1, 16]));
+        let queued = LinearRequest::new("w", Tensor::zeros(&[1, 16]));
         tx.send(Job::Linear(served, t1)).unwrap();
         tx.send(Job::Shutdown).unwrap();
         tx.send(Job::Linear(queued, t2)).unwrap();
         tx.send(Job::Eval(EvalRequest { tokens: vec![1; cfg.seq + 1] }, t3)).unwrap();
-        tx.send(Job::Forward(ForwardRequest { tokens: vec![1, 2] }, t4)).unwrap();
+        tx.send(Job::Forward(ForwardRequest::new(vec![1, 2]), t4)).unwrap();
         drop(tx);
         batcher_loop(
             None,
@@ -655,9 +713,9 @@ mod tests {
             metrics.clone(),
         );
         assert!(r1.recv().unwrap().is_ok(), "job ahead of the marker must be served");
-        assert!(r2.recv().unwrap().unwrap_err().contains("shutting down"));
+        assert_eq!(r2.recv().unwrap().unwrap_err(), ServeError::ShuttingDown);
         assert!(r3.recv().unwrap().unwrap_err().contains("shutting down"));
-        assert!(r4.recv().unwrap().unwrap_err().contains("shutting down"));
+        assert_eq!(r4.recv().unwrap().unwrap_err(), ServeError::ShuttingDown);
         assert_eq!(metrics.counter("service.drained_on_shutdown"), 3);
     }
 }

@@ -95,6 +95,8 @@
 
 pub mod pool;
 
+pub use pool::panic_message;
+
 use std::ops::Range;
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};

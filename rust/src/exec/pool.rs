@@ -281,6 +281,22 @@ fn worker_loop(inj: &Arc<(Mutex<Injector>, Condvar)>) {
     }
 }
 
+/// Best-effort extraction of a panic payload's human-readable message.
+///
+/// `panic!("...")` payloads are `&'static str`; `panic!("{x}")` and
+/// `std::panic::panic_any(String)` payloads are `String`; anything else
+/// (custom `panic_any` values) is opaque and yields `None`. The pool
+/// re-throws the *original* payload via `resume_unwind`, so callers that
+/// contain it (e.g. the serving layer's `ServeError::Panicked`) use this
+/// to carry the original message instead of a generic "panicked".
+pub fn panic_message(payload: &(dyn Any + Send)) -> Option<&str> {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        Some(s)
+    } else {
+        payload.downcast_ref::<String>().map(|s| s.as_str())
+    }
+}
+
 /// The process-wide pool. Spawned lazily: creating it allocates no threads;
 /// workers appear on the first parallel submission and are then reused for
 /// the life of the process (it is never dropped, so "shutdown on drop" only
@@ -367,5 +383,35 @@ mod tests {
         let pool = WorkerPool::new(4);
         pool.run(4, 16, &|_| {});
         drop(pool); // must not hang
+    }
+
+    /// The re-thrown payload carries the original message, extractable by
+    /// `panic_message` for both formatted (`String`) and literal
+    /// (`&'static str`) panics; opaque payloads yield `None`.
+    #[test]
+    fn panic_message_survives_the_rethrow() {
+        let pool = WorkerPool::new(4);
+        let payload = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, 8, &|i| {
+                if i == 2 {
+                    panic!("task {} exploded", 40 + 2);
+                }
+            });
+        }))
+        .unwrap_err();
+        assert_eq!(panic_message(payload.as_ref()), Some("task 42 exploded"));
+
+        let payload = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, 8, &|i| {
+                if i == 0 {
+                    panic!("literal boom");
+                }
+            });
+        }))
+        .unwrap_err();
+        assert_eq!(panic_message(payload.as_ref()), Some("literal boom"));
+
+        let payload = catch_unwind(|| std::panic::panic_any(7u32)).unwrap_err();
+        assert_eq!(panic_message(payload.as_ref()), None);
     }
 }

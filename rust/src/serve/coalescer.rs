@@ -42,14 +42,17 @@
 //! `SWSC_THREADS`. Arrival order is preserved purely so the stack/scatter
 //! bookkeeping is trivially auditable — correctness never depends on it.
 
+use super::fault::FaultInjector;
 use super::queue::{ForwardJob, Job, JobReceiver, ServeJob};
 use super::registry::ModelRegistry;
-use super::{ForwardResponse, LinearResponse};
+use super::{ForwardResponse, LinearResponse, ServeError};
 use crate::coordinator::metrics::Metrics;
 use crate::exec;
 use crate::infer::{CompressedForward, CompressedModel, ForwardState};
 use crate::tensor::Tensor;
+use std::any::Any;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -113,15 +116,53 @@ impl Default for BatchConfig {
     }
 }
 
-const SHUTDOWN_MSG: &str = "server shutting down — request drained before it was served";
-
 /// The batching engine: owns nothing but shared handles, driven by
 /// [`Coalescer::run`] on a dedicated thread (see
 /// [`super::BatchServer`]).
+///
+/// ## Panic containment (PR 8)
+///
+/// Every execution site — the grouped linear `apply`, per-forward
+/// `start`/`finish`, and each `step_group` — runs under `catch_unwind`.
+/// A panic answers the affected request(s) with
+/// [`ServeError::Panicked`] (carrying the payload's message when it was a
+/// `&str`/`String`) and the loop keeps serving: the containment boundary
+/// is the *grouped op*, so a panic inside a stacked `apply` or a cohort
+/// step poisons that group's members only, and a per-request site
+/// (injected faults, `start`, `finish`) poisons exactly one request.
+///
+/// ## Deadlines
+///
+/// Expired linears are evicted when picked into a batch; expired forwards
+/// are evicted at every layer boundary, before cohorts form. Eviction is
+/// pure scheduling (cohort composition never affects arithmetic — module
+/// docs above), so surviving requests stay bitwise equal to solo.
 pub struct Coalescer {
     registry: Arc<ModelRegistry>,
     cfg: BatchConfig,
     metrics: Arc<Metrics>,
+    faults: Option<Arc<FaultInjector>>,
+}
+
+/// Convert a caught panic payload into the typed error, preserving the
+/// original message when the payload allows it.
+fn panicked(payload: Box<dyn Any + Send>) -> ServeError {
+    ServeError::Panicked {
+        message: exec::panic_message(payload.as_ref())
+            .unwrap_or("opaque panic payload")
+            .to_string(),
+    }
+}
+
+/// Run `f` with panic containment: a panic becomes
+/// [`ServeError::Panicked`], an ordinary error becomes
+/// [`ServeError::Failed`] prefixed with `what`.
+fn contain<T>(what: &str, f: impl FnOnce() -> anyhow::Result<T>) -> Result<T, ServeError> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(ServeError::Failed(format!("{what} failed: {e:#}"))),
+        Err(payload) => Err(panicked(payload)),
+    }
 }
 
 /// Requests for one (model, weight) pair within a micro-batch, in
@@ -139,15 +180,72 @@ struct InflightForward {
     job: ForwardJob,
     fwd: Arc<CompressedForward>,
     state: ForwardState,
-    /// Set when a grouped layer step fails — the request is answered with
+    /// Set when the request fails mid-stack (grouped step error or panic,
+    /// expired deadline, injected fault) — the request is answered with
     /// this error at the next finish pass instead of stepping further.
-    error: Option<String>,
+    error: Option<ServeError>,
 }
 
 impl Coalescer {
     pub fn new(registry: Arc<ModelRegistry>, cfg: BatchConfig, metrics: Arc<Metrics>) -> Coalescer {
+        Coalescer::with_faults(registry, cfg, metrics, None)
+    }
+
+    /// [`Coalescer::new`] with a fault injector (chaos testing; `None` is
+    /// the zero-cost production default).
+    pub fn with_faults(
+        registry: Arc<ModelRegistry>,
+        cfg: BatchConfig,
+        metrics: Arc<Metrics>,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Coalescer {
         let cfg = BatchConfig { max_batch_rows: cfg.max_batch_rows.max(1), ..cfg };
-        Coalescer { registry, cfg, metrics }
+        Coalescer { registry, cfg, metrics, faults }
+    }
+
+    /// Fire an injected panic for request `id` as a *real* unwind, caught
+    /// right here — per request, so cohort-mates are untouched — and
+    /// returned as the typed error.
+    fn fire_injected_panic(&self, id: u64, site: &str) -> ServeError {
+        if let Some(f) = &self.faults {
+            f.record_panic();
+        }
+        self.metrics.incr("serve.faults_injected", 1);
+        let payload = catch_unwind(|| {
+            panic!("injected fault: request {id} poisoned at {site}");
+        })
+        .unwrap_err();
+        panicked(payload)
+    }
+
+    /// Injected artificial latency for request `id`, applied in place.
+    fn inject_delay(&self, id: u64) {
+        if let Some(f) = &self.faults {
+            if let Some(d) = f.injects_delay(id) {
+                f.record_delay();
+                self.metrics.incr("serve.faults_injected", 1);
+                std::thread::sleep(d);
+            }
+        }
+    }
+
+    /// Injected pre-execution faults for a linear request: delay fires in
+    /// place; a fated panic fires immediately.
+    fn inject_before_execute(&self, id: u64) -> Option<ServeError> {
+        self.inject_delay(id);
+        let f = self.faults.as_ref()?;
+        if f.injects_panic(id) {
+            return Some(self.fire_injected_panic(id, "linear execute"));
+        }
+        None
+    }
+
+    /// Whether a forward request's fated panic fires at its current layer
+    /// boundary.
+    fn forward_panic_due(&self, id: u64, layer: usize, n_layers: usize) -> bool {
+        self.faults
+            .as_ref()
+            .is_some_and(|f| f.injects_panic(id) && f.panic_layer(id, n_layers) == layer)
     }
 
     /// Drive the queue until a shutdown marker arrives (or every producer
@@ -230,11 +328,21 @@ impl Coalescer {
     ) {
         match job {
             Job::Linear(job) => {
+                // Expired while queued: evict at intake, before the fill
+                // clock spends any time on it.
+                if job.req.expired() {
+                    self.respond(job, Err(ServeError::DeadlineExceeded));
+                    return;
+                }
                 *rows += request_rows(&job);
                 batch.push(job);
             }
             Job::Forward(job) => {
                 self.metrics.incr("serve.forward_requests", 1);
+                if job.req.expired() {
+                    self.respond_forward(job, Err(ServeError::DeadlineExceeded));
+                    return;
+                }
                 pending.push_back(job);
             }
             Job::Shutdown => *shutting_down = true,
@@ -261,17 +369,23 @@ impl Coalescer {
                 }
             }
             let job = pending.pop_front().expect("front() was Some");
+            // Expired while waiting for an in-flight slot: evict here —
+            // admission order is pure scheduling, survivors' bits never
+            // depend on who else was admitted.
+            if job.req.expired() {
+                self.respond_forward(job, Err(ServeError::DeadlineExceeded));
+                continue;
+            }
+            self.inject_delay(job.id);
             let Some(fwd) = self.registry.forward(&job.model) else {
-                let msg = format!("no forward named `{}` in the registry", job.model);
-                self.respond_forward(job, Err(msg));
+                self.respond_forward(job, Err(ServeError::UnknownModel(job.model.clone())));
                 continue;
             };
-            match fwd.start(&job.req.tokens) {
+            // `start` is per-request: a panic (or error) poisons exactly
+            // this request.
+            match contain("forward start", || fwd.start(&job.req.tokens)) {
                 Ok(state) => inflight.push(InflightForward { job, fwd, state, error: None }),
-                Err(e) => {
-                    let msg = format!("forward start failed: {e:#}");
-                    self.respond_forward(job, Err(msg));
-                }
+                Err(e) => self.respond_forward(job, Err(e)),
             }
         }
     }
@@ -281,6 +395,26 @@ impl Coalescer {
     fn step_inflight(&self, inflight: &mut Vec<InflightForward>) {
         if inflight.is_empty() {
             return;
+        }
+        // Layer-boundary sweep, before cohorts form: evict expired
+        // requests and fire fated injected panics. Both are per-request
+        // and purely subtractive — the survivors' cohort is re-formed
+        // without them, which is ordinary scheduling and cannot move
+        // their bits.
+        for f in inflight.iter_mut() {
+            if f.error.is_some() {
+                continue;
+            }
+            if f.job.req.expired() {
+                f.error = Some(ServeError::DeadlineExceeded);
+                continue;
+            }
+            if self.forward_panic_due(f.job.id, f.state.layer(), f.fwd.n_layers()) {
+                let layer = f.state.layer();
+                f.error = Some(
+                    self.fire_injected_panic(f.job.id, &format!("forward layer {layer}")),
+                );
+            }
         }
         // Cohort keys are collected up front so arrivals admitted this
         // iteration (layer 0) step alongside older requests deeper in the
@@ -309,12 +443,19 @@ impl Coalescer {
             let t0 = Instant::now();
             let mut states: Vec<&mut ForwardState> =
                 members.iter_mut().map(|m| &mut m.state).collect();
-            let result = fwd.step_group(&mut states, exec::global());
+            // Containment boundary: the grouped step. A panic (or error)
+            // inside poisons this cohort's members — every one is
+            // answered, other cohorts and the scheduler loop survive.
+            let result = catch_unwind(AssertUnwindSafe(|| fwd.step_group(&mut states, exec::global())));
             self.metrics.record("serve.apply_seconds", t0.elapsed().as_secs_f64());
-            if let Err(e) = result {
-                let msg = format!("forward step failed: {e:#}");
+            let err = match result {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(ServeError::Failed(format!("forward step failed: {e:#}"))),
+                Err(payload) => Some(panicked(payload)),
+            };
+            if let Some(err) = err {
                 for m in members {
-                    m.error = Some(msg.clone());
+                    m.error = Some(err.clone());
                 }
             }
         }
@@ -328,12 +469,11 @@ impl Coalescer {
             }
             let f = inflight.remove(i);
             match f.error {
-                Some(msg) => self.respond_forward(f.job, Err(msg)),
+                Some(err) => self.respond_forward(f.job, Err(err)),
                 None => {
-                    let res = f
-                        .fwd
-                        .finish(&f.state, exec::global())
-                        .map_err(|e| format!("forward finish failed: {e:#}"));
+                    // `finish` is per-request: containment poisons
+                    // exactly this request.
+                    let res = contain("forward finish", || f.fwd.finish(&f.state, exec::global()));
                     self.respond_forward(f.job, res);
                 }
             }
@@ -351,9 +491,21 @@ impl Coalescer {
 
         let mut groups: Vec<Group> = Vec::new();
         for job in batch {
+            // Pre-execution fault hooks fire per request, before the job
+            // can join a group — a poisoned request never touches its
+            // batch-mates.
+            if let Some(err) = self.inject_before_execute(job.id) {
+                self.respond(job, Err(err));
+                continue;
+            }
+            // Deadline re-check at pick time: the fill window may have
+            // outlived the request's budget.
+            if job.req.expired() {
+                self.respond(job, Err(ServeError::DeadlineExceeded));
+                continue;
+            }
             let Some(model) = self.registry.get(&job.model) else {
-                let msg = format!("no model named `{}` in the registry", job.model);
-                self.respond(job, Err(msg));
+                self.respond(job, Err(ServeError::UnknownModel(job.model.clone())));
                 continue;
             };
             // A well-formed zero-row request has nothing to compute:
@@ -374,9 +526,8 @@ impl Coalescer {
             let stackable = job.req.x.ndim() == 2
                 && model.shape(&job.req.name).is_some_and(|(m, _)| job.req.x.cols() == m);
             if !stackable {
-                let res = model
-                    .apply(&job.req.name, &job.req.x)
-                    .map_err(|e| format!("linear `{}` failed: {e:#}", job.req.name));
+                let what = format!("linear `{}`", job.req.name);
+                let res = contain(&what, || model.apply(&job.req.name, &job.req.x));
                 self.respond(job, res);
                 continue;
             }
@@ -399,23 +550,27 @@ impl Coalescer {
 
     fn execute_group(&self, g: Group) {
         let rows: usize = g.jobs.iter().map(|j| j.req.x.rows()).sum();
+        let what = format!("linear `{}`", g.name);
         let t0 = Instant::now();
+        // Containment boundary: the grouped apply. A panic inside poisons
+        // this group's members only — other groups in the batch, and the
+        // coalescer thread, survive.
         let result = if let [job] = &g.jobs[..] {
             // Single request — skip the stack/scatter copies.
-            g.model.apply(&g.name, &job.req.x)
+            contain(&what, || g.model.apply(&g.name, &job.req.x))
         } else {
             let mut data = Vec::with_capacity(rows * g.in_features);
             for job in &g.jobs {
                 data.extend_from_slice(job.req.x.data());
             }
-            g.model.apply(&g.name, &Tensor::from_vec(&[rows, g.in_features], data))
+            let stacked = Tensor::from_vec(&[rows, g.in_features], data);
+            contain(&what, || g.model.apply(&g.name, &stacked))
         };
         self.metrics.record("serve.apply_seconds", t0.elapsed().as_secs_f64());
         match result {
             Err(e) => {
-                let msg = format!("linear `{}` failed: {e:#}", g.name);
                 for job in g.jobs {
-                    self.respond(job, Err(msg.clone()));
+                    self.respond(job, Err(e.clone()));
                 }
             }
             Ok(y) if g.jobs.len() == 1 => {
@@ -435,19 +590,31 @@ impl Coalescer {
         }
     }
 
-    fn respond(&self, job: ServeJob, result: Result<Tensor, String>) {
+    /// Centralized error accounting: every `Err` counts toward
+    /// `serve.errors`, with typed breakdowns for panics and deadline
+    /// misses.
+    fn note_error(&self, err: &ServeError) {
+        self.metrics.incr("serve.errors", 1);
+        match err {
+            ServeError::Panicked { .. } => self.metrics.incr("serve.panics", 1),
+            ServeError::DeadlineExceeded => self.metrics.incr("serve.deadline_miss", 1),
+            _ => {}
+        }
+    }
+
+    fn respond(&self, job: ServeJob, result: Result<Tensor, ServeError>) {
         self.metrics.record("serve.latency_seconds", job.enqueued.elapsed().as_secs_f64());
-        if result.is_err() {
-            self.metrics.incr("serve.errors", 1);
+        if let Err(e) = &result {
+            self.note_error(e);
         }
         let _ = job.tx.send(result.map(|y| LinearResponse { y }));
     }
 
-    fn respond_forward(&self, job: ForwardJob, result: Result<Tensor, String>) {
+    fn respond_forward(&self, job: ForwardJob, result: Result<Tensor, ServeError>) {
         self.metrics
             .record("serve.forward_latency_seconds", job.enqueued.elapsed().as_secs_f64());
-        if result.is_err() {
-            self.metrics.incr("serve.errors", 1);
+        if let Err(e) = &result {
+            self.note_error(e);
         }
         let _ = job.tx.send(result.map(|logits| ForwardResponse { logits }));
     }
@@ -459,11 +626,11 @@ impl Coalescer {
             match job {
                 Job::Linear(job) => {
                     self.metrics.incr("serve.drained_on_shutdown", 1);
-                    self.respond(job, Err(SHUTDOWN_MSG.to_string()));
+                    self.respond(job, Err(ServeError::ShuttingDown));
                 }
                 Job::Forward(job) => {
                     self.metrics.incr("serve.drained_on_shutdown", 1);
-                    self.respond_forward(job, Err(SHUTDOWN_MSG.to_string()));
+                    self.respond_forward(job, Err(ServeError::ShuttingDown));
                 }
                 Job::Shutdown => {}
             }
@@ -512,7 +679,7 @@ mod tests {
                 file.dense.insert(spec.name.clone(), t);
             }
         }
-        let mut reg = ModelRegistry::new();
+        let reg = ModelRegistry::new();
         let fwd = reg.insert_forward_file("m", &file, cfg, InferMode::Compressed).unwrap();
         (Arc::new(reg), fwd)
     }
@@ -525,7 +692,7 @@ mod tests {
             compress_matrix(&Tensor::randn(&[16, 16], &mut rng), &SwscConfig::new(2, 1)),
         );
         file.dense.insert("d".into(), Tensor::randn(&[16, 16], &mut rng));
-        let mut reg = ModelRegistry::new();
+        let reg = ModelRegistry::new();
         reg.insert_file("m", &file, InferMode::Compressed);
         Arc::new(reg)
     }
@@ -542,19 +709,14 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let coal = Coalescer::new(reg, BatchConfig::solo(), metrics.clone());
         let (q, rx) = AdmissionQueue::bounded(8);
-        let r1 = q
-            .try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) })
-            .unwrap();
+        let r1 = q.try_submit("m", LinearRequest::new("w", Tensor::zeros(&[1, 16]))).unwrap();
         q.begin_shutdown();
-        let r2 = q.submit_behind_shutdown(
-            "m",
-            LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) },
-        );
+        let r2 = q.submit_behind_shutdown("m", LinearRequest::new("w", Tensor::zeros(&[1, 16])));
         drop(q);
         coal.run(rx); // runs to completion on this thread — no races
         assert!(r1.recv().unwrap().is_ok(), "job ahead of the marker must be served");
         let err = r2.recv().unwrap().unwrap_err();
-        assert!(err.contains("shutting down"), "unexpected drain error: {err}");
+        assert_eq!(err, ServeError::ShuttingDown, "unexpected drain error: {err}");
         assert_eq!(metrics.counter("serve.drained_on_shutdown"), 1);
         assert_eq!(metrics.counter("serve.batches"), 1);
     }
@@ -577,21 +739,16 @@ mod tests {
             (0..4).map(|i| Tensor::randn(&[1 + (i % 3), 16], &mut rng)).collect();
         let good: Vec<_> = xs
             .iter()
-            .map(|x| {
-                q.try_submit("m", LinearRequest { name: "w".into(), x: x.clone() }).unwrap()
-            })
+            .map(|x| q.try_submit("m", LinearRequest::new("w", x.clone())).unwrap())
             .collect();
         let xd = Tensor::randn(&[3, 16], &mut rng);
-        let dense = q.try_submit("m", LinearRequest { name: "d".into(), x: xd.clone() }).unwrap();
-        let bad_weight = q
-            .try_submit("m", LinearRequest { name: "nope".into(), x: Tensor::zeros(&[2, 16]) })
-            .unwrap();
-        let bad_shape = q
-            .try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[2, 15]) })
-            .unwrap();
-        let bad_model = q
-            .try_submit("ghost", LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 16]) })
-            .unwrap();
+        let dense = q.try_submit("m", LinearRequest::new("d", xd.clone())).unwrap();
+        let bad_weight =
+            q.try_submit("m", LinearRequest::new("nope", Tensor::zeros(&[2, 16]))).unwrap();
+        let bad_shape =
+            q.try_submit("m", LinearRequest::new("w", Tensor::zeros(&[2, 15]))).unwrap();
+        let bad_model =
+            q.try_submit("ghost", LinearRequest::new("w", Tensor::zeros(&[1, 16]))).unwrap();
         q.begin_shutdown();
         drop(q);
         coal.run(rx);
@@ -603,9 +760,12 @@ mod tests {
         }
         let got_dense = dense.recv().unwrap().unwrap();
         assert_eq!(bits(&got_dense.y), bits(&model.apply("d", &xd).unwrap()));
-        assert!(bad_weight.recv().unwrap().unwrap_err().contains("nope"));
-        assert!(bad_shape.recv().unwrap().unwrap_err().contains("failed"));
-        assert!(bad_model.recv().unwrap().unwrap_err().contains("ghost"));
+        assert!(bad_weight.recv().unwrap().unwrap_err().to_string().contains("nope"));
+        assert!(bad_shape.recv().unwrap().unwrap_err().to_string().contains("failed"));
+        assert_eq!(
+            bad_model.recv().unwrap().unwrap_err(),
+            ServeError::UnknownModel("ghost".into())
+        );
         assert_eq!(metrics.counter("serve.batches"), 1, "stream must coalesce into one batch");
         assert_eq!(metrics.counter("serve.requests"), 8);
         assert_eq!(metrics.counter("serve.errors"), 3);
@@ -623,10 +783,7 @@ mod tests {
         let coal = Coalescer::new(reg, BatchConfig::with_wait_us(2, 0), metrics.clone());
         let (q, rx) = AdmissionQueue::bounded(8);
         let rxs: Vec<_> = (0..3)
-            .map(|_| {
-                q.try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[0, 16]) })
-                    .unwrap()
-            })
+            .map(|_| q.try_submit("m", LinearRequest::new("w", Tensor::zeros(&[0, 16]))).unwrap())
             .collect();
         q.begin_shutdown();
         drop(q);
@@ -650,10 +807,7 @@ mod tests {
         let coal = Coalescer::new(reg, BatchConfig::with_wait_us(2, 0), metrics.clone());
         let (q, rx) = AdmissionQueue::bounded(8);
         let rxs: Vec<_> = (0..3)
-            .map(|_| {
-                q.try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[16]) })
-                    .unwrap()
-            })
+            .map(|_| q.try_submit("m", LinearRequest::new("w", Tensor::zeros(&[16]))).unwrap())
             .collect();
         q.begin_shutdown();
         drop(q);
@@ -673,10 +827,7 @@ mod tests {
         let coal = Coalescer::new(reg, BatchConfig::with_wait_us(4, 0), metrics.clone());
         let (q, rx) = AdmissionQueue::bounded(8);
         let rxs: Vec<_> = (0..3)
-            .map(|_| {
-                q.try_submit("m", LinearRequest { name: "w".into(), x: Tensor::zeros(&[2, 16]) })
-                    .unwrap()
-            })
+            .map(|_| q.try_submit("m", LinearRequest::new("w", Tensor::zeros(&[2, 16]))).unwrap())
             .collect();
         q.begin_shutdown();
         drop(q);
@@ -686,5 +837,97 @@ mod tests {
         }
         assert_eq!(metrics.counter("serve.batches"), 2);
         assert_eq!(metrics.timing_count("serve.batch_rows"), 2);
+    }
+
+    /// PR 8: requests whose deadline expired while queued are evicted at
+    /// the coalescer's intake — linear and forward alike — while live
+    /// requests in the same stream are still served. The `*_behind_shutdown`
+    /// hooks bypass admission preflight, so it is the coalescer's own
+    /// check that answers here.
+    #[test]
+    fn expired_deadlines_are_evicted_at_intake() {
+        let (reg, _fwd) = forward_registry(80);
+        let metrics = Arc::new(Metrics::new());
+        let coal = Coalescer::new(reg, BatchConfig::with_wait_us(64, 0), metrics.clone());
+        let (q, rx) = AdmissionQueue::bounded(8);
+        let lin = q.submit_behind_shutdown(
+            "m",
+            LinearRequest::new("w_q.0", Tensor::zeros(&[1, 16])).with_timeout(Duration::ZERO),
+        );
+        let f = q.submit_forward_behind_shutdown(
+            "m",
+            ForwardRequest::new(vec![1, 2, 3]).with_timeout(Duration::ZERO),
+        );
+        let live = q.try_submit_forward("m", ForwardRequest::new(vec![1, 2, 3])).unwrap();
+        q.begin_shutdown();
+        drop(q);
+        coal.run(rx);
+        assert_eq!(lin.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+        assert_eq!(f.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+        assert!(live.recv().unwrap().is_ok(), "unexpired request must still be served");
+        assert_eq!(metrics.counter("serve.deadline_miss"), 2);
+        assert_eq!(metrics.counter("serve.errors"), 2);
+    }
+
+    /// PR 8: injected panics poison exactly the fated requests; their
+    /// batch-mates' responses stay bitwise equal to a solo `apply`, and
+    /// the coalescer keeps running.
+    #[test]
+    fn injected_panics_poison_only_fated_requests() {
+        use crate::serve::fault::FaultConfig;
+        let n = 6u64;
+        // Scan for a seed whose first `n` request ids mix fated and clean
+        // — the decision function is deterministic by (seed, id), so the
+        // scan is cheap and the chosen pattern is stable.
+        let mut cfg = FaultConfig { panic_rate: 0.5, ..FaultConfig::default() };
+        cfg.seed = (0..1000)
+            .find(|&s| {
+                let probe = FaultInjector::new(FaultConfig { seed: s, ..cfg.clone() });
+                let fated = (0..n).filter(|&id| probe.injects_panic(id)).count();
+                fated > 0 && fated < n as usize
+            })
+            .expect("some seed under 1000 must mix fated and clean ids");
+        let oracle = FaultInjector::new(cfg.clone());
+        let reg = registry();
+        let model = reg.get("m").unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let coal = Coalescer::with_faults(
+            reg,
+            BatchConfig::with_wait_us(1024, 0),
+            metrics.clone(),
+            Some(Arc::new(FaultInjector::new(cfg))),
+        );
+        let (q, rx) = AdmissionQueue::bounded(16);
+        let mut rng = Rng::new(72);
+        let reqs: Vec<_> = (0..n)
+            .map(|_| {
+                let x = Tensor::randn(&[1, 16], &mut rng);
+                let r = q.try_submit("m", LinearRequest::new("w", x.clone())).unwrap();
+                (x, r)
+            })
+            .collect();
+        q.begin_shutdown();
+        drop(q);
+        coal.run(rx);
+        let mut fated = 0u64;
+        for (id, (x, r)) in reqs.into_iter().enumerate() {
+            let res = r.recv().unwrap();
+            if oracle.injects_panic(id as u64) {
+                fated += 1;
+                match res.unwrap_err() {
+                    ServeError::Panicked { message } => {
+                        assert!(message.contains("injected fault"), "payload lost: {message}")
+                    }
+                    other => panic!("want injected panic, got {other}"),
+                }
+            } else {
+                let got = res.unwrap();
+                let want = model.apply("w", &x).unwrap();
+                assert_eq!(bits(&got.y), bits(&want), "clean request's bits moved");
+            }
+        }
+        assert!(fated > 0, "seed scan guaranteed at least one fated request");
+        assert_eq!(metrics.counter("serve.panics"), fated);
+        assert_eq!(metrics.counter("serve.errors"), fated);
     }
 }

@@ -1,0 +1,276 @@
+//! Seeded, deterministic fault injection for the serving stack.
+//!
+//! Chaos testing only earns its keep when failures are *reproducible*:
+//! every injection decision here is a pure function of
+//! `(seed, request-id, salt)` — independent of wall clock, thread count,
+//! and scheduling — so a failing chaos run replays exactly from its seed,
+//! and a test can predict which request ids will be poisoned before
+//! submitting them.
+//!
+//! Three failure modes, each with an independent rate in `[0, 1]`:
+//!
+//! - **panics** — the coalescer fires a *real* `panic!` (scoped to the
+//!   poisoned request, under the same `catch_unwind` containment that
+//!   guards genuine panics) when the request is picked into a batch; for
+//!   forward requests the panic fires at a deterministic layer boundary.
+//! - **latency** — an artificial [`FaultConfig::delay`] sleep before the
+//!   request executes.
+//! - **admission failures** — [`super::AdmissionQueue`] rejects the
+//!   request with `Overloaded` as if the queue were full.
+//!
+//! Injection is **off by default and zero-cost when off**: nothing
+//! constructs a [`FaultInjector`] unless a [`FaultConfig`] with a nonzero
+//! rate is supplied ([`crate::coordinator::ServiceConfig::faults`] /
+//! [`super::ServerOptions::faults`]) or the `SWSC_FAULT_*` environment
+//! variables enable one ([`FaultConfig::from_env`]); the hot paths hold an
+//! `Option<Arc<FaultInjector>>` that stays `None`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Environment variables read by [`FaultConfig::from_env`].
+pub const ENV_SEED: &str = "SWSC_FAULT_SEED";
+pub const ENV_PANIC_RATE: &str = "SWSC_FAULT_PANIC_RATE";
+pub const ENV_DELAY_RATE: &str = "SWSC_FAULT_DELAY_RATE";
+pub const ENV_DELAY_US: &str = "SWSC_FAULT_DELAY_US";
+pub const ENV_REJECT_RATE: &str = "SWSC_FAULT_REJECT_RATE";
+
+/// Configuration for deterministic fault injection. All rates are
+/// probabilities in `[0, 1]`, evaluated per request id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for the injection hash; same seed → same decisions.
+    pub seed: u64,
+    /// Fraction of requests that panic during execution.
+    pub panic_rate: f64,
+    /// Fraction of requests delayed by [`FaultConfig::delay`].
+    pub delay_rate: f64,
+    /// Artificial latency added to delayed requests.
+    pub delay: Duration,
+    /// Fraction of requests rejected at admission (as `Overloaded`).
+    pub reject_rate: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0xFA17,
+            panic_rate: 0.0,
+            delay_rate: 0.0,
+            delay: Duration::from_millis(1),
+            reject_rate: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any failure mode has a nonzero rate.
+    pub fn enabled(&self) -> bool {
+        self.panic_rate > 0.0 || self.delay_rate > 0.0 || self.reject_rate > 0.0
+    }
+
+    /// Read `SWSC_FAULT_*` from the process environment. Returns `Some`
+    /// only if at least one rate is nonzero — so merely setting
+    /// `SWSC_FAULT_SEED` does not switch injection on.
+    pub fn from_env() -> Option<FaultConfig> {
+        Self::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// [`FaultConfig::from_env`] over an arbitrary lookup (testable
+    /// without mutating process-global environment state).
+    pub fn from_lookup(lookup: impl Fn(&str) -> Option<String>) -> Option<FaultConfig> {
+        let mut cfg = FaultConfig::default();
+        if let Some(v) = lookup(ENV_SEED).and_then(|v| v.trim().parse::<u64>().ok()) {
+            cfg.seed = v;
+        }
+        if let Some(v) = lookup(ENV_PANIC_RATE).and_then(|v| v.trim().parse::<f64>().ok()) {
+            cfg.panic_rate = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = lookup(ENV_DELAY_RATE).and_then(|v| v.trim().parse::<f64>().ok()) {
+            cfg.delay_rate = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = lookup(ENV_DELAY_US).and_then(|v| v.trim().parse::<u64>().ok()) {
+            cfg.delay = Duration::from_micros(v);
+        }
+        if let Some(v) = lookup(ENV_REJECT_RATE).and_then(|v| v.trim().parse::<f64>().ok()) {
+            cfg.reject_rate = v.clamp(0.0, 1.0);
+        }
+        if cfg.enabled() {
+            Some(cfg)
+        } else {
+            None
+        }
+    }
+}
+
+/// Counts of faults actually fired (not merely decided), for reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub panics: u64,
+    pub delays: u64,
+    pub rejections: u64,
+}
+
+/// Deterministic fault oracle: decision methods are pure functions of
+/// `(seed, request-id)` and may be called any number of times; the
+/// `record_*` methods count faults actually fired at the injection site.
+#[derive(Debug)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    panics: AtomicU64,
+    delays: AtomicU64,
+    rejections: AtomicU64,
+}
+
+/// Distinct salts keep the three failure modes' decisions independent.
+const SALT_PANIC: u64 = 0x50_41_4E_49;
+const SALT_DELAY: u64 = 0x44_45_4C_41;
+const SALT_REJECT: u64 = 0x52_45_4A_43;
+const SALT_LAYER: u64 = 0x4C_41_59_52;
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig) -> FaultInjector {
+        FaultInjector {
+            cfg,
+            panics: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+            rejections: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// splitmix64-style mix of (seed, id, salt) mapped to `[0, 1)`.
+    fn uniform(&self, id: u64, salt: u64) -> f64 {
+        let mut z = self
+            .cfg
+            .seed
+            .wrapping_add(id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(salt.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Whether this request id is fated to panic during execution.
+    pub fn injects_panic(&self, id: u64) -> bool {
+        self.cfg.panic_rate > 0.0 && self.uniform(id, SALT_PANIC) < self.cfg.panic_rate
+    }
+
+    /// For a forward request fated to panic: the layer boundary (in
+    /// `[0, n_layers)`) at which the panic fires.
+    pub fn panic_layer(&self, id: u64, n_layers: usize) -> usize {
+        if n_layers <= 1 {
+            return 0;
+        }
+        (self.uniform(id, SALT_LAYER) * n_layers as f64) as usize % n_layers
+    }
+
+    /// Artificial latency for this request id, if any.
+    pub fn injects_delay(&self, id: u64) -> Option<Duration> {
+        if self.cfg.delay_rate > 0.0 && self.uniform(id, SALT_DELAY) < self.cfg.delay_rate {
+            Some(self.cfg.delay)
+        } else {
+            None
+        }
+    }
+
+    /// Whether admission rejects this request id as `Overloaded`.
+    pub fn injects_rejection(&self, id: u64) -> bool {
+        self.cfg.reject_rate > 0.0 && self.uniform(id, SALT_REJECT) < self.cfg.reject_rate
+    }
+
+    pub fn record_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_delay(&self) {
+        self.delays.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejection(&self) {
+        self.rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Faults actually fired so far.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            panics: self.panics.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+            rejections: self.rejections.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_by_seed_and_id() {
+        let cfg = FaultConfig { seed: 42, panic_rate: 0.3, reject_rate: 0.2, ..Default::default() };
+        let a = FaultInjector::new(cfg.clone());
+        let b = FaultInjector::new(cfg);
+        for id in 0..256 {
+            assert_eq!(a.injects_panic(id), b.injects_panic(id));
+            assert_eq!(a.injects_rejection(id), b.injects_rejection(id));
+            assert_eq!(a.panic_layer(id, 7), b.panic_layer(id, 7));
+            assert!(a.panic_layer(id, 7) < 7);
+        }
+        // Different seeds disagree somewhere over a few hundred ids.
+        let c = FaultInjector::new(FaultConfig {
+            seed: 43,
+            panic_rate: 0.3,
+            ..Default::default()
+        });
+        assert!((0..256).any(|id| a.injects_panic(id) != c.injects_panic(id)));
+    }
+
+    #[test]
+    fn rates_bound_the_observed_fraction_loosely() {
+        let inj = FaultInjector::new(FaultConfig {
+            seed: 7,
+            panic_rate: 0.25,
+            ..Default::default()
+        });
+        let hits = (0..4096).filter(|&id| inj.injects_panic(id)).count();
+        // Loose two-sided bound: 0.25 ± 0.08 over 4096 draws.
+        assert!((700..=1350).contains(&hits), "hits = {hits}");
+    }
+
+    #[test]
+    fn zero_rates_never_fire_and_env_stays_off() {
+        let inj = FaultInjector::new(FaultConfig::default());
+        assert!((0..1024).all(|id| !inj.injects_panic(id)
+            && !inj.injects_rejection(id)
+            && inj.injects_delay(id).is_none()));
+        // Seed alone does not enable injection.
+        assert!(FaultConfig::from_lookup(|k| {
+            (k == ENV_SEED).then(|| "9".to_string())
+        })
+        .is_none());
+        let cfg = FaultConfig::from_lookup(|k| match k {
+            ENV_SEED => Some("9".into()),
+            ENV_PANIC_RATE => Some("0.5".into()),
+            ENV_DELAY_US => Some("250".into()),
+            _ => None,
+        })
+        .expect("nonzero rate enables injection");
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.panic_rate, 0.5);
+        assert_eq!(cfg.delay, Duration::from_micros(250));
+    }
+
+    #[test]
+    fn counts_track_fired_faults() {
+        let inj = FaultInjector::new(FaultConfig::default());
+        inj.record_panic();
+        inj.record_panic();
+        inj.record_delay();
+        inj.record_rejection();
+        assert_eq!(inj.counts(), FaultCounts { panics: 2, delays: 1, rejections: 1 });
+    }
+}

@@ -64,17 +64,83 @@
 //! end-to-end pins live in `tests/serve_forward.rs`, and
 //! `forward_batched_vs_flush_*` bench rows quantify the latency win).
 
+//!
+//! ## Fault tolerance (PR 8)
+//!
+//! Every failure mode is an explicit, typed [`ServeError`] — never a hang
+//! or a dead coalescer thread:
+//!
+//! - **Panic containment.** Per-(model, weight)-group applies and
+//!   per-forward-step execution run under `catch_unwind`; a poisoned
+//!   request answers its responder with [`ServeError::Panicked`] (carrying
+//!   the original panic message when downcastable) while the rest of the
+//!   micro-batch completes and the coalescer thread survives.
+//! - **Deadlines.** Requests may carry an absolute deadline
+//!   ([`LinearRequest::with_timeout`] etc.), checked at admission and at
+//!   every layer boundary of the continuous forward scheduler. Eviction is
+//!   pure scheduling — survivors stay bitwise equal to solo.
+//! - **Seeded fault injection.** [`fault::FaultInjector`] (env- or
+//!   config-gated, zero-cost when off) deterministically injects panics,
+//!   latency, and admission failures by (seed, request-id).
+//! - **Graceful degradation.** Bounded retry-with-backoff
+//!   ([`server::RetryPolicy`]), per-model admission quotas
+//!   ([`queue::QuotaConfig`]), and atomic model hot-swap
+//!   ([`ModelRegistry::replace_forward_file`]: build outside the lock,
+//!   flip the `Arc`, drain the old one).
+
 pub mod coalescer;
+pub mod fault;
 pub mod queue;
 pub mod registry;
 pub mod server;
 
 pub use coalescer::{BatchConfig, Coalescer, ForwardScheduling};
-pub use queue::{AdmissionError, AdmissionQueue, JobReceiver};
+pub use fault::{FaultConfig, FaultInjector};
+pub use queue::{AdmissionError, AdmissionQueue, JobReceiver, QueueOptions, QuotaConfig};
 pub use registry::ModelRegistry;
-pub use server::{BatchServer, DEFAULT_MODEL};
+pub use server::{BatchServer, RetryPolicy, ServerOptions, DEFAULT_MODEL};
 
 use crate::tensor::Tensor;
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Why a served request failed. Every serving failure mode is one of
+/// these typed variants — an explicit `Err`, never a hang, a dropped
+/// sender, or a dead worker thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Execution panicked. Containment is per request where possible
+    /// (injected faults, per-request start/finish); a panic inside a
+    /// grouped op (stacked `apply`, `step_group`) poisons that group —
+    /// every member gets this error, other groups and the coalescer
+    /// thread survive. `message` carries the panic payload when it was a
+    /// `&str`/`String`.
+    Panicked { message: String },
+    /// The request's deadline expired before it could be (fully) served.
+    DeadlineExceeded,
+    /// The server is shutting down; the request was drained, not served.
+    ShuttingDown,
+    /// No model registered under this name.
+    UnknownModel(String),
+    /// Execution failed with an ordinary (non-panic) error.
+    Failed(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Panicked { message } => write!(f, "request panicked: {message}"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before the request was served"),
+            ServeError::ShuttingDown => {
+                write!(f, "server shutting down — request drained before it was served")
+            }
+            ServeError::UnknownModel(name) => write!(f, "no model named `{name}` in the registry"),
+            ServeError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// One linear-layer request: apply the named weight of a model to a
 /// row-major activation batch (`x` is `[b, in_features]`).
@@ -82,6 +148,32 @@ use crate::tensor::Tensor;
 pub struct LinearRequest {
     pub name: String,
     pub x: Tensor,
+    /// Optional absolute deadline. Checked at admission and when the
+    /// request is picked into a batch; expired requests answer
+    /// [`ServeError::DeadlineExceeded`].
+    pub deadline: Option<Instant>,
+}
+
+impl LinearRequest {
+    pub fn new(name: impl Into<String>, x: Tensor) -> LinearRequest {
+        LinearRequest { name: name.into(), x, deadline: None }
+    }
+
+    /// Set an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> LinearRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set a deadline `timeout` from now.
+    pub fn with_timeout(self, timeout: Duration) -> LinearRequest {
+        self.with_deadline(Instant::now() + timeout)
+    }
+
+    /// Whether the deadline (if any) has passed.
+    pub fn expired(&self) -> bool {
+        deadline_expired(self.deadline)
+    }
 }
 
 /// Response to a [`LinearRequest`]: `y = x · W[name]`, `[b, out_features]`.
@@ -95,6 +187,37 @@ pub struct LinearResponse {
 #[derive(Debug, Clone)]
 pub struct ForwardRequest {
     pub tokens: Vec<u32>,
+    /// Optional absolute deadline. Checked at admission and at **every
+    /// layer boundary** of the continuous scheduler; an expired request
+    /// leaves the in-flight set with [`ServeError::DeadlineExceeded`].
+    /// Eviction is pure scheduling — survivors' bits never move.
+    pub deadline: Option<Instant>,
+}
+
+impl ForwardRequest {
+    pub fn new(tokens: Vec<u32>) -> ForwardRequest {
+        ForwardRequest { tokens, deadline: None }
+    }
+
+    /// Set an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> ForwardRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set a deadline `timeout` from now.
+    pub fn with_timeout(self, timeout: Duration) -> ForwardRequest {
+        self.with_deadline(Instant::now() + timeout)
+    }
+
+    /// Whether the deadline (if any) has passed.
+    pub fn expired(&self) -> bool {
+        deadline_expired(self.deadline)
+    }
+}
+
+pub(crate) fn deadline_expired(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
 }
 
 /// Response to a [`ForwardRequest`]: `[tokens, vocab]` logits.

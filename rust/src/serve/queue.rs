@@ -8,11 +8,38 @@
 //! everything admitted ahead of it is still served, anything behind it
 //! is answered with an explicit shutdown error by the coalescer's drain
 //! pass, so no responder is ever dropped silently.
+//!
+//! ## Fault-tolerance surface (PR 8)
+//!
+//! The channel is a hand-rolled `Mutex<VecDeque>` + two-condvar bounded
+//! queue rather than `mpsc::sync_channel`, for three reasons the std
+//! channel cannot express:
+//!
+//! - **Prompt shutdown.** A submitter blocked on a full queue wakes with
+//!   [`AdmissionError::ShuttingDown`] the moment
+//!   [`AdmissionQueue::begin_shutdown`] fires, instead of stalling until a
+//!   drain slot frees — and the shutdown marker itself bypasses the
+//!   capacity bound, so `begin_shutdown` never blocks either.
+//! - **Per-model quotas.** [`QuotaConfig`] caps how many *queued* jobs one
+//!   model may hold, so a hot model sheds ([`AdmissionError::QuotaExceeded`],
+//!   immediately — never blocking) while cold models keep admitting. The
+//!   check and the push are atomic under one lock.
+//! - **Admission-time fault hooks.** Request ids are assigned here, and a
+//!   configured [`super::FaultInjector`] can deterministically reject by
+//!   (seed, id); expired deadlines are answered with
+//!   [`ServeError::DeadlineExceeded`] without ever occupying a slot.
+//!
+//! The receiver API intentionally keeps `std::sync::mpsc`'s error types
+//! (`RecvError` / `RecvTimeoutError` / `TryRecvError`) so the coalescer's
+//! event loop is indifferent to the swap.
 
-use super::{ForwardRequest, ForwardResponse, LinearRequest, LinearResponse};
+use super::fault::FaultInjector;
+use super::{ForwardRequest, ForwardResponse, LinearRequest, LinearResponse, ServeError};
+use crate::coordinator::metrics::Metrics;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Why a submission was not admitted.
@@ -25,6 +52,11 @@ pub enum AdmissionError {
     /// The server is shutting down (or already gone); no new work is
     /// admitted.
     ShuttingDown,
+    /// This model's per-model admission quota is exhausted. Unlike
+    /// `Overloaded` this is never a blocking condition: quota shed is
+    /// immediate even on the blocking submit paths, so one hot model
+    /// cannot park submitters while starving the rest of the registry.
+    QuotaExceeded,
 }
 
 impl fmt::Display for AdmissionError {
@@ -32,17 +64,67 @@ impl fmt::Display for AdmissionError {
         match self {
             AdmissionError::Overloaded => write!(f, "server overloaded (admission queue full)"),
             AdmissionError::ShuttingDown => write!(f, "server shutting down"),
+            AdmissionError::QuotaExceeded => {
+                write!(f, "per-model admission quota exhausted")
+            }
         }
     }
 }
 
 impl std::error::Error for AdmissionError {}
 
+/// Per-model caps on *queued* jobs. A model at its cap sheds new
+/// admissions with [`AdmissionError::QuotaExceeded`] until the coalescer
+/// drains some of its queued work; other models are unaffected.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QuotaConfig {
+    limits: BTreeMap<String, usize>,
+    default_limit: Option<usize>,
+}
+
+impl QuotaConfig {
+    pub fn new() -> QuotaConfig {
+        QuotaConfig::default()
+    }
+
+    /// Cap the named model at `limit` queued jobs.
+    pub fn with_limit(mut self, model: &str, limit: usize) -> QuotaConfig {
+        self.limits.insert(model.to_string(), limit);
+        self
+    }
+
+    /// Cap every model without an explicit limit at `limit` queued jobs.
+    pub fn with_default_limit(mut self, limit: usize) -> QuotaConfig {
+        self.default_limit = Some(limit);
+        self
+    }
+
+    /// The effective limit for `model`, if any.
+    pub fn limit(&self, model: &str) -> Option<usize> {
+        self.limits.get(model).copied().or(self.default_limit)
+    }
+
+    /// Whether no quota is configured at all (the zero-cost default).
+    pub fn is_empty(&self) -> bool {
+        self.limits.is_empty() && self.default_limit.is_none()
+    }
+}
+
+/// Optional admission-side wiring for [`AdmissionQueue::bounded_with`].
+#[derive(Default)]
+pub struct QueueOptions {
+    pub quotas: QuotaConfig,
+    pub faults: Option<Arc<FaultInjector>>,
+    pub metrics: Option<Arc<Metrics>>,
+}
+
 /// Channel a response is delivered on.
-pub(crate) type Responder = mpsc::Sender<Result<LinearResponse, String>>;
+pub(crate) type Responder = mpsc::Sender<Result<LinearResponse, ServeError>>;
 
 /// One admitted request, on its way to the coalescer.
 pub(crate) struct ServeJob {
+    /// Admission-order request id — the fault injector's decision key.
+    pub id: u64,
     /// Registry key of the target model.
     pub model: String,
     pub req: LinearRequest,
@@ -53,11 +135,12 @@ pub(crate) struct ServeJob {
 }
 
 /// Channel a forward response is delivered on.
-pub(crate) type ForwardResponder = mpsc::Sender<Result<ForwardResponse, String>>;
+pub(crate) type ForwardResponder = mpsc::Sender<Result<ForwardResponse, ServeError>>;
 
 /// One admitted whole-model request (PR 7), on its way to the
 /// coalescer's continuous-batching scheduler.
 pub(crate) struct ForwardJob {
+    pub id: u64,
     /// Registry key of the target forward.
     pub model: String,
     pub req: ForwardRequest,
@@ -71,18 +154,135 @@ pub(crate) enum Job {
     Shutdown,
 }
 
+impl Job {
+    fn model_key(&self) -> Option<&str> {
+        match self {
+            Job::Linear(j) => Some(&j.model),
+            Job::Forward(j) => Some(&j.model),
+            Job::Shutdown => None,
+        }
+    }
+}
+
+struct ChanState {
+    queue: VecDeque<Job>,
+    /// Count of Linear/Forward entries (the shutdown marker is exempt
+    /// from the capacity bound).
+    jobs: usize,
+    /// Queued jobs per model, for quota enforcement.
+    per_model: BTreeMap<String, usize>,
+    shutting_down: bool,
+    receiver_gone: bool,
+    producer_gone: bool,
+}
+
+impl ChanState {
+    fn model_count(&self, model: &str) -> usize {
+        self.per_model.get(model).copied().unwrap_or(0)
+    }
+
+    fn enqueue(&mut self, job: Job) {
+        if let Some(model) = job.model_key() {
+            self.jobs += 1;
+            *self.per_model.entry(model.to_string()).or_insert(0) += 1;
+        }
+        self.queue.push_back(job);
+    }
+
+    fn dequeue(&mut self) -> Option<Job> {
+        let job = self.queue.pop_front()?;
+        if let Some(model) = job.model_key() {
+            self.jobs -= 1;
+            if let Some(count) = self.per_model.get_mut(model) {
+                *count -= 1;
+                if *count == 0 {
+                    self.per_model.remove(model);
+                }
+            }
+        }
+        Some(job)
+    }
+}
+
+struct Chan {
+    state: Mutex<ChanState>,
+    /// Submitters blocked on a full queue wait here; woken on dequeue,
+    /// shutdown, and receiver drop.
+    space: Condvar,
+    /// The receiver waits here; woken on enqueue and producer drop.
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl Chan {
+    fn lock(&self) -> MutexGuard<'_, ChanState> {
+        // A panic can only poison this lock between plain collection ops;
+        // the state is never left mid-update, so recover rather than
+        // cascade the poison into every submitter.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue under the lock; `block` waits for a free slot. The
+    /// shutdown/quota/capacity decisions and the push are one atomic
+    /// critical section.
+    fn push(&self, job: Job, quota: Option<usize>, block: bool) -> Result<(), AdmissionError> {
+        let mut job = Some(job);
+        let mut st = self.lock();
+        loop {
+            if st.shutting_down || st.receiver_gone {
+                return Err(AdmissionError::ShuttingDown);
+            }
+            if let (Some(limit), Some(model)) =
+                (quota, job.as_ref().and_then(|j| j.model_key()))
+            {
+                if st.model_count(model) >= limit {
+                    return Err(AdmissionError::QuotaExceeded);
+                }
+            }
+            if st.jobs < self.capacity {
+                st.enqueue(job.take().expect("job consumed twice"));
+                drop(st);
+                self.ready.notify_one();
+                return Ok(());
+            }
+            if !block {
+                return Err(AdmissionError::Overloaded);
+            }
+            st = self.space.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Enqueue unconditionally — no capacity, quota, or shutdown check.
+    /// Used for the shutdown marker and the behind-shutdown test hooks.
+    fn push_unchecked(&self, job: Job) {
+        let mut st = self.lock();
+        st.enqueue(job);
+        drop(st);
+        self.ready.notify_one();
+    }
+
+    fn dequeue_and_wake(&self, st: &mut ChanState) -> Option<Job> {
+        let job = st.dequeue()?;
+        // notify_all, not notify_one: a woken submitter may bail on quota
+        // or shutdown without consuming the freed slot, which would strand
+        // a second waiter under notify_one.
+        self.space.notify_all();
+        Some(job)
+    }
+}
+
 /// Producer side of the bounded admission queue.
 pub struct AdmissionQueue {
-    tx: mpsc::SyncSender<Job>,
-    depth: Arc<AtomicUsize>,
-    shutting_down: Arc<AtomicBool>,
-    capacity: usize,
+    chan: Arc<Chan>,
+    quotas: QuotaConfig,
+    faults: Option<Arc<FaultInjector>>,
+    metrics: Option<Arc<Metrics>>,
+    next_id: AtomicU64,
 }
 
 /// Consumer side, handed to [`super::Coalescer::run`].
 pub struct JobReceiver {
-    rx: mpsc::Receiver<Job>,
-    depth: Arc<AtomicUsize>,
+    chan: Arc<Chan>,
 }
 
 impl AdmissionQueue {
@@ -90,31 +290,135 @@ impl AdmissionQueue {
     /// (clamped to ≥ 1). Returns the producer handle and the receiver the
     /// coalescer drives.
     pub fn bounded(capacity: usize) -> (AdmissionQueue, JobReceiver) {
-        let capacity = capacity.max(1);
-        let (tx, rx) = mpsc::sync_channel(capacity);
-        let depth = Arc::new(AtomicUsize::new(0));
+        Self::bounded_with(capacity, QueueOptions::default())
+    }
+
+    /// [`AdmissionQueue::bounded`] plus per-model quotas, fault
+    /// injection, and admission-side metrics.
+    pub fn bounded_with(capacity: usize, opts: QueueOptions) -> (AdmissionQueue, JobReceiver) {
+        let chan = Arc::new(Chan {
+            state: Mutex::new(ChanState {
+                queue: VecDeque::new(),
+                jobs: 0,
+                per_model: BTreeMap::new(),
+                shutting_down: false,
+                receiver_gone: false,
+                producer_gone: false,
+            }),
+            space: Condvar::new(),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        });
         let queue = AdmissionQueue {
-            tx,
-            depth: depth.clone(),
-            shutting_down: Arc::new(AtomicBool::new(false)),
-            capacity,
+            chan: chan.clone(),
+            quotas: opts.quotas,
+            faults: opts.faults,
+            metrics: opts.metrics,
+            next_id: AtomicU64::new(0),
         };
-        (queue, JobReceiver { rx, depth })
+        (queue, JobReceiver { chan })
     }
 
     /// The depth bound this queue was built with.
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.chan.capacity
     }
 
     /// Requests admitted but not yet picked up by the coalescer.
     pub fn depth(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
+        self.chan.lock().jobs
     }
 
-    /// Whether [`AdmissionQueue::begin_shutdown`] has been called.
+    /// Whether [`AdmissionQueue::begin_shutdown`] has been called (or the
+    /// receiver is gone).
     pub fn is_shutting_down(&self) -> bool {
-        self.shutting_down.load(Ordering::SeqCst)
+        let st = self.chan.lock();
+        st.shutting_down || st.receiver_gone
+    }
+
+    /// The fault injector wired at construction, if any.
+    pub fn faults(&self) -> Option<&Arc<FaultInjector>> {
+        self.faults.as_ref()
+    }
+
+    fn incr(&self, name: &str) {
+        if let Some(m) = &self.metrics {
+            m.incr(name, 1);
+        }
+    }
+
+    /// Shared admission prologue: id assignment, injected rejections, and
+    /// expired-deadline answering. `Err(Some(_))` is a rejection,
+    /// `Err(None)` means "answered already" is impossible here — the
+    /// deadline short-circuit is handled by the callers because the
+    /// responder types differ.
+    fn preflight(&self, deadline_expired: bool) -> Result<u64, AdmissionError> {
+        if self.is_shutting_down() {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Some(f) = &self.faults {
+            if f.injects_rejection(id) {
+                f.record_rejection();
+                self.incr("serve.faults_injected");
+                return Err(AdmissionError::Overloaded);
+            }
+        }
+        if deadline_expired {
+            self.incr("serve.deadline_miss");
+        }
+        Ok(id)
+    }
+
+    fn admit_linear(
+        &self,
+        model: &str,
+        req: LinearRequest,
+        block: bool,
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
+        let expired = req.expired();
+        let id = self.preflight(expired)?;
+        if expired {
+            // Answer without ever occupying a queue slot.
+            let (rtx, rrx) = mpsc::channel();
+            let _ = rtx.send(Err(ServeError::DeadlineExceeded));
+            return Ok(rrx);
+        }
+        let (job, rrx) = self.make_job(id, model, req);
+        match self.chan.push(Job::Linear(job), self.quotas.limit(model), block) {
+            Ok(()) => Ok(rrx),
+            Err(e) => {
+                if e == AdmissionError::QuotaExceeded {
+                    self.incr("serve.quota_rejected");
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn admit_forward(
+        &self,
+        model: &str,
+        req: ForwardRequest,
+        block: bool,
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
+        let expired = req.expired();
+        let id = self.preflight(expired)?;
+        if expired {
+            let (rtx, rrx) = mpsc::channel();
+            let _ = rtx.send(Err(ServeError::DeadlineExceeded));
+            return Ok(rrx);
+        }
+        let (job, rrx) = self.make_forward_job(id, model, req);
+        match self.chan.push(Job::Forward(job), self.quotas.limit(model), block) {
+            Ok(()) => Ok(rrx),
+            Err(e) => {
+                if e == AdmissionError::QuotaExceeded {
+                    self.incr("serve.quota_rejected");
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Non-blocking admission: [`AdmissionError::Overloaded`] when the
@@ -124,47 +428,21 @@ impl AdmissionQueue {
         &self,
         model: &str,
         req: LinearRequest,
-    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
-        if self.is_shutting_down() {
-            return Err(AdmissionError::ShuttingDown);
-        }
-        let (job, rrx) = make_job(model, req);
-        // Reserve the depth slot *before* the send: once the job is in
-        // the channel a fast consumer may decrement immediately, and a
-        // post-send increment could wrap depth below zero transiently.
-        self.depth.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(Job::Linear(job)) {
-            Ok(()) => Ok(rrx),
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
-                Err(AdmissionError::Overloaded)
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
-                Err(AdmissionError::ShuttingDown)
-            }
-        }
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
+        self.admit_linear(model, req, false)
     }
 
     /// Blocking admission: waits for queue space instead of rejecting —
     /// backpressure becomes "the submitter stalls", matching
-    /// `EvalService::submit_linear`'s historical contract.
+    /// `EvalService::submit_linear`'s historical contract. A submitter
+    /// blocked here when [`AdmissionQueue::begin_shutdown`] fires wakes
+    /// promptly with [`AdmissionError::ShuttingDown`].
     pub fn submit(
         &self,
         model: &str,
         req: LinearRequest,
-    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
-        if self.is_shutting_down() {
-            return Err(AdmissionError::ShuttingDown);
-        }
-        let (job, rrx) = make_job(model, req);
-        // Same reserve-then-send ordering as `try_submit`.
-        self.depth.fetch_add(1, Ordering::Relaxed);
-        if self.tx.send(Job::Linear(job)).is_err() {
-            self.depth.fetch_sub(1, Ordering::Relaxed);
-            return Err(AdmissionError::ShuttingDown);
-        }
-        Ok(rrx)
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
+        self.admit_linear(model, req, true)
     }
 
     /// Non-blocking admission of a whole-model forward request. Same
@@ -175,24 +453,8 @@ impl AdmissionQueue {
         &self,
         model: &str,
         req: ForwardRequest,
-    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
-        if self.is_shutting_down() {
-            return Err(AdmissionError::ShuttingDown);
-        }
-        let (job, rrx) = make_forward_job(model, req);
-        // Reserve-then-send, exactly as `try_submit`.
-        self.depth.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(Job::Forward(job)) {
-            Ok(()) => Ok(rrx),
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
-                Err(AdmissionError::Overloaded)
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
-                Err(AdmissionError::ShuttingDown)
-            }
-        }
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
+        self.admit_forward(model, req, false)
     }
 
     /// Blocking admission of a whole-model forward request.
@@ -200,26 +462,63 @@ impl AdmissionQueue {
         &self,
         model: &str,
         req: ForwardRequest,
-    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
-        if self.is_shutting_down() {
-            return Err(AdmissionError::ShuttingDown);
-        }
-        let (job, rrx) = make_forward_job(model, req);
-        self.depth.fetch_add(1, Ordering::Relaxed);
-        if self.tx.send(Job::Forward(job)).is_err() {
-            self.depth.fetch_sub(1, Ordering::Relaxed);
-            return Err(AdmissionError::ShuttingDown);
-        }
-        Ok(rrx)
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
+        self.admit_forward(model, req, true)
     }
 
     /// Stop admitting and wake the coalescer with a shutdown marker. The
     /// coalescer serves everything admitted before the marker, then
     /// answers anything behind it with an explicit shutdown error.
+    ///
+    /// Never blocks: the marker bypasses the capacity bound, and every
+    /// submitter blocked on a full queue wakes with
+    /// [`AdmissionError::ShuttingDown`].
     pub fn begin_shutdown(&self) {
-        if !self.shutting_down.swap(true, Ordering::SeqCst) {
-            let _ = self.tx.send(Job::Shutdown);
+        let mut st = self.chan.lock();
+        if st.shutting_down {
+            return; // idempotent — exactly one marker
         }
+        st.shutting_down = true;
+        if !st.receiver_gone {
+            st.queue.push_back(Job::Shutdown);
+        }
+        drop(st);
+        self.chan.ready.notify_all();
+        self.chan.space.notify_all();
+    }
+
+    fn make_job(
+        &self,
+        id: u64,
+        model: &str,
+        req: LinearRequest,
+    ) -> (ServeJob, mpsc::Receiver<Result<LinearResponse, ServeError>>) {
+        let (rtx, rrx) = mpsc::channel();
+        let job = ServeJob {
+            id,
+            model: model.to_string(),
+            req,
+            enqueued: Instant::now(),
+            tx: rtx,
+        };
+        (job, rrx)
+    }
+
+    fn make_forward_job(
+        &self,
+        id: u64,
+        model: &str,
+        req: ForwardRequest,
+    ) -> (ForwardJob, mpsc::Receiver<Result<ForwardResponse, ServeError>>) {
+        let (rtx, rrx) = mpsc::channel();
+        let job = ForwardJob {
+            id,
+            model: model.to_string(),
+            req,
+            enqueued: Instant::now(),
+            tx: rtx,
+        };
+        (job, rrx)
     }
 
     /// Test hook: enqueue past the shutdown flag, to exercise the drain
@@ -229,10 +528,10 @@ impl AdmissionQueue {
         &self,
         model: &str,
         req: LinearRequest,
-    ) -> mpsc::Receiver<Result<LinearResponse, String>> {
-        let (job, rrx) = make_job(model, req);
-        self.depth.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(Job::Linear(job)).expect("queue gone");
+    ) -> mpsc::Receiver<Result<LinearResponse, ServeError>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (job, rrx) = self.make_job(id, model, req);
+        self.chan.push_unchecked(Job::Linear(job));
         rrx
     }
 
@@ -243,57 +542,79 @@ impl AdmissionQueue {
         &self,
         model: &str,
         req: ForwardRequest,
-    ) -> mpsc::Receiver<Result<ForwardResponse, String>> {
-        let (job, rrx) = make_forward_job(model, req);
-        self.depth.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(Job::Forward(job)).expect("queue gone");
+    ) -> mpsc::Receiver<Result<ForwardResponse, ServeError>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (job, rrx) = self.make_forward_job(id, model, req);
+        self.chan.push_unchecked(Job::Forward(job));
         rrx
     }
 }
 
-fn make_job(
-    model: &str,
-    req: LinearRequest,
-) -> (ServeJob, mpsc::Receiver<Result<LinearResponse, String>>) {
-    let (rtx, rrx) = mpsc::channel();
-    let job =
-        ServeJob { model: model.to_string(), req, enqueued: Instant::now(), tx: rtx };
-    (job, rrx)
-}
-
-fn make_forward_job(
-    model: &str,
-    req: ForwardRequest,
-) -> (ForwardJob, mpsc::Receiver<Result<ForwardResponse, String>>) {
-    let (rtx, rrx) = mpsc::channel();
-    let job =
-        ForwardJob { model: model.to_string(), req, enqueued: Instant::now(), tx: rtx };
-    (job, rrx)
+impl Drop for AdmissionQueue {
+    fn drop(&mut self) {
+        let mut st = self.chan.lock();
+        st.producer_gone = true;
+        drop(st);
+        self.chan.ready.notify_all();
+    }
 }
 
 impl JobReceiver {
-    fn note(&self, job: &Job) {
-        if matches!(job, Job::Linear(_) | Job::Forward(_)) {
-            self.depth.fetch_sub(1, Ordering::Relaxed);
+    pub(crate) fn recv(&self) -> Result<Job, mpsc::RecvError> {
+        let mut st = self.chan.lock();
+        loop {
+            if let Some(job) = self.chan.dequeue_and_wake(&mut st) {
+                return Ok(job);
+            }
+            if st.producer_gone {
+                return Err(mpsc::RecvError);
+            }
+            st = self.chan.ready.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
-    pub(crate) fn recv(&self) -> Result<Job, mpsc::RecvError> {
-        let job = self.rx.recv()?;
-        self.note(&job);
-        Ok(job)
-    }
-
     pub(crate) fn recv_timeout(&self, timeout: Duration) -> Result<Job, mpsc::RecvTimeoutError> {
-        let job = self.rx.recv_timeout(timeout)?;
-        self.note(&job);
-        Ok(job)
+        let deadline = Instant::now() + timeout;
+        let mut st = self.chan.lock();
+        loop {
+            if let Some(job) = self.chan.dequeue_and_wake(&mut st) {
+                return Ok(job);
+            }
+            if st.producer_gone {
+                return Err(mpsc::RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(mpsc::RecvTimeoutError::Timeout);
+            }
+            let (guard, _timed_out) = self
+                .chan
+                .ready
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+        }
     }
 
     pub(crate) fn try_recv(&self) -> Result<Job, mpsc::TryRecvError> {
-        let job = self.rx.try_recv()?;
-        self.note(&job);
-        Ok(job)
+        let mut st = self.chan.lock();
+        if let Some(job) = self.chan.dequeue_and_wake(&mut st) {
+            return Ok(job);
+        }
+        if st.producer_gone {
+            return Err(mpsc::TryRecvError::Disconnected);
+        }
+        Err(mpsc::TryRecvError::Empty)
+    }
+}
+
+impl Drop for JobReceiver {
+    fn drop(&mut self) {
+        let mut st = self.chan.lock();
+        st.receiver_gone = true;
+        drop(st);
+        // Blocked submitters must observe the dead receiver promptly.
+        self.chan.space.notify_all();
     }
 }
 
@@ -303,7 +624,7 @@ mod tests {
     use crate::tensor::Tensor;
 
     fn req() -> LinearRequest {
-        LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 4]) }
+        LinearRequest::new("w", Tensor::zeros(&[1, 4]))
     }
 
     /// With no consumer attached, admission beyond capacity is an
@@ -356,18 +677,18 @@ mod tests {
     #[test]
     fn forward_jobs_share_the_depth_bound() {
         let (q, rx) = AdmissionQueue::bounded(2);
-        let _r1 = q.try_submit_forward("m", ForwardRequest { tokens: vec![1, 2] }).unwrap();
+        let _r1 = q.try_submit_forward("m", ForwardRequest::new(vec![1, 2])).unwrap();
         let _r2 = q.try_submit("m", req()).unwrap();
         assert_eq!(q.depth(), 2);
         assert_eq!(
-            q.try_submit_forward("m", ForwardRequest { tokens: vec![3] }).unwrap_err(),
+            q.try_submit_forward("m", ForwardRequest::new(vec![3])).unwrap_err(),
             AdmissionError::Overloaded
         );
         assert!(matches!(rx.recv().unwrap(), Job::Forward(_)));
         assert_eq!(q.depth(), 1);
         q.begin_shutdown();
         assert_eq!(
-            q.submit_forward("m", ForwardRequest { tokens: vec![0] }).unwrap_err(),
+            q.submit_forward("m", ForwardRequest::new(vec![0])).unwrap_err(),
             AdmissionError::ShuttingDown
         );
     }
@@ -377,5 +698,96 @@ mod tests {
         let (q, rx) = AdmissionQueue::bounded(2);
         drop(rx);
         assert_eq!(q.try_submit("m", req()).unwrap_err(), AdmissionError::ShuttingDown);
+    }
+
+    /// PR 8 satellite regression: a submitter blocked on a *saturated*
+    /// queue must wake with `ShuttingDown` the moment `begin_shutdown`
+    /// fires — not stall until a drain slot frees.
+    #[test]
+    fn blocked_submitter_unblocks_promptly_on_shutdown() {
+        let (q, _rx) = AdmissionQueue::bounded(1);
+        let q = std::sync::Arc::new(q);
+        let _held = q.try_submit("m", req()).unwrap(); // saturate
+        let (done_tx, done_rx) = mpsc::channel();
+        let q2 = q.clone();
+        let blocked = std::thread::spawn(move || {
+            let outcome = q2.submit("m", req()); // blocks: queue full
+            done_tx.send(outcome.map(|_| ())).unwrap();
+        });
+        // Give the thread time to actually block on the full queue.
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(matches!(done_rx.try_recv(), Err(mpsc::TryRecvError::Empty)));
+        q.begin_shutdown();
+        // Nothing was ever dequeued, yet the submitter must return.
+        let outcome = done_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("blocked submitter did not wake on shutdown");
+        assert_eq!(outcome.unwrap_err(), AdmissionError::ShuttingDown);
+        blocked.join().unwrap();
+    }
+
+    /// Per-model quotas shed the hot model only; cold models keep
+    /// admitting until global capacity.
+    #[test]
+    fn quota_sheds_hot_model_only() {
+        let opts = QueueOptions {
+            quotas: QuotaConfig::new().with_limit("hot", 2),
+            ..Default::default()
+        };
+        let (q, rx) = AdmissionQueue::bounded_with(8, opts);
+        let _h1 = q.try_submit("hot", req()).unwrap();
+        let _h2 = q.try_submit("hot", req()).unwrap();
+        assert_eq!(q.try_submit("hot", req()).unwrap_err(), AdmissionError::QuotaExceeded);
+        // Quota shed is immediate even on the blocking path.
+        assert_eq!(q.submit("hot", req()).unwrap_err(), AdmissionError::QuotaExceeded);
+        // Cold model admits freely.
+        let _c1 = q.try_submit("cold", req()).unwrap();
+        let _c2 = q.try_submit("cold", req()).unwrap();
+        assert_eq!(q.depth(), 4);
+        // Draining a hot job frees its quota slot.
+        assert!(matches!(rx.recv().unwrap(), Job::Linear(_)));
+        let _h3 = q.try_submit("hot", req()).unwrap();
+        assert_eq!(q.try_submit("hot", req()).unwrap_err(), AdmissionError::QuotaExceeded);
+    }
+
+    /// An already-expired deadline is answered `DeadlineExceeded` at
+    /// admission without occupying a queue slot.
+    #[test]
+    fn expired_deadline_answers_at_admission() {
+        let (q, _rx) = AdmissionQueue::bounded(2);
+        let stale = req().with_timeout(Duration::ZERO);
+        let rrx = q.submit("m", stale).unwrap();
+        assert_eq!(rrx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+        assert_eq!(q.depth(), 0);
+        let stale = ForwardRequest::new(vec![1]).with_timeout(Duration::ZERO);
+        let rrx = q.try_submit_forward("m", stale).unwrap();
+        assert_eq!(rrx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+        assert_eq!(q.depth(), 0);
+    }
+
+    /// Injected admission rejections are deterministic by (seed, id) and
+    /// read as `Overloaded`.
+    #[test]
+    fn injected_rejections_are_deterministic() {
+        use crate::serve::fault::{FaultConfig, FaultInjector};
+        let cfg = FaultConfig { seed: 11, reject_rate: 0.5, ..Default::default() };
+        let oracle = FaultInjector::new(cfg.clone());
+        let opts = QueueOptions {
+            faults: Some(Arc::new(FaultInjector::new(cfg))),
+            ..Default::default()
+        };
+        let (q, _rx) = AdmissionQueue::bounded_with(64, opts);
+        let mut rejected = 0;
+        for id in 0..32u64 {
+            let got = q.try_submit("m", req());
+            if oracle.injects_rejection(id) {
+                assert_eq!(got.unwrap_err(), AdmissionError::Overloaded);
+                rejected += 1;
+            } else {
+                assert!(got.is_ok());
+            }
+        }
+        assert!(rejected > 0, "seed 11 should reject at least one of 32 ids");
+        assert_eq!(q.faults().unwrap().counts().rejections, rejected);
     }
 }

@@ -5,19 +5,41 @@ use crate::io::SwscFile;
 use crate::model::ModelConfig;
 use anyhow::Result;
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Named [`CompressedModel`]s, `Arc`-shared so every in-flight request —
 /// and every coalesced batch — reuses one set of lazily packed GEMM
-/// panels per model. The registry is assembled up front and then moved
-/// behind an `Arc` into the server; a model's panels pack on the first
-/// request that needs an orientation and are shared by all later
-/// requests, across models' names (two registry names may alias one
-/// `Arc`'d model and the coalescer will still batch them together).
+/// panels per model. A model's panels pack on the first request that
+/// needs an orientation and are shared by all later requests, across
+/// models' names (two registry names may alias one `Arc`'d model and the
+/// coalescer will still batch them together).
+///
+/// ## Hot-swap (PR 8)
+///
+/// The name→`Arc` maps live behind an `RwLock`, so the registry mutates
+/// through `&self` while the server holds it in an `Arc`:
+///
+/// - **Lookups are atomic.** `get`/`forward` clone the `Arc` under a read
+///   lock; a concurrent [`ModelRegistry::replace_forward_file`] flips the
+///   entry under the write lock, so a request observes the old model or
+///   the new one — never a partially-swapped state.
+/// - **Builds happen outside the lock.** The replace/insert paths parse
+///   and validate the new `.swsc` *before* taking the write lock; a
+///   corrupt reload returns `Err` with the registry untouched and
+///   in-flight traffic never stalls behind the build.
+/// - **Old models drain naturally.** Requests that already resolved the
+///   old `Arc` (and the coalescer's in-flight forwards, which pin it at
+///   admission) keep computing against it; the panels free when the last
+///   holder drops.
 #[derive(Default)]
-pub struct ModelRegistry {
+struct Inner {
     models: BTreeMap<String, Arc<CompressedModel>>,
     forwards: BTreeMap<String, Arc<CompressedForward>>,
+}
+
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: RwLock<Inner>,
 }
 
 impl ModelRegistry {
@@ -25,10 +47,20 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
+    fn read(&self) -> RwLockReadGuard<'_, Inner> {
+        // The lock only guards BTreeMap ops — a poisoning panic cannot
+        // leave the maps mid-update, so recover instead of cascading.
+        self.inner.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write(&self) -> RwLockWriteGuard<'_, Inner> {
+        self.inner.write().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Load `file` in `mode` and register it under `name` (replacing any
     /// previous entry of that name). Returns the shared handle.
     pub fn insert_file(
-        &mut self,
+        &self,
         name: &str,
         file: &SwscFile,
         mode: InferMode,
@@ -41,20 +73,27 @@ impl ModelRegistry {
     /// the *quantized* panels — every alias and in-flight request reuses
     /// the ≈4×-smaller panel cache, not an f32 expansion.
     pub fn insert_file_with(
-        &mut self,
+        &self,
         name: &str,
         file: &SwscFile,
         mode: InferMode,
         precision: Precision,
     ) -> Arc<CompressedModel> {
+        // Build outside the lock; the flip below is the only locked work.
         let model = Arc::new(CompressedModel::from_file_with(file, mode, precision));
-        self.models.insert(name.to_string(), model.clone());
+        let mut inner = self.write();
+        inner.models.insert(name.to_string(), model.clone());
+        // A stale forward under this name would reference the replaced
+        // model — linear-only inserts clear it.
+        inner.forwards.remove(name);
         model
     }
 
     /// Register an already-built model under `name`.
-    pub fn insert(&mut self, name: &str, model: Arc<CompressedModel>) {
-        self.models.insert(name.to_string(), model);
+    pub fn insert(&self, name: &str, model: Arc<CompressedModel>) {
+        let mut inner = self.write();
+        inner.models.insert(name.to_string(), model);
+        inner.forwards.remove(name);
     }
 
     /// Register a whole-model forward pass under `name` (PR 7). The
@@ -62,15 +101,16 @@ impl ModelRegistry {
     /// same name, so one name answers both [`super::LinearRequest`]s
     /// (individual weights) and [`super::ForwardRequest`]s (the full
     /// stack) from one set of shared packed panels.
-    pub fn insert_forward(&mut self, name: &str, fwd: Arc<CompressedForward>) {
-        self.models.insert(name.to_string(), fwd.model().clone());
-        self.forwards.insert(name.to_string(), fwd);
+    pub fn insert_forward(&self, name: &str, fwd: Arc<CompressedForward>) {
+        let mut inner = self.write();
+        inner.models.insert(name.to_string(), fwd.model().clone());
+        inner.forwards.insert(name.to_string(), fwd);
     }
 
     /// Build a [`CompressedForward`] from `file` (validating that every
     /// parameter `cfg` requires is present) and register it under `name`.
     pub fn insert_forward_file(
-        &mut self,
+        &self,
         name: &str,
         file: &SwscFile,
         cfg: ModelConfig,
@@ -82,27 +122,58 @@ impl ModelRegistry {
         Ok(fwd)
     }
 
+    /// Atomic hot-swap of a whole-model forward: build and **validate**
+    /// the replacement entirely outside the lock, then flip both map
+    /// entries under one write lock. On `Err` the registry is untouched —
+    /// a corrupt reload never interrupts in-flight traffic, and requests
+    /// holding the old `Arc` drain against it naturally.
+    ///
+    /// Returns the new forward handle. (This is `insert_forward_file`
+    /// with replacement semantics made explicit; use an alias name to
+    /// stage a load-then-flip without disturbing the live name.)
+    pub fn replace_forward_file(
+        &self,
+        name: &str,
+        file: &SwscFile,
+        cfg: ModelConfig,
+        mode: InferMode,
+    ) -> Result<Arc<CompressedForward>> {
+        let model = Arc::new(CompressedModel::from_file(file, mode));
+        let fwd = Arc::new(CompressedForward::new(model, cfg)?);
+        self.insert_forward(name, fwd.clone());
+        Ok(fwd)
+    }
+
+    /// Unregister `name` (both the linear model and any forward). Returns
+    /// the removed model handle; in-flight requests holding it keep
+    /// computing — the panels free when the last holder drops.
+    pub fn remove(&self, name: &str) -> Option<Arc<CompressedModel>> {
+        let mut inner = self.write();
+        inner.forwards.remove(name);
+        inner.models.remove(name)
+    }
+
     /// The model registered under `name`, if any.
     pub fn get(&self, name: &str) -> Option<Arc<CompressedModel>> {
-        self.models.get(name).cloned()
+        self.read().models.get(name).cloned()
     }
 
     /// The whole-model forward registered under `name`, if any.
     pub fn forward(&self, name: &str) -> Option<Arc<CompressedForward>> {
-        self.forwards.get(name).cloned()
+        self.read().forwards.get(name).cloned()
     }
 
     /// Registered names, in sorted order.
-    pub fn names(&self) -> Vec<&str> {
-        self.models.keys().map(|s| s.as_str()).collect()
+    pub fn names(&self) -> Vec<String> {
+        self.read().models.keys().cloned().collect()
     }
 
     pub fn len(&self) -> usize {
-        self.models.len()
+        self.read().models.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.models.is_empty()
+        self.read().models.is_empty()
     }
 }
 
@@ -119,7 +190,7 @@ mod tests {
         let mut file = SwscFile::new();
         file.compressed
             .insert("w".into(), compress_matrix(&Tensor::randn(&[8, 8], &mut rng), &SwscConfig::new(2, 1)));
-        let mut reg = ModelRegistry::new();
+        let reg = ModelRegistry::new();
         assert!(reg.is_empty());
         let a = reg.insert_file("a", &file, InferMode::Compressed);
         reg.insert("alias", a.clone());
@@ -140,7 +211,7 @@ mod tests {
         let mut file = SwscFile::new();
         let w = Tensor::randn(&[16, 16], &mut rng);
         file.compressed.insert("w".into(), compress_matrix(&w, &SwscConfig::new(4, 2)));
-        let mut reg = ModelRegistry::new();
+        let reg = ModelRegistry::new();
         let q = reg.insert_file_with("q", &file, InferMode::Compressed, Precision::Int8);
         assert_eq!(q.precision(), Precision::Int8);
         assert_eq!(q.num_quantized(), 1);
@@ -156,5 +227,30 @@ mod tests {
             .zip(b.data())
             .fold(0.0f32, |m, (p, q)| m.max((p - q).abs()));
         assert!(worst < 0.5, "int8 vs f32 diverged: {worst}");
+    }
+
+    /// Re-inserting under a live name leaves old `Arc` holders serving
+    /// the old model; removal likewise only unlinks the name.
+    #[test]
+    fn reinsert_and_remove_preserve_held_arcs() {
+        let mut rng = Rng::new(52);
+        let mut file = SwscFile::new();
+        let w = Tensor::randn(&[8, 8], &mut rng);
+        file.compressed.insert("w".into(), compress_matrix(&w, &SwscConfig::new(2, 1)));
+        let reg = ModelRegistry::new();
+        let old = reg.insert_file("m", &file, InferMode::Compressed);
+        let x = Tensor::randn(&[1, 8], &mut rng);
+        let y_old = old.apply("w", &x).unwrap();
+        // Re-insert under the same name: lookups flip, the held Arc lives.
+        let new = reg.insert_file("m", &file, InferMode::Reconstructed);
+        assert!(!Arc::ptr_eq(&old, &new));
+        assert!(Arc::ptr_eq(&reg.get("m").unwrap(), &new));
+        assert_eq!(old.apply("w", &x).unwrap(), y_old, "held Arc must keep serving");
+        // Remove: the name is gone, both Arcs still compute.
+        let removed = reg.remove("m").unwrap();
+        assert!(Arc::ptr_eq(&removed, &new));
+        assert!(reg.get("m").is_none());
+        assert!(reg.is_empty());
+        assert_eq!(old.apply("w", &x).unwrap(), y_old);
     }
 }

@@ -2,12 +2,17 @@
 //! coalescer thread over a model registry.
 
 use super::coalescer::{BatchConfig, Coalescer};
-use super::queue::{AdmissionError, AdmissionQueue};
+use super::fault::{FaultConfig, FaultInjector};
+use super::queue::{AdmissionError, AdmissionQueue, QueueOptions, QuotaConfig};
 use super::registry::ModelRegistry;
-use super::{ForwardRequest, ForwardResponse, LinearRequest, LinearResponse};
+use super::{ForwardRequest, ForwardResponse, LinearRequest, LinearResponse, ServeError};
 use crate::coordinator::metrics::Metrics;
+use crate::infer::{CompressedForward, InferMode};
+use crate::io::SwscFile;
+use crate::model::ModelConfig;
 use anyhow::Context;
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 /// Registry key used when a server fronts exactly one model (the
 /// `coordinator::EvalService` integration registers its `.swsc` model
@@ -16,6 +21,78 @@ pub const DEFAULT_MODEL: &str = "default";
 
 /// Default admission-queue depth for [`BatchServer::start`].
 pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
+
+/// Assembly knobs beyond the [`BatchConfig`] itself (PR 8). `Default`
+/// reads the `SWSC_FAULT_*` environment for an injection config — unset
+/// (the production state) means `faults: None` and the injection hooks
+/// compile down to a skipped `Option` check.
+pub struct ServerOptions {
+    /// Admission-queue depth (bounds queued, not in-flight, work).
+    pub queue_capacity: usize,
+    /// Shared metrics registry; pass the coordinator's so one `render()`
+    /// covers both surfaces.
+    pub metrics: Arc<Metrics>,
+    /// Per-model admission quotas (empty = unlimited).
+    pub quotas: QuotaConfig,
+    /// Seeded fault injection for chaos testing; `None` is the zero-cost
+    /// production default.
+    pub faults: Option<FaultConfig>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            metrics: Arc::new(Metrics::new()),
+            quotas: QuotaConfig::default(),
+            faults: FaultConfig::from_env(),
+        }
+    }
+}
+
+/// Bounded retry-with-backoff for transient admission failures
+/// ([`AdmissionError::Overloaded`], [`AdmissionError::QuotaExceeded`]).
+/// [`AdmissionError::ShuttingDown`] is never retried — the condition is
+/// terminal. The backoff doubles per attempt, capped at `max_backoff`,
+/// and is skipped once the request's own deadline has expired (the next
+/// attempt then resolves immediately with
+/// [`ServeError::DeadlineExceeded`] instead of sleeping past it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total admission attempts (clamped to ≥ 1; 1 = no retries).
+    pub attempts: u32,
+    /// Sleep before the first retry; doubles each further retry.
+    pub backoff: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 3,
+            backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries at all — a single attempt.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { attempts: 1, ..RetryPolicy::default() }
+    }
+
+    /// Backoff before retry number `retry` (0-based): doubling, capped.
+    fn delay(&self, retry: u32) -> Duration {
+        let factor = 1u32 << retry.min(16);
+        self.backoff.saturating_mul(factor).min(self.max_backoff)
+    }
+
+    fn retryable(err: AdmissionError) -> bool {
+        matches!(err, AdmissionError::Overloaded | AdmissionError::QuotaExceeded)
+    }
+}
 
 /// A running batched serving instance: submissions go through the bounded
 /// [`AdmissionQueue`], a dedicated coalescer thread stacks them into
@@ -30,22 +107,48 @@ pub struct BatchServer {
 }
 
 impl BatchServer {
-    /// Start with a private metrics registry and the default queue depth.
+    /// Start with default [`ServerOptions`] (private metrics, default
+    /// queue depth, no quotas, env-gated fault injection).
     pub fn start(registry: Arc<ModelRegistry>, cfg: BatchConfig) -> BatchServer {
-        Self::start_with(registry, cfg, DEFAULT_QUEUE_CAPACITY, Arc::new(Metrics::new()))
+        Self::start_with_opts(registry, cfg, ServerOptions::default())
     }
 
-    /// Full-control constructor: explicit admission-queue depth and a
-    /// shared metrics registry (the `EvalService` integration passes its
-    /// own, so one `render()` covers both surfaces).
+    /// [`BatchServer::start`] with an explicit queue depth and a shared
+    /// metrics registry (the `EvalService` integration passes its own, so
+    /// one `render()` covers both surfaces).
     pub fn start_with(
         registry: Arc<ModelRegistry>,
         cfg: BatchConfig,
         queue_capacity: usize,
         metrics: Arc<Metrics>,
     ) -> BatchServer {
-        let (queue, rx) = AdmissionQueue::bounded(queue_capacity);
-        let coalescer = Coalescer::new(registry.clone(), cfg, metrics.clone());
+        Self::start_with_opts(
+            registry,
+            cfg,
+            ServerOptions { queue_capacity, metrics, ..ServerOptions::default() },
+        )
+    }
+
+    /// Full-control constructor (PR 8): quotas and fault injection ride
+    /// along. One [`FaultInjector`] instance is shared by the admission
+    /// side (rejections) and the coalescer (panics, delays), so one seed
+    /// determines the whole fault schedule.
+    pub fn start_with_opts(
+        registry: Arc<ModelRegistry>,
+        cfg: BatchConfig,
+        opts: ServerOptions,
+    ) -> BatchServer {
+        let ServerOptions { queue_capacity, metrics, quotas, faults } = opts;
+        let faults = faults.filter(FaultConfig::enabled).map(|f| Arc::new(FaultInjector::new(f)));
+        let (queue, rx) = AdmissionQueue::bounded_with(
+            queue_capacity,
+            QueueOptions {
+                quotas,
+                faults: faults.clone(),
+                metrics: Some(metrics.clone()),
+            },
+        );
+        let coalescer = Coalescer::with_faults(registry.clone(), cfg, metrics.clone(), faults);
         let worker = std::thread::spawn(move || coalescer.run(rx));
         BatchServer { queue, registry, metrics, worker: Some(worker) }
     }
@@ -63,13 +166,29 @@ impl BatchServer {
         &self.queue
     }
 
+    /// Atomic model hot-swap (PR 8): build and validate the replacement
+    /// `.swsc` outside the registry lock, then flip the name. In-flight
+    /// requests finish against the `Arc` they resolved; new admissions see
+    /// the new model. `Err` leaves the old model serving untouched.
+    pub fn replace_forward_file(
+        &self,
+        name: &str,
+        file: &SwscFile,
+        cfg: ModelConfig,
+        mode: InferMode,
+    ) -> anyhow::Result<Arc<CompressedForward>> {
+        let fwd = self.registry.replace_forward_file(name, file, cfg, mode)?;
+        self.metrics.incr("serve.swaps", 1);
+        Ok(fwd)
+    }
+
     /// Blocking admission: waits for queue space (backpressure stalls the
     /// submitter). Returns the receiver the response arrives on.
     pub fn submit(
         &self,
         model: &str,
         req: LinearRequest,
-    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
         self.queue.submit(model, req)
     }
 
@@ -79,7 +198,7 @@ impl BatchServer {
         &self,
         model: &str,
         req: LinearRequest,
-    ) -> Result<mpsc::Receiver<Result<LinearResponse, String>>, AdmissionError> {
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
         match self.queue.try_submit(model, req) {
             Err(AdmissionError::Overloaded) => {
                 self.metrics.incr("serve.rejected_overloaded", 1);
@@ -87,6 +206,18 @@ impl BatchServer {
             }
             other => other,
         }
+    }
+
+    /// [`BatchServer::try_submit`] under a [`RetryPolicy`]: transient
+    /// admission failures back off and retry; `ShuttingDown` and the
+    /// final failure propagate. Each retry counts on `serve.retries`.
+    pub fn submit_with_retry(
+        &self,
+        model: &str,
+        req: LinearRequest,
+        policy: RetryPolicy,
+    ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
+        self.with_retry(policy, req.deadline, |req| self.try_submit(model, req), req)
     }
 
     /// Blocking admission of a whole-model forward request (PR 7): the
@@ -98,7 +229,7 @@ impl BatchServer {
         &self,
         model: &str,
         req: ForwardRequest,
-    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
         self.queue.submit_forward(model, req)
     }
 
@@ -108,13 +239,54 @@ impl BatchServer {
         &self,
         model: &str,
         req: ForwardRequest,
-    ) -> Result<mpsc::Receiver<Result<ForwardResponse, String>>, AdmissionError> {
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
         match self.queue.try_submit_forward(model, req) {
             Err(AdmissionError::Overloaded) => {
                 self.metrics.incr("serve.rejected_overloaded", 1);
                 Err(AdmissionError::Overloaded)
             }
             other => other,
+        }
+    }
+
+    /// [`BatchServer::try_submit_forward`] under a [`RetryPolicy`] — see
+    /// [`BatchServer::submit_with_retry`].
+    pub fn submit_forward_with_retry(
+        &self,
+        model: &str,
+        req: ForwardRequest,
+        policy: RetryPolicy,
+    ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
+        self.with_retry(policy, req.deadline, |req| self.try_submit_forward(model, req), req)
+    }
+
+    /// The shared retry loop. `deadline` short-circuits the backoff: an
+    /// expired request skips the sleep, and the next attempt is answered
+    /// immediately with [`ServeError::DeadlineExceeded`] by admission
+    /// (expired requests never occupy a queue slot).
+    fn with_retry<R, T>(
+        &self,
+        policy: RetryPolicy,
+        deadline: Option<std::time::Instant>,
+        mut attempt_fn: impl FnMut(R) -> Result<T, AdmissionError>,
+        req: R,
+    ) -> Result<T, AdmissionError>
+    where
+        R: Clone,
+    {
+        let attempts = policy.attempts.max(1);
+        let mut retry = 0u32;
+        loop {
+            match attempt_fn(req.clone()) {
+                Err(e) if RetryPolicy::retryable(e) && retry + 1 < attempts => {
+                    self.metrics.incr("serve.retries", 1);
+                    if !super::deadline_expired(deadline) {
+                        std::thread::sleep(policy.delay(retry));
+                    }
+                    retry += 1;
+                }
+                other => return other,
+            }
         }
     }
 
@@ -125,7 +297,7 @@ impl BatchServer {
         req: ForwardRequest,
     ) -> anyhow::Result<ForwardResponse> {
         let rx = self.submit_forward(model, req).map_err(|e| anyhow::anyhow!("{e}"))?;
-        rx.recv().context("server dropped response")?.map_err(|e| anyhow::anyhow!(e))
+        rx.recv().context("server dropped response")?.map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     /// Submit and wait — convenience mirroring
@@ -136,7 +308,7 @@ impl BatchServer {
         req: LinearRequest,
     ) -> anyhow::Result<LinearResponse> {
         let rx = self.submit(model, req).map_err(|e| anyhow::anyhow!("{e}"))?;
-        rx.recv().context("server dropped response")?.map_err(|e| anyhow::anyhow!(e))
+        rx.recv().context("server dropped response")?.map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     /// Reject new admissions and wake the coalescer; does not join.

@@ -1,0 +1,392 @@
+//! Chaos tests for the fault-tolerant serving layer (PR 8).
+//!
+//! Every test here drives the *public* serving surface under injected or
+//! provoked failures and pins the fault-tolerance contract:
+//!
+//! - a panic poisons exactly the fated request — cohort-mates in the same
+//!   continuous batch stay **bitwise equal to solo**, and the coalescer
+//!   thread survives to serve the next request;
+//! - deadlines answer [`ServeError::DeadlineExceeded`] (at admission or
+//!   mid-flight) without moving any survivor's bits;
+//! - quota shed and bounded retry degrade gracefully and observably
+//!   (`serve.retries`, `serve.quota_rejected`);
+//! - model hot-swap under load serves old bits or new bits, never a blend;
+//! - the injected fault schedule is a pure function of (seed, request-id):
+//!   the CI chaos job replays these tests at `SWSC_THREADS` ∈ {1, 4} with a
+//!   fixed `SWSC_CHAOS_SEED` and must see identical classifications.
+//!
+//! Injection rates make fixed seeds statistically fragile, so tests
+//! seed-scan at runtime against an oracle [`FaultInjector`] until the
+//! schedule mixes the outcomes they need — deterministic, and independent
+//! of thread count or wall clock.
+
+use std::sync::Arc;
+use std::time::Duration;
+use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::infer::{CompressedForward, CompressedModel, InferMode};
+use swsc::io::SwscFile;
+use swsc::model::{init_params, param_specs, ModelConfig};
+use swsc::serve::{
+    AdmissionError, BatchConfig, BatchServer, FaultConfig, FaultInjector, ForwardRequest,
+    ForwardScheduling, LinearRequest, ModelRegistry, QuotaConfig, RetryPolicy, ServeError,
+    ServerOptions, DEFAULT_MODEL,
+};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+
+/// A tiny-config `.swsc` container covering every model parameter.
+fn demo_file(cfg: &ModelConfig, seed: u64) -> SwscFile {
+    let ck = init_params(cfg, seed);
+    let mut file = SwscFile::new();
+    for spec in param_specs(cfg) {
+        let t = ck.get(&spec.name).unwrap().clone();
+        if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+            file.compressed.insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+        } else {
+            file.dense.insert(spec.name.clone(), t);
+        }
+    }
+    file
+}
+
+fn forward_from(file: &SwscFile, cfg: &ModelConfig) -> Arc<CompressedForward> {
+    let model = Arc::new(CompressedModel::from_file(file, InferMode::Compressed));
+    Arc::new(CompressedForward::new(model, cfg.clone()).expect("forward build failed"))
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+fn token_windows(cfg: &ModelConfig, seed: u64, n: usize) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let t = 1 + rng.below(cfg.seq);
+            (0..t).map(|_| rng.below(cfg.vocab) as u32).collect()
+        })
+        .collect()
+}
+
+/// The PR 8 acceptance scenario: several forward requests overlap in the
+/// continuous scheduler; a seeded fault panics exactly one of them. The
+/// fated request answers [`ServeError::Panicked`], every cohort-mate's
+/// logits stay bitwise equal to solo execution, and the server keeps
+/// accepting (and serving, bitwise) afterwards.
+#[test]
+fn injected_panic_poisons_one_request_cohort_mates_stay_bitwise() {
+    let cfg = ModelConfig::tiny();
+    let file = demo_file(&cfg, 31);
+    let fwd = forward_from(&file, &cfg);
+    let warm: Vec<u32> = (0..cfg.seq).map(|i| (i % cfg.vocab) as u32).collect();
+    fwd.forward(&warm).expect("panel warmup forward failed");
+
+    let n = 6usize;
+    let wins = token_windows(&cfg, 0xC0C0, n);
+    let solo: Vec<Vec<u32>> = wins.iter().map(|w| bits(&fwd.forward(w).unwrap())).collect();
+
+    // Seed-scan: exactly one of the n cohort ids is fated to panic, and
+    // the post-recovery probe (id n) is clean. Request ids are assigned
+    // in admission order, so submission order fixes the mapping.
+    let mut faults = FaultConfig { panic_rate: 0.2, ..Default::default() };
+    faults.seed = (0..10_000u64)
+        .find(|&s| {
+            let o = FaultInjector::new(FaultConfig { seed: s, ..faults.clone() });
+            (0..n as u64).filter(|&id| o.injects_panic(id)).count() == 1
+                && !o.injects_panic(n as u64)
+        })
+        .expect("no seed in 0..10000 poisons exactly one of the first ids");
+    let oracle = FaultInjector::new(faults.clone());
+
+    let reg = ModelRegistry::new();
+    reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+    let server = BatchServer::start_with_opts(
+        Arc::new(reg),
+        BatchConfig::default().with_forward_scheduling(ForwardScheduling::Continuous),
+        ServerOptions { faults: Some(faults), ..Default::default() },
+    );
+
+    // Submit the whole cohort before reading any response, so requests
+    // overlap in the continuous scheduler's in-flight set.
+    let receivers: Vec<_> = wins
+        .iter()
+        .map(|w| server.submit_forward(DEFAULT_MODEL, ForwardRequest::new(w.clone())).unwrap())
+        .collect();
+    let mut panicked = 0;
+    for (id, rx) in receivers.into_iter().enumerate() {
+        let got = rx.recv().expect("coalescer must answer every responder");
+        if oracle.injects_panic(id as u64) {
+            match got.expect_err("fated request must fail") {
+                ServeError::Panicked { message } => {
+                    assert!(message.contains("injected fault"), "unexpected payload: {message}");
+                }
+                other => panic!("fated request got {other:?}, not Panicked"),
+            }
+            panicked += 1;
+        } else {
+            let resp = got.expect("cohort-mate must be served");
+            assert_eq!(bits(&resp.logits), solo[id], "cohort-mate bits moved (request {id})");
+        }
+    }
+    assert_eq!(panicked, 1);
+
+    // The coalescer thread survived containment: the server keeps
+    // accepting and serving, still bitwise equal to solo.
+    assert!(!server.queue().is_shutting_down());
+    let probe = server
+        .submit_forward(DEFAULT_MODEL, ForwardRequest::new(wins[0].clone()))
+        .unwrap()
+        .recv()
+        .unwrap()
+        .expect("server must keep serving after a contained panic");
+    assert_eq!(bits(&probe.logits), solo[0]);
+    assert_eq!(server.metrics().counter("serve.panics"), 1);
+    assert_eq!(server.metrics().counter("serve.errors"), 1);
+    server.shutdown();
+}
+
+/// Deadlines end to end: already-expired requests answer
+/// `DeadlineExceeded` at admission (never occupying a queue slot), while
+/// a request with a comfortable deadline is served bitwise equal to solo.
+#[test]
+fn deadlines_are_enforced_end_to_end() {
+    let cfg = ModelConfig::tiny();
+    let file = demo_file(&cfg, 32);
+    let fwd = forward_from(&file, &cfg);
+    let reg = ModelRegistry::new();
+    reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+    let server = BatchServer::start(Arc::new(reg), BatchConfig::default());
+    let metrics = server.metrics().clone();
+
+    // Expired requests are answered before any model or weight lookup —
+    // the bogus weight name below never resolves.
+    let stale = ForwardRequest::new(vec![1, 2, 3]).with_timeout(Duration::ZERO);
+    let rx = server.submit_forward(DEFAULT_MODEL, stale).unwrap();
+    assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+    let stale =
+        LinearRequest::new("never.resolved", Tensor::zeros(&[1, 4])).with_timeout(Duration::ZERO);
+    let rx = server.submit(DEFAULT_MODEL, stale).unwrap();
+    assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+    assert_eq!(metrics.counter("serve.deadline_miss"), 2);
+    assert_eq!(server.queue().depth(), 0, "expired requests must not occupy queue slots");
+
+    // A generous deadline changes scheduling eligibility, never bits.
+    let tokens: Vec<u32> = (0..cfg.seq).map(|i| (i * 3 % cfg.vocab) as u32).collect();
+    let want = bits(&fwd.forward(&tokens).unwrap());
+    let live = ForwardRequest::new(tokens).with_timeout(Duration::from_secs(300));
+    let resp = server.submit_forward(DEFAULT_MODEL, live).unwrap().recv().unwrap().unwrap();
+    assert_eq!(bits(&resp.logits), want, "deadline-carrying request must stay bitwise");
+    server.shutdown();
+}
+
+/// Graceful degradation: a zero quota sheds the hot model immediately,
+/// the bounded retry policy spends exactly its budget (observably, via
+/// `serve.retries` / `serve.quota_rejected`), cold aliases are untouched,
+/// and an expired request short-circuits the retry loop.
+#[test]
+fn quota_shed_is_immediate_and_retry_budget_is_bounded() {
+    let d = 16usize;
+    let mut rng = Rng::new(33);
+    let mut file = SwscFile::new();
+    file.compressed
+        .insert("w".into(), compress_matrix(&Tensor::randn(&[d, d], &mut rng), &SwscConfig::new(4, 2)));
+    let reg = ModelRegistry::new();
+    let model = reg.insert_file("hot", &file, InferMode::Compressed);
+    reg.insert("cold", model.clone());
+    let server = BatchServer::start_with_opts(
+        Arc::new(reg),
+        BatchConfig::default(),
+        ServerOptions {
+            quotas: QuotaConfig::new().with_limit("hot", 0),
+            faults: None,
+            ..Default::default()
+        },
+    );
+    let metrics = server.metrics().clone();
+
+    let policy = RetryPolicy {
+        attempts: 3,
+        backoff: Duration::from_micros(200),
+        max_backoff: Duration::from_millis(1),
+    };
+    let err = server
+        .submit_with_retry("hot", LinearRequest::new("w", Tensor::zeros(&[1, d])), policy)
+        .unwrap_err();
+    assert_eq!(err, AdmissionError::QuotaExceeded);
+    // 3 attempts = 2 retries; every attempt was a quota rejection.
+    assert_eq!(metrics.counter("serve.retries"), 2);
+    assert_eq!(metrics.counter("serve.quota_rejected"), 3);
+
+    // The cold alias of the same Arc'd model admits freely — and stays
+    // bitwise equal to direct apply.
+    let x = Tensor::randn(&[2, d], &mut rng);
+    let got = server
+        .submit_with_retry("cold", LinearRequest::new("w", x.clone()), RetryPolicy::none())
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    assert_eq!(bits(&got.y), bits(&model.apply("w", &x).unwrap()));
+
+    // An already-expired request is answered at admission instead of
+    // burning the retry budget against the quota.
+    let stale = LinearRequest::new("w", Tensor::zeros(&[1, d])).with_timeout(Duration::ZERO);
+    let rx = server
+        .submit_with_retry("hot", stale, policy)
+        .expect("expired requests are answered, not retried");
+    assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+    assert_eq!(metrics.counter("serve.retries"), 2, "no retries spent on the expired request");
+    server.shutdown();
+}
+
+/// Hot-swap under load (satellite S3's race case): a swapper thread flips
+/// the live name between two containers while requests stream in. Every
+/// response must be bitwise equal to one container or the other — the
+/// atomic `Arc` flip admits no blended state — and after the dust
+/// settles the server serves exactly the last-installed container.
+#[test]
+fn hot_swap_under_load_serves_old_or_new_bits_never_a_blend() {
+    let cfg = ModelConfig::tiny();
+    let file_a = demo_file(&cfg, 41);
+    let file_b = demo_file(&cfg, 42);
+    let oracle_a = forward_from(&file_a, &cfg);
+    let oracle_b = forward_from(&file_b, &cfg);
+    let tokens: Vec<u32> = (0..cfg.seq / 2).map(|i| (i * 5 % cfg.vocab) as u32).collect();
+    let want_a = bits(&oracle_a.forward(&tokens).unwrap());
+    let want_b = bits(&oracle_b.forward(&tokens).unwrap());
+    assert_ne!(want_a, want_b, "the two containers must actually differ");
+
+    let reg = ModelRegistry::new();
+    reg.insert_forward("live", forward_from(&file_a, &cfg));
+    let server = Arc::new(BatchServer::start(Arc::new(reg), BatchConfig::default()));
+
+    let swaps = 8u64;
+    let swapper = {
+        let server = server.clone();
+        let (file_a, file_b, cfg) = (file_a.clone(), file_b.clone(), cfg.clone());
+        std::thread::spawn(move || {
+            for i in 0..swaps {
+                let file = if i % 2 == 0 { &file_b } else { &file_a };
+                server
+                    .replace_forward_file("live", file, cfg.clone(), InferMode::Compressed)
+                    .expect("hot swap of a valid container must succeed");
+            }
+        })
+    };
+    for i in 0..24 {
+        let got = server
+            .submit_forward_blocking("live", ForwardRequest::new(tokens.clone()))
+            .expect("requests racing a hot swap must still be served");
+        let b = bits(&got.logits);
+        assert!(b == want_a || b == want_b, "response {i} is neither container's bits");
+    }
+    swapper.join().unwrap();
+    assert_eq!(server.metrics().counter("serve.swaps"), swaps);
+
+    // Settle on A: the very next response is exactly A's bits.
+    server.replace_forward_file("live", &file_a, cfg.clone(), InferMode::Compressed).unwrap();
+    let got = server.submit_forward_blocking("live", ForwardRequest::new(tokens.clone())).unwrap();
+    assert_eq!(bits(&got.logits), want_a);
+
+    // Unregistering the live name is a typed error for new requests, not
+    // a crash — and the server stays up to serve other names.
+    server.registry().remove("live").expect("live model must be registered");
+    let gone = server
+        .submit_forward("live", ForwardRequest::new(tokens.clone()))
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert_eq!(gone.unwrap_err(), ServeError::UnknownModel("live".into()));
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+/// The whole fault schedule — rejections, panics, delays — is a pure
+/// function of (seed, request-id). Two full server lifecycles over the
+/// same request stream classify identically, match the oracle exactly,
+/// and every *served* response stays bitwise equal to solo even while its
+/// neighbours panic or dawdle. The CI chaos job replays this at
+/// `SWSC_THREADS` ∈ {1, 4} with a pinned `SWSC_CHAOS_SEED`; thread count
+/// must not change a single classification.
+#[test]
+fn chaos_schedule_is_deterministic_across_runs() {
+    let d = 16usize;
+    let mut rng = Rng::new(55);
+    let mut file = SwscFile::new();
+    file.compressed
+        .insert("w".into(), compress_matrix(&Tensor::randn(&[d, d], &mut rng), &SwscConfig::new(4, 2)));
+    let solo = CompressedModel::from_file(&file, InferMode::Compressed);
+    let n = 48u64;
+    let xs: Vec<Tensor> = (0..n).map(|_| Tensor::randn(&[2, d], &mut rng)).collect();
+    let want: Vec<Vec<u32>> = xs.iter().map(|x| bits(&solo.apply("w", x).unwrap())).collect();
+
+    let base = FaultConfig {
+        seed: 0,
+        panic_rate: 0.25,
+        delay_rate: 0.1,
+        delay: Duration::from_micros(50),
+        reject_rate: 0.15,
+    };
+    // CI pins the seed; locally, scan for one that mixes all three
+    // outcomes so the test always exercises every classification.
+    let seed = match std::env::var("SWSC_CHAOS_SEED").ok().and_then(|v| v.trim().parse().ok()) {
+        Some(s) => s,
+        None => (0..10_000u64)
+            .find(|&s| {
+                let o = FaultInjector::new(FaultConfig { seed: s, ..base.clone() });
+                let rejected = (0..n).filter(|&id| o.injects_rejection(id)).count();
+                let panicked = (0..n)
+                    .filter(|&id| !o.injects_rejection(id) && o.injects_panic(id))
+                    .count();
+                rejected >= 2 && panicked >= 2 && rejected + panicked + 2 <= n as usize
+            })
+            .expect("no seed in 0..10000 mixes all three outcomes"),
+    };
+    let faults = FaultConfig { seed, ..base };
+    let oracle = FaultInjector::new(faults.clone());
+
+    // 0 = served, 1 = panicked, 2 = rejected at admission.
+    let run = || -> Vec<u8> {
+        let reg = ModelRegistry::new();
+        reg.insert_file(DEFAULT_MODEL, &file, InferMode::Compressed);
+        let server = BatchServer::start_with_opts(
+            Arc::new(reg),
+            BatchConfig::default(),
+            ServerOptions { faults: Some(faults.clone()), ..Default::default() },
+        );
+        let mut outcomes = Vec::with_capacity(xs.len());
+        for (i, x) in xs.iter().enumerate() {
+            match server.try_submit(DEFAULT_MODEL, LinearRequest::new("w", x.clone())) {
+                Ok(rx) => match rx.recv().unwrap() {
+                    Ok(resp) => {
+                        assert_eq!(bits(&resp.y), want[i], "served response {i} drifted from solo");
+                        outcomes.push(0);
+                    }
+                    Err(ServeError::Panicked { .. }) => outcomes.push(1),
+                    Err(e) => panic!("unexpected serve error for request {i}: {e}"),
+                },
+                Err(AdmissionError::Overloaded) => outcomes.push(2),
+                Err(e) => panic!("unexpected admission error for request {i}: {e}"),
+            }
+        }
+        server.shutdown();
+        outcomes
+    };
+
+    let first = run();
+    // Exact oracle agreement: sequential submission maps request i to id i.
+    for (i, &got) in first.iter().enumerate() {
+        let id = i as u64;
+        let expect = if oracle.injects_rejection(id) {
+            2
+        } else if oracle.injects_panic(id) {
+            1
+        } else {
+            0
+        };
+        assert_eq!(got, expect, "request {i} classified {got}, oracle says {expect}");
+    }
+    // And a fresh server over the same stream replays it identically.
+    assert_eq!(first, run(), "two runs over one seed must classify identically");
+}

@@ -282,7 +282,7 @@ fn service_serves_compressed_domain_linear_requests() {
                     let name = names[(cl + i) % names.len()].clone();
                     let x = Tensor::randn(&[2, d], &mut rng);
                     let resp = service
-                        .linear_blocking(LinearRequest { name: name.clone(), x: x.clone() })
+                        .linear_blocking(LinearRequest::new(&name, x.clone()))
                         .unwrap();
                     out.push((name, x, resp.y));
                 }
@@ -304,7 +304,7 @@ fn service_serves_compressed_domain_linear_requests() {
         );
 
         // Unknown weight → error response, not a hang or a crash.
-        let bad = LinearRequest { name: "nope".into(), x: Tensor::zeros(&[1, cfg.d_model]) };
+        let bad = LinearRequest::new("nope", Tensor::zeros(&[1, cfg.d_model]));
         assert!(service.linear_blocking(bad).is_err());
 
         // Eval surface is disabled (no manifest) but answers cleanly.

@@ -148,9 +148,8 @@ fn request_stream(d: usize, count: usize, seed: u64) -> Vec<LinearRequest> {
     let names = ["attn.wq", "attn.wk", "mlp.w1", "attn.wv"];
     let mut rng = Rng::new(seed);
     (0..count)
-        .map(|i| LinearRequest {
-            name: names[i % names.len()].to_string(),
-            x: Tensor::randn(&[1 + rng.below(7), d], &mut rng),
+        .map(|i| {
+            LinearRequest::new(names[i % names.len()], Tensor::randn(&[1 + rng.below(7), d], &mut rng))
         })
         .collect()
 }
@@ -231,7 +230,7 @@ fn batched_service_bitwise_equals_disabled_solo() {
 #[test]
 fn multi_model_interleaving_routes_correctly() {
     let d = 24;
-    let mut reg = ModelRegistry::new();
+    let reg = ModelRegistry::new();
     let file_a = service_file(820, d);
     let file_b = service_file(830, d);
     let model_a = reg.insert_file("a", &file_a, InferMode::Compressed);
@@ -252,10 +251,7 @@ fn multi_model_interleaving_routes_correctly() {
             let weight = ["attn.wq", "attn.wk", "mlp.w1"][i % 3];
             (
                 model.to_string(),
-                LinearRequest {
-                    name: weight.to_string(),
-                    x: Tensor::randn(&[1 + (i % 4), d], &mut rng),
-                },
+                LinearRequest::new(weight, Tensor::randn(&[1 + (i % 4), d], &mut rng)),
             )
         })
         .collect();
@@ -285,7 +281,7 @@ fn admission_overload_and_shutdown() {
     let mut rng = Rng::new(850);
     let mut file = SwscFile::new();
     file.compressed.insert("w".into(), synthetic(512, 512, 16, 8, &mut rng));
-    let mut reg = ModelRegistry::new();
+    let reg = ModelRegistry::new();
     reg.insert_file(DEFAULT_MODEL, &file, InferMode::Compressed);
     let server = BatchServer::start_with(
         Arc::new(reg),
@@ -297,7 +293,7 @@ fn admission_overload_and_shutdown() {
 
     // A deliberately heavy request occupies the coalescer...
     let slow = server
-        .submit(DEFAULT_MODEL, LinearRequest { name: "w".into(), x: Tensor::randn(&[8192, 512], &mut rng) })
+        .submit(DEFAULT_MODEL, LinearRequest::new("w", Tensor::randn(&[8192, 512], &mut rng)))
         .unwrap();
     // ...while a burst overfills the depth-2 queue. Whatever the exact
     // interleaving, the 4th try_submit cannot fit (at most the slow
@@ -305,9 +301,7 @@ fn admission_overload_and_shutdown() {
     let mut accepted = Vec::new();
     let mut overloaded = 0;
     for _ in 0..4 {
-        match server
-            .try_submit(DEFAULT_MODEL, LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 512]) })
-        {
+        match server.try_submit(DEFAULT_MODEL, LinearRequest::new("w", Tensor::zeros(&[1, 512]))) {
             Ok(rx) => accepted.push(rx),
             Err(AdmissionError::Overloaded) => overloaded += 1,
             Err(e) => panic!("unexpected admission error: {e}"),
@@ -323,8 +317,8 @@ fn admission_overload_and_shutdown() {
 
     // Shutdown is deterministic: the flag flips before the marker lands.
     server.begin_shutdown();
-    let refused = server
-        .try_submit(DEFAULT_MODEL, LinearRequest { name: "w".into(), x: Tensor::zeros(&[1, 512]) });
+    let refused =
+        server.try_submit(DEFAULT_MODEL, LinearRequest::new("w", Tensor::zeros(&[1, 512])));
     assert_eq!(refused.err(), Some(AdmissionError::ShuttingDown));
     server.shutdown();
 }
@@ -347,18 +341,12 @@ fn eval_service_begin_shutdown_answers_everything() {
     let rxs: Vec<_> = (0..6)
         .map(|_| {
             service
-                .submit_linear(LinearRequest {
-                    name: "attn.wq".into(),
-                    x: Tensor::randn(&[2, d], &mut rng),
-                })
+                .submit_linear(LinearRequest::new("attn.wq", Tensor::randn(&[2, d], &mut rng)))
                 .unwrap()
         })
         .collect();
     service.begin_shutdown();
-    match service.try_submit_linear(LinearRequest {
-        name: "attn.wq".into(),
-        x: Tensor::zeros(&[1, d]),
-    }) {
+    match service.try_submit_linear(LinearRequest::new("attn.wq", Tensor::zeros(&[1, d]))) {
         Err(AdmissionError::ShuttingDown) => {}
         Err(e) => panic!("unexpected admission error: {e}"),
         Ok(_) => panic!("admission after begin_shutdown must be rejected"),

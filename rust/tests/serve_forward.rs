@@ -172,6 +172,132 @@ fn prop_continuous_batching_is_bitwise_invisible() {
     );
 }
 
+/// [`replay_continuous`] plus deadline-style eviction (PR 8): before the
+/// cohorts of each round form, any request whose fated eviction boundary
+/// has come is dropped from the in-flight set — exactly where the
+/// coalescer evicts expired deadlines. Evicted requests return `None`.
+fn replay_continuous_with_evictions(
+    fwd: &CompressedForward,
+    windows: &[Vec<u32>],
+    arrivals: &[usize],
+    evict_at: &[Option<usize>],
+    schedule_seed: u64,
+    exec: ExecConfig,
+) -> Result<Vec<Option<Tensor>>, String> {
+    let n_layers = fwd.n_layers();
+    let mut sched = Rng::new(schedule_seed);
+    let mut started = vec![false; windows.len()];
+    let mut logits: Vec<Option<Tensor>> = (0..windows.len()).map(|_| None).collect();
+    let mut inflight: Vec<(usize, ForwardState)> = Vec::new();
+    let mut round = 0usize;
+    while started.iter().any(|s| !s) || !inflight.is_empty() {
+        for (i, &due) in arrivals.iter().enumerate() {
+            if due <= round && !started[i] {
+                started[i] = true;
+                inflight.push((i, fwd.start(&windows[i]).map_err(|e| e.to_string())?));
+            }
+        }
+        // The eviction sweep: purely subtractive, survivors' cohorts
+        // re-form without the evicted members.
+        inflight.retain(|(i, s)| evict_at[*i] != Some(s.layer()));
+        let layers: std::collections::BTreeSet<usize> =
+            inflight.iter().map(|(_, s)| s.layer()).collect();
+        for layer in layers {
+            let (mut pool, rest): (Vec<_>, Vec<_>) =
+                inflight.into_iter().partition(|(_, s)| s.layer() == layer);
+            inflight = rest;
+            for i in (1..pool.len()).rev() {
+                pool.swap(i, sched.below(i + 1));
+            }
+            let mut at = 0;
+            while at < pool.len() {
+                let take = 1 + sched.below(pool.len() - at);
+                let chunk = &mut pool[at..at + take];
+                let mut refs: Vec<&mut ForwardState> =
+                    chunk.iter_mut().map(|(_, s)| s).collect();
+                fwd.step_group(&mut refs, exec).map_err(|e| e.to_string())?;
+                at += take;
+            }
+            for (i, s) in pool {
+                if s.layer() == n_layers {
+                    logits[i] = Some(fwd.finish(&s, exec).map_err(|e| e.to_string())?);
+                } else {
+                    inflight.push((i, s));
+                }
+            }
+        }
+        round += 1;
+    }
+    Ok(logits)
+}
+
+/// PR 8 acceptance: deadline eviction at **any layer boundary** is pure
+/// scheduling — the surviving requests' logits are bitwise equal to solo
+/// execution at threads {1, 2, 4}, no matter who was evicted, when, or
+/// how the survivors' cohorts re-formed around the hole.
+#[test]
+fn prop_deadline_eviction_never_moves_survivor_bits() {
+    let (cfg, _file, fwd) = tiny_forward(940);
+    let (seq, vocab) = (cfg.seq, cfg.vocab);
+    let n_layers = fwd.n_layers();
+    check(
+        "evicting requests at random layer boundaries never changes survivors' bits",
+        941,
+        10,
+        |r| {
+            let g = 2 + r.below(5);
+            let windows: Vec<Vec<u32>> = (0..g)
+                .map(|_| {
+                    let t = 1 + r.below(seq.min(10));
+                    (0..t).map(|_| r.below(vocab) as u32).collect()
+                })
+                .collect();
+            let arrivals: Vec<usize> = (0..g).map(|_| r.below(4)).collect();
+            // About half the requests carry a "deadline": a fated eviction
+            // at a random boundary (0 = evicted before their first step).
+            let evict_at: Vec<Option<usize>> = (0..g)
+                .map(|_| if r.below(2) == 0 { Some(r.below(n_layers)) } else { None })
+                .collect();
+            (windows, arrivals, evict_at, r.next_u64())
+        },
+        |(windows, arrivals, evict_at, schedule_seed)| {
+            let solo: Vec<Tensor> = windows
+                .iter()
+                .map(|w| fwd.forward_with(w, ExecConfig::serial()).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+            for t in [1usize, 2, 4] {
+                let exec = ExecConfig::with_threads(t);
+                let got = replay_continuous_with_evictions(
+                    &fwd,
+                    windows,
+                    arrivals,
+                    evict_at,
+                    *schedule_seed,
+                    exec,
+                )?;
+                for (i, g) in got.iter().enumerate() {
+                    match (g, evict_at[i]) {
+                        (None, Some(_)) => {} // evicted as fated
+                        (None, None) => {
+                            return Err(format!("request {i} lost without an eviction"))
+                        }
+                        (Some(g), _) => {
+                            if bits(g) != bits(&solo[i]) {
+                                return Err(format!(
+                                    "survivor {i} ({} tokens) not bitwise equal to solo at \
+                                     {t} threads after evictions",
+                                    windows[i].len()
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// End to end through the server: a concurrent mixed-length stream under
 /// both schedulers, every response bitwise equal to the solo oracle.
 #[test]
@@ -186,7 +312,7 @@ fn server_scheduling_bitwise_equals_solo() {
         .collect();
     let oracle: Vec<Tensor> = streams.iter().map(|w| fwd.forward(w).unwrap()).collect();
     for scheduling in [ForwardScheduling::Continuous, ForwardScheduling::Flush] {
-        let mut reg = ModelRegistry::new();
+        let reg = ModelRegistry::new();
         reg.insert_forward(DEFAULT_MODEL, fwd.clone());
         let server = BatchServer::start(
             Arc::new(reg),
@@ -197,7 +323,7 @@ fn server_scheduling_bitwise_equals_solo() {
         let rxs: Vec<_> = streams
             .iter()
             .map(|w| {
-                server.submit_forward(DEFAULT_MODEL, ForwardRequest { tokens: w.clone() }).unwrap()
+                server.submit_forward(DEFAULT_MODEL, ForwardRequest::new(w.clone())).unwrap()
             })
             .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -244,7 +370,7 @@ fn eval_service_forward_enabled_bitwise_equals_disabled() {
         .unwrap();
         assert!(service.has_forward(), "full container must enable forward serving");
         for w in &windows {
-            let got = service.forward_blocking(ForwardRequest { tokens: w.clone() }).unwrap();
+            let got = service.forward_blocking(ForwardRequest::new(w.clone())).unwrap();
             let want = fwd.forward(w).unwrap();
             assert_eq!(
                 bits(&got.logits),
@@ -283,7 +409,7 @@ fn partial_container_refuses_forwards_explicitly() {
         .unwrap();
         assert!(!service.has_forward(), "partial container must not enable forward");
         let err = service
-            .submit_forward(ForwardRequest { tokens: vec![1, 2, 3] })
+            .submit_forward(ForwardRequest::new(vec![1, 2, 3]))
             .err()
             .expect("partial container must refuse forward submissions");
         assert!(
@@ -291,16 +417,16 @@ fn partial_container_refuses_forwards_explicitly() {
             "unexpected refusal: {err}"
         );
         assert_eq!(
-            service.try_submit_forward(ForwardRequest { tokens: vec![1] }).err(),
+            service.try_submit_forward(ForwardRequest::new(vec![1])).err(),
             Some(AdmissionError::ShuttingDown),
             "{batching:?}"
         );
         // Linear serving is untouched.
         let resp = service
-            .linear_blocking(swsc::coordinator::LinearRequest {
-                name: "attn.wq".into(),
-                x: Tensor::randn(&[2, cfg.d_model], &mut rng),
-            })
+            .linear_blocking(swsc::coordinator::LinearRequest::new(
+                "attn.wq",
+                Tensor::randn(&[2, cfg.d_model], &mut rng),
+            ))
             .unwrap();
         assert_eq!(resp.y.rows(), 2);
         service.shutdown();
