@@ -16,6 +16,11 @@
 //! 4. Explicit `Overloaded` / `ShuttingDown` admission rejections.
 //! 5. The `EvalService` integration: `ServiceConfig::batching` routes
 //!    `submit_linear` through the coalescer by default.
+//! 6. Observability (PR 9): request-scoped tracing enabled explicitly,
+//!    Chrome trace export validated, Prometheus/JSON exporters
+//!    line-format-checked with per-model labels. (CI also runs this
+//!    whole smoke with `SWSC_TRACE=1`, so every server above traces too
+//!    — bitwise invisibly; step 3 is the proof.)
 
 use std::sync::Arc;
 use swsc::bench::loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
@@ -24,7 +29,10 @@ use swsc::coordinator::{EvalService, ServiceConfig};
 use swsc::infer::InferMode;
 use swsc::io::SwscFile;
 use swsc::model::ModelConfig;
-use swsc::serve::{AdmissionError, BatchConfig, BatchServer, LinearRequest, ModelRegistry};
+use swsc::obs::TraceConfig;
+use swsc::serve::{
+    AdmissionError, BatchConfig, BatchServer, LinearRequest, ModelRegistry, ServerOptions,
+};
 use swsc::tensor::Tensor;
 use swsc::util::rng::Rng;
 
@@ -167,6 +175,62 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(resp.y == want, "EvalService batched path diverged");
     println!("\nEvalService (batching enabled) metrics:\n{}", service.metrics.render());
     service.shutdown();
+
+    // 6. Observability: a traced replay, then the three export surfaces.
+    let traced = BatchServer::start_with_opts(
+        registry.clone(),
+        BatchConfig::default(),
+        ServerOptions { trace: Some(TraceConfig::default()), ..ServerOptions::default() },
+    );
+    let rep = run_loadgen(&traced, &LoadgenConfig { requests: 32, ..lg.clone() })?;
+    anyhow::ensure!(rep.errors == 0, "traced replay saw error responses");
+    let chrome = traced.dump_trace().expect("tracing enabled above");
+    anyhow::ensure!(
+        chrome.starts_with('[') && chrome.trim_end().ends_with(']'),
+        "chrome export must be a JSON array"
+    );
+    anyhow::ensure!(
+        chrome.matches('{').count() == chrome.matches('}').count(),
+        "chrome export braces must balance"
+    );
+    anyhow::ensure!(
+        chrome.contains("\"queue_wait\"") && chrome.contains("\"group_apply\""),
+        "expected span kinds missing from the trace"
+    );
+    let sink = traced.trace_sink().expect("tracing enabled above");
+    println!(
+        "\ntrace: {} records ({} dropped), chrome export {} bytes",
+        sink.len(),
+        sink.dropped(),
+        chrome.len()
+    );
+
+    // Prometheus text format: every line is a comment or a sample, and
+    // the per-model breakdowns carry `model="…"` labels.
+    let prom = traced.metrics().render_prometheus();
+    for line in prom.lines() {
+        anyhow::ensure!(
+            line.starts_with("# TYPE ") || line.starts_with("swsc_"),
+            "prometheus line-format violation: {line}"
+        );
+    }
+    anyhow::ensure!(prom.contains("model=\""), "per-model labels missing from prometheus export");
+    anyhow::ensure!(
+        prom.contains("swsc_serve_latency_seconds"),
+        "latency family missing from prometheus export"
+    );
+    let js = traced.metrics().render_json();
+    anyhow::ensure!(
+        js.trim_start().starts_with('{') && js.matches('{').count() == js.matches('}').count(),
+        "json snapshot must be brace-balanced"
+    );
+    anyhow::ensure!(js.contains("\"labeled_counters\""), "json snapshot missing labeled section");
+    println!(
+        "exporters: prometheus {} lines, json {} bytes — deterministic, sorted",
+        prom.lines().count(),
+        js.len()
+    );
+    traced.shutdown();
 
     println!("note: perplexity eval still needs `make artifacts` (fwd_eval takes dense params)");
     Ok(())

@@ -87,6 +87,14 @@ pub struct LoadgenReport {
     pub p95_us: f64,
     pub p99_us: f64,
     pub mean_latency_us: f64,
+    /// Queue-wait half of the end-to-end latency (admission → batch
+    /// pick), microseconds (PR 9). `serve.queue_wait_seconds` deltas.
+    pub queue_p50_us: f64,
+    pub queue_p95_us: f64,
+    /// Service half (batch pick → response), microseconds (PR 9).
+    /// `serve.service_seconds` deltas. queue + service ≈ end-to-end.
+    pub service_p50_us: f64,
+    pub service_p95_us: f64,
     /// Mean stacked rows per executed micro-batch (1.0 ⇒ no coalescing).
     pub batch_mean: f64,
     /// Micro-batches the server executed during the run.
@@ -105,7 +113,8 @@ impl LoadgenReport {
     pub fn render(&self) -> String {
         format!(
             "{} req ({} rows) in {:.3}s -> {:.0} req/s ({:.0} rows/s), latency p50 {:.0} µs \
-             p95 {:.0} µs p99 {:.0} µs, {} batches (mean {:.1} rows), {} errors \
+             p95 {:.0} µs p99 {:.0} µs (queue p50 {:.0} µs p95 {:.0} µs, service p50 {:.0} µs \
+             p95 {:.0} µs), {} batches (mean {:.1} rows), {} errors \
              ({} panicked, {} deadline-missed), {} rejected, error rate {:.1}%",
             self.requests,
             self.rows,
@@ -115,6 +124,10 @@ impl LoadgenReport {
             self.p50_us,
             self.p95_us,
             self.p99_us,
+            self.queue_p50_us,
+            self.queue_p95_us,
+            self.service_p50_us,
+            self.service_p95_us,
             self.batches,
             self.batch_mean,
             self.errors,
@@ -137,6 +150,7 @@ impl LoadgenReport {
             speedup: None,
             vs: None,
             p95_us: Some(self.p95_us),
+            queue_p95_us: Some(self.queue_p95_us),
             batch_mean: Some(self.batch_mean),
             bytes_per_param: None,
         }
@@ -189,6 +203,8 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
     let batches_before = server.metrics().counter("serve.batches");
     let latency_before = server.metrics().hist_snapshot("serve.latency_seconds");
     let batch_rows_before = server.metrics().hist_snapshot("serve.batch_rows");
+    let queue_before = server.metrics().hist_snapshot("serve.queue_wait_seconds");
+    let service_before = server.metrics().hist_snapshot("serve.service_seconds");
     let t0 = Instant::now();
     let mut clock = 0.0f64;
     let mut rows_total = 0usize;
@@ -225,6 +241,11 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
     let m = server.metrics();
     let latency = m.hist_since("serve.latency_seconds", &latency_before);
     let batch_rows = m.hist_since("serve.batch_rows", &batch_rows_before);
+    // The latency split (PR 9): queue wait and service time are recorded
+    // at pick/response for linear and forward traffic alike, so on a
+    // mixed workload these percentiles cover both kinds.
+    let queue = m.hist_since("serve.queue_wait_seconds", &queue_before);
+    let service = m.hist_since("serve.service_seconds", &service_before);
     Ok(LoadgenReport {
         requests: cfg.requests,
         rows: rows_total,
@@ -239,6 +260,10 @@ pub fn run_loadgen(server: &BatchServer, cfg: &LoadgenConfig) -> Result<LoadgenR
         p95_us: latency.percentile(95.0) * 1e6,
         p99_us: latency.percentile(99.0) * 1e6,
         mean_latency_us: latency.mean() * 1e6,
+        queue_p50_us: queue.percentile(50.0) * 1e6,
+        queue_p95_us: queue.percentile(95.0) * 1e6,
+        service_p50_us: service.percentile(50.0) * 1e6,
+        service_p95_us: service.percentile(95.0) * 1e6,
         batch_mean: batch_rows.mean(),
         batches: m.counter("serve.batches") - batches_before,
     })
@@ -348,6 +373,8 @@ pub fn run_forward_loadgen(
     let steps_before = server.metrics().counter("serve.forward_steps");
     let latency_before = server.metrics().hist_snapshot("serve.forward_latency_seconds");
     let step_rows_before = server.metrics().hist_snapshot("serve.forward_step_rows");
+    let queue_before = server.metrics().hist_snapshot("serve.queue_wait_seconds");
+    let service_before = server.metrics().hist_snapshot("serve.service_seconds");
     let t0 = Instant::now();
     let mut clock = 0.0f64;
     let mut tokens_total = 0usize;
@@ -381,6 +408,8 @@ pub fn run_forward_loadgen(
     let m = server.metrics();
     let latency = m.hist_since("serve.forward_latency_seconds", &latency_before);
     let step_rows = m.hist_since("serve.forward_step_rows", &step_rows_before);
+    let queue = m.hist_since("serve.queue_wait_seconds", &queue_before);
+    let service = m.hist_since("serve.service_seconds", &service_before);
     Ok(LoadgenReport {
         requests: cfg.requests,
         rows: tokens_total,
@@ -395,6 +424,10 @@ pub fn run_forward_loadgen(
         p95_us: latency.percentile(95.0) * 1e6,
         p99_us: latency.percentile(99.0) * 1e6,
         mean_latency_us: latency.mean() * 1e6,
+        queue_p50_us: queue.percentile(50.0) * 1e6,
+        queue_p95_us: queue.percentile(95.0) * 1e6,
+        service_p50_us: service.percentile(50.0) * 1e6,
+        service_p95_us: service.percentile(95.0) * 1e6,
         batch_mean: step_rows.mean(),
         batches: m.counter("serve.forward_steps") - steps_before,
     })
@@ -438,8 +471,14 @@ mod tests {
         assert!(rep.rps > 0.0 && rep.rows_per_second > 0.0);
         assert!(rep.batches >= 1 && rep.batch_mean >= 1.0);
         assert!(rep.p95_us >= rep.p50_us && rep.p50_us >= 0.0);
+        // The latency split (PR 9): both halves observed, and neither can
+        // exceed the end-to-end p95 it partitions.
+        assert!(rep.queue_p95_us >= rep.queue_p50_us && rep.queue_p50_us >= 0.0);
+        assert!(rep.service_p95_us >= rep.service_p50_us && rep.service_p50_us >= 0.0);
+        assert!(rep.service_p95_us > 0.0, "served requests must record service time");
         let rec = rep.to_record("loadgen_unit", 24, 1);
         assert_eq!(rec.p95_us, Some(rep.p95_us));
+        assert_eq!(rec.queue_p95_us, Some(rep.queue_p95_us));
         assert_eq!(rec.batch_mean, Some(rep.batch_mean));
         assert!(rec.ns_per_iter > 0.0);
         server.shutdown();

@@ -8,8 +8,9 @@
 //! Each timed case is also recorded as a machine-readable
 //! [`BenchRecord`]; [`Bench::write_json`] dumps them as a JSON array
 //! (`op`, `size`, `threads`, `ns_per_iter`, plus `gflops` on flop-counted
-//! cases, `speedup`/`vs` on comparison rows, `p95_us`/`batch_mean` on
-//! the serve-loadgen rows pushed via [`Bench::push_record`], and
+//! cases, `speedup`/`vs` on comparison rows, `p95_us`/`batch_mean`/
+//! `queue_p95_us` on the serve-loadgen rows pushed via
+//! [`Bench::push_record`], and
 //! `bytes_per_param` on rows annotated via
 //! [`Bench::annotate_bytes_per_param`]) so
 //! successive PRs have a perf trajectory to diff against. [`Bench::compare_against_baseline`]
@@ -51,6 +52,10 @@ pub struct BenchRecord {
     /// Mean coalesced batch size (stacked activation rows per executed
     /// batch) on loadgen rows. `None` elsewhere.
     pub batch_mean: Option<f64>,
+    /// Server-side p95 **queue wait** in microseconds (admission to batch
+    /// pick) on loadgen rows — the queueing share of `p95_us`. `None`
+    /// elsewhere.
+    pub queue_p95_us: Option<f64>,
     /// Storage cost of the weights the row served, in **bytes per
     /// original parameter** (actual file payload ÷ `m·n`) — set on the
     /// `quantized_vs_f32_*` rows so the perf trajectory carries the
@@ -148,6 +153,7 @@ impl Bench {
             vs: None,
             p95_us: None,
             batch_mean: None,
+            queue_p95_us: None,
             bytes_per_param: None,
         });
         mean
@@ -161,6 +167,9 @@ impl Bench {
         let mut extra = String::new();
         if let Some(p) = r.p95_us {
             extra.push_str(&format!("  p95 {:>10}", fmt_secs(p / 1e6)));
+        }
+        if let Some(q) = r.queue_p95_us {
+            extra.push_str(&format!("  queue_p95 {:>10}", fmt_secs(q / 1e6)));
         }
         if let Some(bm) = r.batch_mean {
             extra.push_str(&format!("  batch_mean {bm:.1}"));
@@ -233,6 +242,7 @@ impl Bench {
             vs: Some(base_name.to_string()),
             p95_us: None,
             batch_mean: None,
+            queue_p95_us: None,
             bytes_per_param: None,
         });
         speedup
@@ -310,6 +320,9 @@ impl Bench {
             }
             if let Some(bm) = r.batch_mean {
                 s.push_str(&format!(", \"batch_mean\": {bm:.2}"));
+            }
+            if let Some(q) = r.queue_p95_us {
+                s.push_str(&format!(", \"queue_p95_us\": {q:.1}"));
             }
             if let Some(bp) = r.bytes_per_param {
                 s.push_str(&format!(", \"bytes_per_param\": {bp:.3}"));
@@ -447,12 +460,14 @@ mod tests {
             vs: None,
             p95_us: Some(987.6),
             batch_mean: Some(42.25),
+            queue_p95_us: Some(321.5),
             bytes_per_param: None,
         });
         let recs = b.records();
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].p95_us, Some(987.6));
         assert_eq!(recs[0].batch_mean, Some(42.25));
+        assert_eq!(recs[0].queue_p95_us, Some(321.5));
 
         let path = std::env::temp_dir().join("swsc_bench_loadgen.json");
         b.write_json(&path).unwrap();
@@ -461,10 +476,12 @@ mod tests {
         assert!(body.contains("\"op\": \"loadgen_serve_512_batched\""));
         assert!(body.contains("\"p95_us\": 987.6"));
         assert!(body.contains("\"batch_mean\": 42.25"));
+        assert!(body.contains("\"queue_p95_us\": 321.5"));
         // And the line still parses with the baseline field scanners.
         let line = body.lines().find(|l| l.contains("loadgen")).unwrap();
         assert_eq!(extract_json_num(line, "\"p95_us\": "), Some(987.6));
         assert_eq!(extract_json_num(line, "\"batch_mean\": "), Some(42.25));
+        assert_eq!(extract_json_num(line, "\"queue_p95_us\": "), Some(321.5));
     }
 
     #[test]

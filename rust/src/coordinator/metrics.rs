@@ -136,6 +136,11 @@ impl Histogram {
         self.count
     }
 
+    /// Exact sum of all observations (tracked outside the buckets).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     /// Exact mean (tracked outside the buckets).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
@@ -180,10 +185,20 @@ impl Histogram {
 }
 
 /// Thread-safe metrics registry.
+///
+/// Two dimensions per metric family since PR 9: the plain name-keyed
+/// counters/histograms (unchanged — every pre-existing `serve.*` counter
+/// keeps its exact global value), plus an optional **label** dimension
+/// keyed by `(name, label)` — the serving layer labels by canonical
+/// model name, so `serve.latency_seconds` etc. break down per model.
+/// All four maps are `BTreeMap`s, so every renderer below iterates in
+/// deterministic sorted order — stable enough for golden-text tests.
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
     hists: Mutex<BTreeMap<String, Histogram>>,
+    labeled_counters: Mutex<BTreeMap<(String, String), u64>>,
+    labeled_hists: Mutex<BTreeMap<(String, String), Histogram>>,
 }
 
 impl Metrics {
@@ -195,8 +210,79 @@ impl Metrics {
         *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Overwrite `name` with an absolute value — gauge semantics for
+    /// sampled values (pool busy-time, worker counts) that are not
+    /// increments. Rendered alongside counters.
+    pub fn set(&self, name: &str, value: u64) {
+        self.counters.lock().unwrap().insert(name.to_string(), value);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Labeled counter increment (label = model name by convention).
+    /// Independent of the global [`Metrics::incr`] stream — call both to
+    /// keep the global totals intact.
+    pub fn incr_with(&self, name: &str, label: &str, by: u64) {
+        *self
+            .labeled_counters
+            .lock()
+            .unwrap()
+            .entry((name.to_string(), label.to_string()))
+            .or_insert(0) += by;
+    }
+
+    pub fn counter_with(&self, name: &str, label: &str) -> u64 {
+        self.labeled_counters
+            .lock()
+            .unwrap()
+            .get(&(name.to_string(), label.to_string()))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Record one observation into the `(name, label)` histogram.
+    pub fn record_with(&self, name: &str, label: &str, value: f64) {
+        self.labeled_hists
+            .lock()
+            .unwrap()
+            .entry((name.to_string(), label.to_string()))
+            .or_default()
+            .push(value);
+    }
+
+    /// Clone the `(name, label)` histogram (empty when absent).
+    pub fn hist_with(&self, name: &str, label: &str) -> Histogram {
+        self.labeled_hists
+            .lock()
+            .unwrap()
+            .get(&(name.to_string(), label.to_string()))
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Labels recorded for a metric family, sorted.
+    pub fn labels_of(&self, name: &str) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .labeled_counters
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|(n, _)| n == name)
+            .map(|(_, l)| l.clone())
+            .collect();
+        out.extend(
+            self.labeled_hists
+                .lock()
+                .unwrap()
+                .keys()
+                .filter(|(n, _)| n == name)
+                .map(|(_, l)| l.clone()),
+        );
+        out.sort();
+        out.dedup();
+        out
     }
 
     /// Record one observation into `name`'s histogram. Timings are in
@@ -237,25 +323,204 @@ impl Metrics {
     }
 
     /// Render all metrics as a report block: counters, then every
-    /// histogram with tail percentiles.
+    /// histogram with tail percentiles, then the labeled breakdowns —
+    /// each section in deterministic sorted order (`BTreeMap` iteration;
+    /// labeled lines sort by `(name, label)`), so the output is stable
+    /// for golden-text assertions.
     pub fn render(&self) -> String {
         let mut out = String::new();
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("counter {k} = {v}\n"));
         }
         for (k, h) in self.hists.lock().unwrap().iter() {
-            out.push_str(&format!(
-                "hist    {k}: n={} mean={:.6} p50={:.6} p95={:.6} p99={:.6} max={:.6}\n",
-                h.count(),
-                h.mean(),
-                h.percentile(50.0),
-                h.percentile(95.0),
-                h.percentile(99.0),
-                h.max()
-            ));
+            out.push_str(&format!("hist    {k}: {}\n", hist_line(h)));
+        }
+        for ((k, l), v) in self.labeled_counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k}{{{l}}} = {v}\n"));
+        }
+        for ((k, l), h) in self.labeled_hists.lock().unwrap().iter() {
+            out.push_str(&format!("hist    {k}{{{l}}}: {}\n", hist_line(h)));
         }
         out
     }
+
+    /// Prometheus text exposition format. Counters/gauges render as
+    /// untyped samples, histograms as summaries (`_count`, `_sum`,
+    /// `quantile` series); labeled series carry a `model` label. Names
+    /// are sanitized (`.` → `_`) and prefixed `swsc_`; output is fully
+    /// deterministic: families sorted by name, the unlabeled sample
+    /// first, labeled samples sorted by label.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        // Counter families: global value then per-label values.
+        let counters = self.counters.lock().unwrap().clone();
+        let labeled: BTreeMap<(String, String), u64> =
+            self.labeled_counters.lock().unwrap().clone();
+        let mut families: Vec<String> = counters.keys().cloned().collect();
+        families.extend(labeled.keys().map(|(n, _)| n.clone()));
+        families.sort();
+        families.dedup();
+        for name in families {
+            let prom = prom_name(&name);
+            out.push_str(&format!("# TYPE {prom} counter\n"));
+            if let Some(v) = counters.get(&name) {
+                out.push_str(&format!("{prom} {v}\n"));
+            }
+            for ((n, l), v) in labeled.iter() {
+                if *n == name {
+                    out.push_str(&format!("{prom}{{model=\"{}\"}} {v}\n", prom_label(l)));
+                }
+            }
+        }
+        // Histogram families as summaries.
+        let hists = self.hists.lock().unwrap().clone();
+        let labeled: BTreeMap<(String, String), Histogram> =
+            self.labeled_hists.lock().unwrap().clone();
+        let mut families: Vec<String> = hists.keys().cloned().collect();
+        families.extend(labeled.keys().map(|(n, _)| n.clone()));
+        families.sort();
+        families.dedup();
+        for name in families {
+            let prom = prom_name(&name);
+            out.push_str(&format!("# TYPE {prom} summary\n"));
+            if let Some(h) = hists.get(&name) {
+                out.push_str(&prom_summary(&prom, "", h));
+            }
+            for ((n, l), h) in labeled.iter() {
+                if *n == name {
+                    let pre = format!("model=\"{}\",", prom_label(l));
+                    out.push_str(&prom_summary(&prom, &pre, h));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot of every metric: `counters` / `hists` maps plus
+    /// `labeled_counters` / `labeled_hists` keyed `name → label → value`.
+    /// Hand-rolled (no serde in the vendored set), deterministic sorted
+    /// key order, strings escaped.
+    pub fn render_json(&self) -> String {
+        use crate::obs::json_escape as esc;
+        let mut out = String::from("{");
+        out.push_str("\"counters\":{");
+        for (i, (k, v)) in self.counters.lock().unwrap().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{v}", esc(k)));
+        }
+        out.push_str("},\"labeled_counters\":{");
+        let labeled = self.labeled_counters.lock().unwrap().clone();
+        out.push_str(&json_grouped(&labeled, |v| v.to_string()));
+        out.push_str("},\"hists\":{");
+        for (i, (k, h)) in self.hists.lock().unwrap().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{}", esc(k), hist_json(h)));
+        }
+        out.push_str("},\"labeled_hists\":{");
+        let labeled = self.labeled_hists.lock().unwrap().clone();
+        out.push_str(&json_grouped(&labeled, hist_json));
+        out.push_str("}}");
+        out.push('\n');
+        out
+    }
+}
+
+/// One-line histogram summary shared by `render` lines.
+fn hist_line(h: &Histogram) -> String {
+    format!(
+        "n={} mean={:.6} p50={:.6} p95={:.6} p99={:.6} max={:.6}",
+        h.count(),
+        h.mean(),
+        h.percentile(50.0),
+        h.percentile(95.0),
+        h.percentile(99.0),
+        h.max()
+    )
+}
+
+/// Sanitize a dotted metric name into a Prometheus metric name.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 5);
+    out.push_str("swsc_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Label values only need quote/backslash escaping in the text format.
+fn prom_label(l: &str) -> String {
+    l.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Summary series for one (possibly labeled) histogram. `label_prefix`
+/// is either empty or `model="x",`.
+fn prom_summary(prom: &str, label_prefix: &str, h: &Histogram) -> String {
+    let brace = |inner: &str| {
+        if inner.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", inner.trim_end_matches(','))
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&format!("{prom}_count{} {}\n", brace(label_prefix), h.count()));
+    out.push_str(&format!("{prom}_sum{} {}\n", brace(label_prefix), h.sum()));
+    for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+        out.push_str(&format!(
+            "{prom}{{{}quantile=\"{q}\"}} {}\n",
+            label_prefix,
+            h.percentile(p)
+        ));
+    }
+    out
+}
+
+/// Render a `(name, label) → value` map as JSON `"name":{"label":V,…}`
+/// entries (no outer braces), keys sorted by `BTreeMap` order.
+fn json_grouped<V>(map: &BTreeMap<(String, String), V>, render: impl Fn(&V) -> String) -> String {
+    use crate::obs::json_escape as esc;
+    let mut out = String::new();
+    let mut open: Option<&str> = None;
+    for ((name, label), v) in map.iter() {
+        if open != Some(name.as_str()) {
+            if open.is_some() {
+                out.push_str("},");
+            }
+            out.push_str(&format!("\"{}\":{{", esc(name)));
+            open = Some(name.as_str());
+        } else {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":{}", esc(label), render(v)));
+    }
+    if open.is_some() {
+        out.push('}');
+    }
+    out
+}
+
+/// JSON object for one histogram (exact count/mean/min/max, estimated
+/// percentiles).
+fn hist_json(h: &Histogram) -> String {
+    format!(
+        "{{\"count\":{},\"mean\":{},\"min\":{},\"max\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+        h.count(),
+        h.mean(),
+        h.min(),
+        h.max(),
+        h.percentile(50.0),
+        h.percentile(95.0),
+        h.percentile(99.0)
+    )
 }
 
 #[cfg(test)]
@@ -403,5 +668,112 @@ mod tests {
         }
         assert_eq!(m.counter("n"), 8000);
         assert_eq!(m.timing_count("t"), 8000);
+    }
+
+    /// Histogram edge values stay bounded and reportable: exact zero,
+    /// `u64::MAX` as f64 (far beyond the bucketed range), and an
+    /// empty-since-snapshot window must all render finite numbers.
+    #[test]
+    fn histogram_edge_values() {
+        let mut h = Histogram::new();
+        h.push(0.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!((h.min(), h.max()), (0.0, 0.0));
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(h.percentile(p), 0.0, "zero-only stream reports 0 at p{p}");
+        }
+
+        let big = u64::MAX as f64;
+        h.push(big);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), big);
+        assert_eq!(h.sum(), big);
+        assert!(h.percentile(100.0) <= big, "estimate must clamp into the observed range");
+        assert!(h.mean().is_finite());
+
+        // Empty delta window: canonical empty shape, no inverted range.
+        let snap = h.clone();
+        let none = h.since(&snap);
+        assert_eq!(none.count(), 0);
+        assert_eq!(none.sum(), 0.0);
+        assert_eq!((none.min(), none.max()), (0.0, 0.0));
+        assert_eq!(none.percentile(95.0), 0.0);
+    }
+
+    #[test]
+    fn labeled_counters_and_hists() {
+        let m = Metrics::new();
+        m.incr("serve.panics", 1);
+        m.incr_with("serve.panics", "prod", 1);
+        m.incr_with("serve.panics", "canary", 2);
+        assert_eq!(m.counter("serve.panics"), 1, "global stream untouched by labels");
+        assert_eq!(m.counter_with("serve.panics", "prod"), 1);
+        assert_eq!(m.counter_with("serve.panics", "canary"), 2);
+        assert_eq!(m.counter_with("serve.panics", "absent"), 0);
+        m.record_with("serve.latency_seconds", "prod", 0.25);
+        m.record_with("serve.latency_seconds", "prod", 0.75);
+        assert_eq!(m.hist_with("serve.latency_seconds", "prod").count(), 2);
+        assert_eq!(m.hist_with("serve.latency_seconds", "nope").count(), 0);
+        assert_eq!(m.labels_of("serve.panics"), vec!["canary".to_string(), "prod".to_string()]);
+        m.set("exec.pool_workers", 4);
+        m.set("exec.pool_workers", 3);
+        assert_eq!(m.counter("exec.pool_workers"), 3, "set is overwrite, not add");
+        let r = m.render();
+        assert!(r.contains("serve.panics{canary} = 2"), "labeled render line: {r}");
+        assert!(r.contains("serve.latency_seconds{prod}:"));
+    }
+
+    /// Golden text: the exporters emit exactly this, in exactly this
+    /// order — per-model labels included — so dashboards and CI line
+    /// parsers can rely on the shape.
+    #[test]
+    fn exporters_are_deterministic_and_sorted() {
+        let m = Metrics::new();
+        m.incr("serve.requests", 7);
+        m.incr_with("serve.quota_rejected", "prod", 3);
+        m.record("serve.latency_seconds", 0.5);
+        m.record_with("serve.latency_seconds", "prod", 0.5);
+
+        let prom = m.render_prometheus();
+        let want_prom = "# TYPE swsc_serve_quota_rejected counter\n\
+                         swsc_serve_quota_rejected{model=\"prod\"} 3\n\
+                         # TYPE swsc_serve_requests counter\n\
+                         swsc_serve_requests 7\n\
+                         # TYPE swsc_serve_latency_seconds summary\n\
+                         swsc_serve_latency_seconds_count 1\n\
+                         swsc_serve_latency_seconds_sum 0.5\n\
+                         swsc_serve_latency_seconds{quantile=\"0.5\"} 0.5\n\
+                         swsc_serve_latency_seconds{quantile=\"0.95\"} 0.5\n\
+                         swsc_serve_latency_seconds{quantile=\"0.99\"} 0.5\n\
+                         swsc_serve_latency_seconds_count{model=\"prod\"} 1\n\
+                         swsc_serve_latency_seconds_sum{model=\"prod\"} 0.5\n\
+                         swsc_serve_latency_seconds{model=\"prod\",quantile=\"0.5\"} 0.5\n\
+                         swsc_serve_latency_seconds{model=\"prod\",quantile=\"0.95\"} 0.5\n\
+                         swsc_serve_latency_seconds{model=\"prod\",quantile=\"0.99\"} 0.5\n";
+        assert_eq!(prom, want_prom);
+        assert_eq!(prom, m.render_prometheus(), "repeated renders must be identical");
+
+        let json = m.render_json();
+        assert_eq!(json, m.render_json());
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
+        assert!(json.contains("\"serve.requests\":7"));
+        assert!(json.contains("\"serve.quota_rejected\":{\"prod\":3}"));
+        assert!(json.contains("\"count\":1"));
+        // Structurally sound: balanced braces outside strings.
+        let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+        for c in json.chars() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match c {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '{' | '[' if !in_str => depth += 1,
+                '}' | ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced JSON export: {json}");
     }
 }

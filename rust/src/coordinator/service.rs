@@ -111,6 +111,11 @@ pub struct ServiceConfig {
     /// Seeded fault injection (PR 8). Defaults to the `SWSC_FAULT_*`
     /// environment: unset means `None` — injection fully off.
     pub faults: Option<FaultConfig>,
+    /// Request-scoped tracing for the batched front end (PR 9). Defaults
+    /// to the `SWSC_TRACE` environment; `None` is the zero-cost off
+    /// state. The inline ([`Batching::Disabled`]) path stays untraced —
+    /// it is the bitwise oracle and the simplest possible code path.
+    pub trace: Option<crate::obs::TraceConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -123,6 +128,7 @@ impl Default for ServiceConfig {
             batching: Batching::default(),
             quotas: QuotaConfig::default(),
             faults: FaultConfig::from_env(),
+            trace: crate::obs::TraceConfig::from_env(),
         }
     }
 }
@@ -232,6 +238,7 @@ impl EvalService {
                         metrics: metrics.clone(),
                         quotas: svc_cfg.quotas.clone(),
                         faults: svc_cfg.faults.clone(),
+                        trace: svc_cfg.trace.clone(),
                     },
                 ))
             }
@@ -322,6 +329,12 @@ impl EvalService {
     /// container covered every parameter of the model config).
     pub fn has_forward(&self) -> bool {
         self.forward.is_some()
+    }
+
+    /// Chrome trace-event JSON from the batched front end's trace ring
+    /// (PR 9). `None` unless both batching and tracing are enabled.
+    pub fn dump_trace(&self) -> Option<String> {
+        self.batch.as_ref().and_then(|s| s.dump_trace())
     }
 
     /// Submit a whole-model forward request (PR 7); blocks when the

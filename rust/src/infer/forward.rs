@@ -35,6 +35,18 @@
 //! share a group — and when they join or leave — is pure scheduling,
 //! like `SWSC_THREADS`. `tests/serve_forward.rs` pins this end to end.
 //!
+//! ## Observability
+//!
+//! This module carries **no instrumentation**: tracing and per-layer
+//! timing live entirely in the caller (`serve::Coalescer` emits one
+//! `layer_step` span per request per `step_group` call via
+//! [`crate::obs::TraceSink`]). [`ForwardState::layer`] and
+//! [`ForwardState::tokens`] are the labeling surface the coalescer
+//! reads; keeping the clock out of this module is what makes the
+//! traced-vs-untraced bitwise parity invariant
+//! (`tests/obs_trace.rs`) trivially auditable — there is nothing here
+//! a timing read could perturb.
+//!
 //! [`CompressedLinear::row_into`]: super::CompressedLinear::row_into
 
 use super::model::CompressedModel;

@@ -52,6 +52,7 @@ pub mod io;
 pub mod kmeans;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

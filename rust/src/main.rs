@@ -7,6 +7,8 @@
 //! - `table1`    reproduce the paper's Table I end-to-end
 //! - `table2`    print the paper's Table II (avg-bits accounting)
 //! - `pipeline`  train → compress → eval in one go (Fig. 1)
+//! - `trace`     serve a seeded replay with tracing on; export Chrome
+//!               trace JSON + Prometheus/JSON metrics (PR 9)
 //! - `info`      model/artifact info
 //!
 //! Arg parsing is hand-rolled (`--key value` pairs) — the vendored crate
@@ -49,6 +51,7 @@ fn run() -> Result<()> {
         "table1" => cmd_table1(&opts),
         "table2" => cmd_table2(&opts),
         "pipeline" => cmd_pipeline(&opts),
+        "trace" => cmd_trace(&opts),
         "info" => cmd_info(&opts),
         "help" | "--help" | "-h" => {
             print_help();
@@ -74,6 +77,9 @@ fn print_help() {
            table1    --ckpt runs/default/model.swck [--bits 3,2] [--out table1.txt]\n\
            table2    [--m 4096]\n\
            pipeline  --steps 300 --out runs/pipeline\n\
+           trace     [--out trace.json --requests 48 --forward-requests 12 --seed 42]\n\
+                     (serves a seeded replay with request tracing on, writes a\n\
+                     Perfetto-loadable timeline, prints Prometheus/JSON metrics)\n\
            info      [--preset small]\n\
          \n\
          env:\n\
@@ -398,6 +404,96 @@ fn cmd_pipeline(opts: &Opts) -> Result<()> {
     let mut e = opts.clone();
     e.insert("swsc".into(), format!("{out}/model.swsc"));
     cmd_eval(&e)
+}
+
+/// PR 9 observability demo: build a tiny in-memory compressed model,
+/// serve a seeded mixed replay (linear + forward, with an alias name so
+/// the per-model labels show alias collapsing) with **tracing enabled**,
+/// then export the request timeline as Chrome trace-event JSON and print
+/// the Prometheus / JSON metric snapshots.
+fn cmd_trace(opts: &Opts) -> Result<()> {
+    use std::sync::Arc;
+    use swsc::bench::loadgen::{
+        run_forward_loadgen, run_loadgen, ForwardLoadgenConfig, LoadgenConfig,
+    };
+    use swsc::compress::{compress_matrix, SwscConfig};
+    use swsc::infer::InferMode;
+    use swsc::obs::TraceConfig;
+    use swsc::serve::{BatchConfig, BatchServer, ModelRegistry, ServerOptions, DEFAULT_MODEL};
+
+    let out = PathBuf::from(opt(opts, "out", "trace.json"));
+    let requests: usize = opt(opts, "requests", "48").parse()?;
+    let fwd_requests: usize = opt(opts, "forward-requests", "12").parse()?;
+    let seed: u64 = opt(opts, "seed", "42").parse()?;
+
+    // Tiny in-memory model — no checkpoint needed. Compress every wide
+    // 2-D parameter, keep the rest dense (the loadgen benches' servable
+    // split).
+    let cfg = ModelConfig::tiny();
+    let ck = swsc::model::init_params(&cfg, seed);
+    let mut file = SwscFile::new();
+    for spec in swsc::model::param_specs(&cfg) {
+        let t = ck.get(&spec.name).context("init param present")?.clone();
+        if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+            file.compressed.insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+        } else {
+            file.dense.insert(spec.name.clone(), t);
+        }
+    }
+    let reg = ModelRegistry::new();
+    let fwd = reg.insert_forward_file(DEFAULT_MODEL, &file, cfg, InferMode::Compressed)?;
+    // Alias the same model under a second name: per-model metric labels
+    // collapse aliases to the canonical (lexicographically first) name.
+    reg.insert_forward("tiny-alias", fwd);
+    let weight = file.compressed.keys().next().context("a compressed weight")?.clone();
+
+    let server = BatchServer::start_with_opts(
+        Arc::new(reg),
+        BatchConfig::default(),
+        ServerOptions { trace: Some(TraceConfig::default()), ..ServerOptions::default() },
+    );
+
+    let lin = run_loadgen(
+        &server,
+        &LoadgenConfig {
+            seed,
+            requests,
+            rows_per_request: 4,
+            ragged: true,
+            targets: vec![
+                (DEFAULT_MODEL.into(), weight.clone()),
+                ("tiny-alias".into(), weight),
+            ],
+            ..LoadgenConfig::default()
+        },
+    )?;
+    println!("linear : {}", lin.render());
+    let fw = run_forward_loadgen(
+        &server,
+        &ForwardLoadgenConfig {
+            seed,
+            requests: fwd_requests,
+            max_tokens: 8,
+            models: vec![DEFAULT_MODEL.into(), "tiny-alias".into()],
+            ..ForwardLoadgenConfig::default()
+        },
+    )?;
+    println!("forward: {}", fw.render());
+
+    let json = server.dump_trace().context("tracing was enabled above")?;
+    std::fs::write(&out, &json)?;
+    let records = server.trace_sink().map(|t| t.len()).unwrap_or(0);
+    println!(
+        "wrote {} ({records} trace records) — load it in Perfetto or chrome://tracing",
+        out.display()
+    );
+
+    println!("\n--- prometheus ---");
+    print!("{}", server.metrics().render_prometheus());
+    println!("\n--- json snapshot ---");
+    println!("{}", server.metrics().render_json());
+    server.shutdown();
+    Ok(())
 }
 
 fn cmd_info(opts: &Opts) -> Result<()> {

@@ -1,0 +1,480 @@
+//! Observation-only tracing for the serving stack (PR 9).
+//!
+//! Every admitted request carries a **trace id** — the admission-order
+//! `u64` the [`crate::serve::AdmissionQueue`] already assigns (and the
+//! fault injector already keys on), so span structure inherits the same
+//! determinism story as the chaos schedule: ids are a pure function of
+//! submission order, independent of thread count and wall clock.
+//!
+//! The serving path records into a [`TraceSink`]: a bounded, lock-cheap
+//! ring buffer of [`TraceRecord`]s. Two record shapes:
+//!
+//! - **Spans** ([`SpanKind`]) — an interval with a start and duration:
+//!   queue wait (admission → batch pick), one span per (model, weight)
+//!   group `apply`, one per forward layer-step, one per batch pick on
+//!   the server track (trace id 0).
+//! - **Events** ([`EventKind`]) — instants: admission, rejections,
+//!   deadline evictions, retries, contained panics, injected faults,
+//!   shutdown drains.
+//!
+//! ## The observation-only invariant
+//!
+//! Tracing is pure observation — it must never move a bit:
+//!
+//! - Nothing on the bit-producing path ever *reads* the sink or branches
+//!   on a recorded value; records are write-only from serving code, and
+//!   durations are measured around compute, never fed into it.
+//! - When tracing is off (the default), the hot paths carry an
+//!   `Option<Arc<TraceSink>>` that stays `None` — the entire cost is one
+//!   pointer test per site, and the labels/details are not even
+//!   formatted (the same zero-cost-off pattern as
+//!   [`crate::serve::FaultInjector`]).
+//! - The ring buffer is bounded: past `capacity` records the oldest are
+//!   dropped (counted in [`TraceSink::dropped`]), so a long-lived server
+//!   holds constant trace memory.
+//!
+//! Traced and untraced serving are therefore **bitwise identical** at
+//! any `SWSC_THREADS` — pinned by `tests/obs_trace.rs` — and for a fixed
+//! fault seed and a sequential schedule the span/event *structure* (ids,
+//! kinds, labels — not durations) is identical across runs.
+//!
+//! ## Export
+//!
+//! [`TraceSink::to_chrome_json`] renders the ring as a Chrome
+//! trace-event JSON array (`ph: "X"` complete spans + `ph: "i"` instant
+//! events, one `tid` per trace id) loadable in Perfetto / `chrome://
+//! tracing` — a stall is a visible gap on a request's track. The `swsc
+//! trace` CLI subcommand and [`crate::serve::BatchServer::dump_trace`]
+//! both produce this format.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Default ring capacity (records). ~64k records comfortably covers a
+/// loadgen run; a saturated server wraps (dropping the oldest) instead
+/// of growing.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// Configuration for a [`TraceSink`]. Constructed explicitly or from the
+/// environment (`SWSC_TRACE=1`, optional `SWSC_TRACE_CAPACITY=N`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Ring capacity in records; 0 is clamped to 1.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { capacity: DEFAULT_TRACE_CAPACITY }
+    }
+}
+
+impl TraceConfig {
+    /// Read the env gate: `Some` when `SWSC_TRACE` is set to anything but
+    /// `0`/empty, with `SWSC_TRACE_CAPACITY` overriding the ring size.
+    pub fn from_env() -> Option<TraceConfig> {
+        Self::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// [`TraceConfig::from_env`] against an arbitrary lookup (testable).
+    pub fn from_lookup(lookup: impl Fn(&str) -> Option<String>) -> Option<TraceConfig> {
+        let on = lookup("SWSC_TRACE").map(|v| {
+            let v = v.trim().to_string();
+            !v.is_empty() && v != "0"
+        })?;
+        if !on {
+            return None;
+        }
+        let capacity = lookup("SWSC_TRACE_CAPACITY")
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_TRACE_CAPACITY);
+        Some(TraceConfig { capacity })
+    }
+}
+
+/// What interval a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Admission → batch pick, per request.
+    QueueWait,
+    /// One coalescer drain cycle (server track, trace id 0).
+    BatchPick,
+    /// One stacked (model, weight)-group `apply`, recorded per member
+    /// request.
+    GroupApply,
+    /// One forward layer-step cohort, recorded per member request.
+    LayerStep,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::BatchPick => "batch_pick",
+            SpanKind::GroupApply => "group_apply",
+            SpanKind::LayerStep => "layer_step",
+        }
+    }
+}
+
+/// What instant an event marks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// Request admitted (id assigned, queue slot taken).
+    Admitted,
+    /// Request rejected at admission (detail: overloaded / quota /
+    /// shutting down / injected).
+    Rejected,
+    /// Deadline expired (detail says where: admission / pick / layer).
+    DeadlineEvicted,
+    /// One retry attempt spent by a retrying submitter.
+    Retry,
+    /// A contained panic answered this request.
+    Panic,
+    /// The fault injector fired (detail: panic / delay / reject).
+    FaultInjected,
+    /// Request drained unserved at shutdown.
+    Drained,
+}
+
+impl EventKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::Rejected => "rejected",
+            EventKind::DeadlineEvicted => "deadline_evicted",
+            EventKind::Retry => "retry",
+            EventKind::Panic => "panic",
+            EventKind::FaultInjected => "fault_injected",
+            EventKind::Drained => "drained",
+        }
+    }
+}
+
+/// Span-or-event payload of a [`TraceRecord`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceData {
+    Span { kind: SpanKind, dur: Duration },
+    Event { kind: EventKind },
+}
+
+/// One recorded observation: who (`trace`, `model`), what (`data`,
+/// `detail`), when (`ts`, relative to the sink's epoch).
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// Monotone record sequence number (survives ring wrap).
+    pub seq: u64,
+    /// Request trace id; 0 is the server-scope track.
+    pub trace: u64,
+    pub model: String,
+    /// Free-form label: weight name, layer number, rejection reason…
+    pub detail: String,
+    /// Record time relative to the sink epoch (span start for spans).
+    pub ts: Duration,
+    pub data: TraceData,
+}
+
+impl TraceRecord {
+    /// The duration-free shape of this record — what the determinism
+    /// tests compare across runs.
+    pub fn structure(&self) -> String {
+        let kind = match &self.data {
+            TraceData::Span { kind, .. } => kind.label(),
+            TraceData::Event { kind } => kind.label(),
+        };
+        format!("{}:{}:{}:{}", self.trace, kind, self.model, self.detail)
+    }
+}
+
+/// Bounded ring buffer of [`TraceRecord`]s behind one short-critical-
+/// section mutex (push = one `VecDeque` rotate; no allocation once the
+/// ring is warm beyond the record's own strings).
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    capacity: usize,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<TraceRecord>>,
+}
+
+impl TraceSink {
+    pub fn new(cfg: TraceConfig) -> TraceSink {
+        let capacity = cfg.capacity.max(1);
+        TraceSink {
+            epoch: Instant::now(),
+            capacity,
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(capacity.min(4096))),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record a span that started at `start` and is ending now.
+    pub fn span(
+        &self,
+        kind: SpanKind,
+        trace: u64,
+        model: impl Into<String>,
+        detail: impl Into<String>,
+        start: Instant,
+    ) {
+        let dur = start.elapsed();
+        let ts = start.saturating_duration_since(self.epoch);
+        self.push(TraceRecord {
+            seq: 0,
+            trace,
+            model: model.into(),
+            detail: detail.into(),
+            ts,
+            data: TraceData::Span { kind, dur },
+        });
+    }
+
+    /// Record an instant event happening now.
+    pub fn event(
+        &self,
+        kind: EventKind,
+        trace: u64,
+        model: impl Into<String>,
+        detail: impl Into<String>,
+    ) {
+        let ts = self.epoch.elapsed();
+        self.push(TraceRecord {
+            seq: 0,
+            trace,
+            model: model.into(),
+            detail: detail.into(),
+            ts,
+            data: TraceData::Event { kind },
+        });
+    }
+
+    fn push(&self, mut rec: TraceRecord) {
+        rec.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() == self.capacity {
+            ring.pop_front();
+            drop(ring); // keep the counter bump outside the lock
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        }
+        ring.push_back(rec);
+    }
+
+    /// Records currently held (oldest first; at most `capacity`).
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).is_empty()
+    }
+
+    /// Records evicted by ring wrap since creation (0 ⇒ the trace is
+    /// complete).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn clear(&self) {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+
+    /// The duration-free span/event structure, sorted by (trace id,
+    /// record sequence): what must be identical across runs for a pinned
+    /// fault seed and a sequential schedule.
+    pub fn structure(&self) -> Vec<String> {
+        let ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        let mut keyed: Vec<(u64, u64, String)> =
+            ring.iter().map(|r| (r.trace, r.seq, r.structure())).collect();
+        drop(ring);
+        keyed.sort();
+        keyed.into_iter().map(|(_, _, s)| s).collect()
+    }
+
+    /// Render the ring as a Chrome trace-event JSON array (the
+    /// `chrome://tracing` / Perfetto "JSON array format"): spans as
+    /// `ph:"X"` complete events, events as `ph:"i"` instants, one `tid`
+    /// per trace id (tid 0 = the server track). Timestamps/durations in
+    /// microseconds. Deterministically ordered by record sequence.
+    pub fn to_chrome_json(&self) -> String {
+        let records = self.records();
+        let mut out = String::with_capacity(128 * records.len() + 2);
+        out.push('[');
+        for (i, r) in records.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n  ");
+            let ts = r.ts.as_secs_f64() * 1e6;
+            match &r.data {
+                TraceData::Span { kind, dur } => {
+                    out.push_str(&format!(
+                        "{{\"name\":\"{}\",\"cat\":\"span\",\"ph\":\"X\",\"ts\":{:.3},\
+                         \"dur\":{:.3},\"pid\":1,\"tid\":{},\"args\":{{\"model\":\"{}\",\
+                         \"detail\":\"{}\",\"seq\":{}}}}}",
+                        kind.label(),
+                        ts,
+                        dur.as_secs_f64() * 1e6,
+                        r.trace,
+                        json_escape(&r.model),
+                        json_escape(&r.detail),
+                        r.seq,
+                    ));
+                }
+                TraceData::Event { kind } => {
+                    out.push_str(&format!(
+                        "{{\"name\":\"{}\",\"cat\":\"event\",\"ph\":\"i\",\"s\":\"t\",\
+                         \"ts\":{:.3},\"pid\":1,\"tid\":{},\"args\":{{\"model\":\"{}\",\
+                         \"detail\":\"{}\",\"seq\":{}}}}}",
+                        kind.label(),
+                        ts,
+                        r.trace,
+                        json_escape(&r.model),
+                        json_escape(&r.detail),
+                        r.seq,
+                    ));
+                }
+            }
+        }
+        out.push_str("\n]\n");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// enough for metric/model/weight names and error messages; the vendored
+/// crate set has no serde.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink(cap: usize) -> TraceSink {
+        TraceSink::new(TraceConfig { capacity: cap })
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = sink(4);
+        for i in 0..10u64 {
+            t.event(EventKind::Admitted, i, "m", "");
+        }
+        assert_eq!(t.len(), 4, "ring must cap at capacity");
+        assert_eq!(t.dropped(), 6);
+        // Oldest evicted first: the survivors are the last four ids.
+        let traces: Vec<u64> = t.records().iter().map(|r| r.trace).collect();
+        assert_eq!(traces, vec![6, 7, 8, 9]);
+        // seq keeps counting across the wrap.
+        assert_eq!(t.records().last().unwrap().seq, 9);
+        t.clear();
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn config_env_gate() {
+        assert_eq!(TraceConfig::from_lookup(|_| None), None);
+        assert_eq!(
+            TraceConfig::from_lookup(|k| (k == "SWSC_TRACE").then(|| "0".into())),
+            None
+        );
+        assert_eq!(
+            TraceConfig::from_lookup(|k| (k == "SWSC_TRACE").then(|| "1".into())),
+            Some(TraceConfig::default())
+        );
+        let cfg = TraceConfig::from_lookup(|k| match k {
+            "SWSC_TRACE" => Some("1".into()),
+            "SWSC_TRACE_CAPACITY" => Some("128".into()),
+            _ => None,
+        });
+        assert_eq!(cfg, Some(TraceConfig { capacity: 128 }));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = sink(16);
+        let start = Instant::now();
+        t.event(EventKind::Admitted, 7, "prod", "");
+        t.span(SpanKind::QueueWait, 7, "prod", "", start);
+        t.span(SpanKind::GroupApply, 7, "prod", "attn.\"wq\"", start);
+        let json = t.to_chrome_json();
+        assert!(json.starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"ph\":\"X\""), "spans must be complete events");
+        assert!(json.contains("\"ph\":\"i\""), "events must be instants");
+        assert!(json.contains("\"tid\":7"));
+        assert!(json.contains("attn.\\\"wq\\\""), "details must be escaped: {json}");
+        // Balanced braces/brackets outside strings ⇒ structurally sound.
+        let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+        for c in json.chars() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match c {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '{' | '[' if !in_str => depth += 1,
+                '}' | ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0, "unbalanced close in {json}");
+        }
+        assert_eq!(depth, 0, "unbalanced export: {json}");
+        assert!(!in_str);
+    }
+
+    #[test]
+    fn structure_is_duration_free_and_trace_sorted() {
+        let t = sink(16);
+        let start = Instant::now();
+        t.event(EventKind::Admitted, 2, "b", "");
+        t.span(SpanKind::QueueWait, 1, "a", "", start);
+        std::thread::sleep(Duration::from_millis(1));
+        t.span(SpanKind::QueueWait, 1, "a", "", start);
+        let s = t.structure();
+        // Sorted by trace id first; the two differently-timed spans have
+        // the same structure line.
+        assert_eq!(
+            s,
+            vec![
+                "1:queue_wait:a:".to_string(),
+                "1:queue_wait:a:".to_string(),
+                "2:admitted:b:".to_string(),
+            ]
+        );
+    }
+
+    #[test]
+    fn json_escape_covers_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(json_escape("plain"), "plain");
+    }
+}

@@ -49,6 +49,7 @@ use super::{ForwardResponse, LinearResponse, ServeError};
 use crate::coordinator::metrics::Metrics;
 use crate::exec;
 use crate::infer::{CompressedForward, CompressedModel, ForwardState};
+use crate::obs::{EventKind, SpanKind, TraceSink};
 use crate::tensor::Tensor;
 use std::any::Any;
 use std::collections::VecDeque;
@@ -142,6 +143,11 @@ pub struct Coalescer {
     cfg: BatchConfig,
     metrics: Arc<Metrics>,
     faults: Option<Arc<FaultInjector>>,
+    /// Request-scoped trace sink (PR 9). Strictly observation-only: every
+    /// emission happens *around* the compute sites, never inside them,
+    /// and `None` (the default) keeps the hot path free of clock reads
+    /// and allocations attributable to tracing.
+    trace: Option<Arc<TraceSink>>,
 }
 
 /// Convert a caught panic payload into the typed error, preserving the
@@ -199,8 +205,28 @@ impl Coalescer {
         metrics: Arc<Metrics>,
         faults: Option<Arc<FaultInjector>>,
     ) -> Coalescer {
+        Coalescer::with_observers(registry, cfg, metrics, faults, None)
+    }
+
+    /// [`Coalescer::with_faults`] plus a request-scoped trace sink
+    /// (PR 9). Both extras default off; tracing is pure observation —
+    /// traced and untraced serving are bitwise identical.
+    pub fn with_observers(
+        registry: Arc<ModelRegistry>,
+        cfg: BatchConfig,
+        metrics: Arc<Metrics>,
+        faults: Option<Arc<FaultInjector>>,
+        trace: Option<Arc<TraceSink>>,
+    ) -> Coalescer {
         let cfg = BatchConfig { max_batch_rows: cfg.max_batch_rows.max(1), ..cfg };
-        Coalescer { registry, cfg, metrics, faults }
+        Coalescer { registry, cfg, metrics, faults, trace }
+    }
+
+    /// The per-model metric label for a registry key: the canonical name
+    /// when registered (aliases collapse onto one label), the requested
+    /// name otherwise (so unknown-model errors still get labeled).
+    fn model_label(&self, name: &str) -> String {
+        self.registry.canonical(name).unwrap_or_else(|| name.to_string())
     }
 
     /// Fire an injected panic for request `id` as a *real* unwind, caught
@@ -211,6 +237,9 @@ impl Coalescer {
             f.record_panic();
         }
         self.metrics.incr("serve.faults_injected", 1);
+        if let Some(t) = &self.trace {
+            t.event(EventKind::FaultInjected, id, "", &format!("panic at {site}"));
+        }
         let payload = catch_unwind(|| {
             panic!("injected fault: request {id} poisoned at {site}");
         })
@@ -224,6 +253,9 @@ impl Coalescer {
             if let Some(d) = f.injects_delay(id) {
                 f.record_delay();
                 self.metrics.incr("serve.faults_injected", 1);
+                if let Some(t) = &self.trace {
+                    t.event(EventKind::FaultInjected, id, "", "delay");
+                }
                 std::thread::sleep(d);
             }
         }
@@ -259,6 +291,9 @@ impl Coalescer {
         loop {
             let mut batch: Vec<ServeJob> = Vec::new();
             let mut rows = 0usize;
+            // Tracing only: batch-formation span start. Gated so the
+            // untraced loop performs no extra clock reads.
+            let pick_t0 = self.trace.as_ref().map(|_| Instant::now());
             // Fully idle: block for the first arrival (no polling).
             if !shutting_down && pending.is_empty() && inflight.is_empty() {
                 match rx.recv() {
@@ -307,6 +342,7 @@ impl Coalescer {
                 }
             }
             if !batch.is_empty() {
+                self.note_batch_pick(&rx, batch.len(), pick_t0);
                 self.execute_batch(batch);
             }
             self.admit(&mut pending, &mut inflight);
@@ -318,6 +354,35 @@ impl Coalescer {
         }
     }
 
+    /// Batch-pick observation point (PR 9): sample the admission queue
+    /// depth and the shared exec pool's gauges, and close the
+    /// batch-formation span. Strictly after every scheduling decision —
+    /// nothing read here feeds one.
+    fn note_batch_pick(&self, rx: &JobReceiver, batch_len: usize, t0: Option<Instant>) {
+        self.metrics.record("exec.queue_depth", rx.depth() as f64);
+        let pool = exec::global();
+        self.metrics.set("exec.pool_workers", pool.workers_spawned() as u64);
+        self.metrics.set("exec.pool_busy_workers", pool.workers_busy() as u64);
+        self.metrics.set("exec.pool_busy_nanos", pool.busy_nanos());
+        if let (Some(t), Some(t0)) = (&self.trace, t0) {
+            t.span(SpanKind::BatchPick, 0, "", format!("{batch_len} requests"), t0);
+        }
+    }
+
+    /// Queue-pick bookkeeping shared by both job kinds (PR 9): stamp the
+    /// pick time (for the queue-wait/service-time latency split), record
+    /// the wait, and close the request's queue-wait span.
+    fn note_picked(&self, id: u64, model: &str, enqueued: Instant) -> Instant {
+        let picked = Instant::now();
+        let wait = picked.saturating_duration_since(enqueued).as_secs_f64();
+        self.metrics.record("serve.queue_wait_seconds", wait);
+        self.metrics.record_with("serve.queue_wait_seconds", &self.model_label(model), wait);
+        if let Some(t) = &self.trace {
+            t.span(SpanKind::QueueWait, id, model, "", enqueued);
+        }
+        picked
+    }
+
     fn intake(
         &self,
         job: Job,
@@ -327,7 +392,8 @@ impl Coalescer {
         shutting_down: &mut bool,
     ) {
         match job {
-            Job::Linear(job) => {
+            Job::Linear(mut job) => {
+                job.picked = Some(self.note_picked(job.id, &job.model, job.enqueued));
                 // Expired while queued: evict at intake, before the fill
                 // clock spends any time on it.
                 if job.req.expired() {
@@ -337,8 +403,10 @@ impl Coalescer {
                 *rows += request_rows(&job);
                 batch.push(job);
             }
-            Job::Forward(job) => {
+            Job::Forward(mut job) => {
                 self.metrics.incr("serve.forward_requests", 1);
+                self.metrics.incr_with("serve.forward_requests", &self.model_label(&job.model), 1);
+                job.picked = Some(self.note_picked(job.id, &job.model, job.enqueued));
                 if job.req.expired() {
                     self.respond_forward(job, Err(ServeError::DeadlineExceeded));
                     return;
@@ -448,6 +516,11 @@ impl Coalescer {
             // answered, other cohorts and the scheduler loop survive.
             let result = catch_unwind(AssertUnwindSafe(|| fwd.step_group(&mut states, exec::global())));
             self.metrics.record("serve.apply_seconds", t0.elapsed().as_secs_f64());
+            if let Some(t) = &self.trace {
+                for m in members.iter() {
+                    t.span(SpanKind::LayerStep, m.job.id, &m.job.model, format!("layer {layer}"), t0);
+                }
+            }
             let err = match result {
                 Ok(Ok(())) => None,
                 Ok(Err(e)) => Some(ServeError::Failed(format!("forward step failed: {e:#}"))),
@@ -485,6 +558,9 @@ impl Coalescer {
     fn execute_batch(&self, batch: Vec<ServeJob>) {
         self.metrics.incr("serve.batches", 1);
         self.metrics.incr("serve.requests", batch.len() as u64);
+        for job in &batch {
+            self.metrics.incr_with("serve.requests", &self.model_label(&job.model), 1);
+        }
         self.metrics.record("serve.batch_requests", batch.len() as f64);
         let total_rows: usize = batch.iter().map(request_rows).sum();
         self.metrics.record("serve.batch_rows", total_rows as f64);
@@ -527,7 +603,11 @@ impl Coalescer {
                 && model.shape(&job.req.name).is_some_and(|(m, _)| job.req.x.cols() == m);
             if !stackable {
                 let what = format!("linear `{}`", job.req.name);
+                let t0 = self.trace.as_ref().map(|_| Instant::now());
                 let res = contain(&what, || model.apply(&job.req.name, &job.req.x));
+                if let (Some(t), Some(t0)) = (&self.trace, t0) {
+                    t.span(SpanKind::GroupApply, job.id, &job.model, job.req.name.clone(), t0);
+                }
                 self.respond(job, res);
                 continue;
             }
@@ -567,6 +647,14 @@ impl Coalescer {
             contain(&what, || g.model.apply(&g.name, &stacked))
         };
         self.metrics.record("serve.apply_seconds", t0.elapsed().as_secs_f64());
+        if let Some(t) = &self.trace {
+            // One span per member on its own track: the group apply is
+            // the unit of compute, but a stall should be visible on the
+            // timeline of every request it delayed.
+            for job in &g.jobs {
+                t.span(SpanKind::GroupApply, job.id, &job.model, g.name.clone(), t0);
+            }
+        }
         match result {
             Err(e) => {
                 for job in g.jobs {
@@ -591,30 +679,64 @@ impl Coalescer {
     }
 
     /// Centralized error accounting: every `Err` counts toward
-    /// `serve.errors`, with typed breakdowns for panics and deadline
-    /// misses.
-    fn note_error(&self, err: &ServeError) {
+    /// `serve.errors` (globally and per model label), with typed
+    /// breakdowns for panics and deadline misses, plus the matching
+    /// trace events.
+    fn note_error(&self, err: &ServeError, id: u64, label: &str) {
         self.metrics.incr("serve.errors", 1);
+        self.metrics.incr_with("serve.errors", label, 1);
         match err {
-            ServeError::Panicked { .. } => self.metrics.incr("serve.panics", 1),
-            ServeError::DeadlineExceeded => self.metrics.incr("serve.deadline_miss", 1),
+            ServeError::Panicked { .. } => {
+                self.metrics.incr("serve.panics", 1);
+                self.metrics.incr_with("serve.panics", label, 1);
+            }
+            ServeError::DeadlineExceeded => {
+                self.metrics.incr("serve.deadline_miss", 1);
+                self.metrics.incr_with("serve.deadline_miss", label, 1);
+            }
             _ => {}
+        }
+        if let Some(t) = &self.trace {
+            match err {
+                ServeError::Panicked { .. } => t.event(EventKind::Panic, id, label, ""),
+                ServeError::DeadlineExceeded => {
+                    t.event(EventKind::DeadlineEvicted, id, label, "respond")
+                }
+                ServeError::ShuttingDown => t.event(EventKind::Drained, id, label, ""),
+                _ => {}
+            }
+        }
+    }
+
+    /// Response-time latency accounting shared by both job kinds: the
+    /// end-to-end latency (from admission) and, when the job was picked,
+    /// the service time (from pick) — the two halves the loadgen report
+    /// splits percentiles over.
+    fn note_latency(&self, name: &str, label: &str, enqueued: Instant, picked: Option<Instant>) {
+        let latency = enqueued.elapsed().as_secs_f64();
+        self.metrics.record(name, latency);
+        self.metrics.record_with(name, label, latency);
+        if let Some(picked) = picked {
+            let service = picked.elapsed().as_secs_f64();
+            self.metrics.record("serve.service_seconds", service);
+            self.metrics.record_with("serve.service_seconds", label, service);
         }
     }
 
     fn respond(&self, job: ServeJob, result: Result<Tensor, ServeError>) {
-        self.metrics.record("serve.latency_seconds", job.enqueued.elapsed().as_secs_f64());
+        let label = self.model_label(&job.model);
+        self.note_latency("serve.latency_seconds", &label, job.enqueued, job.picked);
         if let Err(e) = &result {
-            self.note_error(e);
+            self.note_error(e, job.id, &label);
         }
         let _ = job.tx.send(result.map(|y| LinearResponse { y }));
     }
 
     fn respond_forward(&self, job: ForwardJob, result: Result<Tensor, ServeError>) {
-        self.metrics
-            .record("serve.forward_latency_seconds", job.enqueued.elapsed().as_secs_f64());
+        let label = self.model_label(&job.model);
+        self.note_latency("serve.forward_latency_seconds", &label, job.enqueued, job.picked);
         if let Err(e) = &result {
-            self.note_error(e);
+            self.note_error(e, job.id, &label);
         }
         let _ = job.tx.send(result.map(|logits| ForwardResponse { logits }));
     }

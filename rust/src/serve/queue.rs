@@ -36,6 +36,7 @@
 use super::fault::FaultInjector;
 use super::{ForwardRequest, ForwardResponse, LinearRequest, LinearResponse, ServeError};
 use crate::coordinator::metrics::Metrics;
+use crate::obs::{EventKind, TraceSink};
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -116,6 +117,10 @@ pub struct QueueOptions {
     pub quotas: QuotaConfig,
     pub faults: Option<Arc<FaultInjector>>,
     pub metrics: Option<Arc<Metrics>>,
+    /// Admission-side trace sink (PR 9). `None` keeps every admission
+    /// path byte-for-byte the pre-tracing code: no clock reads, no
+    /// allocation, no lock traffic.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 /// Channel a response is delivered on.
@@ -131,6 +136,9 @@ pub(crate) struct ServeJob {
     /// Admission time — the coalescer records queue-to-response latency
     /// from this.
     pub enqueued: Instant,
+    /// When the coalescer picked this job out of the queue (PR 9) —
+    /// splits end-to-end latency into queue-wait vs service-time.
+    pub picked: Option<Instant>,
     pub tx: Responder,
 }
 
@@ -145,6 +153,8 @@ pub(crate) struct ForwardJob {
     pub model: String,
     pub req: ForwardRequest,
     pub enqueued: Instant,
+    /// When the coalescer picked this job out of the queue (PR 9).
+    pub picked: Option<Instant>,
     pub tx: ForwardResponder,
 }
 
@@ -277,6 +287,7 @@ pub struct AdmissionQueue {
     quotas: QuotaConfig,
     faults: Option<Arc<FaultInjector>>,
     metrics: Option<Arc<Metrics>>,
+    trace: Option<Arc<TraceSink>>,
     next_id: AtomicU64,
 }
 
@@ -314,6 +325,7 @@ impl AdmissionQueue {
             quotas: opts.quotas,
             faults: opts.faults,
             metrics: opts.metrics,
+            trace: opts.trace,
             next_id: AtomicU64::new(0),
         };
         (queue, JobReceiver { chan })
@@ -347,13 +359,22 @@ impl AdmissionQueue {
         }
     }
 
+    /// Record an admission-side trace event. `None` sink: no-op — no
+    /// clock read, no allocation.
+    fn emit(&self, kind: EventKind, id: u64, model: &str, detail: &str) {
+        if let Some(t) = &self.trace {
+            t.event(kind, id, model, detail);
+        }
+    }
+
     /// Shared admission prologue: id assignment, injected rejections, and
     /// expired-deadline answering. `Err(Some(_))` is a rejection,
     /// `Err(None)` means "answered already" is impossible here — the
     /// deadline short-circuit is handled by the callers because the
     /// responder types differ.
-    fn preflight(&self, deadline_expired: bool) -> Result<u64, AdmissionError> {
+    fn preflight(&self, model: &str, deadline_expired: bool) -> Result<u64, AdmissionError> {
         if self.is_shutting_down() {
+            self.emit(EventKind::Rejected, 0, model, "shutting down");
             return Err(AdmissionError::ShuttingDown);
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -361,13 +382,39 @@ impl AdmissionQueue {
             if f.injects_rejection(id) {
                 f.record_rejection();
                 self.incr("serve.faults_injected");
+                self.emit(EventKind::FaultInjected, id, model, "reject");
+                self.emit(EventKind::Rejected, id, model, "injected");
                 return Err(AdmissionError::Overloaded);
             }
         }
         if deadline_expired {
             self.incr("serve.deadline_miss");
+            self.emit(EventKind::DeadlineEvicted, id, model, "admission");
         }
         Ok(id)
+    }
+
+    /// Shared admission epilogue: labeled quota accounting and the
+    /// admitted/rejected trace events.
+    fn note_outcome(&self, outcome: &Result<(), AdmissionError>, id: u64, model: &str) {
+        match outcome {
+            Ok(()) => self.emit(EventKind::Admitted, id, model, ""),
+            Err(AdmissionError::QuotaExceeded) => {
+                self.incr("serve.quota_rejected");
+                // Quotas are keyed by the *requested* name (an alias can
+                // carry its own cap), so the label is the requested name.
+                if let Some(m) = &self.metrics {
+                    m.incr_with("serve.quota_rejected", model, 1);
+                }
+                self.emit(EventKind::Rejected, id, model, "quota");
+            }
+            Err(AdmissionError::Overloaded) => {
+                self.emit(EventKind::Rejected, id, model, "overloaded")
+            }
+            Err(AdmissionError::ShuttingDown) => {
+                self.emit(EventKind::Rejected, id, model, "shutting down")
+            }
+        }
     }
 
     fn admit_linear(
@@ -377,7 +424,7 @@ impl AdmissionQueue {
         block: bool,
     ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
         let expired = req.expired();
-        let id = self.preflight(expired)?;
+        let id = self.preflight(model, expired)?;
         if expired {
             // Answer without ever occupying a queue slot.
             let (rtx, rrx) = mpsc::channel();
@@ -385,15 +432,9 @@ impl AdmissionQueue {
             return Ok(rrx);
         }
         let (job, rrx) = self.make_job(id, model, req);
-        match self.chan.push(Job::Linear(job), self.quotas.limit(model), block) {
-            Ok(()) => Ok(rrx),
-            Err(e) => {
-                if e == AdmissionError::QuotaExceeded {
-                    self.incr("serve.quota_rejected");
-                }
-                Err(e)
-            }
-        }
+        let outcome = self.chan.push(Job::Linear(job), self.quotas.limit(model), block);
+        self.note_outcome(&outcome, id, model);
+        outcome.map(|()| rrx)
     }
 
     fn admit_forward(
@@ -403,22 +444,16 @@ impl AdmissionQueue {
         block: bool,
     ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
         let expired = req.expired();
-        let id = self.preflight(expired)?;
+        let id = self.preflight(model, expired)?;
         if expired {
             let (rtx, rrx) = mpsc::channel();
             let _ = rtx.send(Err(ServeError::DeadlineExceeded));
             return Ok(rrx);
         }
         let (job, rrx) = self.make_forward_job(id, model, req);
-        match self.chan.push(Job::Forward(job), self.quotas.limit(model), block) {
-            Ok(()) => Ok(rrx),
-            Err(e) => {
-                if e == AdmissionError::QuotaExceeded {
-                    self.incr("serve.quota_rejected");
-                }
-                Err(e)
-            }
-        }
+        let outcome = self.chan.push(Job::Forward(job), self.quotas.limit(model), block);
+        self.note_outcome(&outcome, id, model);
+        outcome.map(|()| rrx)
     }
 
     /// Non-blocking admission: [`AdmissionError::Overloaded`] when the
@@ -499,6 +534,7 @@ impl AdmissionQueue {
             model: model.to_string(),
             req,
             enqueued: Instant::now(),
+            picked: None,
             tx: rtx,
         };
         (job, rrx)
@@ -516,6 +552,7 @@ impl AdmissionQueue {
             model: model.to_string(),
             req,
             enqueued: Instant::now(),
+            picked: None,
             tx: rtx,
         };
         (job, rrx)
@@ -560,6 +597,12 @@ impl Drop for AdmissionQueue {
 }
 
 impl JobReceiver {
+    /// Jobs admitted but not yet dequeued — the coalescer samples this at
+    /// batch pick for the `exec.queue_depth` gauge (PR 9).
+    pub(crate) fn depth(&self) -> usize {
+        self.chan.lock().jobs
+    }
+
     pub(crate) fn recv(&self) -> Result<Job, mpsc::RecvError> {
         let mut st = self.chan.lock();
         loop {

@@ -168,6 +168,22 @@ impl ModelRegistry {
         self.read().models.keys().cloned().collect()
     }
 
+    /// Resolve `name` to its **canonical** name: the lexicographically
+    /// first registered name sharing the same model `Arc` (PR 9). Aliases
+    /// inserted via [`ModelRegistry::insert`] with a cloned handle all
+    /// report one canonical name, so per-model metric labels aggregate
+    /// alias traffic instead of splintering it. Returns `None` when
+    /// `name` is unregistered.
+    pub fn canonical(&self, name: &str) -> Option<String> {
+        let inner = self.read();
+        let target = inner.models.get(name)?;
+        inner
+            .models
+            .iter()
+            .find(|(_, m)| Arc::ptr_eq(m, target))
+            .map(|(n, _)| n.clone())
+    }
+
     pub fn len(&self) -> usize {
         self.read().models.len()
     }
@@ -203,6 +219,11 @@ mod tests {
         assert!(reg.get("missing").is_none());
         assert_eq!(reg.get("a").unwrap().num_compressed(), 1);
         assert_eq!(reg.get("b").unwrap().num_compressed(), 0);
+        // Canonical resolution: alias → lexicographically-first sharer.
+        assert_eq!(reg.canonical("alias").as_deref(), Some("a"));
+        assert_eq!(reg.canonical("a").as_deref(), Some("a"));
+        assert_eq!(reg.canonical("b").as_deref(), Some("b"));
+        assert!(reg.canonical("missing").is_none());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::infer::{CompressedForward, InferMode};
 use crate::io::SwscFile;
 use crate::model::ModelConfig;
+use crate::obs::{EventKind, TraceConfig, TraceSink};
 use anyhow::Context;
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -37,6 +38,11 @@ pub struct ServerOptions {
     /// Seeded fault injection for chaos testing; `None` is the zero-cost
     /// production default.
     pub faults: Option<FaultConfig>,
+    /// Request-scoped tracing (PR 9); `None` (the default unless
+    /// `SWSC_TRACE` is set) is the zero-cost production state — tracing
+    /// is pure observation either way, traced and untraced serving are
+    /// bitwise identical.
+    pub trace: Option<TraceConfig>,
 }
 
 impl Default for ServerOptions {
@@ -46,6 +52,7 @@ impl Default for ServerOptions {
             metrics: Arc::new(Metrics::new()),
             quotas: QuotaConfig::default(),
             faults: FaultConfig::from_env(),
+            trace: TraceConfig::from_env(),
         }
     }
 }
@@ -103,6 +110,7 @@ pub struct BatchServer {
     queue: AdmissionQueue,
     registry: Arc<ModelRegistry>,
     metrics: Arc<Metrics>,
+    trace: Option<Arc<TraceSink>>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -138,19 +146,29 @@ impl BatchServer {
         cfg: BatchConfig,
         opts: ServerOptions,
     ) -> BatchServer {
-        let ServerOptions { queue_capacity, metrics, quotas, faults } = opts;
+        let ServerOptions { queue_capacity, metrics, quotas, faults, trace } = opts;
         let faults = faults.filter(FaultConfig::enabled).map(|f| Arc::new(FaultInjector::new(f)));
+        // One sink is shared by the admission side (events) and the
+        // coalescer (spans), so one export covers the whole request path.
+        let trace = trace.map(|t| Arc::new(TraceSink::new(t)));
         let (queue, rx) = AdmissionQueue::bounded_with(
             queue_capacity,
             QueueOptions {
                 quotas,
                 faults: faults.clone(),
                 metrics: Some(metrics.clone()),
+                trace: trace.clone(),
             },
         );
-        let coalescer = Coalescer::with_faults(registry.clone(), cfg, metrics.clone(), faults);
+        let coalescer = Coalescer::with_observers(
+            registry.clone(),
+            cfg,
+            metrics.clone(),
+            faults,
+            trace.clone(),
+        );
         let worker = std::thread::spawn(move || coalescer.run(rx));
-        BatchServer { queue, registry, metrics, worker: Some(worker) }
+        BatchServer { queue, registry, metrics, trace, worker: Some(worker) }
     }
 
     pub fn registry(&self) -> &Arc<ModelRegistry> {
@@ -164,6 +182,18 @@ impl BatchServer {
     /// The admission queue (introspection: `depth()`, `capacity()`).
     pub fn queue(&self) -> &AdmissionQueue {
         &self.queue
+    }
+
+    /// The trace sink, when tracing was enabled at start (PR 9).
+    pub fn trace_sink(&self) -> Option<&Arc<TraceSink>> {
+        self.trace.as_ref()
+    }
+
+    /// Export everything the trace ring currently holds as Chrome
+    /// trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+    /// `None` when tracing is disabled.
+    pub fn dump_trace(&self) -> Option<String> {
+        self.trace.as_ref().map(|t| t.to_chrome_json())
     }
 
     /// Atomic model hot-swap (PR 8): build and validate the replacement
@@ -280,6 +310,9 @@ impl BatchServer {
             match attempt_fn(req.clone()) {
                 Err(e) if RetryPolicy::retryable(e) && retry + 1 < attempts => {
                     self.metrics.incr("serve.retries", 1);
+                    if let Some(t) = &self.trace {
+                        t.event(EventKind::Retry, 0, "", &format!("attempt {}", retry + 1));
+                    }
                     if !super::deadline_expired(deadline) {
                         std::thread::sleep(policy.delay(retry));
                     }

@@ -1,0 +1,438 @@
+//! Observability invariants (PR 9).
+//!
+//! The load-bearing contract: **tracing is pure observation.** Enabling
+//! the [`swsc::obs::TraceSink`] must not move a single bit of any
+//! response, at any `SWSC_THREADS` (CI sweeps 1 and 4; the solo oracle
+//! below additionally sweeps explicit thread configs {1, 2, 4}), and
+//! for a pinned fault seed and a sequential schedule the span/event
+//! *structure* (ids, kinds, labels — not durations) is identical across
+//! independent server lifecycles.
+//!
+//! Pinned here:
+//!
+//! 1. traced vs untraced serving, mixed linear + forward stream: both
+//!    servers' responses bitwise equal each other AND the solo oracle
+//!    (which itself is thread-invariant across {1, 2, 4});
+//! 2. chaos structure determinism: same `FaultConfig` seed + sequential
+//!    submission ⇒ byte-identical `TraceSink::structure()` and the same
+//!    per-request outcome classification across two full lifecycles;
+//! 3. the export surfaces: Chrome trace JSON is structurally valid and
+//!    complete per admitted request, the ring stays bounded under real
+//!    traffic, and `dump_trace()` is `None` when tracing is off.
+
+use std::sync::Arc;
+use swsc::compress::{compress_matrix, SwscConfig};
+use swsc::exec::ExecConfig;
+use swsc::infer::{CompressedForward, CompressedModel, InferMode};
+use swsc::io::SwscFile;
+use swsc::model::{init_params, param_specs, ModelConfig};
+use swsc::obs::{EventKind, SpanKind, TraceConfig, TraceData};
+use swsc::serve::{
+    BatchConfig, BatchServer, FaultConfig, FaultInjector, ForwardRequest, LinearRequest,
+    ModelRegistry, ServeError, ServerOptions, DEFAULT_MODEL,
+};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// A tiny-config container covering every model parameter (the
+/// `serve_forward.rs` fixture: wide 2-D weights SWSC-compressed, the
+/// rest dense).
+fn tiny_file(cfg: &ModelConfig, seed: u64) -> SwscFile {
+    let ck = init_params(cfg, seed);
+    let mut file = SwscFile::new();
+    for spec in param_specs(cfg) {
+        let t = ck.get(&spec.name).unwrap().clone();
+        if spec.shape.len() == 2 && spec.shape[1] >= 16 {
+            file.compressed.insert(spec.name.clone(), compress_matrix(&t, &SwscConfig::new(8, 2)));
+        } else {
+            file.dense.insert(spec.name.clone(), t);
+        }
+    }
+    file
+}
+
+/// Seeded mixed workload: linear (weight, activations) pairs plus
+/// forward token windows — the same streams every comparison replays.
+#[allow(clippy::type_complexity)]
+fn mixed_stream(
+    model: &CompressedModel,
+    cfg: &ModelConfig,
+    seed: u64,
+    linears: usize,
+    forwards: usize,
+) -> (Vec<(String, Tensor)>, Vec<Vec<u32>>) {
+    let mut rng = Rng::new(seed);
+    // Only 2-D entries answer `LinearRequest`s (1-D dense params —
+    // biases, layer norms — have no `shape`).
+    let weights: Vec<String> = model
+        .names()
+        .into_iter()
+        .filter(|w| model.shape(w).is_some())
+        .map(String::from)
+        .collect();
+    let lin: Vec<(String, Tensor)> = (0..linears)
+        .map(|_| {
+            let w = weights[rng.below(weights.len())].clone();
+            let (m, _) = model.shape(&w).unwrap();
+            let rows = 1 + rng.below(4);
+            (w, Tensor::randn(&[rows, m], &mut rng))
+        })
+        .collect();
+    let windows: Vec<Vec<u32>> = (0..forwards)
+        .map(|_| {
+            let t = 1 + rng.below(cfg.seq.min(8));
+            (0..t).map(|_| rng.below(cfg.vocab) as u32).collect()
+        })
+        .collect();
+    (lin, windows)
+}
+
+/// Serve the whole mixed stream (overlapping submissions, so coalescing
+/// and layer-step grouping actually happen) and return the response
+/// bits, plus the trace record count (0 when tracing is off).
+fn serve_stream(
+    fwd: &Arc<CompressedForward>,
+    lin: &[(String, Tensor)],
+    windows: &[Vec<u32>],
+    trace: Option<TraceConfig>,
+) -> (Vec<Vec<u32>>, Vec<Vec<u32>>, usize) {
+    let reg = ModelRegistry::new();
+    reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+    let server = BatchServer::start_with_opts(
+        Arc::new(reg),
+        BatchConfig::default(),
+        // Faults pinned off: the chaos determinism test below owns that
+        // axis, and the chaos CI job exports SWSC_CHAOS_* env that the
+        // default options would otherwise pick up.
+        ServerOptions { trace, faults: None, ..ServerOptions::default() },
+    );
+    let lrx: Vec<_> = lin
+        .iter()
+        .map(|(w, x)| {
+            server.submit(DEFAULT_MODEL, LinearRequest::new(w.clone(), x.clone())).unwrap()
+        })
+        .collect();
+    let frx: Vec<_> = windows
+        .iter()
+        .map(|w| server.submit_forward(DEFAULT_MODEL, ForwardRequest::new(w.clone())).unwrap())
+        .collect();
+    let lin_bits: Vec<Vec<u32>> =
+        lrx.into_iter().map(|rx| bits(&rx.recv().unwrap().unwrap().y)).collect();
+    let fwd_bits: Vec<Vec<u32>> =
+        frx.into_iter().map(|rx| bits(&rx.recv().unwrap().unwrap().logits)).collect();
+    let traced_records = server.trace_sink().map(|t| t.len()).unwrap_or(0);
+    server.shutdown();
+    (lin_bits, fwd_bits, traced_records)
+}
+
+/// Tentpole invariant: traced and untraced serving are **bitwise
+/// identical** — and both equal the solo oracle, which is itself
+/// bitwise invariant across explicit thread configs {1, 2, 4}. So the
+/// parity holds at any `SWSC_THREADS` by transitivity.
+#[test]
+fn traced_vs_untraced_serving_is_bitwise_identical() {
+    let cfg = ModelConfig::tiny();
+    let file = tiny_file(&cfg, 950);
+    let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+    let fwd = Arc::new(CompressedForward::new(model.clone(), cfg.clone()).unwrap());
+    let (lin, windows) = mixed_stream(&model, &cfg, 951, 12, 8);
+
+    // Solo oracle, serial reference.
+    let lin_oracle: Vec<Vec<u32>> = lin
+        .iter()
+        .map(|(w, x)| bits(&model.apply_with(w, x, ExecConfig::serial()).unwrap()))
+        .collect();
+    let fwd_oracle: Vec<Vec<u32>> = windows
+        .iter()
+        .map(|w| bits(&fwd.forward_with(w, ExecConfig::serial()).unwrap()))
+        .collect();
+    // The oracle itself is thread-invariant (satellite 4's sweep).
+    for t in [1usize, 2, 4] {
+        let exec = ExecConfig::with_threads(t);
+        for ((w, x), want) in lin.iter().zip(&lin_oracle) {
+            assert_eq!(
+                &bits(&model.apply_with(w, x, exec).unwrap()),
+                want,
+                "oracle apply({w}) not thread-invariant at {t} threads"
+            );
+        }
+        for (w, want) in windows.iter().zip(&fwd_oracle) {
+            assert_eq!(
+                &bits(&fwd.forward_with(w, exec).unwrap()),
+                want,
+                "oracle forward ({} tokens) not thread-invariant at {t} threads",
+                w.len()
+            );
+        }
+    }
+
+    let (lin_off, fwd_off, rec_off) = serve_stream(&fwd, &lin, &windows, None);
+    let (lin_on, fwd_on, rec_on) = serve_stream(&fwd, &lin, &windows, Some(TraceConfig::default()));
+    assert_eq!(rec_off, 0, "untraced server must record nothing");
+    assert!(rec_on > 0, "traced server must have recorded spans/events");
+    assert_eq!(lin_off, lin_on, "tracing moved linear response bits");
+    assert_eq!(fwd_off, fwd_on, "tracing moved forward response bits");
+    assert_eq!(lin_on, lin_oracle, "traced linear responses diverged from the solo oracle");
+    assert_eq!(fwd_on, fwd_oracle, "traced forward responses diverged from the solo oracle");
+}
+
+/// One sequential (submit → recv, one request at a time) lifecycle
+/// against a fault-injecting traced server: returns the duration-free
+/// span/event structure and the per-request outcome classification.
+fn chaos_lifecycle(
+    fwd: &Arc<CompressedForward>,
+    lin: &[(String, Tensor)],
+    windows: &[Vec<u32>],
+    faults: FaultConfig,
+) -> (Vec<String>, Vec<&'static str>) {
+    let reg = ModelRegistry::new();
+    reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+    let server = BatchServer::start_with_opts(
+        Arc::new(reg),
+        BatchConfig::default(),
+        ServerOptions {
+            trace: Some(TraceConfig::default()),
+            faults: Some(faults),
+            ..ServerOptions::default()
+        },
+    );
+    let mut outcomes = Vec::new();
+    let mut classify = |res: Result<Result<(), ServeError>, ()>| {
+        outcomes.push(match res {
+            Err(()) => "rejected",
+            Ok(Ok(())) => "ok",
+            Ok(Err(ServeError::Panicked { .. })) => "panicked",
+            Ok(Err(_)) => "error",
+        })
+    };
+    // Strictly sequential: each request is fully answered (or rejected)
+    // before the next is submitted, so batch composition — and with it
+    // the span structure — is a pure function of the fault schedule.
+    for (w, x) in lin {
+        match server.submit(DEFAULT_MODEL, LinearRequest::new(w.clone(), x.clone())) {
+            Ok(rx) => classify(Ok(rx.recv().unwrap().map(|_| ()))),
+            Err(_) => classify(Err(())),
+        }
+    }
+    for w in windows {
+        match server.submit_forward(DEFAULT_MODEL, ForwardRequest::new(w.clone())) {
+            Ok(rx) => classify(Ok(rx.recv().unwrap().map(|_| ()))),
+            Err(_) => classify(Err(())),
+        }
+    }
+    let sink = server.trace_sink().expect("tracing enabled").clone();
+    server.shutdown();
+    (sink.structure(), outcomes)
+}
+
+/// Chaos structure determinism: for a pinned fault seed (the CI chaos
+/// job's `SWSC_CHAOS_SEED=0` by default) and a sequential schedule, two
+/// independent server lifecycles produce the identical span/event
+/// structure and outcome classification — including the injected
+/// faults' own events.
+#[test]
+fn chaos_span_structure_is_deterministic_for_pinned_seed() {
+    let cfg = ModelConfig::tiny();
+    let file = tiny_file(&cfg, 960);
+    let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+    let fwd = Arc::new(CompressedForward::new(model.clone(), cfg.clone()).unwrap());
+    let (lin, windows) = mixed_stream(&model, &cfg, 961, 10, 4);
+    let n = (lin.len() + windows.len()) as u64;
+
+    let env_seed: u64 = std::env::var("SWSC_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0);
+    // Alongside the pinned env seed, scan for a seed whose schedule
+    // mixes rejections, panics, and clean requests, so the comparison
+    // provably covers every event kind the injector can emit.
+    let base = FaultConfig { panic_rate: 0.3, reject_rate: 0.2, ..FaultConfig::default() };
+    let mixed_seed = (0..1000)
+        .find(|&s| {
+            let probe = FaultInjector::new(FaultConfig { seed: s, ..base.clone() });
+            let rejects = (0..n).filter(|&id| probe.injects_rejection(id)).count() as u64;
+            let panics = (0..n)
+                .filter(|&id| !probe.injects_rejection(id) && probe.injects_panic(id))
+                .count() as u64;
+            rejects > 0 && panics > 0 && rejects + panics < n
+        })
+        .expect("some seed under 1000 must mix outcomes");
+
+    for seed in [env_seed, mixed_seed] {
+        let faults = FaultConfig { seed, ..base.clone() };
+        let (s1, o1) = chaos_lifecycle(&fwd, &lin, &windows, faults.clone());
+        let (s2, o2) = chaos_lifecycle(&fwd, &lin, &windows, faults);
+        assert_eq!(o1, o2, "seed {seed}: outcome classification must be deterministic");
+        assert_eq!(s1, s2, "seed {seed}: span/event structure must be deterministic");
+        assert!(!s1.is_empty(), "seed {seed}: traced lifecycle recorded nothing");
+        if seed == mixed_seed {
+            let has = |needle: &str| s1.iter().any(|l| l.contains(needle));
+            assert!(has(":fault_injected:"), "mixed seed must record injected faults");
+            assert!(has(":rejected:"), "mixed seed must record rejections");
+            assert!(has(":panic:"), "mixed seed must record contained panics");
+        }
+    }
+}
+
+/// Scan one JSON document for structural soundness: braces/brackets
+/// balanced outside strings, escapes honored.
+fn assert_balanced_json(json: &str) {
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in json.chars() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '{' | '[' if !in_str => depth += 1,
+            '}' | ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+        assert!(depth >= 0, "unbalanced close in export");
+    }
+    assert_eq!(depth, 0, "unbalanced export");
+    assert!(!in_str, "unterminated string in export");
+}
+
+/// Export surface: the Chrome trace from a real serving run is valid,
+/// complete per admitted request (one queue-wait span and at least one
+/// apply/layer-step span each), and timestamp-sane.
+#[test]
+fn chrome_export_is_valid_and_complete_per_request() {
+    let cfg = ModelConfig::tiny();
+    let file = tiny_file(&cfg, 970);
+    let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+    let fwd = Arc::new(CompressedForward::new(model.clone(), cfg.clone()).unwrap());
+    let (lin, windows) = mixed_stream(&model, &cfg, 971, 8, 4);
+
+    let reg = ModelRegistry::new();
+    reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+    let server = BatchServer::start_with_opts(
+        Arc::new(reg),
+        BatchConfig::default(),
+        ServerOptions {
+            trace: Some(TraceConfig::default()),
+            faults: None,
+            ..ServerOptions::default()
+        },
+    );
+    for (w, x) in &lin {
+        server
+            .submit(DEFAULT_MODEL, LinearRequest::new(w.clone(), x.clone()))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+    }
+    for w in &windows {
+        server
+            .submit_forward(DEFAULT_MODEL, ForwardRequest::new(w.clone()))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+    }
+    let sink = server.trace_sink().expect("tracing enabled").clone();
+    let json = server.dump_trace().expect("tracing enabled");
+    server.shutdown();
+
+    assert!(json.starts_with('['), "chrome export must be a JSON array");
+    assert_balanced_json(&json);
+    for key in ["\"ph\":\"X\"", "\"ph\":\"i\"", "\"pid\":1", "\"tid\":"] {
+        assert!(json.contains(key), "chrome export missing {key}");
+    }
+
+    // Per-request completeness, from the structured records.
+    let records = sink.records();
+    assert_eq!(sink.dropped(), 0, "default capacity must hold this whole run");
+    let admitted: Vec<u64> = records
+        .iter()
+        .filter(|r| matches!(r.data, TraceData::Event { kind: EventKind::Admitted }))
+        .map(|r| r.trace)
+        .collect();
+    assert_eq!(admitted.len(), lin.len() + windows.len(), "every request must be admitted");
+    for id in admitted {
+        let spans: Vec<SpanKind> = records
+            .iter()
+            .filter(|r| r.trace == id)
+            .filter_map(|r| match r.data {
+                TraceData::Span { kind, .. } => Some(kind),
+                TraceData::Event { .. } => None,
+            })
+            .collect();
+        assert_eq!(
+            spans.iter().filter(|k| **k == SpanKind::QueueWait).count(),
+            1,
+            "request {id} must close exactly one queue-wait span"
+        );
+        assert!(
+            spans.iter().any(|k| matches!(k, SpanKind::GroupApply | SpanKind::LayerStep)),
+            "request {id} must record compute spans"
+        );
+    }
+    assert!(
+        records.iter().any(|r| {
+            r.trace == 0 && matches!(r.data, TraceData::Span { kind: SpanKind::BatchPick, .. })
+        }),
+        "server track must record batch picks"
+    );
+}
+
+/// The ring is bounded under real traffic, and a server without tracing
+/// exposes no sink at all.
+#[test]
+fn ring_stays_bounded_and_disabled_tracing_costs_nothing() {
+    let cfg = ModelConfig::tiny();
+    let file = tiny_file(&cfg, 980);
+    let model = Arc::new(CompressedModel::from_file(&file, InferMode::Compressed));
+    let fwd = Arc::new(CompressedForward::new(model.clone(), cfg.clone()).unwrap());
+    let (lin, _) = mixed_stream(&model, &cfg, 981, 16, 0);
+
+    let reg = ModelRegistry::new();
+    reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+    let server = BatchServer::start_with_opts(
+        Arc::new(reg),
+        BatchConfig::default(),
+        ServerOptions {
+            trace: Some(TraceConfig { capacity: 8 }),
+            faults: None,
+            ..ServerOptions::default()
+        },
+    );
+    for (w, x) in &lin {
+        server
+            .submit(DEFAULT_MODEL, LinearRequest::new(w.clone(), x.clone()))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+    }
+    let sink = server.trace_sink().expect("tracing enabled");
+    assert!(sink.len() <= 8, "ring exceeded its capacity: {}", sink.len());
+    assert!(sink.dropped() > 0, "16 requests must overflow an 8-record ring");
+    assert_balanced_json(&server.dump_trace().unwrap());
+    server.shutdown();
+
+    let reg = ModelRegistry::new();
+    reg.insert_forward(DEFAULT_MODEL, fwd.clone());
+    let server = BatchServer::start_with_opts(
+        Arc::new(reg),
+        BatchConfig::default(),
+        ServerOptions { trace: None, faults: None, ..ServerOptions::default() },
+    );
+    server
+        .submit(DEFAULT_MODEL, LinearRequest::new(lin[0].0.clone(), lin[0].1.clone()))
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    assert!(server.trace_sink().is_none(), "untraced server must expose no sink");
+    assert!(server.dump_trace().is_none(), "untraced server must export nothing");
+    server.shutdown();
+}
