@@ -10,7 +10,7 @@
 //! hides the tail. The same histogram records unit-less distributions
 //! (e.g. `serve.batch_rows`, the coalescer's batch-size distribution).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 
 /// Number of geometric buckets per histogram (fixed at compile time —
@@ -199,6 +199,12 @@ pub struct Metrics {
     hists: Mutex<BTreeMap<String, Histogram>>,
     labeled_counters: Mutex<BTreeMap<(String, String), u64>>,
     labeled_hists: Mutex<BTreeMap<(String, String), Histogram>>,
+    /// Names written through [`Metrics::set`] — gauge semantics (the
+    /// value can go down). Stored alongside the counters map so `counter`
+    /// / `render` read one value space, but the Prometheus exporter must
+    /// type these families `gauge`: a decreasing `counter` breaks
+    /// `rate()`/`increase()` queries.
+    gauge_names: Mutex<BTreeSet<String>>,
 }
 
 impl Metrics {
@@ -212,8 +218,10 @@ impl Metrics {
 
     /// Overwrite `name` with an absolute value — gauge semantics for
     /// sampled values (pool busy-time, worker counts) that are not
-    /// increments. Rendered alongside counters.
+    /// increments. Rendered alongside counters, but typed `gauge` in the
+    /// Prometheus exposition (the value may decrease).
     pub fn set(&self, name: &str, value: u64) {
+        self.gauge_names.lock().unwrap().insert(name.to_string());
         self.counters.lock().unwrap().insert(name.to_string(), value);
     }
 
@@ -329,8 +337,10 @@ impl Metrics {
     /// for golden-text assertions.
     pub fn render(&self) -> String {
         let mut out = String::new();
+        let gauges = self.gauge_names.lock().unwrap().clone();
         for (k, v) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("counter {k} = {v}\n"));
+            let kind = if gauges.contains(k) { "gauge  " } else { "counter" };
+            out.push_str(&format!("{kind} {k} = {v}\n"));
         }
         for (k, h) in self.hists.lock().unwrap().iter() {
             out.push_str(&format!("hist    {k}: {}\n", hist_line(h)));
@@ -344,16 +354,18 @@ impl Metrics {
         out
     }
 
-    /// Prometheus text exposition format. Counters/gauges render as
-    /// untyped samples, histograms as summaries (`_count`, `_sum`,
-    /// `quantile` series); labeled series carry a `model` label. Names
+    /// Prometheus text exposition format. Incremented names type as
+    /// `counter`, [`Metrics::set`] names as `gauge`, histograms as
+    /// summaries (`_count`, `_sum`, `quantile` series); labeled series
+    /// carry a `model` label. Names
     /// are sanitized (`.` → `_`) and prefixed `swsc_`; output is fully
     /// deterministic: families sorted by name, the unlabeled sample
     /// first, labeled samples sorted by label.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
-        // Counter families: global value then per-label values.
+        // Counter/gauge families: global value then per-label values.
         let counters = self.counters.lock().unwrap().clone();
+        let gauges = self.gauge_names.lock().unwrap().clone();
         let labeled: BTreeMap<(String, String), u64> =
             self.labeled_counters.lock().unwrap().clone();
         let mut families: Vec<String> = counters.keys().cloned().collect();
@@ -362,7 +374,8 @@ impl Metrics {
         families.dedup();
         for name in families {
             let prom = prom_name(&name);
-            out.push_str(&format!("# TYPE {prom} counter\n"));
+            let ty = if gauges.contains(&name) { "gauge" } else { "counter" };
+            out.push_str(&format!("# TYPE {prom} {ty}\n"));
             if let Some(v) = counters.get(&name) {
                 out.push_str(&format!("{prom} {v}\n"));
             }
@@ -721,6 +734,19 @@ mod tests {
         let r = m.render();
         assert!(r.contains("serve.panics{canary} = 2"), "labeled render line: {r}");
         assert!(r.contains("serve.latency_seconds{prod}:"));
+        // set() names carry gauge semantics end to end: the text render
+        // marks them and the Prometheus exposition types them `gauge`
+        // (a decreasing `counter` would break rate()/increase()).
+        assert!(r.contains("gauge   exec.pool_workers = 3"), "render must mark gauges: {r}");
+        let prom = m.render_prometheus();
+        assert!(
+            prom.contains("# TYPE swsc_exec_pool_workers gauge\nswsc_exec_pool_workers 3\n"),
+            "set() families must type as gauge: {prom}"
+        );
+        assert!(
+            prom.contains("# TYPE swsc_serve_panics counter\n"),
+            "incremented families must stay counters: {prom}"
+        );
     }
 
     /// Golden text: the exporters emit exactly this, in exactly this

@@ -57,6 +57,12 @@ use std::time::{Duration, Instant};
 /// of growing.
 pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
 
+/// Trace id for records that belong to no admitted request — e.g. a
+/// submitter's retry attempts, which fire after admission failed and so
+/// never received an id. Renders as its own Chrome track instead of
+/// landing on the server-scope track (trace id 0) or a real request's.
+pub const NO_REQUEST_ID: u64 = u64::MAX;
+
 /// Configuration for a [`TraceSink`]. Constructed explicitly or from the
 /// environment (`SWSC_TRACE=1`, optional `SWSC_TRACE_CAPACITY=N`).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -258,12 +264,16 @@ impl TraceSink {
 
     fn push(&self, mut rec: TraceRecord) {
         rec.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        // Evict and push under one lock hold: releasing between the two
+        // would let a concurrent push overfill the ring past `capacity`,
+        // after which an `==` fullness check never fires again and the
+        // "bounded drop-oldest" invariant is gone. `>=` keeps the bound
+        // self-healing either way; the counter bump is a relaxed atomic,
+        // cheap enough to keep inside the critical section.
         let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
-        if ring.len() == self.capacity {
+        while ring.len() >= self.capacity {
             ring.pop_front();
-            drop(ring); // keep the counter bump outside the lock
             self.dropped.fetch_add(1, Ordering::Relaxed);
-            ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
         }
         ring.push_back(rec);
     }
@@ -306,7 +316,8 @@ impl TraceSink {
     /// Render the ring as a Chrome trace-event JSON array (the
     /// `chrome://tracing` / Perfetto "JSON array format"): spans as
     /// `ph:"X"` complete events, events as `ph:"i"` instants, one `tid`
-    /// per trace id (tid 0 = the server track). Timestamps/durations in
+    /// per trace id (tid 0 = the server track; tid [`NO_REQUEST_ID`] =
+    /// records tied to no admitted request). Timestamps/durations in
     /// microseconds. Deterministically ordered by record sequence.
     pub fn to_chrome_json(&self) -> String {
         let records = self.records();
@@ -395,6 +406,29 @@ mod tests {
         assert_eq!(t.records().last().unwrap().seq, 9);
         t.clear();
         assert!(t.is_empty());
+    }
+
+    /// Racing pushers (admission threads vs the coalescer) must never
+    /// overfill the ring: eviction and push happen under one lock hold,
+    /// so `len` can never exceed `capacity` — the regression that made
+    /// the `==` fullness check dead and the ring unbounded.
+    #[test]
+    fn concurrent_pushes_keep_ring_bounded() {
+        let t = std::sync::Arc::new(sink(8));
+        let mut handles = Vec::new();
+        for thread in 0..4u64 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    t.event(EventKind::Admitted, thread * 1000 + i, "m", "");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 8, "ring must sit exactly at capacity after overflow");
+        assert_eq!(t.dropped(), 4 * 500 - 8, "every push past capacity evicts exactly one");
     }
 
     #[test]

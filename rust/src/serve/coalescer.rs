@@ -293,11 +293,17 @@ impl Coalescer {
             let mut rows = 0usize;
             // Tracing only: batch-formation span start. Gated so the
             // untraced loop performs no extra clock reads.
-            let pick_t0 = self.trace.as_ref().map(|_| Instant::now());
+            let mut pick_t0 = self.trace.as_ref().map(|_| Instant::now());
             // Fully idle: block for the first arrival (no polling).
             if !shutting_down && pending.is_empty() && inflight.is_empty() {
                 match rx.recv() {
                     Ok(job) => {
+                        // The blocking wait above was idle time, not
+                        // batch formation — restart the span clock at
+                        // the first arrival so a lightly loaded server's
+                        // BatchPick spans measure fill/drain work, not
+                        // however long the queue sat empty.
+                        pick_t0 = self.trace.as_ref().map(|_| Instant::now());
                         self.intake(job, &mut batch, &mut rows, &mut pending, &mut shutting_down)
                     }
                     Err(_) => shutting_down = true,

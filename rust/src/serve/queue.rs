@@ -373,11 +373,18 @@ impl AdmissionQueue {
     /// deadline short-circuit is handled by the callers because the
     /// responder types differ.
     fn preflight(&self, model: &str, deadline_expired: bool) -> Result<u64, AdmissionError> {
+        // Ids are assigned before any rejection so every admission
+        // attempt — including a shutdown rejection — traces under its own
+        // id instead of landing on the reserved server-scope track
+        // (trace id 0, the coalescer's batch-pick spans). Burning ids on
+        // shutdown rejections cannot perturb the fault schedule: nothing
+        // is admitted after shutdown begins, so no served request's id
+        // shifts.
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if self.is_shutting_down() {
-            self.emit(EventKind::Rejected, 0, model, "shutting down");
+            self.emit(EventKind::Rejected, id, model, "shutting down");
             return Err(AdmissionError::ShuttingDown);
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if let Some(f) = &self.faults {
             if f.injects_rejection(id) {
                 f.record_rejection();

@@ -35,6 +35,29 @@ use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 struct Inner {
     models: BTreeMap<String, Arc<CompressedModel>>,
     forwards: BTreeMap<String, Arc<CompressedForward>>,
+    /// name → canonical name, rebuilt on every registration change.
+    /// [`ModelRegistry::canonical`] sits on the per-request metrics path
+    /// (several lookups per served request), so it must be a map hit
+    /// under the read lock — not a scan over all registered models.
+    canonicals: BTreeMap<String, String>,
+}
+
+impl Inner {
+    /// Recompute the canonical-name cache: for every registered name, the
+    /// lexicographically first name sharing the same model `Arc`.
+    /// O(n log n) on the cold registration path, so the hot-path
+    /// [`ModelRegistry::canonical`] lookup stays O(log n).
+    fn rebuild_canonicals(&mut self) {
+        let mut first: BTreeMap<*const CompressedModel, String> = BTreeMap::new();
+        for (name, m) in &self.models {
+            first.entry(Arc::as_ptr(m)).or_insert_with(|| name.clone());
+        }
+        self.canonicals = self
+            .models
+            .iter()
+            .map(|(name, m)| (name.clone(), first[&Arc::as_ptr(m)].clone()))
+            .collect();
+    }
 }
 
 #[derive(Default)]
@@ -86,6 +109,7 @@ impl ModelRegistry {
         // A stale forward under this name would reference the replaced
         // model — linear-only inserts clear it.
         inner.forwards.remove(name);
+        inner.rebuild_canonicals();
         model
     }
 
@@ -94,6 +118,7 @@ impl ModelRegistry {
         let mut inner = self.write();
         inner.models.insert(name.to_string(), model);
         inner.forwards.remove(name);
+        inner.rebuild_canonicals();
     }
 
     /// Register a whole-model forward pass under `name` (PR 7). The
@@ -105,6 +130,7 @@ impl ModelRegistry {
         let mut inner = self.write();
         inner.models.insert(name.to_string(), fwd.model().clone());
         inner.forwards.insert(name.to_string(), fwd);
+        inner.rebuild_canonicals();
     }
 
     /// Build a [`CompressedForward`] from `file` (validating that every
@@ -150,7 +176,9 @@ impl ModelRegistry {
     pub fn remove(&self, name: &str) -> Option<Arc<CompressedModel>> {
         let mut inner = self.write();
         inner.forwards.remove(name);
-        inner.models.remove(name)
+        let removed = inner.models.remove(name);
+        inner.rebuild_canonicals();
+        removed
     }
 
     /// The model registered under `name`, if any.
@@ -173,15 +201,11 @@ impl ModelRegistry {
     /// inserted via [`ModelRegistry::insert`] with a cloned handle all
     /// report one canonical name, so per-model metric labels aggregate
     /// alias traffic instead of splintering it. Returns `None` when
-    /// `name` is unregistered.
+    /// `name` is unregistered. A cache hit under the read lock — the
+    /// name→canonical map is maintained on registration changes, so the
+    /// per-request metrics path never scans the registry.
     pub fn canonical(&self, name: &str) -> Option<String> {
-        let inner = self.read();
-        let target = inner.models.get(name)?;
-        inner
-            .models
-            .iter()
-            .find(|(_, m)| Arc::ptr_eq(m, target))
-            .map(|(n, _)| n.clone())
+        self.read().canonicals.get(name).cloned()
     }
 
     pub fn len(&self) -> usize {
@@ -224,6 +248,31 @@ mod tests {
         assert_eq!(reg.canonical("a").as_deref(), Some("a"));
         assert_eq!(reg.canonical("b").as_deref(), Some("b"));
         assert!(reg.canonical("missing").is_none());
+    }
+
+    /// The canonical cache follows registration changes: a new alias
+    /// that sorts first re-canonicalizes every sharer, and removing the
+    /// canonical name falls back to the next-first survivor.
+    #[test]
+    fn canonical_cache_follows_mutations() {
+        let mut rng = Rng::new(52);
+        let mut file = SwscFile::new();
+        file.compressed.insert(
+            "w".into(),
+            compress_matrix(&Tensor::randn(&[8, 8], &mut rng), &SwscConfig::new(2, 1)),
+        );
+        let reg = ModelRegistry::new();
+        let m = reg.insert_file("mid", &file, InferMode::Compressed);
+        reg.insert("zz", m.clone());
+        assert_eq!(reg.canonical("zz").as_deref(), Some("mid"));
+        reg.insert("aa", m.clone());
+        for n in ["aa", "mid", "zz"] {
+            assert_eq!(reg.canonical(n).as_deref(), Some("aa"), "alias {n} must follow");
+        }
+        reg.remove("aa");
+        assert_eq!(reg.canonical("mid").as_deref(), Some("mid"));
+        assert_eq!(reg.canonical("zz").as_deref(), Some("mid"));
+        assert!(reg.canonical("aa").is_none(), "removed names must resolve to None");
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::infer::{CompressedForward, InferMode};
 use crate::io::SwscFile;
 use crate::model::ModelConfig;
-use crate::obs::{EventKind, TraceConfig, TraceSink};
+use crate::obs::{EventKind, TraceConfig, TraceSink, NO_REQUEST_ID};
 use anyhow::Context;
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -247,7 +247,7 @@ impl BatchServer {
         req: LinearRequest,
         policy: RetryPolicy,
     ) -> Result<mpsc::Receiver<Result<LinearResponse, ServeError>>, AdmissionError> {
-        self.with_retry(policy, req.deadline, |req| self.try_submit(model, req), req)
+        self.with_retry(model, policy, req.deadline, |req| self.try_submit(model, req), req)
     }
 
     /// Blocking admission of a whole-model forward request (PR 7): the
@@ -287,7 +287,7 @@ impl BatchServer {
         req: ForwardRequest,
         policy: RetryPolicy,
     ) -> Result<mpsc::Receiver<Result<ForwardResponse, ServeError>>, AdmissionError> {
-        self.with_retry(policy, req.deadline, |req| self.try_submit_forward(model, req), req)
+        self.with_retry(model, policy, req.deadline, |req| self.try_submit_forward(model, req), req)
     }
 
     /// The shared retry loop. `deadline` short-circuits the backoff: an
@@ -296,6 +296,7 @@ impl BatchServer {
     /// (expired requests never occupy a queue slot).
     fn with_retry<R, T>(
         &self,
+        model: &str,
         policy: RetryPolicy,
         deadline: Option<std::time::Instant>,
         mut attempt_fn: impl FnMut(R) -> Result<T, AdmissionError>,
@@ -310,8 +311,17 @@ impl BatchServer {
             match attempt_fn(req.clone()) {
                 Err(e) if RetryPolicy::retryable(e) && retry + 1 < attempts => {
                     self.metrics.incr("serve.retries", 1);
+                    // No admitted-request id exists here (each failed
+                    // attempt's id died with the rejection), so retries
+                    // trace on the reserved NO_REQUEST_ID track — never
+                    // the server-scope batch-pick track (trace id 0).
                     if let Some(t) = &self.trace {
-                        t.event(EventKind::Retry, 0, "", &format!("attempt {}", retry + 1));
+                        t.event(
+                            EventKind::Retry,
+                            NO_REQUEST_ID,
+                            model,
+                            &format!("attempt {}", retry + 1),
+                        );
                     }
                     if !super::deadline_expired(deadline) {
                         std::thread::sleep(policy.delay(retry));
