@@ -23,7 +23,7 @@ use swsc::model::{init_params, ModelConfig};
 use swsc::quant::QuantConfig;
 use swsc::tensor::Tensor;
 use swsc::util::rng::Rng;
-use swsc::util::timer::Stats;
+use swsc::obs::prof::Stats;
 
 fn main() -> anyhow::Result<()> {
     let cfg = ModelConfig::small();

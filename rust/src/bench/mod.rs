@@ -20,7 +20,7 @@
 
 pub mod loadgen;
 
-use crate::util::timer::Stats;
+use crate::obs::prof::{ProfConfig, Profiler, Stats};
 use std::cell::RefCell;
 use std::path::Path;
 use std::time::Instant;
@@ -69,12 +69,22 @@ pub struct Bench {
     warmup: usize,
     iters: usize,
     records: RefCell<Vec<BenchRecord>>,
+    /// `SWSC_PROF=1` attaches a phase profiler: every timed case becomes a
+    /// `bench/{group}/{label}` phase (count = timed iterations) so bench
+    /// runs render the same call-tree/Chrome timeline as `swsc compress`.
+    prof: Option<(Profiler, ProfConfig)>,
 }
 
 impl Bench {
     pub fn new(name: &str) -> Self {
         let iters = std::env::var("SWSC_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
-        Bench { name: name.to_string(), warmup: 2, iters, records: RefCell::new(Vec::new()) }
+        Bench {
+            name: name.to_string(),
+            warmup: 2,
+            iters,
+            records: RefCell::new(Vec::new()),
+            prof: ProfConfig::from_env().map(|cfg| (Profiler::new(), cfg)),
+        }
     }
 
     pub fn with_iters(mut self, iters: usize) -> Self {
@@ -125,12 +135,24 @@ impl Bench {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
+        // Scope the timed loop (not warmup) so the profiler's phase tree
+        // and Chrome timeline cover exactly what the printed stats cover.
+        let scope = self
+            .prof
+            .as_ref()
+            .map(|(p, _)| p.root(&format!("bench/{}/{label}", self.name)));
         let mut stats = Stats::new();
         for _ in 0..self.iters {
             let t0 = Instant::now();
             std::hint::black_box(f());
             stats.push(t0.elapsed().as_secs_f64());
         }
+        if let (Some(s), Some((p, _))) = (&scope, &self.prof) {
+            // Mirror the compress pipeline's `kmeans/iters` convention:
+            // a synthetic child whose count is the iteration count.
+            p.add(&format!("{}/iters", s.path()), self.iters as u64, (stats.sum() * 1e9) as u64);
+        }
+        drop(scope);
         let mean = stats.mean();
         let gflops = flops.map(|fl| fl / mean.max(1e-12) / 1e9);
         let gf_note = gflops.map(|g| format!("  {g:>7.2} GFLOP/s")).unwrap_or_default();
@@ -336,6 +358,26 @@ impl Bench {
     /// Print a section header.
     pub fn section(&self, title: &str) {
         println!("\n=== {} — {} ===", self.name, title);
+    }
+}
+
+impl Drop for Bench {
+    /// With `SWSC_PROF=1`, print the phase tree (stderr, like the compress
+    /// pipeline) and honor `SWSC_PROF_OUT` with a Chrome timeline once the
+    /// group finishes. Timing-only output: records and JSON are untouched.
+    fn drop(&mut self) {
+        let Some((p, cfg)) = &self.prof else { return };
+        if p.phases().is_empty() {
+            return;
+        }
+        eprintln!("--- profile (SWSC_PROF) — {} ---", self.name);
+        eprint!("{}", p.render_text());
+        if let Some(path) = &cfg.chrome_out {
+            match std::fs::write(path, p.to_chrome_json()) {
+                Ok(()) => eprintln!("wrote {path} (Chrome trace-event timeline)"),
+                Err(e) => eprintln!("warning: could not write {path}: {e}"),
+            }
+        }
     }
 }
 

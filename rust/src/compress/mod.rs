@@ -12,5 +12,8 @@ mod swsc;
 pub use plan::{
     kmeans_method_for_width, CompressionPlan, MatrixPlan, ProjectorSet, MINIBATCH_MIN_CHANNELS,
 };
-pub use stats::{matrix_stats, MatrixStats};
-pub use swsc::{compress_matrix, CompressedMatrix, QuantizedMatrix, SvdBackend, SwscConfig};
+pub use stats::{matrix_stats, CompressionReport, MatrixStats, MatrixTelemetry};
+pub use swsc::{
+    compress_matrix, compress_matrix_traced, CompressedMatrix, QuantizedMatrix, SvdBackend,
+    SwscConfig,
+};

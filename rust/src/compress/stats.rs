@@ -1,7 +1,18 @@
 //! Quality metrics for compressed matrices (drives Fig-2 motivation bench
-//! and the per-matrix report).
+//! and the per-matrix report), plus the compression-quality telemetry
+//! artifact (PR 10): per-matrix k-means inertia traces, error-spectrum
+//! data from the compensation SVD, and quantization grid error, bundled
+//! into a [`CompressionReport`] JSON file (`swsc compress --telemetry`).
+//!
+//! The report is the **declared input format for the spectral rank
+//! allocator** (ROADMAP, arxiv 2603.17917): the allocator reads each
+//! matrix's `spectrum` / `error_fro2` and re-budgets ranks across
+//! matrices, so these fields are versioned and their values are
+//! deterministic functions of (weights, seed, config) — byte-stable
+//! across reruns and golden-testable.
 
 use super::swsc::CompressedMatrix;
+use crate::obs::json_escape;
 use crate::tensor::Tensor;
 
 /// Per-matrix compression quality summary.
@@ -58,6 +69,105 @@ impl std::fmt::Display for MatrixStats {
     }
 }
 
+/// Per-matrix quality telemetry captured *inside* the pipeline — values
+/// the quality stats above can't see from the outside (per-iteration
+/// inertia, the error singular spectrum) plus the quantization grid
+/// error. Every field is a pure function of (weights, seed, config);
+/// wall-clock never enters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MatrixTelemetry {
+    pub name: String,
+    /// Original `(m, n)`.
+    pub shape: (usize, usize),
+    /// Clusters actually used (`k`, after the `k ≤ n` cap).
+    pub clusters: usize,
+    /// Compensation rank actually used (after the `r ≤ min(m,n)` cap).
+    pub rank: usize,
+    /// K-means iterations (or mini-batch steps) run.
+    pub kmeans_iterations: usize,
+    /// Final full-data inertia.
+    pub inertia: f64,
+    /// Inertia after each iteration (see
+    /// [`crate::kmeans::KMeansResult::inertia_trace`]).
+    pub inertia_trace: Vec<f64>,
+    /// Retained singular values of the error matrix `W − W'`,
+    /// descending — the rank allocator's primary input.
+    pub spectrum: Vec<f32>,
+    /// `‖W − W'‖²_F`: total error energy before compensation.
+    pub error_fro2: f64,
+    /// Fraction of `error_fro2` captured by the retained rank
+    /// (`Σ σ_i² / error_fro2`, clamped to 1).
+    pub compensation_energy: f64,
+    /// Worst absolute int8 grid error across the quantized payloads
+    /// (0 until the quantize step runs, and for f32 output).
+    pub grid_error_max: f64,
+    /// Mean squared int8 grid error across the quantized payloads.
+    pub grid_error_mse: f64,
+}
+
+impl MatrixTelemetry {
+    /// One JSON object, hand-rolled (no serde in the vendored set).
+    /// Floats use Rust's shortest-round-trip `Display` — deterministic,
+    /// so the whole report is byte-stable for a pinned seed.
+    pub fn to_json(&self) -> String {
+        let floats = |v: &[f64]| {
+            let items: Vec<String> = v.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", items.join(","))
+        };
+        let floats32 = |v: &[f32]| {
+            let items: Vec<String> = v.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", items.join(","))
+        };
+        format!(
+            "{{\"name\":\"{}\",\"rows\":{},\"cols\":{},\"clusters\":{},\"rank\":{},\
+             \"kmeans_iterations\":{},\"inertia\":{},\"inertia_trace\":{},\
+             \"spectrum\":{},\"error_fro2\":{},\"compensation_energy\":{},\
+             \"grid_error_max\":{},\"grid_error_mse\":{}}}",
+            json_escape(&self.name),
+            self.shape.0,
+            self.shape.1,
+            self.clusters,
+            self.rank,
+            self.kmeans_iterations,
+            self.inertia,
+            floats(&self.inertia_trace),
+            floats32(&self.spectrum),
+            self.error_fro2,
+            self.compensation_energy,
+            self.grid_error_max,
+            self.grid_error_mse,
+        )
+    }
+}
+
+/// The `--telemetry out.json` artifact: one [`MatrixTelemetry`] per
+/// compressed matrix, sorted by name (job completion order is
+/// thread-dependent; the artifact is not).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompressionReport {
+    /// The model-level seed the per-matrix seeds derive from.
+    pub seed: u64,
+    pub matrices: Vec<MatrixTelemetry>,
+}
+
+impl CompressionReport {
+    /// Sort matrices by name — call once after parallel collection.
+    pub fn finalize(&mut self) {
+        self.matrices.sort_by(|a, b| a.name.cmp(&b.name));
+    }
+
+    /// The versioned report JSON. `version` guards the rank allocator's
+    /// parser; bump it on any field change.
+    pub fn to_json(&self) -> String {
+        let mats: Vec<String> = self.matrices.iter().map(|m| m.to_json()).collect();
+        format!(
+            "{{\"version\":1,\"seed\":{},\"matrices\":[{}]}}\n",
+            self.seed,
+            mats.join(",")
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +187,40 @@ mod tests {
         assert!(s.compression_ratio > 1.0);
         let rendered = format!("{s}");
         assert!(rendered.contains("test.w"));
+    }
+
+    #[test]
+    fn report_json_is_sorted_stable_and_balanced() {
+        let mut rep = CompressionReport { seed: 5, ..Default::default() };
+        rep.matrices.push(MatrixTelemetry {
+            name: "b.w".into(),
+            shape: (4, 4),
+            inertia_trace: vec![2.0, 1.0],
+            spectrum: vec![0.5, 0.25],
+            ..Default::default()
+        });
+        rep.matrices.push(MatrixTelemetry { name: "a.w".into(), ..Default::default() });
+        rep.finalize();
+        assert_eq!(rep.matrices[0].name, "a.w");
+        let json = rep.to_json();
+        assert_eq!(json, rep.to_json(), "rerender must be byte-identical");
+        assert!(json.starts_with("{\"version\":1,\"seed\":5,"));
+        assert!(json.contains("\"inertia_trace\":[2,1]"));
+        assert!(json.contains("\"spectrum\":[0.5,0.25]"));
+        let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+        for c in json.chars() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match c {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '{' | '[' if !in_str => depth += 1,
+                '}' | ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced report JSON: {json}");
     }
 }

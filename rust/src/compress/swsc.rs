@@ -1,9 +1,11 @@
 //! Core SWSC transform: cluster channels, share the representative vector,
 //! compensate the residual with a truncated SVD (paper §III-B, §III-C).
 
+use super::stats::MatrixTelemetry;
 use crate::exec::{self, ExecConfig};
 use crate::kmeans::{cluster_channels, KMeansConfig, Representative};
 use crate::linalg::{svd_jacobi, svd_randomized_with, truncate, Svd};
+use crate::obs::prof::{self, time_it, ProfScope};
 use crate::quant::bits::{swsc_avg_bits, swsc_quantized_avg_bits, BitsBreakdown};
 use crate::quant::{QuantConfig, QuantizedTensor};
 use crate::tensor::Tensor;
@@ -210,6 +212,21 @@ impl QuantizedMatrix {
 /// Run the full SWSC transform on one matrix (paper Fig. 1):
 /// cluster → share → error SVD → pack.
 pub fn compress_matrix(w: &Tensor, cfg: &SwscConfig) -> CompressedMatrix {
+    compress_matrix_traced(w, cfg, None, None)
+}
+
+/// [`compress_matrix`] with optional observation hooks (PR 10): a parent
+/// profiler scope (opens `kmeans` / `rsvd` children plus a synthetic
+/// `kmeans/iters` node carrying the iteration count) and a telemetry
+/// record to fill with quality data computed in passing. Both are
+/// observation-only: the compressed output is bitwise identical whether
+/// they are `None` or `Some` — pinned by `tests/obs_prof.rs`.
+pub fn compress_matrix_traced(
+    w: &Tensor,
+    cfg: &SwscConfig,
+    parent: Option<&ProfScope<'_>>,
+    mut telemetry: Option<&mut MatrixTelemetry>,
+) -> CompressedMatrix {
     let (m, n) = (w.rows(), w.cols());
 
     // Step 1-2: channel clustering and representative sharing.
@@ -217,16 +234,53 @@ pub fn compress_matrix(w: &Tensor, cfg: &SwscConfig) -> CompressedMatrix {
     km_cfg.k = cfg.clusters;
     km_cfg.seed = cfg.seed;
     km_cfg.exec = cfg.exec;
-    let km = cluster_channels(w, &km_cfg);
+    let km = {
+        let sc = prof::scope(parent, "kmeans");
+        let (km, secs) = time_it(|| cluster_channels(w, &km_cfg));
+        if let Some(sc) = &sc {
+            // Iteration boundaries live inside the Lloyd loop; fold the
+            // count in as a synthetic child so the tree shows mean
+            // time-per-iteration.
+            sc.profiler().add(
+                &format!("{}/iters", sc.path()),
+                km.iterations as u64,
+                (secs * 1e9) as u64,
+            );
+        }
+        km
+    };
     let w_prime = km.reconstruct();
+
+    if let Some(t) = telemetry.as_deref_mut() {
+        t.shape = (m, n);
+        t.clusters = km.centroids.cols();
+        t.kmeans_iterations = km.iterations;
+        t.inertia = km.inertia;
+        t.inertia_trace = km.inertia_trace.clone();
+    }
 
     // Step 3: error compensation via truncated SVD of W_err = W − W'.
     let rank = cfg.rank.min(m.min(n));
     let (factor_a, factor_b) = if rank == 0 {
+        if let Some(t) = telemetry.as_deref_mut() {
+            t.rank = 0;
+            let f = w.sub(&w_prime).fro_norm();
+            t.error_fro2 = f * f;
+        }
         (Tensor::zeros(&[m, 0]), Tensor::zeros(&[0, n]))
     } else {
         let err = w.sub(&w_prime);
-        let svd = run_svd(&err, rank, cfg);
+        let svd = {
+            let _sc = prof::scope(parent, "rsvd");
+            run_svd(&err, rank, cfg)
+        };
+        if let Some(t) = telemetry.as_deref_mut() {
+            t.rank = rank;
+            let f = err.fro_norm();
+            t.error_fro2 = f * f;
+            t.spectrum = svd.s.clone();
+            t.compensation_energy = svd.energy_fraction(t.error_fro2);
+        }
         svd.split_factors()
     };
 
@@ -403,6 +457,40 @@ mod tests {
         assert_eq!(back.factor_a.shape(), &[24, 0]);
         assert_eq!(back.factor_b.shape(), &[0, 24]);
         assert_eq!(back.reconstruct().shape(), w.shape());
+    }
+
+    #[test]
+    fn traced_compress_is_bitwise_identical_and_fills_telemetry() {
+        let w = structured_weights(48, 48, 6, 102);
+        let cfg = SwscConfig::new(6, 4);
+        let plain = compress_matrix(&w, &cfg);
+        let prof = crate::obs::prof::Profiler::new();
+        let mut tel = MatrixTelemetry { name: "t.w".into(), ..Default::default() };
+        let traced = {
+            let root = prof.root("compress");
+            compress_matrix_traced(&w, &cfg, Some(&root), Some(&mut tel))
+        };
+        let bits = |t: &Tensor| t.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(traced.labels, plain.labels);
+        assert_eq!(bits(&traced.centroids), bits(&plain.centroids));
+        assert_eq!(bits(&traced.factor_a), bits(&plain.factor_a));
+        assert_eq!(bits(&traced.factor_b), bits(&plain.factor_b));
+        // Telemetry was filled with internally consistent values.
+        assert_eq!(tel.shape, (48, 48));
+        assert_eq!((tel.clusters, tel.rank), (6, 4));
+        assert_eq!(tel.inertia_trace.len(), tel.kmeans_iterations);
+        assert_eq!(tel.spectrum.len(), 4);
+        for s in tel.spectrum.windows(2) {
+            assert!(s[1] <= s[0], "spectrum must descend: {:?}", tel.spectrum);
+        }
+        assert!(tel.error_fro2 > 0.0);
+        assert!(tel.compensation_energy > 0.0 && tel.compensation_energy <= 1.0);
+        // The profiler saw the phase tree.
+        let phases = prof.phases();
+        assert!(phases.contains_key("compress/kmeans"), "{phases:?}");
+        assert!(phases.contains_key("compress/kmeans/iters"), "{phases:?}");
+        assert!(phases.contains_key("compress/rsvd"), "{phases:?}");
+        assert_eq!(phases["compress/kmeans/iters"].count, tel.kmeans_iterations as u64);
     }
 
     #[test]

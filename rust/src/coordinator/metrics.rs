@@ -1,7 +1,7 @@
 //! Lightweight shared metrics: counters + fixed-size value histograms.
 //!
 //! Until the serving layer landed, timings were stored as unbounded
-//! sample `Vec`s (`util::timer::Stats`) — fine for a bench's dozens of
+//! sample `Vec`s (`obs::prof::Stats`) — fine for a bench's dozens of
 //! iterations, unbounded growth for a service answering millions of
 //! requests. Distributions are now [`Histogram`]s: a fixed array of
 //! geometric buckets (constant memory per metric, ~±5% relative
@@ -229,6 +229,24 @@ impl Metrics {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
+    /// Overwrite `name` with an absolute cumulative total — for counters
+    /// accumulated elsewhere (the kernel-layer atomics in
+    /// [`crate::obs::prof::counters`]) and copied into the registry at
+    /// export time. Unlike [`Metrics::set`] the family stays typed
+    /// `counter`: the underlying value is monotone, only the copy is an
+    /// absolute store.
+    pub fn counter_total(&self, name: &str, value: u64) {
+        self.counters.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// [`Metrics::counter_total`] for a `(name, label)` series.
+    pub fn counter_total_with(&self, name: &str, label: &str, value: u64) {
+        self.labeled_counters
+            .lock()
+            .unwrap()
+            .insert((name.to_string(), label.to_string()), value);
+    }
+
     /// Labeled counter increment (label = model name by convention).
     /// Independent of the global [`Metrics::incr`] stream — call both to
     /// keep the global totals intact.
@@ -411,21 +429,27 @@ impl Metrics {
 
     /// JSON snapshot of every metric: `counters` / `hists` maps plus
     /// `labeled_counters` / `labeled_hists` keyed `name → label → value`.
-    /// Hand-rolled (no serde in the vendored set), deterministic sorted
-    /// key order, strings escaped.
+    /// Every entry carries a `"type"` field (`counter` / `gauge` /
+    /// `histogram`) agreeing with the text render and the Prometheus
+    /// `# TYPE` lines, so a JSON consumer never has to re-derive the
+    /// family kind from the section it appeared in. Hand-rolled (no serde
+    /// in the vendored set), deterministic sorted key order, strings
+    /// escaped.
     pub fn render_json(&self) -> String {
         use crate::obs::json_escape as esc;
+        let gauges = self.gauge_names.lock().unwrap().clone();
         let mut out = String::from("{");
         out.push_str("\"counters\":{");
         for (i, (k, v)) in self.counters.lock().unwrap().iter().enumerate() {
             if i > 0 {
                 out.push(',');
             }
-            out.push_str(&format!("\"{}\":{v}", esc(k)));
+            let ty = if gauges.contains(k) { "gauge" } else { "counter" };
+            out.push_str(&format!("\"{}\":{{\"type\":\"{ty}\",\"value\":{v}}}", esc(k)));
         }
         out.push_str("},\"labeled_counters\":{");
         let labeled = self.labeled_counters.lock().unwrap().clone();
-        out.push_str(&json_grouped(&labeled, |v| v.to_string()));
+        out.push_str(&json_grouped(&labeled, "counter", |v| v.to_string()));
         out.push_str("},\"hists\":{");
         for (i, (k, h)) in self.hists.lock().unwrap().iter().enumerate() {
             if i > 0 {
@@ -435,7 +459,7 @@ impl Metrics {
         }
         out.push_str("},\"labeled_hists\":{");
         let labeled = self.labeled_hists.lock().unwrap().clone();
-        out.push_str(&json_grouped(&labeled, hist_json));
+        out.push_str(&json_grouped(&labeled, "histogram", hist_json));
         out.push_str("}}");
         out.push('\n');
         out
@@ -497,18 +521,23 @@ fn prom_summary(prom: &str, label_prefix: &str, h: &Histogram) -> String {
     out
 }
 
-/// Render a `(name, label) → value` map as JSON `"name":{"label":V,…}`
-/// entries (no outer braces), keys sorted by `BTreeMap` order.
-fn json_grouped<V>(map: &BTreeMap<(String, String), V>, render: impl Fn(&V) -> String) -> String {
+/// Render a `(name, label) → value` map as JSON
+/// `"name":{"type":"<ty>","values":{"label":V,…}}` entries (no outer
+/// braces), keys sorted by `BTreeMap` order.
+fn json_grouped<V>(
+    map: &BTreeMap<(String, String), V>,
+    ty: &str,
+    render: impl Fn(&V) -> String,
+) -> String {
     use crate::obs::json_escape as esc;
     let mut out = String::new();
     let mut open: Option<&str> = None;
     for ((name, label), v) in map.iter() {
         if open != Some(name.as_str()) {
             if open.is_some() {
-                out.push_str("},");
+                out.push_str("}},");
             }
-            out.push_str(&format!("\"{}\":{{", esc(name)));
+            out.push_str(&format!("\"{}\":{{\"type\":\"{ty}\",\"values\":{{", esc(name)));
             open = Some(name.as_str());
         } else {
             out.push(',');
@@ -516,16 +545,17 @@ fn json_grouped<V>(map: &BTreeMap<(String, String), V>, render: impl Fn(&V) -> S
         out.push_str(&format!("\"{}\":{}", esc(label), render(v)));
     }
     if open.is_some() {
-        out.push('}');
+        out.push_str("}}");
     }
     out
 }
 
 /// JSON object for one histogram (exact count/mean/min/max, estimated
-/// percentiles).
+/// percentiles), typed like the counter/gauge entries.
 fn hist_json(h: &Histogram) -> String {
     format!(
-        "{{\"count\":{},\"mean\":{},\"min\":{},\"max\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+        "{{\"type\":\"histogram\",\"count\":{},\"mean\":{},\"min\":{},\"max\":{},\
+         \"p50\":{},\"p95\":{},\"p99\":{}}}",
         h.count(),
         h.mean(),
         h.min(),
@@ -782,9 +812,11 @@ mod tests {
         let json = m.render_json();
         assert_eq!(json, m.render_json());
         assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
-        assert!(json.contains("\"serve.requests\":7"));
-        assert!(json.contains("\"serve.quota_rejected\":{\"prod\":3}"));
-        assert!(json.contains("\"count\":1"));
+        assert!(json.contains("\"serve.requests\":{\"type\":\"counter\",\"value\":7}"));
+        assert!(json.contains(
+            "\"serve.quota_rejected\":{\"type\":\"counter\",\"values\":{\"prod\":3}}"
+        ));
+        assert!(json.contains("\"type\":\"histogram\",\"count\":1"));
         // Structurally sound: balanced braces outside strings.
         let (mut depth, mut in_str, mut esc) = (0i64, false, false);
         for c in json.chars() {
@@ -801,5 +833,54 @@ mod tests {
             }
         }
         assert_eq!(depth, 0, "unbalanced JSON export: {json}");
+    }
+
+    /// All three renders must agree on every family's type: a name that
+    /// is a gauge in the text render must be a gauge in the Prometheus
+    /// `# TYPE` line and carry `"type":"gauge"` in the JSON snapshot.
+    #[test]
+    fn renders_agree_on_metric_type() {
+        let m = Metrics::new();
+        m.incr("pipeline.jobs", 2);
+        m.set("exec.pool_workers", 3);
+        m.counter_total("obs.trace_dropped", 11);
+        m.counter_total_with("gemm.calls", "rows/large", 5);
+        m.record("compress.job_seconds", 0.25);
+        m.record_with("compress.job_seconds", "tiny", 0.25);
+
+        let text = m.render();
+        assert!(text.contains("counter pipeline.jobs = 2"), "{text}");
+        assert!(text.contains("gauge   exec.pool_workers = 3"), "{text}");
+        assert!(text.contains("counter obs.trace_dropped = 11"), "{text}");
+        assert!(text.contains("hist    compress.job_seconds:"), "{text}");
+
+        let prom = m.render_prometheus();
+        assert!(prom.contains("# TYPE swsc_pipeline_jobs counter\n"), "{prom}");
+        assert!(prom.contains("# TYPE swsc_exec_pool_workers gauge\n"), "{prom}");
+        assert!(
+            prom.contains("# TYPE swsc_obs_trace_dropped counter\n"),
+            "counter_total must stay counter-typed: {prom}"
+        );
+        assert!(prom.contains("# TYPE swsc_gemm_calls counter\n"), "{prom}");
+        assert!(prom.contains("# TYPE swsc_compress_job_seconds summary\n"), "{prom}");
+
+        let json = m.render_json();
+        assert!(json.contains("\"pipeline.jobs\":{\"type\":\"counter\",\"value\":2}"), "{json}");
+        assert!(json.contains("\"exec.pool_workers\":{\"type\":\"gauge\",\"value\":3}"), "{json}");
+        assert!(json.contains("\"obs.trace_dropped\":{\"type\":\"counter\",\"value\":11}"), "{json}");
+        assert!(
+            json.contains("\"gemm.calls\":{\"type\":\"counter\",\"values\":{\"rows/large\":5}}"),
+            "{json}"
+        );
+        assert!(
+            json.contains("\"compress.job_seconds\":{\"type\":\"histogram\",\"count\":1"),
+            "plain hists carry the type field: {json}"
+        );
+        assert!(
+            json.contains(
+                "\"compress.job_seconds\":{\"type\":\"histogram\",\"values\":{\"tiny\":{\"type\":\"histogram\",\"count\":1"
+            ),
+            "labeled hists carry the type field at both levels: {json}"
+        );
     }
 }

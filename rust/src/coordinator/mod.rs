@@ -31,7 +31,7 @@ pub mod scheduler;
 pub mod service;
 
 pub use metrics::{Histogram, Metrics};
-pub use scheduler::{compress_model, CompressOutcome};
+pub use scheduler::{compress_model, compress_model_traced, CompressOutcome};
 pub use service::{
     EvalRequest, EvalResponse, EvalService, ForwardRequest, ForwardResponse, LinearRequest,
     LinearResponse, ServiceConfig,

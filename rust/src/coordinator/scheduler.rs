@@ -13,11 +13,14 @@
 //! submission — jobs are claimed dynamically either way, so the pool
 //! migration changed no semantics here, only dispatch cost.
 
-use crate::compress::{compress_matrix, matrix_stats, CompressionPlan, MatrixStats};
+use crate::compress::{
+    compress_matrix_traced, matrix_stats, CompressionPlan, CompressionReport, MatrixStats,
+    MatrixTelemetry,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::exec::{self, ExecConfig};
 use crate::io::{Checkpoint, SwscFile};
-use crate::util::timer::time_it;
+use crate::obs::prof::{time_it, ProfScope};
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
@@ -26,6 +29,9 @@ pub struct CompressOutcome {
     pub file: SwscFile,
     pub stats: Vec<MatrixStats>,
     pub wall_seconds: f64,
+    /// Quality telemetry, present when requested (PR 10): one record per
+    /// compressed matrix, name-sorted. `None` costs nothing.
+    pub telemetry: Option<CompressionReport>,
 }
 
 /// Compress every matrix in `plan`, spreading jobs across `workers`
@@ -43,6 +49,23 @@ pub fn compress_model(
     workers: usize,
     metrics: Option<Arc<Metrics>>,
 ) -> Result<CompressOutcome> {
+    compress_model_traced(ck, plan, workers, metrics, None, false)
+}
+
+/// [`compress_model`] with observation hooks (PR 10): an optional parent
+/// profiler scope (each job opens a per-matrix child with `kmeans` /
+/// `rsvd` grandchildren — explicit parenting across the `WorkerPool`
+/// task boundary) and optional quality-telemetry collection. Both are
+/// observation-only: the merged file is bitwise identical whatever the
+/// hooks, at any worker count.
+pub fn compress_model_traced(
+    ck: &Checkpoint,
+    plan: &CompressionPlan,
+    workers: usize,
+    metrics: Option<Arc<Metrics>>,
+    prof: Option<&ProfScope<'_>>,
+    collect_telemetry: bool,
+) -> Result<CompressOutcome> {
     let workers = workers.clamp(1, 64);
     let job_threads = workers.min(plan.len().max(1));
     // Floor split keeps total threads ≤ workers — the budget is a hard
@@ -50,7 +73,8 @@ pub fn compress_model(
     // than oversubscribe for the whole run. Thread counts never touch
     // numerics either way.
     let inner = ExecConfig::with_threads(workers / job_threads);
-    let (outcome, wall) = time_it(|| -> Result<(SwscFile, Vec<MatrixStats>)> {
+    type JobOut = (crate::compress::CompressedMatrix, MatrixStats, f64, Option<MatrixTelemetry>);
+    let (outcome, wall) = time_it(|| -> Result<(SwscFile, Vec<MatrixStats>, Option<CompressionReport>)> {
         // Validate up front so workers never see a bad job.
         let mut jobs = Vec::with_capacity(plan.len());
         for mp in &plan.matrices {
@@ -64,24 +88,37 @@ pub fn compress_model(
         // One pre-assigned slot per plan entry: results come back in plan
         // order no matter which worker ran which job. Jobs are uneven
         // (matrix sizes vary), so use the dynamically balanced variant.
-        let results = exec::map_indexed_balanced(ExecConfig::with_threads(job_threads), jobs.len(), |i| {
-            let (name, tensor, cfg) = &jobs[i];
-            let (compressed, secs) = time_it(|| compress_matrix(tensor, cfg));
-            let stats = matrix_stats(name, tensor, &compressed);
-            (compressed, stats, secs)
-        });
+        let results: Vec<JobOut> =
+            exec::map_indexed_balanced(ExecConfig::with_threads(job_threads), jobs.len(), |i| {
+                let (name, tensor, cfg) = &jobs[i];
+                let job_scope = crate::obs::prof::scope(prof, name);
+                let mut tel = collect_telemetry
+                    .then(|| MatrixTelemetry { name: name.to_string(), ..Default::default() });
+                let (compressed, secs) = time_it(|| {
+                    compress_matrix_traced(tensor, cfg, job_scope.as_ref(), tel.as_mut())
+                });
+                let stats = matrix_stats(name, tensor, &compressed);
+                (compressed, stats, secs, tel)
+            });
 
         let mut file = SwscFile::new();
         let mut stats = Vec::with_capacity(results.len());
-        for ((name, _, _), (compressed, st, secs)) in jobs.iter().zip(results) {
+        let mut report = collect_telemetry.then(CompressionReport::default);
+        for ((name, _, _), (compressed, st, secs, tel)) in jobs.iter().zip(results) {
             if let Some(m) = &metrics {
                 m.incr("compress.jobs", 1);
                 m.record("compress.job_seconds", secs);
+            }
+            if let (Some(rep), Some(tel)) = (report.as_mut(), tel) {
+                rep.matrices.push(tel);
             }
             file.compressed.insert(name.to_string(), compressed);
             stats.push(st);
         }
         stats.sort_by(|a, b| a.name.cmp(&b.name));
+        if let Some(rep) = report.as_mut() {
+            rep.finalize();
+        }
 
         // Dense passthrough for everything the plan did not compress.
         for (name, t) in ck.iter() {
@@ -89,10 +126,10 @@ pub fn compress_model(
                 file.dense.insert(name.to_string(), t.clone());
             }
         }
-        Ok((file, stats))
+        Ok((file, stats, report))
     });
-    let (file, stats) = outcome?;
-    Ok(CompressOutcome { file, stats, wall_seconds: wall })
+    let (file, stats, telemetry) = outcome?;
+    Ok(CompressOutcome { file, stats, wall_seconds: wall, telemetry })
 }
 
 #[cfg(test)]
@@ -149,6 +186,38 @@ mod tests {
         let mut sorted = names.clone();
         sorted.sort();
         assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn traced_compress_is_bitwise_identical_and_reports() {
+        let (ck, plan) = setup();
+        let base = compress_model(&ck, &plan, 2, None).unwrap();
+        let prof = crate::obs::prof::Profiler::new();
+        {
+            let root = prof.root("compress");
+            let out = compress_model_traced(&ck, &plan, 2, None, Some(&root), true).unwrap();
+            assert_eq!(
+                base.file.to_bytes(),
+                out.file.to_bytes(),
+                "profiling must not move a bit"
+            );
+            let rep = out.telemetry.unwrap();
+            assert_eq!(rep.matrices.len(), plan.len());
+            let names: Vec<&str> = rep.matrices.iter().map(|m| m.name.as_str()).collect();
+            let mut sorted = names.clone();
+            sorted.sort();
+            assert_eq!(names, sorted, "telemetry must be name-sorted");
+            // Telemetry is a function of (weights, seed, config) — not of
+            // the worker count or the profiler.
+            let again = compress_model_traced(&ck, &plan, 8, None, None, true).unwrap();
+            assert_eq!(rep.to_json(), again.telemetry.unwrap().to_json());
+        }
+        let phases = prof.phases();
+        assert!(
+            phases.keys().any(|k| k.starts_with("compress/") && k.ends_with("/kmeans")),
+            "per-matrix children missing: {phases:?}"
+        );
+        assert!(base.telemetry.is_none(), "plain path must not collect telemetry");
     }
 
     #[test]

@@ -77,11 +77,16 @@ impl Job {
     /// Claim and run tasks until none are left; the thread that finishes
     /// the batch's last pending task flips `done` and wakes the submitter.
     fn work(&self) {
+        let mut executed = 0u64;
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.m {
+                // One counter add per drained batch, not per task —
+                // observation only (PR 10).
+                crate::obs::prof::counters::pool_tasks(executed);
                 return;
             }
+            executed += 1;
             // SAFETY: i < m, so the submitter is still blocked in `run`
             // and the closure is alive.
             let f = unsafe { &*self.func };
@@ -187,6 +192,7 @@ impl WorkerPool {
             for i in 0..m {
                 f(i);
             }
+            crate::obs::prof::counters::pool_tasks(m as u64);
             return;
         }
         let helper_cap = (threads - 1).min(self.max_workers);
@@ -297,6 +303,11 @@ fn worker_loop(inj: &Arc<(Mutex<Injector>, Condvar)>) {
                 guard.busy_nanos = guard.busy_nanos.saturating_add(spent.as_nanos() as u64);
             }
             None => {
+                // Woke (or first scan) and found nothing claimable —
+                // either every job's helper slots are taken or the queue
+                // is empty. High rates next to low pool_tasks mean the
+                // fan-out is too fine for the pool (PR 10 counter).
+                crate::obs::prof::counters::pool_steal_miss();
                 guard = cv.wait(guard).unwrap();
             }
         }

@@ -104,6 +104,7 @@ pub fn bucket_sums_with(x: &Tensor, labels: &[u32], k: usize, exec: ExecConfig) 
     if n == 0 || b == 0 || k == 0 {
         return Tensor::from_vec(&[k, b], sums);
     }
+    crate::obs::prof::counters::bucket_call(n.div_ceil(CHANNEL_CHUNK) as u64);
     let exec = if n * b < MIN_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
     exec::fold_chunks(
         exec,
@@ -150,6 +151,7 @@ pub fn bucket_sums_indexed(x: &Tensor, index: &BucketIndex, exec: ExecConfig) ->
     if n == 0 || b == 0 || k == 0 {
         return Tensor::from_vec(&[k, b], sums);
     }
+    crate::obs::prof::counters::bucket_call(n.div_ceil(CHANNEL_CHUNK) as u64);
     let exec = if n * b < MIN_PARALLEL_ELEMS { ExecConfig::serial() } else { exec };
     // One band row per bucket; a modest rows_per_chunk keeps uneven bucket
     // sizes from serializing on one worker.

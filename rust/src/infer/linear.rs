@@ -15,6 +15,22 @@ pub(crate) const MIN_PARALLEL_GATHER_ELEMS: usize = 1 << 16;
 /// Row granularity for parallel gathers (matches the GEMM band size).
 pub(crate) const GATHER_BAND: usize = 64;
 
+/// Serve a lazily-packed GEMM panel, counting cache behaviour into the
+/// kernel counters: one `panel_build` per pack (inside the `OnceLock`
+/// closure, so races count at most one) and one `panel_reuse` per hit on
+/// an already-packed panel. Observation-only — the returned panels are
+/// exactly what a bare `get_or_init` would serve.
+fn cached_panel<T>(lock: &OnceLock<T>, build: impl FnOnce() -> T) -> &T {
+    use crate::obs::prof::counters;
+    if lock.get().is_some() {
+        counters::panel_reuse();
+    }
+    lock.get_or_init(|| {
+        counters::panel_build();
+        build()
+    })
+}
+
 /// A [`CompressedMatrix`] prepared for compressed-domain products:
 /// `W ≈ R[labels] + A·B` served without ever materializing the dense
 /// `m × n` weight.
@@ -91,7 +107,7 @@ impl CompressedLinear {
 
     fn pa_r(&self, exec: ExecConfig) -> &PackedA {
         let (m, _) = self.shape;
-        self.pa_r.get_or_init(|| {
+        cached_panel(&self.pa_r, || {
             let src = ASrc::Rows { data: self.centroids.data(), k: self.k };
             gemm::pack_a(src, m, self.k, exec)
         })
@@ -99,7 +115,7 @@ impl CompressedLinear {
 
     fn pa_rt(&self, exec: ExecConfig) -> &PackedA {
         let (m, _) = self.shape;
-        self.pa_rt.get_or_init(|| {
+        cached_panel(&self.pa_rt, || {
             let src = ASrc::Cols { data: self.centroids.data(), ld: self.k };
             gemm::pack_a(src, self.k, m, exec)
         })
@@ -107,7 +123,7 @@ impl CompressedLinear {
 
     fn pa_a(&self, exec: ExecConfig) -> &PackedA {
         let (m, _) = self.shape;
-        self.pa_a.get_or_init(|| {
+        cached_panel(&self.pa_a, || {
             let src = ASrc::Rows { data: self.factor_a.data(), k: self.rank };
             gemm::pack_a(src, m, self.rank, exec)
         })
@@ -115,7 +131,7 @@ impl CompressedLinear {
 
     fn pa_at(&self, exec: ExecConfig) -> &PackedA {
         let (m, _) = self.shape;
-        self.pa_at.get_or_init(|| {
+        cached_panel(&self.pa_at, || {
             let src = ASrc::Cols { data: self.factor_a.data(), ld: self.rank };
             gemm::pack_a(src, self.rank, m, exec)
         })
@@ -123,7 +139,7 @@ impl CompressedLinear {
 
     fn pa_bf(&self, exec: ExecConfig) -> &PackedA {
         let (_, n) = self.shape;
-        self.pa_bf.get_or_init(|| {
+        cached_panel(&self.pa_bf, || {
             let src = ASrc::Rows { data: self.factor_b.data(), k: n };
             gemm::pack_a(src, self.rank, n, exec)
         })
@@ -131,7 +147,7 @@ impl CompressedLinear {
 
     fn pa_bt(&self, exec: ExecConfig) -> &PackedA {
         let (_, n) = self.shape;
-        self.pa_bt.get_or_init(|| {
+        cached_panel(&self.pa_bt, || {
             let src = ASrc::Cols { data: self.factor_b.data(), ld: n };
             gemm::pack_a(src, n, self.rank, exec)
         })
@@ -139,17 +155,17 @@ impl CompressedLinear {
 
     fn pb_r(&self, exec: ExecConfig) -> &PackedB {
         let (m, _) = self.shape;
-        self.pb_r.get_or_init(|| gemm::pack_b(self.centroids.data(), m, self.k, exec))
+        cached_panel(&self.pb_r, || gemm::pack_b(self.centroids.data(), m, self.k, exec))
     }
 
     fn pb_a(&self, exec: ExecConfig) -> &PackedB {
         let (m, _) = self.shape;
-        self.pb_a.get_or_init(|| gemm::pack_b(self.factor_a.data(), m, self.rank, exec))
+        cached_panel(&self.pb_a, || gemm::pack_b(self.factor_a.data(), m, self.rank, exec))
     }
 
     fn pb_b(&self, exec: ExecConfig) -> &PackedB {
         let (_, n) = self.shape;
-        self.pb_b.get_or_init(|| gemm::pack_b(self.factor_b.data(), self.rank, n, exec))
+        cached_panel(&self.pb_b, || gemm::pack_b(self.factor_b.data(), self.rank, n, exec))
     }
 
     /// Original dense shape `(m, n)`.
@@ -439,6 +455,25 @@ mod tests {
         let b1: Vec<u32> = via_matmul.data().iter().map(|v| v.to_bits()).collect();
         let b2: Vec<u32> = via_matvec.iter().map(|v| v.to_bits()).collect();
         assert_eq!(b1, b2);
+    }
+
+    /// The lazy panel cache reports builds and reuses to the kernel
+    /// counters. Globals are shared across the parallel test binary, so
+    /// only lower-bound deltas are asserted.
+    #[test]
+    fn panel_cache_counts_builds_then_reuses() {
+        use crate::obs::prof::counters;
+        let c = compressed(24, 30, 4, 2, 812);
+        let lin = CompressedLinear::from_matrix(&c);
+        let mut rng = Rng::new(813);
+        let x = Tensor::randn(&[30, 3], &mut rng);
+        let before = counters::snapshot();
+        lin.matmul(&x); // packs pa_r, pa_bf, pa_a
+        let mid = counters::snapshot();
+        assert!(mid.panel_builds - before.panel_builds >= 3, "first call must pack panels");
+        lin.matmul(&x); // every panel served from cache
+        let after = counters::snapshot();
+        assert!(after.panel_reuses - mid.panel_reuses >= 3, "second call must reuse panels");
     }
 
     #[test]

@@ -28,6 +28,12 @@ pub struct AssignResult {
     pub labels: Vec<u32>,
     pub inertia: f64,
     pub iterations: usize,
+    /// Inertia after each Lloyd iteration (telemetry, PR 10): one entry
+    /// per iteration actually run, last entry == `inertia`. A pure
+    /// function of (points, seed centroids) — same determinism contract
+    /// as the labels, so it is golden-testable. Empty when produced by a
+    /// bare [`assign`] call.
+    pub inertia_trace: Vec<f64>,
 }
 
 /// Assign every point (row of `points`) to its nearest centroid row.
@@ -259,12 +265,14 @@ pub fn lloyd_with(
     let mut labels = vec![0u32; points.rows()];
     let mut inertia = f64::INFINITY;
     let mut iterations = 0;
+    let mut inertia_trace = Vec::new();
 
     for it in 0..max_iters.max(1) {
         iterations = it + 1;
         let (new_labels, new_inertia) = assign_with(points, centroids, exec);
         labels = new_labels;
         inertia = new_inertia;
+        inertia_trace.push(inertia);
 
         let before = centroids.clone();
         let counts = update_with(points, &labels, centroids, exec);
@@ -281,11 +289,13 @@ pub fn lloyd_with(
             let (fin_labels, fin_inertia) = assign_with(points, centroids, exec);
             labels = fin_labels;
             inertia = fin_inertia;
+            // The final assignment supersedes this iteration's entry.
+            *inertia_trace.last_mut().unwrap() = fin_inertia;
             break;
         }
     }
 
-    AssignResult { labels, inertia, iterations }
+    AssignResult { labels, inertia, iterations, inertia_trace }
 }
 
 fn repair_empty(
@@ -390,6 +400,13 @@ mod tests {
         let near50 = (0..2).any(|c| Tensor::dist2(cen.row(c), &[50.0, 50.0]) < 5.0);
         assert!(near0 && near50, "centroids: {:?}", cen.data());
         assert!(res.inertia < 40.0);
+        // Telemetry trace: one entry per iteration, ending at the final
+        // inertia, non-increasing (repair can only help on these blobs).
+        assert_eq!(res.inertia_trace.len(), res.iterations);
+        assert_eq!(res.inertia_trace.last().copied().unwrap().to_bits(), res.inertia.to_bits());
+        for w in res.inertia_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "inertia trace went up: {:?}", res.inertia_trace);
+        }
     }
 
     #[test]

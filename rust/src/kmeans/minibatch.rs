@@ -28,13 +28,21 @@ pub fn minibatch_kmeans(
     steps: usize,
     rng: &mut Rng,
 ) -> (Tensor, Vec<u32>, f64) {
-    minibatch_kmeans_with(points, centroids, batch, steps, rng, exec::global())
+    let (cent, labels, inertia, _) =
+        minibatch_kmeans_with(points, centroids, batch, steps, rng, exec::global());
+    (cent, labels, inertia)
 }
 
 /// [`minibatch_kmeans`] with an explicit thread config. The per-batch and
 /// final assignments run on the deterministic executor; the centroid drift
 /// loop is inherently sequential (counts evolve sample by sample) and stays
 /// serial, so results are bit-identical at any `exec.threads`.
+///
+/// The fourth tuple element is the telemetry trace (PR 10): the sampled
+/// *batch* inertia at each step, before that step's centroid drift. It is
+/// a pure function of (points, init centroids, rng state) like everything
+/// else here, but — being sampled — is noisier than the final full-data
+/// `inertia` and need not be monotone.
 pub fn minibatch_kmeans_with(
     points: &Tensor,
     mut centroids: Tensor,
@@ -42,7 +50,7 @@ pub fn minibatch_kmeans_with(
     steps: usize,
     rng: &mut Rng,
     exec: ExecConfig,
-) -> (Tensor, Vec<u32>, f64) {
+) -> (Tensor, Vec<u32>, f64, Vec<f64>) {
     let n = points.rows();
     let m = points.cols();
     let k = centroids.rows();
@@ -56,6 +64,7 @@ pub fn minibatch_kmeans_with(
     let sample_seed = rng.next_u64();
 
     let mut scratch = Tensor::zeros(&[batch, m]);
+    let mut inertia_trace = Vec::with_capacity(steps);
     for step in 0..steps {
         // Sample this step's batch of rows from the step's private stream.
         let mut srng = step_rng(sample_seed, step as u64);
@@ -63,7 +72,8 @@ pub fn minibatch_kmeans_with(
             let j = srng.below(n);
             scratch.row_mut(b).copy_from_slice(points.row(j));
         }
-        let (labels, _) = assign_with(&scratch, &centroids, exec);
+        let (labels, batch_inertia) = assign_with(&scratch, &centroids, exec);
+        inertia_trace.push(batch_inertia);
         for (b, &lab) in labels.iter().enumerate() {
             let c = lab as usize;
             counts[c] += 1.0;
@@ -77,7 +87,7 @@ pub fn minibatch_kmeans_with(
     }
 
     let (labels, inertia) = assign_with(points, &centroids, exec);
-    (centroids, labels, inertia)
+    (centroids, labels, inertia, inertia_trace)
 }
 
 /// Private per-step sample stream: SplitMix-style scramble of `(seed,
@@ -122,13 +132,16 @@ mod tests {
             let mut r = Rng::new(99);
             minibatch_kmeans_with(&pts, init.clone(), 48, 25, &mut r, ExecConfig::with_threads(threads))
         };
-        let (c1, l1, i1) = run(1);
+        let (c1, l1, i1, t1) = run(1);
+        assert_eq!(t1.len(), 25, "one trace entry per step");
         for threads in [2, 4, 8] {
-            let (c, l, i) = run(threads);
+            let (c, l, i, t) = run(threads);
             let bits = |t: &Tensor| t.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
             assert_eq!(bits(&c), bits(&c1), "centroids, {threads} threads");
             assert_eq!(l, l1, "labels, {threads} threads");
             assert_eq!(i.to_bits(), i1.to_bits(), "inertia, {threads} threads");
+            let tbits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+            assert_eq!(tbits(&t), tbits(&t1), "inertia trace, {threads} threads");
         }
     }
 

@@ -97,6 +97,11 @@ pub struct KMeansResult {
     pub inertia: f64,
     /// Lloyd iterations actually run.
     pub iterations: usize,
+    /// Inertia after each iteration (telemetry, PR 10). For full Lloyd
+    /// the last entry equals `inertia`; for mini-batch the entries are
+    /// per-step *batch* inertias (sampled, so noisier than the final
+    /// full-assignment `inertia`). Deterministic given the seed.
+    pub inertia_trace: Vec<f64>,
 }
 
 impl KMeansResult {
@@ -152,7 +157,7 @@ pub fn cluster_channels(w: &Tensor, cfg: &KMeansConfig) -> KMeansResult {
             lloyd_with(&channels, &mut centroids_rows, cfg.max_iters, cfg.tol, &mut rng, cfg.exec)
         }
         KMeansMethod::Minibatch { batch, steps } => {
-            let (cent, labels, inertia) = minibatch_kmeans_with(
+            let (cent, labels, inertia, inertia_trace) = minibatch_kmeans_with(
                 &channels,
                 centroids_rows,
                 batch,
@@ -161,7 +166,7 @@ pub fn cluster_channels(w: &Tensor, cfg: &KMeansConfig) -> KMeansResult {
                 cfg.exec,
             );
             centroids_rows = cent;
-            AssignResult { labels, inertia, iterations: steps }
+            AssignResult { labels, inertia, iterations: steps, inertia_trace }
         }
     };
 
@@ -176,6 +181,7 @@ pub fn cluster_channels(w: &Tensor, cfg: &KMeansConfig) -> KMeansResult {
         labels: res.labels,
         inertia: res.inertia,
         iterations: res.iterations,
+        inertia_trace: res.inertia_trace,
     }
 }
 

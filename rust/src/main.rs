@@ -71,6 +71,9 @@ fn print_help() {
            train     --preset small --steps 300 --out runs/default [--artifacts artifacts]\n\
            compress  --ckpt runs/default/model.swck --proj qk|mlp --bits 2 --out model.swsc\n\
                      [--precision f32|int8 --group 64]  (int8 = grouped-int8 factors)\n\
+                     [--init small]  (synthesize seeded untrained weights — no --ckpt)\n\
+                     [--telemetry report.json]  (per-matrix quality telemetry: inertia\n\
+                     traces, error spectrum, grid error — the rank allocator's input)\n\
            eval      --ckpt model.swck | --swsc model.swsc  [--preset small]\n\
                      [--engine pjrt|compressed]  (compressed = whole forward from\n\
                      the .swsc factors, no artifacts/PJRT/reconstruction)\n\
@@ -83,9 +86,14 @@ fn print_help() {
            info      [--preset small]\n\
          \n\
          env:\n\
-           SWSC_THREADS  worker threads for compression-time compute\n\
-                         (default: all cores; results are bit-identical\n\
-                         at any thread count, 1 = serial reference)\n"
+           SWSC_THREADS   worker threads for compression-time compute\n\
+                          (default: all cores; results are bit-identical\n\
+                          at any thread count, 1 = serial reference)\n\
+           SWSC_PROF      enable the pipeline phase profiler (timing tree on\n\
+                          stderr; observation-only — output bytes unchanged)\n\
+           SWSC_PROF_OUT  with SWSC_PROF: also write the phase timeline as\n\
+                          Chrome trace-event JSON to this path\n\
+           (see docs/observability.md for the full SWSC_* catalogue)\n"
     );
 }
 
@@ -193,7 +201,6 @@ fn proj_from_str(s: &str) -> Result<ProjectorSet> {
 }
 
 fn cmd_compress(opts: &Opts) -> Result<()> {
-    let ckpt = PathBuf::from(opts.get("ckpt").context("--ckpt required")?);
     let proj = proj_from_str(opt(opts, "proj", "qk"))?;
     let bits: f64 = opt(opts, "bits", "2").parse()?;
     let out = PathBuf::from(opt(opts, "out", "model.swsc"));
@@ -206,25 +213,82 @@ fn cmd_compress(opts: &Opts) -> Result<()> {
         "unknown --precision `{precision}` (f32|int8)"
     );
 
-    let ck = Checkpoint::load(&ckpt)?;
+    // `--init preset` synthesizes seeded untrained weights — the CI smoke
+    // path, which needs a full pipeline run without a training checkpoint.
+    let ck = if let Some(preset) = opts.get("init") {
+        let cfg = ModelConfig::by_name(preset)?;
+        println!("synthesizing untrained `{preset}` weights (seed {seed})");
+        init_params(&cfg, seed)
+    } else {
+        let ckpt = PathBuf::from(opts.get("ckpt").context("--ckpt or --init required")?);
+        Checkpoint::load(&ckpt)?
+    };
     let plan = CompressionPlan::for_target_bits(&ck.shapes(), proj, bits, 0.5, seed);
     anyhow::ensure!(!plan.is_empty(), "plan selected no matrices");
+
+    // Observation hooks (PR 10), both off by default and observation-only:
+    // the phase profiler (SWSC_PROF) and the quality-telemetry report
+    // (--telemetry out.json). The `.swsc` bytes are identical either way.
+    let prof_cfg = swsc::obs::prof::ProfConfig::from_env();
+    let profiler = prof_cfg.as_ref().map(|_| swsc::obs::prof::Profiler::new());
+    let telemetry_out = opts.get("telemetry").map(PathBuf::from);
+
     println!("compressing {} matrices ({} workers, target {bits} avg bits)...", plan.len(), workers);
-    let outcome = compress_model(&ck, &plan, workers, None)?;
+    let outcome = {
+        let root = profiler.as_ref().map(|p| p.root("compress"));
+        swsc::coordinator::compress_model_traced(
+            &ck,
+            &plan,
+            workers,
+            None,
+            root.as_ref(),
+            telemetry_out.is_some(),
+        )?
+    };
     for s in &outcome.stats {
         println!("  {s}");
+    }
+    let mut report = outcome.telemetry;
+    if let Some(rep) = report.as_mut() {
+        rep.seed = seed;
     }
     let mut file = outcome.file;
     if precision == "int8" {
         // Double compression: re-store the factors as grouped int8. The
         // serving path consumes the codes directly (fused dequant GEMM).
+        let quant_root = profiler.as_ref().map(|p| p.root("quantize"));
         let names: Vec<String> = file.compressed.keys().cloned().collect();
         for name in names {
             let c = file.compressed.remove(&name).expect("listed name present");
-            file.quantized.insert(name, c.quantize(&QuantConfig { group }));
+            let q = {
+                let _sc = swsc::obs::prof::scope(quant_root.as_ref(), &name);
+                c.quantize(&QuantConfig { group })
+            };
+            if let Some(tel) =
+                report.as_mut().and_then(|r| r.matrices.iter_mut().find(|m| m.name == name))
+            {
+                // Grid error across all three quantized payloads: worst
+                // max, element-weighted mean of the MSEs.
+                let parts = [
+                    (q.centroids.grid_error(&c.centroids), c.centroids.len()),
+                    (q.factor_a.grid_error(&c.factor_a), c.factor_a.len()),
+                    (q.factor_b.grid_error(&c.factor_b), c.factor_b.len()),
+                ];
+                let total: usize = parts.iter().map(|(_, n)| n).sum();
+                for ((max_abs, mse), n) in parts {
+                    tel.grid_error_max = tel.grid_error_max.max(max_abs);
+                    if total > 0 {
+                        tel.grid_error_mse += mse * n as f64 / total as f64;
+                    }
+                }
+            }
+            file.quantized.insert(name, q);
         }
     }
-    file.save(&out)?;
+    {
+        let _sc = profiler.as_ref().map(|p| p.root("serialize"));
+        file.save(&out)?;
+    }
     let file_bytes = std::fs::metadata(&out)?.len() as usize;
     println!(
         "wrote {} ({}) in {:.2}s",
@@ -259,13 +323,36 @@ fn cmd_compress(opts: &Opts) -> Result<()> {
     }
     total_params += file.dense.values().map(|t| t.len()).sum::<usize>();
     print!("{}", render_storage(&rows, file_bytes, total_params));
+
+    if let (Some(path), Some(rep)) = (&telemetry_out, &report) {
+        std::fs::write(path, rep.to_json())?;
+        println!("wrote telemetry {} ({} matrices)", path.display(), rep.matrices.len());
+        print!("{}", swsc::report::render_telemetry(rep));
+    }
+    if let Some(p) = &profiler {
+        eprintln!("--- profile (SWSC_PROF) ---");
+        eprint!("{}", p.render_text());
+        if let Some(chrome) = prof_cfg.as_ref().and_then(|c| c.chrome_out.as_ref()) {
+            std::fs::write(chrome, p.to_chrome_json())?;
+            eprintln!("wrote profile timeline {chrome} (Perfetto / chrome://tracing)");
+        }
+    }
     Ok(())
 }
 
 fn cmd_eval(opts: &Opts) -> Result<()> {
     let cfg = ModelConfig::by_name(opt(opts, "preset", "small"))?;
-    let (_tok, _train, eval_data) = corpus_and_data(&cfg, opt(opts, "seed", "42").parse()?);
+    // Same SWSC_PROF gate as cmd_compress: eval phases land in the same
+    // call-tree render (observation-only — the result bits never depend
+    // on whether a profiler is attached).
+    let profiler = swsc::obs::prof::ProfConfig::from_env().map(|_| swsc::obs::prof::Profiler::new());
+    let eval_data = {
+        let _sc = profiler.as_ref().map(|p| p.root("eval/data"));
+        let (_tok, _train, eval_data) = corpus_and_data(&cfg, opt(opts, "seed", "42").parse()?);
+        eval_data
+    };
 
+    let _eval_scope = profiler.as_ref().map(|p| p.root("eval/perplexity"));
     let res = match opt(opts, "engine", "pjrt") {
         // PR 7: the whole forward in the compressed domain — no PJRT,
         // no artifacts, no reconstructed weights. Only `.swsc` input
@@ -299,7 +386,12 @@ fn cmd_eval(opts: &Opts) -> Result<()> {
         }
         other => bail!("unknown eval engine `{other}` (pjrt|compressed)"),
     };
+    drop(_eval_scope);
     println!("perplexity {:.4}  (nll/token {:.4}, {} tokens, {} batches)", res.perplexity, res.nll_per_token, res.tokens, res.batches);
+    if let Some(p) = &profiler {
+        eprintln!("--- profile (SWSC_PROF) ---");
+        eprint!("{}", p.render_text());
+    }
     Ok(())
 }
 
@@ -450,7 +542,22 @@ fn cmd_trace(opts: &Opts) -> Result<()> {
     let server = BatchServer::start_with_opts(
         Arc::new(reg),
         BatchConfig::default(),
-        ServerOptions { trace: Some(TraceConfig::default()), ..ServerOptions::default() },
+        // Tracing is always on for this command; SWSC_TRACE_CAPACITY still
+        // sizes the ring so long replays can avoid saturating it.
+        ServerOptions {
+            // Force the gate on, but let SWSC_TRACE_CAPACITY size the ring.
+            trace: Some(
+                TraceConfig::from_lookup(|k| {
+                    if k == "SWSC_TRACE" {
+                        Some("1".into())
+                    } else {
+                        std::env::var(k).ok()
+                    }
+                })
+                .unwrap_or_default(),
+            ),
+            ..ServerOptions::default()
+        },
     );
 
     let lin = run_loadgen(
@@ -487,6 +594,17 @@ fn cmd_trace(opts: &Opts) -> Result<()> {
         "wrote {} ({records} trace records) — load it in Perfetto or chrome://tracing",
         out.display()
     );
+    // A saturated ring means the timeline silently lost its oldest spans —
+    // say so once, and export the loss so scrapes can alert on it.
+    let dropped = server.trace_sink().map(|t| t.dropped()).unwrap_or(0);
+    if dropped > 0 {
+        eprintln!(
+            "warning: trace ring saturated — {dropped} record(s) dropped; \
+             raise SWSC_TRACE_CAPACITY"
+        );
+        server.metrics().counter_total("obs.trace_dropped", dropped);
+    }
+    swsc::obs::prof::counters::export_kernel_counters(server.metrics().as_ref());
 
     println!("\n--- prometheus ---");
     print!("{}", server.metrics().render_prometheus());

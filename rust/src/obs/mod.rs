@@ -47,6 +47,8 @@
 //! trace` CLI subcommand and [`crate::serve::BatchServer::dump_trace`]
 //! both produce this format.
 
+pub mod prof;
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -112,6 +114,11 @@ pub enum SpanKind {
     GroupApply,
     /// One forward layer-step cohort, recorded per member request.
     LayerStep,
+    /// One pipeline-profiler scope ([`prof`], PR 10): `detail` carries the
+    /// `/`-joined phase path (e.g. `compress/attn.wq/rsvd`), which the
+    /// Chrome export uses as the event *name* so Perfetto shows the phase
+    /// tree, not a wall of identical "phase" blocks.
+    Phase,
 }
 
 impl SpanKind {
@@ -121,6 +128,7 @@ impl SpanKind {
             SpanKind::BatchPick => "batch_pick",
             SpanKind::GroupApply => "group_apply",
             SpanKind::LayerStep => "layer_step",
+            SpanKind::Phase => "phase",
         }
     }
 }
@@ -331,11 +339,17 @@ impl TraceSink {
             let ts = r.ts.as_secs_f64() * 1e6;
             match &r.data {
                 TraceData::Span { kind, dur } => {
+                    // Phase spans name themselves by their profiler path —
+                    // that's what makes the Perfetto view a readable tree.
+                    let name = match kind {
+                        SpanKind::Phase => json_escape(&r.detail),
+                        _ => kind.label().to_string(),
+                    };
                     out.push_str(&format!(
                         "{{\"name\":\"{}\",\"cat\":\"span\",\"ph\":\"X\",\"ts\":{:.3},\
                          \"dur\":{:.3},\"pid\":1,\"tid\":{},\"args\":{{\"model\":\"{}\",\
                          \"detail\":\"{}\",\"seq\":{}}}}}",
-                        kind.label(),
+                        name,
                         ts,
                         dur.as_secs_f64() * 1e6,
                         r.trace,

@@ -1,0 +1,704 @@
+//! Pipeline profiler + kernel counters (PR 10).
+//!
+//! PR 9 made the serving stack observable; this module does the same for
+//! everything below and before it: the offline compress pipeline
+//! (k-means → randomized SVD → quantize → serialize), the bench/eval
+//! harness, and the kernel layer (packed GEMM, bucket sums, panel cache,
+//! [`crate::exec::WorkerPool`]).
+//!
+//! ## Phase profiler
+//!
+//! A [`Profiler`] aggregates scoped timers into a call tree keyed by
+//! `/`-joined phase paths (`compress/attn.wq/rsvd`). Scopes are RAII
+//! guards ([`ProfScope`]): entering a phase creates one, dropping it
+//! records `(count += 1, total_ns += elapsed)` under its path *and*
+//! pushes a [`SpanKind::Phase`] span into the profiler's embedded
+//! [`TraceSink`], so [`Profiler::to_chrome_json`] reuses the PR 9 export
+//! machinery verbatim and pipeline runs load in Perfetto next to serving
+//! traces.
+//!
+//! Parenting is **explicit**: `parent.child("rsvd")` — not ambient
+//! thread-local nesting — because pipeline phases cross
+//! [`crate::exec::WorkerPool`] task boundaries (the per-matrix jobs run
+//! on pool workers; a thread-local stack would misattribute them).
+//! `&ProfScope` is `Sync`, so a parent scope can be borrowed by every
+//! worker closure and each job opens its own child.
+//!
+//! ## The observation-only invariant
+//!
+//! Same contract as [`TraceSink`][crate::obs::TraceSink]: profiling must
+//! never move a bit. Compressed `.swsc` bytes, the golden fixture, and
+//! served output are identical with `SWSC_PROF` on or off, at any
+//! `SWSC_THREADS` — pinned by `tests/obs_prof.rs`. The mechanism is the
+//! same zero-cost-off pattern: call sites carry `Option<&ProfScope>`
+//! that stays `None` when profiling is off (one pointer test, no
+//! formatting), and nothing on the bit-producing path ever *reads* a
+//! recorded value. Timings are nondeterministic; the phase *tree*
+//! (paths and counts) is a pure function of (weights, config), and the
+//! quality telemetry in [`crate::compress::CompressionReport`] is a pure
+//! function of (weights, seed, config).
+//!
+//! ## Kernel counters
+//!
+//! [`counters`] holds process-global relaxed atomics bumped by the hot
+//! kernels: GEMM calls + FLOPs by (entry point, shape class), panel-pack
+//! builds vs cache reuses in [`crate::infer::CompressedLinear`],
+//! bucket-sum chunk counts, and `WorkerPool` tasks / steal-misses. They
+//! are always on (a relaxed `fetch_add` next to a GEMM inner loop is
+//! noise) and observation-only by construction — nothing reads them back
+//! into compute. [`counters::export_kernel_counters`] copies a snapshot
+//! into a [`crate::coordinator::Metrics`] registry so they ride the
+//! text / Prometheus / JSON exporters.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{SpanKind, TraceConfig, TraceSink, DEFAULT_TRACE_CAPACITY};
+
+/// Configuration for pipeline profiling. Constructed explicitly or from
+/// the environment (`SWSC_PROF=1`, optional `SWSC_PROF_OUT=path` to also
+/// write the Chrome trace-event JSON).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ProfConfig {
+    /// Where to write the Chrome trace-event JSON, if anywhere.
+    pub chrome_out: Option<String>,
+}
+
+impl ProfConfig {
+    /// Read the env gate: `Some` when `SWSC_PROF` is set to anything but
+    /// `0`/empty, with `SWSC_PROF_OUT` naming an optional Chrome-JSON
+    /// output path.
+    pub fn from_env() -> Option<ProfConfig> {
+        Self::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// [`ProfConfig::from_env`] against an arbitrary lookup (testable).
+    pub fn from_lookup(lookup: impl Fn(&str) -> Option<String>) -> Option<ProfConfig> {
+        let on = lookup("SWSC_PROF").map(|v| {
+            let v = v.trim().to_string();
+            !v.is_empty() && v != "0"
+        })?;
+        if !on {
+            return None;
+        }
+        let chrome_out =
+            lookup("SWSC_PROF_OUT").map(|v| v.trim().to_string()).filter(|v| !v.is_empty());
+        Some(ProfConfig { chrome_out })
+    }
+}
+
+/// Aggregated statistics for one phase path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseStat {
+    /// Times the phase was entered (or the synthetic count from
+    /// [`Profiler::add`], e.g. k-means iterations).
+    pub count: u64,
+    /// Total wall time across all entries, nanoseconds.
+    pub total_ns: u64,
+}
+
+impl PhaseStat {
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_ns / self.count
+        }
+    }
+}
+
+/// Hierarchical phase profiler: a path-keyed stat map plus an embedded
+/// [`TraceSink`] for the Chrome export. Shared by reference across
+/// worker threads (all interior mutability is a short-critical-section
+/// mutex / the sink's own ring lock).
+#[derive(Debug)]
+pub struct Profiler {
+    stats: Mutex<BTreeMap<String, PhaseStat>>,
+    sink: TraceSink,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Profiler {
+    pub fn new() -> Profiler {
+        Profiler::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// A profiler whose span ring holds at most `capacity` records (the
+    /// aggregated stat map is unbounded but one entry per distinct path).
+    pub fn with_capacity(capacity: usize) -> Profiler {
+        Profiler {
+            stats: Mutex::new(BTreeMap::new()),
+            sink: TraceSink::new(TraceConfig { capacity }),
+        }
+    }
+
+    /// Open a top-level scope. Nested phases come from
+    /// [`ProfScope::child`].
+    pub fn root(&self, name: &str) -> ProfScope<'_> {
+        ProfScope { prof: self, path: name.to_string(), start: Instant::now() }
+    }
+
+    /// Fold `count` occurrences totalling `total_ns` into `path` without
+    /// a live scope — for synthetic aggregate nodes like
+    /// `…/kmeans/iters`, where the iteration count is known but the
+    /// per-iteration boundaries are inside a callee.
+    pub fn add(&self, path: &str, count: u64, total_ns: u64) {
+        let mut stats = self.stats.lock().unwrap_or_else(|e| e.into_inner());
+        let s = stats.entry(path.to_string()).or_default();
+        s.count += count;
+        s.total_ns += total_ns;
+    }
+
+    /// Snapshot of the aggregated phase tree, sorted by path (parents
+    /// sort before their children).
+    pub fn phases(&self) -> BTreeMap<String, PhaseStat> {
+        self.stats.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// The embedded span sink (per-occurrence records; ring-bounded).
+    pub fn sink(&self) -> &TraceSink {
+        &self.sink
+    }
+
+    /// Sorted text tree: one line per path, indented by depth, with
+    /// count / total / mean. Never panics; an empty profile renders a
+    /// placeholder line.
+    pub fn render_text(&self) -> String {
+        let stats = self.phases();
+        if stats.is_empty() {
+            return "(no phases recorded)\n".to_string();
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<48} {:>8} {:>12} {:>12}\n",
+            "phase", "count", "total_ms", "mean_ms"
+        ));
+        for (path, s) in stats.iter() {
+            let depth = path.matches('/').count();
+            let name = path.rsplit('/').next().unwrap_or(path);
+            let label = format!("{}{}", "  ".repeat(depth), name);
+            out.push_str(&format!(
+                "{:<48} {:>8} {:>12.3} {:>12.3}\n",
+                label,
+                s.count,
+                s.total_ns as f64 / 1e6,
+                s.mean_ns() as f64 / 1e6,
+            ));
+        }
+        out
+    }
+
+    /// JSON snapshot of the aggregated tree:
+    /// `{"phases":{"<path>":{"count":N,"total_ns":N},…}}` — sorted keys,
+    /// hand-rolled like every exporter in this crate.
+    pub fn render_json(&self) -> String {
+        use super::json_escape as esc;
+        let stats = self.phases();
+        let mut out = String::from("{\"phases\":{");
+        for (i, (path, s)) in stats.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"total_ns\":{}}}",
+                esc(path),
+                s.count,
+                s.total_ns
+            ));
+        }
+        out.push_str("}}");
+        out.push('\n');
+        out
+    }
+
+    /// Chrome trace-event JSON of every recorded scope occurrence —
+    /// loads in Perfetto, one track per worker lane. Delegates to the
+    /// PR 9 [`TraceSink::to_chrome_json`] machinery.
+    pub fn to_chrome_json(&self) -> String {
+        self.sink.to_chrome_json()
+    }
+}
+
+/// RAII guard for one phase occurrence. Dropping it records the elapsed
+/// time into the profiler's stat map and span ring.
+#[derive(Debug)]
+pub struct ProfScope<'p> {
+    prof: &'p Profiler,
+    path: String,
+    start: Instant,
+}
+
+impl<'p> ProfScope<'p> {
+    /// Open a nested scope `self.path + "/" + name`. Explicit parenting
+    /// lets a scope cross a [`crate::exec::WorkerPool`] task boundary:
+    /// borrow the parent in the worker closure and open the child there.
+    pub fn child(&self, name: &str) -> ProfScope<'p> {
+        ProfScope {
+            prof: self.prof,
+            path: format!("{}/{}", self.path, name),
+            start: Instant::now(),
+        }
+    }
+
+    /// The profiler this scope records into — for [`Profiler::add`]
+    /// calls relative to the current position in the tree.
+    pub fn profiler(&self) -> &'p Profiler {
+        self.prof
+    }
+
+    /// The `/`-joined phase path of this scope.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+impl Drop for ProfScope<'_> {
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.prof.add(&self.path, 1, ns);
+        self.prof.sink.span(SpanKind::Phase, lane(), "pipeline", self.path.clone(), self.start);
+    }
+}
+
+/// Open a child scope under an optional parent — the zero-cost-off
+/// helper every instrumented call site uses: `None` in ⇒ `None` out,
+/// one pointer test, nothing formatted.
+pub fn scope<'p>(parent: Option<&ProfScope<'p>>, name: &str) -> Option<ProfScope<'p>> {
+    parent.map(|p| p.child(name))
+}
+
+/// Stable per-thread lane id for the Chrome export (`tid`): worker
+/// threads get distinct tracks, and the id is assigned lazily on first
+/// use so unprofiled threads never take one. Purely cosmetic — the
+/// aggregated tree ignores lanes entirely.
+fn lane() -> u64 {
+    static NEXT_LANE: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static LANE: std::cell::Cell<u64> = std::cell::Cell::new(0);
+    }
+    LANE.with(|l| {
+        if l.get() == 0 {
+            l.set(NEXT_LANE.fetch_add(1, Ordering::Relaxed));
+        }
+        l.get()
+    })
+}
+
+/// Measure the wallclock time of `f`, returning `(result, seconds)`.
+/// (Folded in from the old `util/timer` module — this is the one timing
+/// utility in the crate.)
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// A simple running statistics accumulator (count / mean / min / max /
+/// percentiles via stored samples) — sized for bench iteration counts,
+/// not serving traffic (the serving side uses the bounded
+/// [`crate::coordinator::Histogram`]).
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { samples: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Percentile via nearest-rank on a sorted copy (fine for bench sizes).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+}
+
+pub mod counters {
+    //! Process-global kernel work counters: always-on relaxed atomics,
+    //! write-only from kernel code, snapshot + exported on demand.
+    //!
+    //! Living here (not in `tensor`/`exec`/`infer`) keeps the dependency
+    //! arrow pointing one way — kernels call *into* obs, obs reads
+    //! nothing from them — and gives the exporters one place to sweep.
+
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Which GEMM entry point a call came through.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum GemmEntry {
+        /// `gemm_rows`: unpacked-A row range against a packed B.
+        Rows = 0,
+        /// `gemm_rows_prepacked`: packed A against packed B.
+        RowsPrepacked = 1,
+        /// `gemm_rows_q`: f32 rows against a quantized packed B.
+        RowsQ = 2,
+        /// `gemm_rows_q_prepacked`: packed A against a quantized packed B.
+        RowsQPrepacked = 3,
+    }
+
+    pub const GEMM_ENTRY_NAMES: [&str; 4] =
+        ["rows", "rows_prepacked", "rows_q", "rows_q_prepacked"];
+    pub const SHAPE_CLASS_NAMES: [&str; 3] = ["small", "medium", "large"];
+    /// Cells in the (entry × shape-class) GEMM grid.
+    pub const GEMM_CELLS: usize = 12;
+
+    // `static [AtomicU64; N]` needs a const element to repeat; the
+    // interior-mutability lint fires on any `const` atomic even though
+    // each array slot gets its own instance.
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+    static GEMM_CALLS: [AtomicU64; GEMM_CELLS] = [ZERO; GEMM_CELLS];
+    static GEMM_FLOPS: [AtomicU64; GEMM_CELLS] = [ZERO; GEMM_CELLS];
+    static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
+    static POOL_STEAL_MISSES: AtomicU64 = AtomicU64::new(0);
+    static PANEL_BUILDS: AtomicU64 = AtomicU64::new(0);
+    static PANEL_REUSES: AtomicU64 = AtomicU64::new(0);
+    static BUCKET_CALLS: AtomicU64 = AtomicU64::new(0);
+    static BUCKET_CHUNKS: AtomicU64 = AtomicU64::new(0);
+
+    /// Shape class by the largest dimension: `small` < 128 ≤ `medium`
+    /// < 512 ≤ `large`. Coarse on purpose — the point is separating
+    /// centroid-sized panels from full-weight panels, not a histogram.
+    fn shape_class(rows: usize, k: usize, n: usize) -> usize {
+        let d = rows.max(k).max(n);
+        if d < 128 {
+            0
+        } else if d < 512 {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Count one GEMM call of `rows × k × n` through `entry`
+    /// (FLOPs = 2·rows·k·n).
+    pub fn gemm_call(entry: GemmEntry, rows: usize, k: usize, n: usize) {
+        let idx = entry as usize * 3 + shape_class(rows, k, n);
+        let flops = 2u64
+            .saturating_mul(rows as u64)
+            .saturating_mul(k as u64)
+            .saturating_mul(n as u64);
+        GEMM_CALLS[idx].fetch_add(1, Ordering::Relaxed);
+        GEMM_FLOPS[idx].fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Count `n` tasks executed by a `WorkerPool` dispatch (claimed
+    /// indices, whichever thread ran them).
+    pub fn pool_tasks(n: u64) {
+        POOL_TASKS.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count one worker wakeup that found no job to claim.
+    pub fn pool_steal_miss() {
+        POOL_STEAL_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one panel pack actually built (OnceLock cold path).
+    pub fn panel_build() {
+        PANEL_BUILDS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one panel served from the cache (OnceLock warm path).
+    pub fn panel_reuse() {
+        PANEL_REUSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one bucket-sum call that processed `chunks` column chunks.
+    pub fn bucket_call(chunks: u64) {
+        BUCKET_CALLS.fetch_add(1, Ordering::Relaxed);
+        BUCKET_CHUNKS.fetch_add(chunks, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every kernel counter.
+    #[derive(Debug, Clone, Default, PartialEq, Eq)]
+    pub struct KernelCounters {
+        pub gemm_calls: [u64; GEMM_CELLS],
+        pub gemm_flops: [u64; GEMM_CELLS],
+        pub pool_tasks: u64,
+        pub pool_steal_misses: u64,
+        pub panel_builds: u64,
+        pub panel_reuses: u64,
+        pub bucket_calls: u64,
+        pub bucket_chunks: u64,
+    }
+
+    impl KernelCounters {
+        /// The non-empty GEMM grid cells as
+        /// `("entry/class", calls, flops)` rows, grid order.
+        pub fn gemm_cells(&self) -> Vec<(String, u64, u64)> {
+            let mut out = Vec::new();
+            for (i, name) in GEMM_ENTRY_NAMES.iter().enumerate() {
+                for (j, class) in SHAPE_CLASS_NAMES.iter().enumerate() {
+                    let idx = i * 3 + j;
+                    if self.gemm_calls[idx] > 0 {
+                        out.push((
+                            format!("{name}/{class}"),
+                            self.gemm_calls[idx],
+                            self.gemm_flops[idx],
+                        ));
+                    }
+                }
+            }
+            out
+        }
+    }
+
+    pub fn snapshot() -> KernelCounters {
+        let mut s = KernelCounters::default();
+        for i in 0..GEMM_CELLS {
+            s.gemm_calls[i] = GEMM_CALLS[i].load(Ordering::Relaxed);
+            s.gemm_flops[i] = GEMM_FLOPS[i].load(Ordering::Relaxed);
+        }
+        s.pool_tasks = POOL_TASKS.load(Ordering::Relaxed);
+        s.pool_steal_misses = POOL_STEAL_MISSES.load(Ordering::Relaxed);
+        s.panel_builds = PANEL_BUILDS.load(Ordering::Relaxed);
+        s.panel_reuses = PANEL_REUSES.load(Ordering::Relaxed);
+        s.bucket_calls = BUCKET_CALLS.load(Ordering::Relaxed);
+        s.bucket_chunks = BUCKET_CHUNKS.load(Ordering::Relaxed);
+        s
+    }
+
+    /// Copy the current counter totals into a metrics registry as
+    /// counter-typed absolute series, so they ride the text /
+    /// Prometheus / JSON exporters. Called explicitly at export time
+    /// (never from inside a render — the exporters' golden tests pin
+    /// exact output, and these globals move under parallel tests).
+    pub fn export_kernel_counters(m: &crate::coordinator::Metrics) {
+        let s = snapshot();
+        for (label, calls, flops) in s.gemm_cells() {
+            m.counter_total_with("gemm.calls", &label, calls);
+            m.counter_total_with("gemm.flops", &label, flops);
+        }
+        m.counter_total("exec.pool_tasks", s.pool_tasks);
+        m.counter_total("exec.pool_steal_misses", s.pool_steal_misses);
+        m.counter_total("infer.panel_builds", s.panel_builds);
+        m.counter_total("infer.panel_reuses", s.panel_reuses);
+        m.counter_total("infer.bucket_calls", s.bucket_calls);
+        m.counter_total("infer.bucket_chunks", s.bucket_chunks);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_env_gate_mirrors_trace() {
+        assert_eq!(ProfConfig::from_lookup(|_| None), None);
+        assert_eq!(ProfConfig::from_lookup(|k| (k == "SWSC_PROF").then(|| "0".into())), None);
+        assert_eq!(ProfConfig::from_lookup(|k| (k == "SWSC_PROF").then(|| " ".into())), None);
+        assert_eq!(
+            ProfConfig::from_lookup(|k| (k == "SWSC_PROF").then(|| "1".into())),
+            Some(ProfConfig { chrome_out: None })
+        );
+        let cfg = ProfConfig::from_lookup(|k| match k {
+            "SWSC_PROF" => Some("1".into()),
+            "SWSC_PROF_OUT" => Some("out.json".into()),
+            _ => None,
+        });
+        assert_eq!(cfg, Some(ProfConfig { chrome_out: Some("out.json".into()) }));
+    }
+
+    #[test]
+    fn scopes_aggregate_into_a_path_tree() {
+        let p = Profiler::new();
+        {
+            let root = p.root("compress");
+            {
+                let m = root.child("attn.wq");
+                let _r = m.child("rsvd");
+            }
+            {
+                let m = root.child("attn.wq");
+                let _q = m.child("quant");
+            }
+        }
+        let phases = p.phases();
+        assert_eq!(phases["compress"].count, 1);
+        assert_eq!(phases["compress/attn.wq"].count, 2);
+        assert_eq!(phases["compress/attn.wq/rsvd"].count, 1);
+        assert_eq!(phases["compress/attn.wq/quant"].count, 1);
+        // BTreeMap order puts parents before children.
+        let keys: Vec<&str> = phases.keys().map(|s| s.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "compress",
+                "compress/attn.wq",
+                "compress/attn.wq/quant",
+                "compress/attn.wq/rsvd"
+            ]
+        );
+        // Every occurrence also landed in the span ring.
+        assert_eq!(p.sink().len(), 5);
+    }
+
+    #[test]
+    fn add_folds_synthetic_counts() {
+        let p = Profiler::new();
+        p.add("compress/m/kmeans/iters", 7, 700);
+        p.add("compress/m/kmeans/iters", 3, 300);
+        let s = p.phases()["compress/m/kmeans/iters"];
+        assert_eq!(s.count, 10);
+        assert_eq!(s.total_ns, 1000);
+        assert_eq!(s.mean_ns(), 100);
+    }
+
+    #[test]
+    fn renders_never_panic_on_empty() {
+        let p = Profiler::new();
+        assert_eq!(p.render_text(), "(no phases recorded)\n");
+        assert_eq!(p.render_json(), "{\"phases\":{}}\n");
+        assert!(p.to_chrome_json().starts_with('['));
+    }
+
+    #[test]
+    fn text_render_indents_by_depth() {
+        let p = Profiler::new();
+        p.add("compress", 1, 2_000_000);
+        p.add("compress/w", 1, 1_000_000);
+        let text = p.render_text();
+        assert!(text.contains("\ncompress "), "root at column 0: {text}");
+        assert!(text.contains("\n  w "), "child indented under parent: {text}");
+    }
+
+    #[test]
+    fn chrome_export_names_spans_by_path() {
+        let p = Profiler::new();
+        {
+            let root = p.root("compress");
+            let _c = root.child("serialize");
+        }
+        let json = p.to_chrome_json();
+        assert!(json.contains("\"name\":\"compress/serialize\""), "{json}");
+        assert!(json.contains("\"name\":\"compress\""), "{json}");
+        assert!(json.contains("\"ph\":\"X\""));
+    }
+
+    #[test]
+    fn scope_helper_is_none_propagating() {
+        assert!(scope(None, "anything").is_none());
+        let p = Profiler::new();
+        let root = p.root("r");
+        let child = scope(Some(&root), "c");
+        assert_eq!(child.as_ref().unwrap().path(), "r/c");
+    }
+
+    #[test]
+    fn kernel_counters_accumulate_and_label() {
+        use counters::*;
+        let before = snapshot();
+        gemm_call(GemmEntry::Rows, 4, 8, 16); // all dims < 128 → small
+        gemm_call(GemmEntry::RowsQPrepacked, 64, 64, 1024); // max ≥ 512 → large
+        pool_tasks(3);
+        pool_steal_miss();
+        panel_build();
+        panel_reuse();
+        bucket_call(5);
+        let after = snapshot();
+        // Globals are shared across parallel tests: assert deltas, not totals.
+        assert!(after.pool_tasks >= before.pool_tasks + 3);
+        assert!(after.pool_steal_misses >= before.pool_steal_misses + 1);
+        assert!(after.panel_builds >= before.panel_builds + 1);
+        assert!(after.panel_reuses >= before.panel_reuses + 1);
+        assert!(after.bucket_calls >= before.bucket_calls + 1);
+        assert!(after.bucket_chunks >= before.bucket_chunks + 5);
+        // The instrumented kernels also bump the GEMM cells from other
+        // tests' real GEMMs, so these too are lower bounds.
+        assert!(after.gemm_calls[0] >= before.gemm_calls[0] + 1, "rows/small cell");
+        assert!(
+            after.gemm_flops[0] >= before.gemm_flops[0] + 2 * 4 * 8 * 16,
+            "flops = 2·m·k·n"
+        );
+        assert!(after.gemm_calls[11] >= before.gemm_calls[11] + 1, "rows_q_prepacked/large");
+        let labels: Vec<String> = after.gemm_cells().into_iter().map(|(l, _, _)| l).collect();
+        assert!(labels.contains(&"rows/small".to_string()), "{labels:?}");
+        assert!(labels.contains(&"rows_q_prepacked/large".to_string()), "{labels:?}");
+    }
+
+    #[test]
+    fn export_rides_the_metrics_exporters() {
+        use crate::coordinator::Metrics;
+        counters::gemm_call(counters::GemmEntry::Rows, 2, 2, 2);
+        let m = Metrics::new();
+        counters::export_kernel_counters(&m);
+        let prom = m.render_prometheus();
+        assert!(prom.contains("# TYPE swsc_gemm_calls counter\n"), "{prom}");
+        assert!(prom.contains("swsc_gemm_calls{model=\"rows/small\"}"), "{prom}");
+        assert!(prom.contains("# TYPE swsc_exec_pool_tasks counter\n"), "{prom}");
+        let json = m.render_json();
+        assert!(json.contains("\"gemm.calls\":{\"type\":\"counter\",\"values\":{"), "{json}");
+        assert!(json.contains("\"infer.panel_builds\":{\"type\":\"counter\",\"value\":"), "{json}");
+    }
+
+    // --- ported verbatim from the old util/timer module ---
+
+    #[test]
+    fn stats_basics() {
+        let mut s = Stats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.push(v);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.percentile(50.0) - 2.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

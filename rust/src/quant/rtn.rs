@@ -225,6 +225,38 @@ impl QuantizedTensor {
         let g = row / self.group;
         self.scales[g * self.cols + col].abs()
     }
+
+    /// Measured reconstruction error of this grid against `original`
+    /// (telemetry, PR 10): `(max |err|, mean squared err)` across all
+    /// elements, where err is `original − dequantize()` element-wise.
+    /// Pure arithmetic on the stored codes — deterministic, and `max_abs`
+    /// never exceeds the worst per-block [`QuantizedTensor::step`].
+    pub fn grid_error(&self, original: &Tensor) -> (f64, f64) {
+        assert_eq!(
+            (self.rows, self.cols),
+            (original.rows(), original.cols()),
+            "grid_error shape mismatch"
+        );
+        let n = self.rows * self.cols;
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let d = original.data();
+        let mut max_abs = 0.0f64;
+        let mut sum_sq = 0.0f64;
+        for i in 0..self.rows {
+            let g = i / self.group;
+            for j in 0..self.cols {
+                let scale = self.scales[g * self.cols + j];
+                let zero = self.zeros[g * self.cols + j];
+                let back = dequant_u8(self.data[i * self.cols + j], scale, zero);
+                let err = (d[i * self.cols + j] - back) as f64;
+                max_abs = max_abs.max(err.abs());
+                sum_sq += err * err;
+            }
+        }
+        (max_abs, sum_sq / n as f64)
+    }
 }
 
 fn quantize_channel_asym(col: &[f32], levels: f32) -> (Vec<f32>, f32, f32) {
@@ -372,6 +404,29 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn grid_error_bounded_by_step_and_zero_on_constants() {
+        let mut rng = Rng::new(86);
+        let w = Tensor::randn(&[20, 5], &mut rng);
+        let q = QuantizedTensor::quantize(&w, &QuantConfig { group: 8 });
+        let (max_abs, mse) = q.grid_error(&w);
+        let worst_step = (0..w.rows())
+            .flat_map(|i| (0..w.cols()).map(move |j| (i, j)))
+            .map(|(i, j)| q.step(i, j) as f64)
+            .fold(0.0f64, f64::max);
+        assert!(max_abs <= worst_step + 1e-6, "max {max_abs} > worst step {worst_step}");
+        assert!(mse <= max_abs * max_abs + 1e-12);
+        assert!(mse > 0.0, "random data cannot quantize exactly");
+        // Constant blocks encode exactly ⇒ zero error.
+        let c = Tensor::full(&[9, 2], 4.75);
+        let qc = QuantizedTensor::quantize(&c, &QuantConfig { group: 4 });
+        assert_eq!(qc.grid_error(&c), (0.0, 0.0));
+        // Empty matrices don't divide by zero.
+        let e = Tensor::zeros(&[0, 6]);
+        let qe = QuantizedTensor::quantize(&e, &QuantConfig::default());
+        assert_eq!(qe.grid_error(&e), (0.0, 0.0));
     }
 
     #[test]

@@ -3,4 +3,4 @@
 
 pub mod tables;
 
-pub use tables::{render_storage, render_table1, render_table2, StorageRow, Table1Row};
+pub use tables::{render_storage, render_table1, render_table2, render_telemetry, StorageRow, Table1Row};

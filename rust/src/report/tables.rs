@@ -115,6 +115,40 @@ pub fn render_storage(rows: &[StorageRow], file_bytes: usize, total_params: usiz
     out
 }
 
+/// Render the compression-quality telemetry summary (PR 10): one row per
+/// matrix out of a [`CompressionReport`] — iteration count, final inertia,
+/// leading error singular value, compensation energy at the retained rank,
+/// and (for int8 containers) the worst quantization grid error. The full
+/// per-iteration / per-σ data stays in the JSON artifact; this is the
+/// human-scan view.
+pub fn render_telemetry(rep: &crate::compress::CompressionReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("TELEMETRY — compression quality (seed {})\n", rep.seed));
+    out.push_str("| Matrix | Shape | k | r | Iters | Inertia | sigma_1 | Comp. Energy | Grid Err (max) |\n");
+    out.push_str("|--------|-------|---|---|-------|---------|---------|--------------|----------------|\n");
+    for m in &rep.matrices {
+        let sigma1 =
+            m.spectrum.first().map(|s| format!("{s:.3e}")).unwrap_or_else(|| "-".into());
+        let grid = if m.grid_error_max > 0.0 {
+            format!("{:.3e}", m.grid_error_max)
+        } else {
+            "-".into()
+        };
+        out.push_str(&format!(
+            "| {:<6} | {}x{} | {} | {} | {} | {:.4e} | {sigma1} | {:.3} | {grid} |\n",
+            m.name,
+            m.shape.0,
+            m.shape.1,
+            m.clusters,
+            m.rank,
+            m.kmeans_iterations,
+            m.inertia,
+            m.compensation_energy,
+        ));
+    }
+    out
+}
+
 /// Format a bits value compactly: integral values without decimals.
 fn fmt_bits(b: f64) -> String {
     if (b - b.round()).abs() < 1e-9 {
@@ -176,6 +210,38 @@ mod tests {
         let est16 = swsc_avg_bits(256, 256, 32, 8).avg_bits;
         let est8 = swsc_quantized_avg_bits(256, 256, 32, 8, 64).avg_bits;
         assert!(est8 < est16);
+    }
+
+    #[test]
+    fn telemetry_table_renders_every_matrix() {
+        use crate::compress::{CompressionReport, MatrixTelemetry};
+        let rep = CompressionReport {
+            seed: 9,
+            matrices: vec![
+                MatrixTelemetry {
+                    name: "a.wq".into(),
+                    shape: (64, 64),
+                    clusters: 8,
+                    rank: 4,
+                    kmeans_iterations: 12,
+                    inertia: 1.25,
+                    spectrum: vec![2.5, 1.0],
+                    compensation_energy: 0.75,
+                    grid_error_max: 0.001,
+                    ..Default::default()
+                },
+                MatrixTelemetry { name: "b.wk".into(), shape: (32, 32), ..Default::default() },
+            ],
+        };
+        let t = render_telemetry(&rep);
+        assert!(t.contains("seed 9"), "{t}");
+        assert!(t.contains("| a.wq"), "{t}");
+        assert!(t.contains("| b.wk"), "{t}");
+        assert!(t.contains("2.500e0"), "{t}");
+        assert!(t.contains("0.750"), "{t}");
+        // No spectrum / no quantization render as dashes, not zeros.
+        assert!(t.contains("| - |"), "{t}");
+        assert_eq!(t.lines().count(), 2 + 1 + rep.matrices.len());
     }
 
     #[test]

@@ -427,6 +427,12 @@ pub(crate) fn gemm_rows(
     if rows == 0 || n == 0 {
         return;
     }
+    crate::obs::prof::counters::gemm_call(
+        crate::obs::prof::counters::GemmEntry::Rows,
+        rows,
+        kdim,
+        n,
+    );
     let mut apanel = vec![0.0f32; kdim * mr];
     let mut scratch = vec![0.0f32; mr * nr];
     for i0 in (0..rows).step_by(mr) {
@@ -507,6 +513,12 @@ pub(crate) fn gemm_rows_prepacked(
     if rows == 0 || n == 0 {
         return;
     }
+    crate::obs::prof::counters::gemm_call(
+        crate::obs::prof::counters::GemmEntry::RowsPrepacked,
+        rows,
+        pa.kdim,
+        n,
+    );
     assert_eq!(row0 % pa.mr, 0, "prepacked band must start on an MR boundary");
     assert!(row0 + rows <= pa.rows, "prepacked band past packed rows");
     let mut scratch = vec![0.0f32; pa.mr * t.nr];
@@ -879,6 +891,12 @@ pub(crate) fn gemm_rows_q(
     if rows == 0 || n == 0 {
         return;
     }
+    crate::obs::prof::counters::gemm_call(
+        crate::obs::prof::counters::GemmEntry::RowsQ,
+        rows,
+        kdim,
+        n,
+    );
     let mut apanel = vec![0.0f32; kdim * mr];
     let mut scratch = vec![0.0f32; mr * nr];
     for i0 in (0..rows).step_by(mr) {
@@ -906,6 +924,12 @@ pub(crate) fn gemm_rows_q_prepacked(
     if rows == 0 || n == 0 {
         return;
     }
+    crate::obs::prof::counters::gemm_call(
+        crate::obs::prof::counters::GemmEntry::RowsQPrepacked,
+        rows,
+        pa.kdim,
+        n,
+    );
     assert_eq!(row0 % pa.mr, 0, "prepacked band must start on an MR boundary");
     assert!(row0 + rows <= pa.rows, "prepacked band past packed rows");
     let mut scratch = vec![0.0f32; pa.mr * t.nr];

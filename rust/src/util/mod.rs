@@ -1,9 +1,9 @@
-//! Small shared utilities: deterministic RNG, a minimal property-testing
-//! harness (the vendored crate set has no `proptest`), and timing helpers.
+//! Small shared utilities: deterministic RNG and a minimal
+//! property-testing harness (the vendored crate set has no `proptest`).
+//! Timing helpers live in [`crate::obs::prof`] — the one timing utility.
 
 pub mod prop;
 pub mod rng;
-pub mod timer;
 
 /// Human-readable byte size (`12.3 MiB`).
 pub fn human_bytes(n: usize) -> String {

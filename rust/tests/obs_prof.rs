@@ -1,0 +1,274 @@
+//! Pipeline-profiler + telemetry invariants (PR 10).
+//!
+//! The load-bearing contract mirrors PR 9's tracing contract one layer
+//! down: **profiling and telemetry are pure observation.** With a live
+//! [`swsc::obs::prof::Profiler`] and telemetry collection on, the
+//! compressed `.swsc` bytes and the bits served from the container are
+//! identical to an unprofiled run, at any worker count (CI additionally
+//! sweeps `SWSC_THREADS` 1 and 4 over the tier-1 suite). And the
+//! telemetry values themselves — not the timings — are deterministic
+//! functions of (weights, seed, config): byte-stable across reruns and
+//! exactly checkable on analytic fixtures.
+//!
+//! Pinned here:
+//!
+//! 1. profiled + telemetry compress vs plain compress: container bytes
+//!    and served bits identical at workers ∈ {1, 4};
+//! 2. the telemetry report is byte-stable across worker counts and
+//!    reruns, its quality fields re-derivable from public
+//!    reconstructions, and exact on fixtures with known answers
+//!    (identical channels ⇒ zero inertia, zero error);
+//! 3. profiler edge cases: nested scopes across `WorkerPool` task
+//!    boundaries aggregate under the borrowed parent, the empty tree
+//!    renders, and the span ring stays bounded (with exact drop
+//!    accounting) under the 4-thread concurrent-push pattern from the
+//!    PR 9 regression test.
+
+use swsc::compress::{
+    compress_matrix_traced, CompressionPlan, MatrixTelemetry, ProjectorSet, SwscConfig,
+};
+use swsc::coordinator::{compress_model, compress_model_traced};
+use swsc::exec::{self, ExecConfig};
+use swsc::infer::{CompressedModel, InferMode};
+use swsc::model::{init_params, ModelConfig};
+use swsc::obs::prof::{ProfConfig, Profiler};
+use swsc::tensor::Tensor;
+use swsc::util::rng::Rng;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Scan one JSON document for structural soundness (the obs_trace
+/// helper): braces/brackets balanced outside strings, escapes honored.
+fn assert_balanced_json(json: &str) {
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in json.chars() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '{' | '[' if !in_str => depth += 1,
+            '}' | ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+        assert!(depth >= 0, "unbalanced close in export");
+    }
+    assert_eq!(depth, 0, "unbalanced export");
+    assert!(!in_str, "unterminated string in export");
+}
+
+/// Tentpole invariant: compressing with a live profiler and telemetry
+/// collection produces a byte-identical container — and the bits served
+/// *from* that container are identical too — at worker counts 1 and 4.
+#[test]
+fn profiled_compress_is_observation_only_across_worker_counts() {
+    let cfg = ModelConfig::tiny();
+    let ck = init_params(&cfg, 1200);
+    let plan = CompressionPlan::for_target_bits(&ck.shapes(), ProjectorSet::QAndK, 2.0, 0.5, 1200);
+    assert!(!plan.is_empty());
+
+    let base = compress_model(&ck, &plan, 2, None).unwrap();
+    let base_bytes = base.file.to_bytes();
+    let base_model = CompressedModel::from_file(&base.file, InferMode::Compressed);
+    let weight = plan.matrices[0].name.clone();
+    let (m, _) = base_model.shape(&weight).expect("planned weight is 2-D");
+    let mut rng = Rng::new(1201);
+    let x = Tensor::randn(&[3, m], &mut rng);
+    let base_served = bits(&base_model.apply_with(&weight, &x, ExecConfig::with_threads(2)).unwrap());
+
+    for workers in [1usize, 4] {
+        let prof = Profiler::new();
+        let out = {
+            let root = prof.root("compress");
+            compress_model_traced(&ck, &plan, workers, None, Some(&root), true).unwrap()
+        };
+        assert_eq!(
+            out.file.to_bytes(),
+            base_bytes,
+            "profiling/telemetry moved container bytes at {workers} workers"
+        );
+        let model = CompressedModel::from_file(&out.file, InferMode::Compressed);
+        for threads in [1usize, 4] {
+            assert_eq!(
+                bits(&model.apply_with(&weight, &x, ExecConfig::with_threads(threads)).unwrap()),
+                base_served,
+                "served bits moved ({workers} workers, {threads} serve threads)"
+            );
+        }
+        // The profiler did observe the run: the root, one child per
+        // matrix, and kmeans grandchildren all aggregated.
+        let phases = prof.phases();
+        assert_eq!(phases["compress"].count, 1);
+        for mp in &plan.matrices {
+            let child = format!("compress/{}", mp.name);
+            assert_eq!(phases[&child].count, 1, "missing per-matrix phase {child}");
+            assert!(phases.contains_key(&format!("{child}/kmeans")), "missing {child}/kmeans");
+        }
+        assert_balanced_json(&prof.to_chrome_json());
+    }
+}
+
+/// Telemetry values are pure functions of (weights, seed, config): the
+/// report renders byte-identically across worker counts and reruns, and
+/// every quality field is re-derivable from public reconstructions.
+#[test]
+fn telemetry_is_byte_stable_and_rederivable() {
+    let cfg = ModelConfig::tiny();
+    let ck = init_params(&cfg, 1300);
+    let plan = CompressionPlan::for_target_bits(&ck.shapes(), ProjectorSet::QAndK, 2.0, 0.5, 1300);
+    let a = compress_model_traced(&ck, &plan, 1, None, None, true).unwrap().telemetry.unwrap();
+    let b = compress_model_traced(&ck, &plan, 4, None, None, true).unwrap().telemetry.unwrap();
+    assert_eq!(a.to_json(), b.to_json(), "telemetry must not depend on worker count");
+    let c = compress_model_traced(&ck, &plan, 4, None, None, true).unwrap().telemetry.unwrap();
+    assert_eq!(b.to_json(), c.to_json(), "telemetry must be byte-stable across reruns");
+
+    // Single-matrix rederivation: the recorded error energy, spectrum
+    // energy fraction, and inertia trace all match what the public API
+    // reconstructs after the fact.
+    let mut rng = Rng::new(1301);
+    let w = Tensor::randn(&[32, 40], &mut rng);
+    let scfg = SwscConfig::new(4, 3);
+    let mut tel = MatrixTelemetry { name: "m".into(), ..Default::default() };
+    let cm = compress_matrix_traced(&w, &scfg, None, Some(&mut tel));
+    assert_eq!(tel.shape, (32, 40));
+    assert_eq!(tel.clusters, 4);
+    assert_eq!(tel.rank, 3);
+    assert_eq!(tel.inertia_trace.len(), tel.kmeans_iterations);
+    assert_eq!(
+        tel.inertia_trace.last().copied().unwrap().to_bits(),
+        tel.inertia.to_bits(),
+        "trace must end at the final inertia"
+    );
+    let diff = w.sub(&cm.reconstruct_uncompensated());
+    let fro2 = diff.fro_norm() * diff.fro_norm();
+    assert!(
+        (tel.error_fro2 - fro2).abs() <= 1e-6 * fro2.max(1.0),
+        "error_fro2 {} vs rederived {fro2}",
+        tel.error_fro2
+    );
+    assert_eq!(tel.spectrum.len(), 3, "one singular value per retained rank");
+    assert!(tel.spectrum.windows(2).all(|p| p[0] >= p[1]), "spectrum must be descending");
+    let energy: f64 = tel.spectrum.iter().map(|&s| (s as f64) * (s as f64)).sum();
+    assert!(
+        (tel.compensation_energy - energy / fro2).abs() <= 1e-6,
+        "compensation_energy {} vs rederived {}",
+        tel.compensation_energy,
+        energy / fro2
+    );
+    assert!(tel.compensation_energy > 0.0 && tel.compensation_energy <= 1.0);
+}
+
+/// Exact known answers on analytic fixtures: identical channels make
+/// k-means lossless (zero inertia at every iteration, zero residual
+/// error), and two distinct repeated channels with k = 2 are separated
+/// exactly by the seeded k-means++ init.
+#[test]
+fn telemetry_exact_on_analytic_fixtures() {
+    // 6×8, every channel (column) identical.
+    let col: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+    let mut data = vec![0.0f32; 6 * 8];
+    for (i, row) in data.chunks_exact_mut(8).enumerate() {
+        row.fill(col[i]);
+    }
+    let w = Tensor::from_vec(&[6, 8], data);
+    let mut tel = MatrixTelemetry { name: "const".into(), ..Default::default() };
+    let cm = compress_matrix_traced(&w, &SwscConfig::new(1, 0), None, Some(&mut tel));
+    assert_eq!(tel.clusters, 1);
+    assert_eq!(tel.rank, 0);
+    assert_eq!(tel.inertia, 0.0, "identical channels cluster losslessly");
+    assert!(tel.inertia_trace.iter().all(|&v| v == 0.0), "{:?}", tel.inertia_trace);
+    assert_eq!(tel.error_fro2, 0.0);
+    assert_eq!(tel.spectrum, Vec::<f32>::new());
+    assert_eq!(tel.compensation_energy, 0.0);
+    assert_eq!(bits(&cm.reconstruct_uncompensated()), bits(&w));
+
+    // Two distinct channel types, k = 2: the k-means++ second seed is
+    // distance-weighted, so it lands on the other type and the very
+    // first assignment is already exact.
+    let mut data = vec![0.0f32; 6 * 8];
+    for (i, row) in data.chunks_exact_mut(8).enumerate() {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = if j % 2 == 0 { col[i] } else { -2.0 * col[i] + 1.0 };
+        }
+    }
+    let w2 = Tensor::from_vec(&[6, 8], data);
+    let mut tel2 = MatrixTelemetry { name: "two".into(), ..Default::default() };
+    let cm2 = compress_matrix_traced(&w2, &SwscConfig::new(2, 0), None, Some(&mut tel2));
+    assert_eq!(tel2.clusters, 2);
+    assert_eq!(tel2.inertia, 0.0, "two exact channel types, two clusters");
+    assert_eq!(tel2.error_fro2, 0.0);
+    assert_eq!(bits(&cm2.reconstruct_uncompensated()), bits(&w2));
+}
+
+/// Nested scopes cross `WorkerPool` task boundaries via explicit
+/// parenting: the parent scope is borrowed into every worker closure and
+/// each task's children aggregate under it, whatever thread ran them.
+#[test]
+fn scopes_cross_worker_pool_task_boundaries() {
+    let p = Profiler::new();
+    {
+        let root = p.root("fanout");
+        let results = exec::map_indexed_balanced(ExecConfig::with_threads(4), 16, |i| {
+            let job = root.child(&format!("job{i:02}"));
+            let _work = job.child("work");
+            i
+        });
+        assert_eq!(results, (0..16).collect::<Vec<_>>());
+    }
+    let phases = p.phases();
+    assert_eq!(phases["fanout"].count, 1);
+    for i in 0..16 {
+        assert_eq!(phases[&format!("fanout/job{i:02}")].count, 1, "job {i}");
+        assert_eq!(phases[&format!("fanout/job{i:02}/work")].count, 1, "job {i} child");
+    }
+    // 1 root + 16 jobs + 16 children, one span each.
+    assert_eq!(p.sink().len(), 33);
+    assert_balanced_json(&p.to_chrome_json());
+}
+
+/// The PR 9 concurrent-push regression, against the profiler's embedded
+/// ring: 4 threads × 500 scopes into an 8-record ring. Aggregation is
+/// lossless (the stat map is unbounded), the ring stays exactly bounded,
+/// and the drop accounting adds up.
+#[test]
+fn aggregation_lossless_and_ring_bounded_under_concurrent_push() {
+    let p = Profiler::with_capacity(8);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let p = &p;
+            s.spawn(move || {
+                for _ in 0..500 {
+                    let _sc = p.root("worker");
+                }
+            });
+        }
+    });
+    let phases = p.phases();
+    assert_eq!(phases["worker"].count, 2000, "every scope must aggregate");
+    assert_eq!(p.sink().len(), 8, "ring must sit exactly at capacity");
+    assert_eq!(p.sink().dropped(), 2000 - 8, "drop accounting must add up");
+    assert_balanced_json(&p.to_chrome_json());
+}
+
+/// Empty-tree renders and the env gate, at the integration surface.
+#[test]
+fn empty_renders_and_env_gate() {
+    let p = Profiler::new();
+    assert_eq!(p.render_text(), "(no phases recorded)\n");
+    assert_eq!(p.render_json(), "{\"phases\":{}}\n");
+    assert_balanced_json(&p.to_chrome_json());
+
+    assert_eq!(ProfConfig::from_lookup(|_| None), None);
+    assert_eq!(
+        ProfConfig::from_lookup(|k| match k {
+            "SWSC_PROF" => Some("1".into()),
+            "SWSC_PROF_OUT" => Some("prof.json".into()),
+            _ => None,
+        }),
+        Some(ProfConfig { chrome_out: Some("prof.json".into()) })
+    );
+}
